@@ -1,0 +1,110 @@
+# AOT lowering: jax -> HLO *text* artifacts for the rust runtime.
+#
+# HLO text (NOT lowered.compile()/.serialize()) is the interchange format:
+# jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+# crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+# parser reassigns ids and round-trips cleanly.  See
+# /opt/xla-example/README.md and gen_hlo.py there.
+#
+# Emitted artifacts (all float32/int32, fixed padded shapes):
+#   alu_batch.hlo.txt   — L1 batched dataflow ALU        (a, b, op) -> (out,)
+#   lod.hlo.txt         — L1 hierarchical leading-one    (words,)   -> (idx,)
+#   graph_eval.hlo.txt  — L2 levelized graph evaluation  (5 arrays) -> (vals,)
+#   manifest.json       — shapes, batch sizes, opcode table (rust asserts
+#                         its mirror of the opcode table matches).
+#
+# `make artifacts` runs this once; python never runs on the request path.
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.alu import alu_batch, DEFAULT_BLOCK
+from .kernels.lod import lod_pick
+from .model import graph_eval_jit, DEFAULT_N, DEFAULT_LMAX
+from .opcodes import OPCODES
+
+DEFAULT_ALU_BATCH = 4096
+DEFAULT_LOD_WORDS = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_alu(batch: int):
+    f32 = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    i32 = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    fn = jax.jit(lambda a, b, op: (alu_batch(a, b, op),))
+    return fn.lower(f32, f32, i32)
+
+
+def lower_lod(words: int):
+    i32 = jax.ShapeDtypeStruct((words,), jnp.int32)
+    fn = jax.jit(lambda w: (lod_pick(w),))
+    return fn.lower(i32)
+
+
+def lower_graph_eval(n: int, lmax: int):
+    f32 = jax.ShapeDtypeStruct((n,), jnp.float32)
+    i32 = jax.ShapeDtypeStruct((n,), jnp.int32)
+    return graph_eval_jit(lmax=lmax).lower(f32, i32, i32, i32, i32)
+
+
+def write_artifact(out_dir: str, name: str, lowered) -> dict:
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    print(f"wrote {path} ({len(text)} chars, sha256:{digest})")
+    return {"file": f"{name}.hlo.txt", "sha256_16": digest}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower TDP artifacts")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--alu-batch", type=int, default=DEFAULT_ALU_BATCH)
+    ap.add_argument("--lod-words", type=int, default=DEFAULT_LOD_WORDS)
+    ap.add_argument("--graph-n", type=int, default=DEFAULT_N)
+    ap.add_argument("--graph-lmax", type=int, default=DEFAULT_LMAX)
+    # Back-compat with the scaffold Makefile's `--out path` spelling.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text",
+        "opcodes": {str(k): {"name": v[0], "arity": v[1]}
+                    for k, v in OPCODES.items()},
+        "artifacts": {},
+    }
+    m = manifest["artifacts"]
+    m["alu_batch"] = write_artifact(out_dir, "alu_batch",
+                                    lower_alu(args.alu_batch))
+    m["alu_batch"]["batch"] = args.alu_batch
+    m["lod"] = write_artifact(out_dir, "lod", lower_lod(args.lod_words))
+    m["lod"]["words"] = args.lod_words
+    m["graph_eval"] = write_artifact(
+        out_dir, "graph_eval", lower_graph_eval(args.graph_n, args.graph_lmax))
+    m["graph_eval"]["n"] = args.graph_n
+    m["graph_eval"]["lmax"] = args.graph_lmax
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

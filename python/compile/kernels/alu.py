@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: the TDP's floating-point dataflow ALU, batched.
+
+The paper's PE contains two hardened FP DSP blocks (ADD / MULTIPLY mode,
+single-stage pipeline).  On TPU the analogous unit is the VPU: an
+elementwise, lane-parallel FP datapath.  One kernel invocation evaluates a
+*batch* of fired dataflow nodes: given operand vectors ``a``, ``b`` and an
+``opcode`` vector, it produces the result vector with a lane-wise opcode
+mux (no divergence penalty — every lane evaluates the select chain, the
+mux picks one result, exactly like the FPGA's opcode-steered DSP output
+mux).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation):
+  * batch is tiled into VMEM-resident blocks via BlockSpec — M20K operand
+    scratchpad <-> VMEM;
+  * MXU is deliberately not used: the workload is elementwise, the VPU is
+    the roofline unit;
+  * ``interpret=True`` everywhere — the CPU PJRT client cannot execute
+    Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..opcodes import ADD, MUL, SUB, DIV, MAX, MIN, NEG, COPY
+
+# Default tile: 8 sublanes x 128 lanes = one float32 VREG tile per operand.
+DEFAULT_BLOCK = 256
+
+
+def _alu_kernel(a_ref, b_ref, op_ref, o_ref):
+    """Single-block ALU body: opcode-muxed select chain on the VPU."""
+    a = a_ref[...]
+    b = b_ref[...]
+    op = op_ref[...]
+
+    # Each lane computes all candidate results; the select chain is a
+    # balanced mux (cheap on the VPU, mirrors the DSP output mux).
+    # DIV guards b == 0 the way the FPGA reciprocal unit saturates:
+    # x/0 -> inf with the sign of x (IEEE-754, which jnp already gives us).
+    res = jnp.where(op == ADD, a + b,
+          jnp.where(op == MUL, a * b,
+          jnp.where(op == SUB, a - b,
+          jnp.where(op == DIV, a / b,
+          jnp.where(op == MAX, jnp.maximum(a, b),
+          jnp.where(op == MIN, jnp.minimum(a, b),
+          jnp.where(op == NEG, -a,
+                    a)))))))  # COPY and any unknown opcode: pass a through
+    o_ref[...] = res
+
+
+@partial(jax.jit, static_argnames=("block",))
+def alu_batch(a, b, opcode, *, block: int = DEFAULT_BLOCK):
+    """Evaluate a batch of dataflow node operations.
+
+    Args:
+      a, b:    float32[B] operand vectors (b ignored for unary opcodes).
+      opcode:  int32[B] opcode per lane (see compile.opcodes).
+      block:   VMEM tile size; B must be a multiple of it.
+
+    Returns:
+      float32[B] results.
+    """
+    (n,) = a.shape
+    assert n % block == 0, f"batch {n} not a multiple of block {block}"
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _alu_kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(a.astype(jnp.float32), b.astype(jnp.float32), opcode.astype(jnp.int32))
+
+
+def vmem_bytes(block: int = DEFAULT_BLOCK) -> int:
+    """Estimated VMEM footprint of one ALU tile (3 inputs + 1 output).
+
+    Used by DESIGN.md §Perf: footprint must stay well under ~16 MiB/core.
+    """
+    return 4 * block * 4

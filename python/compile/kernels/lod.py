@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: hierarchical leading-one detector (paper §II-B).
+
+The paper's scheduler stores RDY bit-flags packed 32-per-BRAM-word and finds
+the next ready node with a two-level priority encoder: an OuterLOD over a
+summary vector picks the first non-empty flag word, an InnerLOD picks the
+first set bit inside it.  Because graph memory is sorted by decreasing
+criticality, "first set bit" == "most critical ready node".
+
+Bit convention (shared with rust/src/lod): node ``w*32 + b`` maps to bit
+``b`` (LSB-first) of word ``w``; the leading one is the *lowest* node id
+with its flag set, i.e. trailing-zero-count order.  Rust uses
+``u64::trailing_zeros`` over the same layout.
+
+On TPU a carry-chain priority encoder has no direct analog; the kernel
+computes, per word, ``min(lane index where bit set)`` with an iota + where
+reduction on the VPU, then reduces across words — two reduction trees, the
+vector analog of the paper's deterministic 2-cycle Outer/Inner pick.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NO_READY = 2**30  # sentinel: no flag set anywhere (fits int32)
+WORD_BITS = 32
+
+
+def _lod_kernel(words_ref, o_ref):
+    """words: int32[W] packed flag words -> o: int32[1] leading node id."""
+    words = words_ref[...]
+    w = words.shape[0]
+    # InnerLOD, all words in parallel: position of least-significant set bit.
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (w, WORD_BITS), 1)
+    bits = (words[:, None] >> lanes) & 1
+    inner = jnp.min(jnp.where(bits == 1, lanes, NO_READY), axis=1)
+    # OuterLOD: first word with any bit set, combined into a global node id.
+    word_idx = jax.lax.broadcasted_iota(jnp.int32, (w,), 0)
+    node = jnp.where(inner < NO_READY, word_idx * WORD_BITS + inner, NO_READY)
+    o_ref[0] = jnp.min(node)
+
+
+@partial(jax.jit, static_argnames=())
+def lod_pick(words):
+    """Return the lowest set-bit node id across packed flag words.
+
+    Args:
+      words: int32[W] (bits interpreted as uint32), node w*32+b at bit b.
+
+    Returns:
+      int32[1]: leading node id, or NO_READY if all words are zero.
+    """
+    (w,) = words.shape
+    return pl.pallas_call(
+        _lod_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.int32),
+        interpret=True,
+    )(words.astype(jnp.int32))

@@ -1,0 +1,72 @@
+"""Pure-jnp / pure-python correctness oracles for the L1 kernels and the
+L2 levelized graph evaluator.  No Pallas here — these are the definitions
+the kernels are tested against (pytest + hypothesis)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..opcodes import ADD, MUL, SUB, DIV, MAX, MIN, NEG, COPY
+
+
+def alu_ref(a, b, opcode):
+    """Reference semantics of the dataflow ALU (matches kernels.alu)."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    op = jnp.asarray(opcode, jnp.int32)
+    return jnp.where(op == ADD, a + b,
+           jnp.where(op == MUL, a * b,
+           jnp.where(op == SUB, a - b,
+           jnp.where(op == DIV, a / b,
+           jnp.where(op == MAX, jnp.maximum(a, b),
+           jnp.where(op == MIN, jnp.minimum(a, b),
+           jnp.where(op == NEG, -a, a)))))))
+
+
+def alu_scalar(op: int, a: float, b: float) -> float:
+    """Scalar python oracle — used by the graph evaluator reference."""
+    if op == ADD:
+        return a + b
+    if op == MUL:
+        return a * b
+    if op == SUB:
+        return a - b
+    if op == DIV:
+        return a / b if b != 0 else float(np.float32(a) / np.float32(b))
+    if op == MAX:
+        return max(a, b)
+    if op == MIN:
+        return min(a, b)
+    if op == NEG:
+        return -a
+    return a  # COPY
+
+
+def lod_ref(words) -> int:
+    """Reference leading-one: lowest node id w*32+b with bit b of word w set."""
+    words = np.asarray(words, dtype=np.uint32)
+    for w, word in enumerate(words):
+        word = int(word)
+        if word:
+            return w * 32 + (word & -word).bit_length() - 1
+    return 2**30  # NO_READY
+
+
+def graph_eval_ref(values0, src0, src1, opcode, level, num_levels):
+    """Pure-python levelized evaluation oracle.
+
+    Nodes with level 0 are graph inputs (value taken from values0);
+    level l>0 nodes read the values of src0/src1 (indices into the value
+    array) once all lower levels are done.  Padded slots carry level < 0
+    and are left untouched.
+    """
+    vals = np.array(values0, dtype=np.float32).copy()
+    src0 = np.asarray(src0)
+    src1 = np.asarray(src1)
+    opcode = np.asarray(opcode)
+    level = np.asarray(level)
+    for l in range(1, num_levels + 1):
+        for i in np.nonzero(level == l)[0]:
+            a = vals[src0[i]]
+            b = vals[src1[i]]
+            vals[i] = np.float32(alu_scalar(int(opcode[i]), float(a), float(b)))
+    return vals

@@ -1,0 +1,60 @@
+# L2: functional golden model of what the overlay computes.
+#
+# The TDP overlay evaluates a dataflow graph; any scheduler / placement /
+# overlay size must produce the same node values.  This module is the
+# fixed-shape, levelized JAX formulation of that evaluation: one gather +
+# one (masked) writeback per level, iterated with lax.fori_loop, with the
+# inner arithmetic performed by the L1 Pallas ALU kernel so the kernel
+# lowers into the same HLO artifact.
+#
+# Rust loads artifacts/graph_eval.hlo.txt and uses it as the numerics
+# oracle for simulated executions (coordinator::validate).
+import jax
+import jax.numpy as jnp
+
+from .kernels.alu import alu_batch
+
+# Default padded artifact geometry (recorded in artifacts/manifest.json).
+DEFAULT_N = 2048     # padded node-slot count
+DEFAULT_LMAX = 256   # max dataflow depth (sparse-LU DAGs are deep)
+
+
+def graph_eval(values0, src0, src1, opcode, level, *, lmax: int = DEFAULT_LMAX,
+               block: int = 256):
+    """Levelized dataflow-graph evaluation.
+
+    Args:
+      values0: float32[N] initial values (graph inputs at their node slots;
+               anything for interior slots).
+      src0:    int32[N] first-operand node index per node (self-index for
+               inputs / padding — a harmless gather).
+      src1:    int32[N] second-operand node index per node.
+      opcode:  int32[N] ALU opcode per node (see compile.opcodes).
+      level:   int32[N] dataflow (ASAP) level; 0 = graph input, negative =
+               padding.  A node at level l only depends on levels < l.
+      lmax:    static loop bound; levels beyond lmax are not evaluated.
+      block:   Pallas ALU tile size.
+
+    Returns:
+      float32[N] final node values.
+    """
+    n = values0.shape[0]
+    assert n % block == 0
+
+    def body(l, vals):
+        a = vals[src0]
+        b = vals[src1]
+        res = alu_batch(a, b, opcode, block=block)
+        fire = level == l
+        return jnp.where(fire, res, vals)
+
+    return jax.lax.fori_loop(1, lmax + 1, body, values0.astype(jnp.float32))
+
+
+def graph_eval_jit(lmax: int = DEFAULT_LMAX, block: int = 256):
+    """A jitted graph_eval (tuple-returning) closed over static lmax/block,
+    ready to ``.lower()`` for the AOT artifact."""
+    def fn(values0, src0, src1, opcode, level):
+        return (graph_eval(values0, src0, src1, opcode, level,
+                           lmax=lmax, block=block),)
+    return jax.jit(fn)

@@ -1,0 +1,29 @@
+"""Dataflow ALU opcode table — the single source of truth.
+
+The Arria 10 TDP in the paper synthesizes two hardened floating-point DSP
+blocks per PE (ADD and MULTIPLY mode).  Sparse matrix factorization also
+needs SUB and DIV (pivot normalization); the paper's kernels obtain these
+from the same DSP blocks (subtract = add with negated operand; divide via
+reciprocal).  We expose them as first-class opcodes.
+
+Mirrored in rust/src/graph/op.rs; `make artifacts` writes this table into
+artifacts/manifest.json and a rust test asserts the two stay in sync.
+"""
+
+# opcode -> (name, arity)
+OPCODES = {
+    0: ("ADD", 2),
+    1: ("MUL", 2),
+    2: ("SUB", 2),
+    3: ("DIV", 2),
+    4: ("MAX", 2),
+    5: ("MIN", 2),
+    6: ("NEG", 1),
+    7: ("COPY", 1),
+}
+
+ADD, MUL, SUB, DIV, MAX, MIN, NEG, COPY = range(8)
+
+NAMES = {k: v[0] for k, v in OPCODES.items()}
+ARITY = {k: v[1] for k, v in OPCODES.items()}
+NUM_OPCODES = len(OPCODES)

@@ -1,0 +1,55 @@
+# hypothesis sweep: ALU kernel shape/dtype/value space vs the jnp reference.
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.alu import alu_batch
+from compile.kernels.ref import alu_ref
+from compile.opcodes import OPCODES
+
+finite_f32 = st.floats(
+    min_value=-(2.0 ** 96), max_value=2.0 ** 96,
+    allow_nan=False, allow_infinity=False,
+    width=32, allow_subnormal=False,
+).map(lambda x: float(np.float32(x)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    data=st.data(),
+    blocks=st.integers(min_value=1, max_value=6),
+    block=st.sampled_from([8, 32, 128]),
+)
+def test_alu_matches_ref_on_random_batches(data, blocks, block):
+    n = blocks * block
+    a = np.array(data.draw(st.lists(finite_f32, min_size=n, max_size=n)),
+                 np.float32)
+    b = np.array(data.draw(st.lists(finite_f32, min_size=n, max_size=n)),
+                 np.float32)
+    op = np.array(
+        data.draw(st.lists(st.integers(0, len(OPCODES) - 1),
+                           min_size=n, max_size=n)), np.int32)
+    got = np.asarray(alu_batch(jnp.asarray(a), jnp.asarray(b),
+                               jnp.asarray(op), block=block))
+    want = np.asarray(alu_ref(a, b, op))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    special=st.lists(
+        st.sampled_from([0.0, -0.0, np.inf, -np.inf, np.nan, 1e-38, -1e38]),
+        min_size=32, max_size=32),
+    op=st.integers(0, len(OPCODES) - 1),
+)
+def test_alu_special_values(special, op):
+    a = np.array(special, np.float32)
+    b = np.array(special[::-1], np.float32)
+    ops = np.full(32, op, np.int32)
+    got = np.asarray(alu_batch(jnp.asarray(a), jnp.asarray(b),
+                               jnp.asarray(ops), block=32))
+    want = np.asarray(alu_ref(a, b, ops))
+    np.testing.assert_array_equal(
+        np.isnan(got), np.isnan(want))
+    mask = ~np.isnan(want)
+    np.testing.assert_array_equal(got[mask], want[mask])

@@ -1,0 +1,62 @@
+# L1 LOD kernel vs the reference priority encoder (paper §II-B semantics).
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lod import lod_pick, NO_READY, WORD_BITS
+from compile.kernels.ref import lod_ref
+
+
+def pick(words_u32):
+    w = np.asarray(words_u32, np.uint32).astype(np.int32)  # reinterpret bits
+    return int(np.asarray(lod_pick(jnp.asarray(w)))[0])
+
+
+def test_all_zero_returns_sentinel():
+    assert pick(np.zeros(128, np.uint32)) == NO_READY
+
+
+@pytest.mark.parametrize("node", [0, 1, 31, 32, 33, 255, 4095])
+def test_single_bit(node):
+    words = np.zeros(128, np.uint32)
+    words[node // WORD_BITS] |= np.uint32(1 << (node % WORD_BITS))
+    assert pick(words) == node
+
+
+def test_picks_lowest_node_id():
+    words = np.zeros(128, np.uint32)
+    for node in (4000, 37, 2048, 38):
+        words[node // WORD_BITS] |= np.uint32(1 << (node % WORD_BITS))
+    assert pick(words) == 37
+
+
+def test_msb_of_word_zero_beats_lsb_of_word_one():
+    words = np.zeros(8, np.uint32)
+    words[0] = np.uint32(1 << 31)  # node 31
+    words[1] = np.uint32(1)        # node 32
+    assert pick(words) == 31
+
+
+def test_full_words():
+    words = np.full(16, 0xFFFFFFFF, dtype=np.uint32)
+    assert pick(words) == 0
+
+
+def test_sign_bit_word():
+    # Word value with bit 31 set only — exercises the int32 reinterpret.
+    words = np.zeros(4, np.uint32)
+    words[2] = np.uint32(0x80000000)  # node 2*32+31 = 95
+    assert pick(words) == 95
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    w=st.sampled_from([1, 4, 16, 128, 256]),
+    data=st.data(),
+)
+def test_matches_reference_on_random_vectors(w, data):
+    words = np.array(
+        data.draw(st.lists(st.integers(0, 2**32 - 1), min_size=w, max_size=w)),
+        dtype=np.uint32)
+    assert pick(words) == lod_ref(words)

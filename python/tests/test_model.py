@@ -1,0 +1,113 @@
+# L2 levelized graph evaluator vs the pure-python oracle.
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.model import graph_eval
+from compile.kernels.ref import graph_eval_ref
+from compile.opcodes import ADD, MUL, SUB, DIV, OPCODES
+
+RNG = np.random.default_rng(7)
+
+
+def random_dag(n, n_inputs, num_levels, pad_to=None):
+    """Build a random levelized DAG in the padded-array encoding."""
+    pad_to = pad_to or n
+    src0 = np.arange(pad_to, dtype=np.int32)   # self-gather default
+    src1 = np.arange(pad_to, dtype=np.int32)
+    opcode = np.zeros(pad_to, np.int32)
+    level = np.full(pad_to, -1, np.int32)
+    level[:n_inputs] = 0
+    per_level = max(1, (n - n_inputs) // num_levels)
+    idx = n_inputs
+    for l in range(1, num_levels + 1):
+        # Sources must come from strictly lower levels: nodes at the same
+        # level fire with start-of-level values in the jnp model.
+        level_start = idx
+        for _ in range(per_level):
+            if idx >= n:
+                break
+            lo = int(RNG.integers(0, level_start))
+            hi = int(RNG.integers(0, level_start))
+            src0[idx], src1[idx] = lo, hi
+            opcode[idx] = int(RNG.integers(0, 3))  # ADD/MUL/SUB keep values sane
+            level[idx] = l
+            idx += 1
+    vals0 = np.zeros(pad_to, np.float32)
+    vals0[:n_inputs] = RNG.standard_normal(n_inputs).astype(np.float32)
+    return vals0, src0, src1, opcode, level, num_levels
+
+
+def run_both(vals0, src0, src1, opcode, level, lmax, block=64):
+    got = np.asarray(graph_eval(
+        jnp.asarray(vals0), jnp.asarray(src0), jnp.asarray(src1),
+        jnp.asarray(opcode), jnp.asarray(level), lmax=lmax, block=block))
+    want = graph_eval_ref(vals0, src0, src1, opcode, level, lmax)
+    return got, want
+
+
+def test_single_add():
+    vals0 = np.array([2.0, 3.0, 0.0, 0.0], np.float32)
+    src0 = np.array([0, 1, 0, 3], np.int32)
+    src1 = np.array([0, 1, 1, 3], np.int32)
+    opcode = np.array([0, 0, ADD, 0], np.int32)
+    level = np.array([0, 0, 1, -1], np.int32)
+    got, want = run_both(vals0, src0, src1, opcode, level, 1, block=4)
+    assert got[2] == 5.0
+    np.testing.assert_array_equal(got, want)
+
+
+def test_diamond_dependency():
+    #   v0, v1 inputs; a = v0+v1; b = v0*v1; c = a-b
+    vals0 = np.zeros(8, np.float32)
+    vals0[0], vals0[1] = 3.0, 4.0
+    src0 = np.array([0, 1, 0, 0, 2, 5, 6, 7], np.int32)
+    src1 = np.array([0, 1, 1, 1, 3, 5, 6, 7], np.int32)
+    opcode = np.array([0, 0, ADD, MUL, SUB, 0, 0, 0], np.int32)
+    level = np.array([0, 0, 1, 1, 2, -1, -1, -1], np.int32)
+    got, want = run_both(vals0, src0, src1, opcode, level, 2, block=8)
+    assert got[4] == (3.0 + 4.0) - (3.0 * 4.0)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_deep_chain():
+    n = 64
+    vals0 = np.zeros(n, np.float32)
+    vals0[0] = 1.0
+    src0 = np.arange(n, dtype=np.int32)
+    src1 = np.arange(n, dtype=np.int32)
+    opcode = np.zeros(n, np.int32)
+    level = np.full(n, -1, np.int32)
+    level[0] = 0
+    for i in range(1, 40):
+        src0[i] = i - 1
+        src1[i] = i - 1
+        opcode[i] = ADD  # doubles each step
+        level[i] = i
+    got, want = run_both(vals0, src0, src1, opcode, level, 40, block=16)
+    assert got[39] == 2.0 ** 39
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_random_dags_match_oracle(seed):
+    global RNG
+    RNG = np.random.default_rng(seed)
+    args = random_dag(n=192, n_inputs=24, num_levels=12, pad_to=256)
+    got, want = run_both(*args)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_padding_slots_untouched():
+    args = random_dag(n=40, n_inputs=8, num_levels=4, pad_to=64)
+    vals0 = args[0].copy()
+    vals0[40:] = 123.5
+    got, _ = run_both(vals0, *args[1:5], args[5])
+    np.testing.assert_array_equal(got[40:], np.full(24, 123.5, np.float32))
+
+
+def test_lmax_truncates_deeper_levels():
+    args = list(random_dag(n=64, n_inputs=8, num_levels=8, pad_to=64))
+    got, _ = run_both(*args[:5], 3)  # only levels 1..3 evaluated
+    want = graph_eval_ref(*args[:5], 3)
+    np.testing.assert_allclose(got, want, rtol=1e-6)

@@ -1,0 +1,64 @@
+//! Regenerates the **§III capacity claim**: the 256-PE FIFO-based overlay
+//! stores ≈100 K nodes+edges; freeing the FIFO BRAMs lets the
+//! out-of-order design store ≈5× more. (`cargo bench --bench capacity`)
+//!
+//! Two views:
+//! 1. analytic — BRAM-budget arithmetic at the measured LU edge:node mix;
+//! 2. empirical — grow concrete LU workloads until round-robin placement
+//!    no longer fits each scheduler's per-PE budget.
+
+#[path = "harness.rs"]
+mod harness;
+
+use tdp::config::OverlayConfig;
+use tdp::coordinator::{capacity_experiment, graph_fits};
+use tdp::pe::BramConfig;
+use tdp::sched::SchedulerKind;
+use tdp::workload::{lu_factorization_graph, SparseMatrix};
+
+fn main() {
+    harness::section("§III capacity — analytic (BRAM budget arithmetic)");
+    println!(
+        "{:>6} {:>18} {:>14} {:>7}",
+        "PEs", "in-order items", "OoO items", "ratio"
+    );
+    for pes in [16usize, 64, 256, 300] {
+        let row = capacity_experiment(&BramConfig::paper(), pes, 2.0);
+        println!(
+            "{:>6} {:>18} {:>14} {:>6.2}x",
+            row.num_pes, row.max_items_inorder, row.max_items_ooo, row.ratio
+        );
+    }
+    println!("paper at 256 PEs: ≈100K items in-order, ≈5x out-of-order");
+
+    harness::section("§III capacity — empirical (grow LU until placement fails)");
+    let cfg = OverlayConfig::default(); // 16x16
+    let mut last_fit = [0usize; 2]; // [in-order, ooo] footprints
+    for n in (100..=3400).step_by(150) {
+        let m = SparseMatrix::banded(n, 6, 0.8, 7);
+        let (g, _) = lu_factorization_graph(&m);
+        let fp = g.footprint();
+        for (i, kind) in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder]
+            .into_iter()
+            .enumerate()
+        {
+            if graph_fits(&g, &cfg, kind) {
+                last_fit[i] = last_fit[i].max(fp);
+            }
+        }
+    }
+    println!("largest fitting LU footprint (nodes+edges), 256 PEs:");
+    println!("  in-order:     {:>9}", last_fit[0]);
+    println!("  out-of-order: {:>9}", last_fit[1]);
+    println!(
+        "  empirical ratio: {:.2}x (paper: ≈5x)",
+        last_fit[1] as f64 / last_fit[0] as f64
+    );
+
+    let t = harness::time_it(1, 5, || {
+        let m = SparseMatrix::banded(800, 6, 0.8, 7);
+        let (g, _) = lu_factorization_graph(&m);
+        graph_fits(&g, &cfg, SchedulerKind::OutOfOrder)
+    });
+    harness::report("fit-check (800x800 banded LU)", &t, "");
+}

@@ -1,0 +1,55 @@
+#![allow(dead_code)] // different bench targets use different helpers
+//! Minimal benchmark harness (criterion is not in the offline crate
+//! universe). Each bench target is a `harness = false` binary that uses
+//! `time_it` / `Bench` to measure and print stable rows; `cargo bench`
+//! runs them all. Timing method: warmup + N timed repetitions, report
+//! median and spread.
+
+use std::time::{Duration, Instant};
+
+/// Measure `f` over `reps` repetitions after `warmup` runs.
+pub fn time_it<T, F: FnMut() -> T>(warmup: usize, reps: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    Timing {
+        median: samples[samples.len() / 2],
+        min: samples[0],
+        max: samples[samples.len() - 1],
+        reps,
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub reps: usize,
+}
+
+impl Timing {
+    pub fn per_iter(&self, iters_per_rep: u64) -> Duration {
+        Duration::from_nanos((self.median.as_nanos() as u64) / iters_per_rep.max(1))
+    }
+}
+
+/// Pretty-print one benchmark row.
+pub fn report(name: &str, t: &Timing, extra: &str) {
+    println!(
+        "{name:<44} median {:>12?} (min {:>12?}, max {:>12?}, n={}) {extra}",
+        t.median, t.min, t.max, t.reps
+    );
+}
+
+/// Section header matching the paper artifact being regenerated.
+pub fn section(title: &str) {
+    println!("\n==== {title} ====");
+}

@@ -1,0 +1,87 @@
+//! Hoplite NoC characterization (supports the §I/§II "lightweight,
+//! high-bandwidth 56b Hoplite router" claim): delivered throughput,
+//! latency and deflection rate under uniform-random traffic across
+//! injection rates, plus raw `Network::step` cost (the simulator's
+//! second-hottest loop). (`cargo bench --bench noc_throughput`)
+
+#[path = "harness.rs"]
+mod harness;
+
+use tdp::noc::{Network, Packet};
+use tdp::util::rng::Rng;
+
+fn run_traffic(cols: usize, rows: usize, rate: f64, cycles: u64, seed: u64) -> (f64, f64, f64) {
+    let n = cols * rows;
+    let mut net = Network::new(cols, rows);
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut inject: Vec<Option<Packet>> = vec![None; n];
+    for _ in 0..cycles {
+        for (pe, slot) in inject.iter_mut().enumerate() {
+            if slot.is_none() && rng.gen_bool(rate) {
+                let dest = rng.gen_range(n);
+                *slot = Some(Packet {
+                    dest_x: (dest % cols) as u8,
+                    dest_y: (dest / cols) as u8,
+                    local_idx: (pe % 8192) as u16,
+                    slot: 0,
+                    payload: 1.0,
+                });
+            }
+        }
+        let res = net.step(&inject);
+        for (pe, ok) in res.inject_ok.iter().enumerate() {
+            if *ok {
+                inject[pe] = None;
+            }
+        }
+    }
+    let s = net.stats;
+    (
+        s.delivered as f64 / cycles as f64 / n as f64, // accepted throughput/PE
+        s.total_latency as f64 / s.delivered.max(1) as f64,
+        s.deflections as f64 / s.delivered.max(1) as f64,
+    )
+}
+
+fn main() {
+    harness::section("Hoplite 16x16 torus — uniform random traffic");
+    println!(
+        "{:>12} {:>16} {:>12} {:>14}",
+        "inject rate", "thpt (pkt/PE/cy)", "avg latency", "deflections/pkt"
+    );
+    for rate in [0.02, 0.05, 0.1, 0.2, 0.35, 0.5, 0.8, 1.0] {
+        let (thpt, lat, defl) = run_traffic(16, 16, rate, 20_000, 1);
+        println!("{rate:>12.2} {thpt:>16.4} {lat:>12.1} {defl:>14.3}");
+    }
+
+    harness::section("Network::step raw cost (perf target: sim hot loop)");
+    for (cols, rows) in [(4usize, 4usize), (8, 8), (16, 16)] {
+        let n = cols * rows;
+        let mut net = Network::new(cols, rows);
+        let mut rng = Rng::seed_from_u64(2);
+        let inject: Vec<Option<Packet>> = (0..n)
+            .map(|pe| {
+                let dest = rng.gen_range(n);
+                Some(Packet {
+                    dest_x: (dest % cols) as u8,
+                    dest_y: (dest / cols) as u8,
+                    local_idx: pe as u16,
+                    slot: 0,
+                    payload: 1.0,
+                })
+            })
+            .collect();
+        let iters = 10_000u64;
+        let t = harness::time_it(2, 8, || {
+            for _ in 0..iters {
+                std::hint::black_box(net.step(&inject));
+            }
+        });
+        let per_router = t.median.as_nanos() as f64 / iters as f64 / n as f64;
+        harness::report(
+            &format!("net.step {cols}x{rows}"),
+            &t,
+            &format!("= {per_router:.1} ns/router-cycle"),
+        );
+    }
+}

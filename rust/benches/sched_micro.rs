@@ -1,0 +1,132 @@
+//! Scheduler microbenchmarks + the paper's design-choice ablations:
+//! * hierarchical LOD pick vs. the naive memory scan (§II-B's motivating
+//!   comparison — "in the worst case scan 256 memory locations");
+//! * criticality-sorted memory vs. arrival order for the OoO scheduler
+//!   (the §II-B heuristic, isolated);
+//! * raw mark/take throughput of both schedulers.
+//! (`cargo bench --bench sched_micro`)
+
+#[path = "harness.rs"]
+mod harness;
+
+use tdp::config::OverlayConfig;
+use tdp::coordinator::run_one;
+use tdp::lod::{naive_scan, HierLod};
+use tdp::place::LocalOrder;
+use tdp::sched::{make_scheduler, SchedulerKind};
+use tdp::util::rng::Rng;
+use tdp::workload::{lu_factorization_graph, SparseMatrix};
+
+fn main() {
+    harness::section("LOD: hierarchical pick vs naive scan (4096 flags = 128 words)");
+    let mut rng = Rng::seed_from_u64(7);
+    // sparse ready sets: the realistic regime (few ready among thousands)
+    for ready in [1usize, 8, 64, 1024] {
+        let mut words = vec![0u32; 128];
+        let mut summary = vec![0u64; 2];
+        for _ in 0..ready {
+            let n = rng.gen_range(4096);
+            words[n / 32] |= 1 << (n % 32);
+            summary[n / 32 / 64] |= 1 << ((n / 32) % 64);
+        }
+        let lod = HierLod::new(128);
+        let iters = 100_000u64;
+        let t_h = harness::time_it(2, 8, || {
+            let mut acc = 0u32;
+            for _ in 0..iters {
+                acc = acc.wrapping_add(std::hint::black_box(lod.pick(&summary, &words)));
+            }
+            acc
+        });
+        let t_n = harness::time_it(2, 8, || {
+            let mut acc = 0u32;
+            for _ in 0..iters {
+                acc = acc.wrapping_add(std::hint::black_box(naive_scan(&words)));
+            }
+            acc
+        });
+        harness::report(
+            &format!("hier pick, {ready} ready"),
+            &t_h,
+            &format!("{:?}/pick", t_h.per_iter(iters)),
+        );
+        harness::report(
+            &format!("naive scan, {ready} ready"),
+            &t_n,
+            &format!("{:?}/pick", t_n.per_iter(iters)),
+        );
+    }
+
+    harness::section("scheduler mark/take throughput (4096-node PE)");
+    for kind in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
+        let iters = 4096u64;
+        let t = harness::time_it(3, 10, || {
+            let mut s = make_scheduler(kind, 4096, None);
+            for i in 0..4096u32 {
+                s.mark_ready(i);
+            }
+            let mut acc = 0u32;
+            while let Some(n) = s.take() {
+                acc = acc.wrapping_add(n);
+                s.fanout_done(n);
+            }
+            acc
+        });
+        harness::report(
+            kind.name(),
+            &t,
+            &format!("{:?}/op", t.per_iter(2 * iters)),
+        );
+    }
+
+    harness::section("ablation — §II-B criticality sort (OoO, 8x8 overlay)");
+    let m = SparseMatrix::power_law(300, 3, 11);
+    let (g, _) = lu_factorization_graph(&m);
+    println!("workload: power-law LU -> {} nodes", g.len());
+    let base = OverlayConfig::default().with_dims(8, 8);
+    let mut rows = Vec::new();
+    for (label, kind, order) in [
+        ("in-order FIFO", SchedulerKind::InOrder, LocalOrder::ByNodeId),
+        ("OoO, arrival order (no heuristic)", SchedulerKind::OutOfOrder, LocalOrder::ByNodeId),
+        ("OoO, criticality sorted (paper)", SchedulerKind::OutOfOrder, LocalOrder::ByCriticality),
+    ] {
+        let mut cfg = base.with_scheduler(kind);
+        cfg.local_order = order;
+        let stats = run_one(&g, cfg, kind);
+        rows.push((label.to_string(), stats.cycles));
+    }
+    // pick-order bounds: LIFO and uniform-random (criticality-blind OoO)
+    for (label, which) in [("LIFO pick (stack)", 0u8), ("uniform-random pick", 1)] {
+        let mut cfg = base.with_scheduler(SchedulerKind::OutOfOrder);
+        cfg.local_order = LocalOrder::ByNodeId;
+        let place = tdp::place::Placement::build(
+            &g,
+            cfg.num_pes(),
+            cfg.placement,
+            cfg.local_order,
+            cfg.seed,
+        );
+        let mut sim = tdp::sim::Simulator::with_scheduler_factory(
+            &g,
+            place,
+            cfg,
+            move |_, num_local| -> Box<dyn tdp::sched::ReadyScheduler + Send> {
+                if which == 0 {
+                    Box::new(tdp::sched::LifoSched::new(num_local))
+                } else {
+                    Box::new(tdp::sched::RandomSched::new(num_local, 99))
+                }
+            },
+        )
+        .unwrap();
+        let stats = sim.run().unwrap();
+        rows.push((label.to_string(), stats.cycles));
+    }
+    let worst = rows[0].1 as f64;
+    for (label, cycles) in &rows {
+        println!(
+            "{label:<36} {cycles:>9} cycles  (speedup vs in-order: {:.3})",
+            worst / *cycles as f64
+        );
+    }
+}

@@ -1,0 +1,44 @@
+//! Simulator hot-path throughput (PE-cycles simulated per second) — the
+//! §Perf headline metric of EXPERIMENTS.md. The Fig. 1 sweep runs
+//! millions of overlay cycles; this bench tracks how fast we step them.
+//! (`cargo bench --bench sim_hotpath`)
+
+#[path = "harness.rs"]
+mod harness;
+
+use tdp::config::OverlayConfig;
+use tdp::sched::SchedulerKind;
+use tdp::sim::Simulator;
+use tdp::workload::{lu_factorization_graph, SparseMatrix};
+
+fn main() {
+    harness::section("simulator hot path — PE-cycles/second");
+    let m = SparseMatrix::banded(200, 8, 0.9, 3);
+    let (g, _) = lu_factorization_graph(&m);
+    println!(
+        "workload: banded LU 200x200 bw8 -> {} nodes, {} edges",
+        g.len(),
+        g.num_edges()
+    );
+    for (cols, rows) in [(2usize, 2usize), (4, 4), (8, 8), (16, 16)] {
+        for kind in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
+            let cfg = OverlayConfig::default()
+                .with_dims(cols, rows)
+                .with_scheduler(kind);
+            let mut cycles = 0u64;
+            let t = harness::time_it(1, 5, || {
+                let mut sim = Simulator::new(&g, cfg).unwrap();
+                let stats = sim.run().unwrap();
+                cycles = stats.cycles;
+                stats.cycles
+            });
+            let pe_cycles = cycles * (cols * rows) as u64;
+            let rate = pe_cycles as f64 / t.median.as_secs_f64();
+            harness::report(
+                &format!("{cols}x{rows} {}", kind.name()),
+                &t,
+                &format!("{cycles} cyc -> {:.1} M PE-cycles/s", rate / 1e6),
+            );
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Regenerates **Table I**: resource utilization and Fmax of the overlay
+//! on the Arria 10 10AX115S, from the calibrated analytic model.
+//! (`cargo bench --bench table1_resources`)
+
+#[path = "harness.rs"]
+mod harness;
+
+use tdp::resource::{self, ARRIA10_10AX115S};
+
+fn main() {
+    harness::section("Table I — resource utilization (Arria 10 10AX115S)");
+    println!(
+        "{:>5} {:>16} {:>16} {:>12} {:>12} {:>10}",
+        "PEs", "ALMs", "REGs", "DSPs", "BRAMs", "Fmax(MHz)"
+    );
+    for r in resource::table1(&[4, 16, 64, 300]) {
+        println!(
+            "{:>5} {:>9} ({:>4.1}%) {:>9} ({:>4.1}%) {:>5} ({:>4.1}%) {:>5} ({:>4.1}%) {:>10.0}",
+            r.pes, r.alms, r.alm_pct, r.regs, r.reg_pct, r.dsps, r.dsp_pct, r.brams, r.bram_pct,
+            r.fmax_mhz
+        );
+    }
+    println!("\npaper row 1:   1 PE: 1.4K ALMs (0.3%), 2.2K regs, 2 DSP (0.1%), 8 BRAM (0.3%), 306 MHz");
+    println!("paper row 2: 256 PE: 367K ALMs (86%), 559K regs (25%*), 512 DSP (34%), 2K BRAM (75%), 258 MHz");
+    println!("(*paper's reg%% uses a different denominator; we report regs/4xALM-FF)");
+    println!(
+        "max overlay fitting the device: {} PEs (abstract: 'up to 300 processors')",
+        resource::max_overlay(&ARRIA10_10AX115S, 1.0)
+    );
+
+    // model-evaluation cost is trivial; time it anyway for completeness
+    let t = harness::time_it(3, 10, || resource::table1(&[4, 16, 64, 300]));
+    harness::report("table1 model evaluation", &t, "");
+}

@@ -1,0 +1,442 @@
+//! Configuration system: every architectural knob of the overlay, the
+//! placement, and workload specs — TOML loading (via `util::toml`) with
+//! paper-faithful defaults.
+
+use crate::pe::BramConfig;
+use crate::place::{LocalOrder, PlacementPolicy};
+use crate::sched::SchedulerKind;
+use crate::util::toml::{self, Doc, Value};
+use std::path::Path;
+use std::str::FromStr;
+
+impl FromStr for SchedulerKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "in_order" | "in-order" | "inorder" | "fifo" => Ok(SchedulerKind::InOrder),
+            "out_of_order" | "out-of-order" | "ooo" | "lod" => Ok(SchedulerKind::OutOfOrder),
+            _ => Err(format!("unknown scheduler '{s}' (in_order | out_of_order)")),
+        }
+    }
+}
+
+impl SchedulerKind {
+    pub fn toml_name(self) -> &'static str {
+        match self {
+            SchedulerKind::InOrder => "in_order",
+            SchedulerKind::OutOfOrder => "out_of_order",
+        }
+    }
+}
+
+impl FromStr for PlacementPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "round_robin" | "rr" => Ok(PlacementPolicy::RoundRobin),
+            "random" => Ok(PlacementPolicy::Random),
+            "block_contiguous" | "block" => Ok(PlacementPolicy::BlockContiguous),
+            "chunked" => Ok(PlacementPolicy::Chunked),
+            _ => Err(format!(
+                "unknown placement '{s}' (round_robin | random | block_contiguous | chunked)"
+            )),
+        }
+    }
+}
+
+impl PlacementPolicy {
+    pub fn toml_name(self) -> &'static str {
+        match self {
+            PlacementPolicy::RoundRobin => "round_robin",
+            PlacementPolicy::Random => "random",
+            PlacementPolicy::BlockContiguous => "block_contiguous",
+            PlacementPolicy::Chunked => "chunked",
+        }
+    }
+}
+
+impl FromStr for LocalOrder {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "by_criticality" | "criticality" => Ok(LocalOrder::ByCriticality),
+            "by_node_id" | "node_id" | "arrival" => Ok(LocalOrder::ByNodeId),
+            _ => Err(format!("unknown local order '{s}' (by_criticality | by_node_id)")),
+        }
+    }
+}
+
+impl LocalOrder {
+    pub fn toml_name(self) -> &'static str {
+        match self {
+            LocalOrder::ByCriticality => "by_criticality",
+            LocalOrder::ByNodeId => "by_node_id",
+        }
+    }
+}
+
+/// Full overlay configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverlayConfig {
+    /// torus width (columns). Paper design points: 1..16.
+    pub cols: usize,
+    /// torus height (rows).
+    pub rows: usize,
+    pub scheduler: SchedulerKind,
+    pub bram: BramConfig,
+    /// ALU retire latency in cycles (operand match + single-stage DSP).
+    pub alu_latency: u64,
+    pub placement: PlacementPolicy,
+    pub local_order: LocalOrder,
+    /// seed for placement / workload randomness
+    pub seed: u64,
+    /// hard cycle limit (safety net against livelock bugs)
+    pub max_cycles: u64,
+    /// enforce BRAM capacity at placement time (capacity experiments
+    /// disable this to measure where designs *would* stop fitting)
+    pub enforce_capacity: bool,
+}
+
+impl Default for OverlayConfig {
+    fn default() -> Self {
+        Self {
+            cols: 16,
+            rows: 16,
+            scheduler: SchedulerKind::OutOfOrder,
+            bram: BramConfig::paper(),
+            alu_latency: 2,
+            placement: PlacementPolicy::RoundRobin,
+            local_order: LocalOrder::ByCriticality,
+            seed: 0,
+            max_cycles: 200_000_000,
+            enforce_capacity: false,
+        }
+    }
+}
+
+impl OverlayConfig {
+    pub fn num_pes(&self) -> usize {
+        self.cols * self.rows
+    }
+
+    /// The paper's two Table-I design points.
+    pub fn paper_1x1() -> Self {
+        Self {
+            cols: 1,
+            rows: 1,
+            ..Default::default()
+        }
+    }
+
+    pub fn paper_16x16() -> Self {
+        Self::default()
+    }
+
+    pub fn with_scheduler(mut self, kind: SchedulerKind) -> Self {
+        self.scheduler = kind;
+        self
+    }
+
+    pub fn with_dims(mut self, cols: usize, rows: usize) -> Self {
+        self.cols = cols;
+        self.rows = rows;
+        self
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cols == 0 || self.rows == 0 {
+            return Err("overlay dimensions must be >= 1".into());
+        }
+        if self.cols > 32 || self.rows > 32 {
+            return Err("torus coordinates are 5b: max 32x32 (packet format)".into());
+        }
+        if self.alu_latency == 0 {
+            return Err("alu_latency must be >= 1".into());
+        }
+        if self.bram.brams_per_pe == 0 || self.bram.words_per_bram == 0 {
+            return Err("BRAM geometry must be non-zero".into());
+        }
+        if self.bram.fifo_brams < 0.0 || self.bram.fifo_brams >= self.bram.brams_per_pe as f64 {
+            return Err("fifo_brams must be in [0, brams_per_pe)".into());
+        }
+        Ok(())
+    }
+
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = toml::parse(text).map_err(|e| e.to_string())?;
+        let mut cfg = Self::default();
+        let get_usize = |doc: &Doc, sec: &str, key: &str, cur: usize| -> Result<usize, String> {
+            match doc.get(sec, key) {
+                None => Ok(cur),
+                Some(v) => v.as_usize().ok_or_else(|| format!("{key}: expected integer")),
+            }
+        };
+        let get_u64 = |doc: &Doc, key: &str, cur: u64| -> Result<u64, String> {
+            match doc.get("", key) {
+                None => Ok(cur),
+                Some(v) => v
+                    .as_i64()
+                    .and_then(|i| u64::try_from(i).ok())
+                    .ok_or_else(|| format!("{key}: expected non-negative integer")),
+            }
+        };
+        cfg.cols = get_usize(&doc, "", "cols", cfg.cols)?;
+        cfg.rows = get_usize(&doc, "", "rows", cfg.rows)?;
+        cfg.alu_latency = get_u64(&doc, "alu_latency", cfg.alu_latency)?;
+        cfg.seed = get_u64(&doc, "seed", cfg.seed)?;
+        cfg.max_cycles = get_u64(&doc, "max_cycles", cfg.max_cycles)?;
+        if let Some(v) = doc.get("", "scheduler") {
+            cfg.scheduler = v
+                .as_str()
+                .ok_or("scheduler: expected string")?
+                .parse()?;
+        }
+        if let Some(v) = doc.get("", "placement") {
+            cfg.placement = v.as_str().ok_or("placement: expected string")?.parse()?;
+        }
+        if let Some(v) = doc.get("", "local_order") {
+            cfg.local_order = v.as_str().ok_or("local_order: expected string")?.parse()?;
+        }
+        if let Some(v) = doc.get("", "enforce_capacity") {
+            cfg.enforce_capacity = v.as_bool().ok_or("enforce_capacity: expected bool")?;
+        }
+        cfg.bram.brams_per_pe = get_usize(&doc, "bram", "brams_per_pe", cfg.bram.brams_per_pe)?;
+        cfg.bram.words_per_bram =
+            get_usize(&doc, "bram", "words_per_bram", cfg.bram.words_per_bram)?;
+        cfg.bram.word_bits = get_usize(&doc, "bram", "word_bits", cfg.bram.word_bits)?;
+        cfg.bram.flag_bits_used =
+            get_usize(&doc, "bram", "flag_bits_used", cfg.bram.flag_bits_used)?;
+        cfg.bram.multipump = get_usize(&doc, "bram", "multipump", cfg.bram.multipump)?;
+        if let Some(v) = doc.get("bram", "fifo_brams") {
+            cfg.bram.fifo_brams = v.as_f64().ok_or("fifo_brams: expected number")?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_toml_file(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::from_toml(&text)
+    }
+
+    pub fn to_toml(&self) -> String {
+        let mut doc = Doc::new();
+        doc.set("", "cols", Value::Int(self.cols as i64));
+        doc.set("", "rows", Value::Int(self.rows as i64));
+        doc.set("", "scheduler", Value::Str(self.scheduler.toml_name().into()));
+        doc.set("", "alu_latency", Value::Int(self.alu_latency as i64));
+        doc.set("", "placement", Value::Str(self.placement.toml_name().into()));
+        doc.set("", "local_order", Value::Str(self.local_order.toml_name().into()));
+        doc.set("", "seed", Value::Int(self.seed as i64));
+        doc.set("", "max_cycles", Value::Int(self.max_cycles as i64));
+        doc.set("", "enforce_capacity", Value::Bool(self.enforce_capacity));
+        doc.set("bram", "brams_per_pe", Value::Int(self.bram.brams_per_pe as i64));
+        doc.set("bram", "words_per_bram", Value::Int(self.bram.words_per_bram as i64));
+        doc.set("bram", "word_bits", Value::Int(self.bram.word_bits as i64));
+        doc.set("bram", "flag_bits_used", Value::Int(self.bram.flag_bits_used as i64));
+        doc.set("bram", "fifo_brams", Value::Float(self.bram.fifo_brams));
+        doc.set("bram", "multipump", Value::Int(self.bram.multipump as i64));
+        doc.render()
+    }
+}
+
+/// A named workload specification (CLI + experiment configs), parsed from
+/// a TOML table with a `kind` discriminator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// sparse-LU elimination DAG of a banded matrix
+    LuBanded { n: usize, half_bw: usize, fill: f64 },
+    /// sparse-LU of a uniform random matrix
+    LuRandom { n: usize, density: f64 },
+    /// sparse-LU of a power-law matrix
+    LuPowerLaw { n: usize, avg_degree: usize },
+    /// random layered DAG
+    Layered {
+        inputs: usize,
+        levels: usize,
+        width: usize,
+        lookback: usize,
+    },
+    /// binary reduction tree
+    Reduction { width: usize },
+    /// 1-D 3-point stencil
+    Stencil { width: usize, steps: usize },
+    /// FFT butterfly
+    Butterfly { width: usize },
+    /// Matrix Market file on disk
+    MatrixMarket { path: String },
+}
+
+impl WorkloadSpec {
+    /// Parse from a TOML snippet like `kind = "lu_banded"\nn = 100\n...`.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = toml::parse(text).map_err(|e| e.to_string())?;
+        let kind = doc
+            .get("", "kind")
+            .and_then(|v| v.as_str())
+            .ok_or("workload spec needs kind = \"...\"")?;
+        let usz = |key: &str| -> Result<usize, String> {
+            doc.get("", key)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| format!("workload '{kind}' needs integer {key}"))
+        };
+        let flt = |key: &str| -> Result<f64, String> {
+            doc.get("", key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("workload '{kind}' needs number {key}"))
+        };
+        Ok(match kind {
+            "lu_banded" => WorkloadSpec::LuBanded {
+                n: usz("n")?,
+                half_bw: usz("half_bw")?,
+                fill: flt("fill")?,
+            },
+            "lu_random" => WorkloadSpec::LuRandom {
+                n: usz("n")?,
+                density: flt("density")?,
+            },
+            "lu_power_law" => WorkloadSpec::LuPowerLaw {
+                n: usz("n")?,
+                avg_degree: usz("avg_degree")?,
+            },
+            "layered" => WorkloadSpec::Layered {
+                inputs: usz("inputs")?,
+                levels: usz("levels")?,
+                width: usz("width")?,
+                lookback: usz("lookback")?,
+            },
+            "reduction" => WorkloadSpec::Reduction { width: usz("width")? },
+            "stencil" => WorkloadSpec::Stencil {
+                width: usz("width")?,
+                steps: usz("steps")?,
+            },
+            "butterfly" => WorkloadSpec::Butterfly { width: usz("width")? },
+            "matrix_market" => WorkloadSpec::MatrixMarket {
+                path: doc
+                    .get("", "path")
+                    .and_then(|v| v.as_str())
+                    .ok_or("matrix_market needs path")?
+                    .to_string(),
+            },
+            _ => return Err(format!("unknown workload kind '{kind}'")),
+        })
+    }
+
+    /// Materialize the dataflow graph.
+    pub fn build(&self, seed: u64) -> Result<crate::graph::DataflowGraph, String> {
+        use crate::workload::*;
+        Ok(match self {
+            WorkloadSpec::LuBanded { n, half_bw, fill } => {
+                let m = SparseMatrix::banded(*n, *half_bw, *fill, seed);
+                lu_factorization_graph(&m).0
+            }
+            WorkloadSpec::LuRandom { n, density } => {
+                let m = SparseMatrix::random(*n, *density, seed);
+                lu_factorization_graph(&m).0
+            }
+            WorkloadSpec::LuPowerLaw { n, avg_degree } => {
+                let m = SparseMatrix::power_law(*n, *avg_degree, seed);
+                lu_factorization_graph(&m).0
+            }
+            WorkloadSpec::Layered {
+                inputs,
+                levels,
+                width,
+                lookback,
+            } => layered_random(*inputs, *levels, *width, *lookback, seed),
+            WorkloadSpec::Reduction { width } => {
+                reduction_tree(*width, crate::graph::Op::Add, seed)
+            }
+            WorkloadSpec::Stencil { width, steps } => stencil_1d(*width, *steps, seed),
+            WorkloadSpec::Butterfly { width } => butterfly_graph(*width, seed),
+            WorkloadSpec::MatrixMarket { path } => {
+                let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+                let m = parse_matrix_market(&text)?;
+                lu_factorization_graph(&m).0
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_16x16() {
+        let c = OverlayConfig::default();
+        assert_eq!(c.num_pes(), 256);
+        assert_eq!(c.bram.brams_per_pe, 8);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = OverlayConfig::paper_1x1().with_scheduler(SchedulerKind::InOrder);
+        let text = c.to_toml();
+        let c2 = OverlayConfig::from_toml(&text).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn partial_toml_uses_defaults() {
+        let c = OverlayConfig::from_toml("cols = 4\nrows = 2\n").unwrap();
+        assert_eq!(c.num_pes(), 8);
+        assert_eq!(c.scheduler, SchedulerKind::OutOfOrder);
+        assert_eq!(c.bram.brams_per_pe, 8);
+    }
+
+    #[test]
+    fn scheduler_aliases_parse() {
+        for (s, k) in [
+            ("fifo", SchedulerKind::InOrder),
+            ("in-order", SchedulerKind::InOrder),
+            ("ooo", SchedulerKind::OutOfOrder),
+            ("lod", SchedulerKind::OutOfOrder),
+        ] {
+            assert_eq!(s.parse::<SchedulerKind>().unwrap(), k);
+        }
+        assert!("bogus".parse::<SchedulerKind>().is_err());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(OverlayConfig::from_toml("cols = 0\n").is_err());
+        assert!(OverlayConfig::from_toml("cols = 64\n").is_err());
+        assert!(OverlayConfig::from_toml("alu_latency = 0\n").is_err());
+        assert!(OverlayConfig::from_toml("scheduler = \"bogus\"\n").is_err());
+        assert!(OverlayConfig::from_toml("[bram]\nfifo_brams = 8.0\n").is_err());
+    }
+
+    #[test]
+    fn bram_section_overrides() {
+        let c = OverlayConfig::from_toml("[bram]\nbrams_per_pe = 4\nfifo_brams = 2.5\n").unwrap();
+        assert_eq!(c.bram.brams_per_pe, 4);
+        assert_eq!(c.bram.fifo_brams, 2.5);
+    }
+
+    #[test]
+    fn workload_specs_build() {
+        let specs = [
+            WorkloadSpec::LuBanded { n: 20, half_bw: 2, fill: 0.9 },
+            WorkloadSpec::Layered { inputs: 4, levels: 3, width: 8, lookback: 1 },
+            WorkloadSpec::Reduction { width: 16 },
+            WorkloadSpec::Stencil { width: 8, steps: 2 },
+            WorkloadSpec::Butterfly { width: 8 },
+        ];
+        for s in &specs {
+            let g = s.build(1).unwrap();
+            assert!(g.len() > 0);
+            g.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn workload_spec_toml() {
+        let s = WorkloadSpec::from_toml("kind = \"lu_banded\"\nn = 10\nhalf_bw = 2\nfill = 0.5\n")
+            .unwrap();
+        assert_eq!(s, WorkloadSpec::LuBanded { n: 10, half_bw: 2, fill: 0.5 });
+        assert!(WorkloadSpec::from_toml("kind = \"nope\"\n").is_err());
+        assert!(WorkloadSpec::from_toml("kind = \"lu_banded\"\nn = 10\n").is_err());
+    }
+}

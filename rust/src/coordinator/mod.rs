@@ -1,0 +1,159 @@
+//! Experiment coordinator — the L3 orchestration layer.
+//!
+//! Drives the simulator across (workload × overlay × scheduler) sweeps on
+//! a thread pool, validates simulated numerics against both the native
+//! reference and the PJRT `graph_eval` oracle, and renders the paper's
+//! tables/figures as CSV/markdown.
+
+mod experiments;
+mod report;
+
+pub use experiments::{
+    capacity_experiment, fig1_config, fig1_sweep, graph_fits, run_one, scheduler_comparison,
+    CapacityRow, Fig1Row, RunOutcome,
+};
+pub use report::{render_csv, render_markdown, Table};
+
+use crate::config::OverlayConfig;
+use crate::graph::DataflowGraph;
+use crate::runtime::XlaRuntime;
+use crate::sim::{SimError, SimStats, Simulator};
+
+/// Outcome of validating one simulated execution.
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    pub stats: SimStats,
+    /// max |sim − native evaluate| (bit-exactness expected: 0.0)
+    pub max_abs_err_native: f32,
+    /// max |sim − PJRT graph_eval| if the oracle was used
+    pub max_abs_err_pjrt: Option<f32>,
+    pub nodes_checked: usize,
+}
+
+impl ValidationReport {
+    pub fn passed(&self) -> bool {
+        self.max_abs_err_native == 0.0
+            && self.max_abs_err_pjrt.map_or(true, |e| e == 0.0)
+    }
+}
+
+fn max_abs_err(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            if x.is_nan() && y.is_nan() {
+                0.0
+            } else {
+                (x - y).abs()
+            }
+        })
+        .fold(0.0f32, f32::max)
+}
+
+/// Run `g` on the overlay and validate the computed node values against
+/// the native topological evaluation and (when the graph fits the
+/// artifact geometry and `rt` is given) the PJRT oracle.
+pub fn validate(
+    g: &DataflowGraph,
+    cfg: OverlayConfig,
+    rt: Option<&XlaRuntime>,
+) -> Result<ValidationReport, SimError> {
+    let mut sim = Simulator::new(g, cfg)?;
+    let stats = sim.run()?;
+    let native = g.evaluate();
+    let err_native = max_abs_err(sim.values(), &native);
+    let err_pjrt = rt.and_then(|rt| {
+        rt.graph_eval(g)
+            .ok()
+            .map(|oracle| max_abs_err(sim.values(), &oracle))
+    });
+    Ok(ValidationReport {
+        stats,
+        max_abs_err_native: err_native,
+        max_abs_err_pjrt: err_pjrt,
+        nodes_checked: g.len(),
+    })
+}
+
+/// Run a set of jobs on `threads` OS threads (simple static partition —
+/// jobs are similar-sized simulator runs).
+pub fn run_parallel<T, F>(jobs: Vec<T>, threads: usize, f: F) -> Vec<<F as JobFn<T>>::Out>
+where
+    T: Send,
+    F: JobFn<T> + Sync,
+    <F as JobFn<T>>::Out: Send,
+{
+    let threads = threads.max(1);
+    let mut out: Vec<Option<<F as JobFn<T>>::Out>> = Vec::new();
+    out.resize_with(jobs.len(), || None);
+    let jobs: Vec<(usize, T)> = jobs.into_iter().enumerate().collect();
+    let chunks: Vec<Vec<(usize, T)>> = {
+        let mut cs: Vec<Vec<(usize, T)>> = (0..threads).map(|_| Vec::new()).collect();
+        for (i, job) in jobs {
+            cs[i % threads].push((i, job));
+        }
+        cs
+    };
+    let slots: Vec<std::sync::Mutex<Vec<(usize, <F as JobFn<T>>::Out)>>> =
+        (0..threads).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+    std::thread::scope(|s| {
+        for (t, chunk) in chunks.into_iter().enumerate() {
+            let f = &f;
+            let slot = &slots[t];
+            s.spawn(move || {
+                let mut results = Vec::with_capacity(chunk.len());
+                for (i, job) in chunk {
+                    results.push((i, f.call(job)));
+                }
+                *slot.lock().unwrap() = results;
+            });
+        }
+    });
+    for slot in slots {
+        for (i, r) in slot.into_inner().unwrap() {
+            out[i] = Some(r);
+        }
+    }
+    out.into_iter().map(|o| o.expect("job completed")).collect()
+}
+
+/// Function-object trait for [`run_parallel`] (stable-rust friendly).
+pub trait JobFn<T> {
+    type Out;
+    fn call(&self, job: T) -> Self::Out;
+}
+
+impl<T, O, F: Fn(T) -> O> JobFn<T> for F {
+    type Out = O;
+    fn call(&self, job: T) -> O {
+        self(job)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::layered_random;
+
+    #[test]
+    fn validate_small_graph_native() {
+        let g = layered_random(8, 4, 12, 2, 1);
+        let cfg = OverlayConfig::default().with_dims(2, 2);
+        let rep = validate(&g, cfg, None).unwrap();
+        assert!(rep.passed(), "sim values must be bit-exact: {rep:?}");
+        assert_eq!(rep.nodes_checked, g.len());
+    }
+
+    #[test]
+    fn run_parallel_preserves_order() {
+        let jobs: Vec<u64> = (0..37).collect();
+        let out = run_parallel(jobs, 4, |j: u64| j * 2);
+        assert_eq!(out, (0..37).map(|j| j * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_parallel_single_thread() {
+        let out = run_parallel(vec![1, 2, 3], 1, |j: i32| j + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+}

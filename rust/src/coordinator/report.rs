@@ -1,0 +1,111 @@
+//! Report rendering: experiment rows → CSV / markdown tables.
+
+/// A simple column-oriented table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+}
+
+/// Render as CSV (headers + rows).
+pub fn render_csv(t: &Table) -> String {
+    let mut out = String::new();
+    out.push_str(&t.headers.join(","));
+    out.push('\n');
+    for row in &t.rows {
+        let escaped: Vec<String> = row
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        out.push_str(&escaped.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Render as a github-markdown table with a title line.
+pub fn render_markdown(t: &Table) -> String {
+    let mut widths: Vec<usize> = t.headers.iter().map(|h| h.len()).collect();
+    for row in &t.rows {
+        for (i, c) in row.iter().enumerate() {
+            widths[i] = widths[i].max(c.len());
+        }
+    }
+    let fmt_row = |cells: &[String]| -> String {
+        let padded: Vec<String> = cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+            .collect();
+        format!("| {} |", padded.join(" | "))
+    };
+    let mut out = format!("### {}\n\n", t.title);
+    out.push_str(&fmt_row(&t.headers));
+    out.push('\n');
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    out.push_str(&fmt_row(&sep));
+    out.push('\n');
+    for row in &t.rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Speedups", &["size", "speedup"]);
+        t.push(vec!["100".into(), "1.05".into()]);
+        t.push(vec!["100,000".into(), "1.50".into()]);
+        t
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let csv = render_csv(&sample());
+        assert!(csv.starts_with("size,speedup\n"));
+        assert!(csv.contains("\"100,000\""));
+    }
+
+    #[test]
+    fn markdown_is_aligned() {
+        let md = render_markdown(&sample());
+        assert!(md.contains("### Speedups"));
+        assert!(md.contains("| size    | speedup |"));
+        let lines: Vec<&str> = md.lines().filter(|l| l.starts_with('|')).collect();
+        let lens: Vec<usize> = lines.iter().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{md}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push(vec!["1".into()]);
+    }
+}

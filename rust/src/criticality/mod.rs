@@ -1,0 +1,137 @@
+//! Static criticality labeling (paper §II-B).
+//!
+//! Before execution, a one-time software pass labels every node with a
+//! *criticality* metric: its height — the length of the longest path from
+//! the node to any sink. Nodes on the critical path have the largest
+//! height; executing them first shortens overall completion. Each PE's
+//! local graph memory is then laid out in **decreasing criticality** order
+//! so the hierarchical LOD scheduler (which always picks the ready node at
+//! the lowest address) implicitly issues the most critical ready node.
+
+use crate::graph::{DataflowGraph, NodeId, NodeKind};
+
+/// Per-node criticality = longest path (in edges) from the node to a sink.
+///
+/// Computed in one reverse topological sweep (node ids are topologically
+/// ordered by construction).
+pub fn criticality(g: &DataflowGraph) -> Vec<u32> {
+    let n = g.len();
+    let mut height = vec![0u32; n];
+    for i in (0..n).rev() {
+        let mut h = 0u32;
+        for &(dst, _) in &g.node(i as NodeId).fanout {
+            h = h.max(height[dst as usize] + 1);
+        }
+        height[i] = h;
+    }
+    height
+}
+
+/// ASAP level: earliest cycle-level a node can fire (inputs at 0).
+pub fn asap(g: &DataflowGraph) -> Vec<u32> {
+    g.asap_levels()
+}
+
+/// ALAP level: latest level a node can fire without stretching the
+/// schedule beyond the graph depth.
+pub fn alap(g: &DataflowGraph) -> Vec<u32> {
+    let depth = asap(g).iter().copied().max().unwrap_or(0);
+    let crit = criticality(g);
+    crit.iter().map(|&h| depth - h).collect()
+}
+
+/// Slack = ALAP − ASAP. Zero-slack nodes are on the critical path.
+pub fn slack(g: &DataflowGraph) -> Vec<u32> {
+    let a = asap(g);
+    let l = alap(g);
+    a.iter().zip(&l).map(|(&a, &l)| l - a).collect()
+}
+
+/// Sort a set of node ids in decreasing criticality (ties broken by node
+/// id for determinism) — the memory layout order of §II-B.
+pub fn sort_by_criticality(nodes: &mut [NodeId], crit: &[u32]) {
+    nodes.sort_by_key(|&n| (std::cmp::Reverse(crit[n as usize]), n));
+}
+
+/// Critical-path length of the whole graph (in ALU ops).
+pub fn critical_path(g: &DataflowGraph) -> u32 {
+    criticality(g)
+        .iter()
+        .zip(g.nodes())
+        .filter(|(_, node)| matches!(node.kind, NodeKind::Input { .. }))
+        .map(|(&h, _)| h)
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Op;
+
+    /// chain: in -> a -> b -> c, plus independent in2 -> d
+    fn chain_plus_leaf() -> DataflowGraph {
+        let mut g = DataflowGraph::new();
+        let i0 = g.add_input(1.0);
+        let a = g.op(Op::Copy, &[i0]);
+        let b = g.op(Op::Copy, &[a]);
+        let _c = g.op(Op::Copy, &[b]);
+        let i1 = g.add_input(2.0);
+        let _d = g.op(Op::Copy, &[i1]);
+        g
+    }
+
+    #[test]
+    fn criticality_is_height_to_sink() {
+        let g = chain_plus_leaf();
+        assert_eq!(criticality(&g), vec![3, 2, 1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn asap_alap_slack() {
+        let g = chain_plus_leaf();
+        assert_eq!(asap(&g), vec![0, 1, 2, 3, 0, 1]);
+        assert_eq!(alap(&g), vec![0, 1, 2, 3, 2, 3]);
+        assert_eq!(slack(&g), vec![0, 0, 0, 0, 2, 2]);
+    }
+
+    #[test]
+    fn critical_path_of_chain() {
+        let g = chain_plus_leaf();
+        assert_eq!(critical_path(&g), 3);
+    }
+
+    #[test]
+    fn sort_decreasing_criticality_stable_ties() {
+        let g = chain_plus_leaf();
+        let crit = criticality(&g);
+        let mut ids: Vec<u32> = (0..g.len() as u32).collect();
+        sort_by_criticality(&mut ids, &crit);
+        assert_eq!(ids, vec![0, 1, 2, 4, 3, 5]);
+        // decreasing criticality, ties by id
+        let sorted: Vec<u32> = ids.iter().map(|&i| crit[i as usize]).collect();
+        assert_eq!(sorted, vec![3, 2, 1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn diamond_criticality() {
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(1.0);
+        let b = g.add_input(2.0);
+        let s = g.op(Op::Add, &[a, b]);
+        let p = g.op(Op::Mul, &[a, b]);
+        let _r = g.op(Op::Sub, &[s, p]);
+        let crit = criticality(&g);
+        assert_eq!(crit, vec![2, 2, 1, 1, 0]);
+        assert_eq!(critical_path(&g), 2);
+    }
+
+    #[test]
+    fn single_input_graph() {
+        let mut g = DataflowGraph::new();
+        g.add_input(5.0);
+        assert_eq!(criticality(&g), vec![0]);
+        assert_eq!(critical_path(&g), 0);
+        assert_eq!(slack(&g), vec![0]);
+    }
+}

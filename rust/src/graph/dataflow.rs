@@ -1,0 +1,330 @@
+//! The dataflow DAG the overlay executes.
+
+use super::Op;
+use std::fmt;
+
+/// Index of a node in its [`DataflowGraph`].
+pub type NodeId = u32;
+
+/// What a node is: a graph input carrying an initial token value, or an
+/// ALU operation over one/two upstream nodes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NodeKind {
+    /// Graph input with its initial value (injected at simulation start).
+    Input { value: f32 },
+    /// Interior operation; `src` holds `op.arity()` operand node ids.
+    Operation { op: Op, src: [NodeId; 2] },
+}
+
+/// One dataflow actor.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub kind: NodeKind,
+    /// Consumers of this node's value: `(dest node, operand slot)`.
+    /// In hardware this is the fanout edge list in graph memory that the
+    /// packet generation unit walks, one packet per edge.
+    pub fanout: Vec<(NodeId, u8)>,
+}
+
+impl Node {
+    pub fn arity(&self) -> usize {
+        match self.kind {
+            NodeKind::Input { .. } => 0,
+            NodeKind::Operation { op, .. } => op.arity(),
+        }
+    }
+
+    pub fn op(&self) -> Option<Op> {
+        match self.kind {
+            NodeKind::Input { .. } => None,
+            NodeKind::Operation { op, .. } => Some(op),
+        }
+    }
+}
+
+/// Errors from graph construction / validation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphError {
+    /// Operand references a node id that does not exist (yet). Builder
+    /// order implies acyclicity: operands must precede their consumers.
+    ForwardReference { node: NodeId, operand: NodeId },
+    /// Graph has no nodes.
+    Empty,
+}
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphError::ForwardReference { node, operand } => write!(
+                f,
+                "node {node} references operand {operand} that is not yet defined"
+            ),
+            GraphError::Empty => write!(f, "graph has no nodes"),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+/// Summary statistics (used by reports and capacity checks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GraphStats {
+    pub nodes: usize,
+    pub inputs: usize,
+    pub edges: usize,
+    /// Dataflow depth: number of ASAP levels (inputs are level 0).
+    pub depth: usize,
+    pub max_fanout: usize,
+}
+
+/// A dataflow DAG in construction (topological) order: node `i`'s operands
+/// all have ids `< i`, which the builder enforces — so the graph is acyclic
+/// by construction and `0..n` is a valid topological order.
+#[derive(Debug, Clone, Default)]
+pub struct DataflowGraph {
+    nodes: Vec<Node>,
+}
+
+impl DataflowGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            nodes: Vec::with_capacity(n),
+        }
+    }
+
+    /// Add a graph input carrying `value`; returns its id.
+    pub fn add_input(&mut self, value: f32) -> NodeId {
+        self.nodes.push(Node {
+            kind: NodeKind::Input { value },
+            fanout: Vec::new(),
+        });
+        (self.nodes.len() - 1) as NodeId
+    }
+
+    /// Add an operation node; operands must already exist.
+    pub fn add_op(&mut self, op: Op, srcs: &[NodeId]) -> Result<NodeId, GraphError> {
+        assert_eq!(srcs.len(), op.arity(), "operand count != op arity");
+        let id = self.nodes.len() as NodeId;
+        for &s in srcs {
+            if s >= id {
+                return Err(GraphError::ForwardReference { node: id, operand: s });
+            }
+        }
+        let src = [srcs[0], *srcs.get(1).unwrap_or(&srcs[0])];
+        for (slot, &s) in srcs.iter().enumerate() {
+            self.nodes[s as usize].fanout.push((id, slot as u8));
+        }
+        self.nodes.push(Node {
+            kind: NodeKind::Operation { op, src },
+            fanout: Vec::new(),
+        });
+        Ok(id)
+    }
+
+    /// Convenience for tests/generators: panics on builder misuse.
+    pub fn op(&mut self, op: Op, srcs: &[NodeId]) -> NodeId {
+        self.add_op(op, srcs).expect("valid operands")
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    #[inline]
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id as usize]
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.nodes.iter().map(|n| n.fanout.len()).sum()
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.kind, NodeKind::Input { .. }))
+            .count()
+    }
+
+    /// nodes + edges — the paper's graph-memory sizing unit (§III).
+    pub fn footprint(&self) -> usize {
+        self.len() + self.num_edges()
+    }
+
+    /// Functional evaluation in topological order — the native golden
+    /// model (cross-checked against the PJRT `graph_eval` artifact).
+    pub fn evaluate(&self) -> Vec<f32> {
+        let mut vals = vec![0f32; self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            vals[i] = match node.kind {
+                NodeKind::Input { value } => value,
+                NodeKind::Operation { op, src } => {
+                    op.eval(vals[src[0] as usize], vals[src[1] as usize])
+                }
+            };
+        }
+        vals
+    }
+
+    /// ASAP level per node: inputs 0, else 1 + max(level of operands).
+    pub fn asap_levels(&self) -> Vec<u32> {
+        let mut level = vec![0u32; self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            if let NodeKind::Operation { op, src } = node.kind {
+                let mut l = level[src[0] as usize];
+                if op.arity() == 2 {
+                    l = l.max(level[src[1] as usize]);
+                }
+                level[i] = l + 1;
+            }
+        }
+        level
+    }
+
+    pub fn stats(&self) -> GraphStats {
+        let depth = self.asap_levels().iter().copied().max().unwrap_or(0) as usize;
+        GraphStats {
+            nodes: self.len(),
+            inputs: self.num_inputs(),
+            edges: self.num_edges(),
+            depth,
+            max_fanout: self.nodes.iter().map(|n| n.fanout.len()).max().unwrap_or(0),
+        }
+    }
+
+    /// Structural validation (the builder already guarantees most of this;
+    /// deserialized graphs go through here).
+    pub fn validate(&self) -> Result<(), GraphError> {
+        if self.nodes.is_empty() {
+            return Err(GraphError::Empty);
+        }
+        for (i, node) in self.nodes.iter().enumerate() {
+            if let NodeKind::Operation { op, src } = node.kind {
+                for &s in &src[..op.arity()] {
+                    if s as usize >= i {
+                        return Err(GraphError::ForwardReference {
+                            node: i as NodeId,
+                            operand: s,
+                        });
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Graphviz DOT export (debugging / documentation).
+    pub fn to_dot(&self) -> String {
+        let mut out = String::from("digraph dataflow {\n  rankdir=TB;\n");
+        for (i, node) in self.nodes.iter().enumerate() {
+            let label = match node.kind {
+                NodeKind::Input { value } => format!("in={value}"),
+                NodeKind::Operation { op, .. } => op.name().to_string(),
+            };
+            out.push_str(&format!("  n{i} [label=\"{i}:{label}\"];\n"));
+        }
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &(dst, slot) in &node.fanout {
+                out.push_str(&format!("  n{i} -> n{dst} [label=\"{slot}\"];\n"));
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> DataflowGraph {
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(3.0);
+        let b = g.add_input(4.0);
+        let s = g.op(Op::Add, &[a, b]);
+        let p = g.op(Op::Mul, &[a, b]);
+        g.op(Op::Sub, &[s, p]);
+        g
+    }
+
+    #[test]
+    fn build_and_evaluate_diamond() {
+        let g = diamond();
+        let vals = g.evaluate();
+        assert_eq!(vals, vec![3.0, 4.0, 7.0, 12.0, -5.0]);
+    }
+
+    #[test]
+    fn fanout_lists_are_consistent() {
+        let g = diamond();
+        // input a feeds nodes 2 and 3, slot 0
+        assert_eq!(g.node(0).fanout, vec![(2, 0), (3, 0)]);
+        assert_eq!(g.node(1).fanout, vec![(2, 1), (3, 1)]);
+        assert_eq!(g.num_edges(), 6);
+        assert_eq!(g.footprint(), 5 + 6);
+    }
+
+    #[test]
+    fn asap_levels_diamond() {
+        let g = diamond();
+        assert_eq!(g.asap_levels(), vec![0, 0, 1, 1, 2]);
+        assert_eq!(g.stats().depth, 2);
+    }
+
+    #[test]
+    fn forward_reference_rejected() {
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(1.0);
+        assert!(matches!(
+            g.add_op(Op::Add, &[a, 5]),
+            Err(GraphError::ForwardReference { .. })
+        ));
+    }
+
+    #[test]
+    fn unary_ops_single_operand() {
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(2.5);
+        let n = g.op(Op::Neg, &[a]);
+        let c = g.op(Op::Copy, &[n]);
+        let vals = g.evaluate();
+        assert_eq!(vals[n as usize], -2.5);
+        assert_eq!(vals[c as usize], -2.5);
+        assert_eq!(g.node(a).fanout, vec![(n, 0)]);
+    }
+
+    #[test]
+    fn validate_accepts_builder_output() {
+        assert!(diamond().validate().is_ok());
+        assert_eq!(DataflowGraph::new().validate(), Err(GraphError::Empty));
+    }
+
+    #[test]
+    fn dot_export_contains_nodes_and_edges() {
+        let dot = diamond().to_dot();
+        assert!(dot.contains("n0 -> n2"));
+        assert!(dot.contains("ADD"));
+    }
+
+    #[test]
+    #[should_panic(expected = "operand count != op arity")]
+    fn wrong_arity_panics() {
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(1.0);
+        let _ = g.add_op(Op::Add, &[a]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Dataflow graph IR: the application representation the overlay executes.
+//!
+//! A graph is a DAG of [`Node`]s. *Input* nodes carry initial token values;
+//! interior nodes carry an ALU [`Op`] and one or two operand edges. Fanout
+//! adjacency (who consumes my value) is precomputed — in hardware it is the
+//! fanout edge list stored in graph memory that the packet-generation unit
+//! walks.
+
+mod dataflow;
+mod op;
+mod ser;
+
+pub use dataflow::{DataflowGraph, GraphError, GraphStats, Node, NodeId, NodeKind};
+pub use op::Op;
+pub use ser::{graph_from_json, graph_to_json};

@@ -1,0 +1,127 @@
+//! ALU opcodes — mirrors `python/compile/opcodes.py` (the artifact
+//! manifest records the python table; `runtime::manifest` tests assert the
+//! two stay in sync).
+
+/// Dataflow ALU operation.
+///
+/// The paper's PE synthesizes two hardened floating-point DSP blocks (ADD
+/// and MULTIPLY mode). Sparse factorization additionally needs SUB and DIV
+/// (pivot normalization), obtained from the same blocks; MAX/MIN/NEG/COPY
+/// round out the ISA used by the workload generators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Op {
+    Add = 0,
+    Mul = 1,
+    Sub = 2,
+    Div = 3,
+    Max = 4,
+    Min = 5,
+    Neg = 6,
+    Copy = 7,
+}
+
+impl Op {
+    pub const ALL: [Op; 8] = [
+        Op::Add,
+        Op::Mul,
+        Op::Sub,
+        Op::Div,
+        Op::Max,
+        Op::Min,
+        Op::Neg,
+        Op::Copy,
+    ];
+
+    /// Opcode encoding shared with the python layer / HLO artifacts.
+    #[inline]
+    pub fn code(self) -> u32 {
+        self as u32
+    }
+
+    pub fn from_code(code: u32) -> Option<Op> {
+        Op::ALL.get(code as usize).copied()
+    }
+
+    /// Number of operands the node must receive before it can fire.
+    #[inline]
+    pub fn arity(self) -> usize {
+        match self {
+            Op::Neg | Op::Copy => 1,
+            _ => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::Add => "ADD",
+            Op::Mul => "MUL",
+            Op::Sub => "SUB",
+            Op::Div => "DIV",
+            Op::Max => "MAX",
+            Op::Min => "MIN",
+            Op::Neg => "NEG",
+            Op::Copy => "COPY",
+        }
+    }
+
+    /// Evaluate with f32 semantics — bit-compatible with the Pallas ALU
+    /// kernel (`kernels/alu.py`) and the IEEE-754 DSP blocks.
+    #[inline]
+    pub fn eval(self, a: f32, b: f32) -> f32 {
+        match self {
+            Op::Add => a + b,
+            Op::Mul => a * b,
+            Op::Sub => a - b,
+            Op::Div => a / b,
+            Op::Max => a.max(b),
+            Op::Min => a.min(b),
+            Op::Neg => -a,
+            Op::Copy => a,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_roundtrip() {
+        for op in Op::ALL {
+            assert_eq!(Op::from_code(op.code()), Some(op));
+        }
+        assert_eq!(Op::from_code(8), None);
+        assert_eq!(Op::from_code(u32::MAX), None);
+    }
+
+    #[test]
+    fn arity_matches_python_table() {
+        // python/compile/opcodes.py: ADD..MIN binary, NEG/COPY unary.
+        assert_eq!(Op::Add.arity(), 2);
+        assert_eq!(Op::Div.arity(), 2);
+        assert_eq!(Op::Neg.arity(), 1);
+        assert_eq!(Op::Copy.arity(), 1);
+    }
+
+    #[test]
+    fn eval_basic() {
+        assert_eq!(Op::Add.eval(2.0, 3.0), 5.0);
+        assert_eq!(Op::Mul.eval(2.0, 3.0), 6.0);
+        assert_eq!(Op::Sub.eval(2.0, 3.0), -1.0);
+        assert_eq!(Op::Div.eval(3.0, 2.0), 1.5);
+        assert_eq!(Op::Max.eval(2.0, 3.0), 3.0);
+        assert_eq!(Op::Min.eval(2.0, 3.0), 2.0);
+        assert_eq!(Op::Neg.eval(2.0, 9.0), -2.0);
+        assert_eq!(Op::Copy.eval(2.0, 9.0), 2.0);
+    }
+
+    #[test]
+    fn eval_ieee_edge_cases() {
+        assert!(Op::Div.eval(1.0, 0.0).is_infinite());
+        assert!(Op::Div.eval(0.0, 0.0).is_nan());
+        assert!(Op::Add.eval(f32::NAN, 1.0).is_nan());
+        // max/min follow jnp.maximum semantics for signed zero inputs
+        assert_eq!(Op::Max.eval(-0.0, 0.0), 0.0);
+    }
+}

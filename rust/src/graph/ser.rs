@@ -1,0 +1,135 @@
+//! Graph (de)serialization — JSON via `util::json`, with post-load
+//! validation. Fanout lists are derived state and are rebuilt on load.
+//!
+//! Format:
+//! ```json
+//! {"nodes": [ {"in": 1.5},
+//!             {"op": "ADD", "src": [0, 1]},
+//!             {"op": "NEG", "src": [2]} ]}
+//! ```
+//!
+//! Used by `tdp gen --out g.json` / `tdp run --graph g.json` so workloads
+//! can be generated once and replayed across experiments.
+
+use super::{DataflowGraph, NodeKind, Op};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// Serialize a graph to compact JSON.
+pub fn graph_to_json(g: &DataflowGraph) -> String {
+    let nodes: Vec<Json> = g
+        .nodes()
+        .iter()
+        .map(|n| {
+            let mut m = BTreeMap::new();
+            match n.kind {
+                NodeKind::Input { value } => {
+                    m.insert("in".to_string(), Json::Num(value as f64));
+                }
+                NodeKind::Operation { op, src } => {
+                    m.insert("op".to_string(), Json::Str(op.name().to_string()));
+                    let srcs = &src[..op.arity()];
+                    m.insert(
+                        "src".to_string(),
+                        Json::Arr(srcs.iter().map(|&s| Json::Num(s as f64)).collect()),
+                    );
+                }
+            }
+            Json::Obj(m)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("nodes".to_string(), Json::Arr(nodes));
+    json::write(&Json::Obj(root))
+}
+
+fn op_by_name(name: &str) -> Option<Op> {
+    Op::ALL.into_iter().find(|o| o.name() == name)
+}
+
+/// Parse and validate a graph from JSON.
+pub fn graph_from_json(s: &str) -> Result<DataflowGraph, String> {
+    let doc = json::parse(s).map_err(|e| e.to_string())?;
+    let nodes = doc
+        .get("nodes")
+        .and_then(|n| n.as_arr())
+        .ok_or("missing 'nodes' array")?;
+    let mut g = DataflowGraph::with_capacity(nodes.len());
+    for (i, n) in nodes.iter().enumerate() {
+        let obj = n.as_obj().ok_or_else(|| format!("node {i}: not an object"))?;
+        if let Some(v) = obj.get("in") {
+            let value = v.as_f64().ok_or_else(|| format!("node {i}: bad input value"))? as f32;
+            g.add_input(value);
+        } else {
+            let name = obj
+                .get("op")
+                .and_then(|o| o.as_str())
+                .ok_or_else(|| format!("node {i}: missing op"))?;
+            let op = op_by_name(name).ok_or_else(|| format!("node {i}: unknown op {name}"))?;
+            let src_json = obj
+                .get("src")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| format!("node {i}: missing src"))?;
+            let srcs: Vec<u32> = src_json
+                .iter()
+                .map(|s| s.as_f64().map(|f| f as u32))
+                .collect::<Option<Vec<u32>>>()
+                .ok_or_else(|| format!("node {i}: bad src ids"))?;
+            if srcs.len() != op.arity() {
+                return Err(format!(
+                    "node {i}: {} expects {} operands, got {}",
+                    op.name(),
+                    op.arity(),
+                    srcs.len()
+                ));
+            }
+            g.add_op(op, &srcs).map_err(|e| format!("node {i}: {e}"))?;
+        }
+    }
+    g.validate().map_err(|e| e.to_string())?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Op;
+
+    #[test]
+    fn roundtrip() {
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(1.5);
+        let b = g.add_input(-2.0);
+        let d = g.op(Op::Div, &[a, b]);
+        g.op(Op::Neg, &[d]);
+        let json = graph_to_json(&g);
+        let g2 = graph_from_json(&json).unwrap();
+        assert_eq!(g2.len(), 4);
+        assert_eq!(g2.evaluate(), g.evaluate());
+        assert_eq!(g2.num_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn roundtrip_preserves_f32_values() {
+        let mut g = DataflowGraph::new();
+        g.add_input(0.1); // not exactly representable
+        g.add_input(f32::MIN_POSITIVE);
+        let g2 = graph_from_json(&graph_to_json(&g)).unwrap();
+        assert_eq!(g2.evaluate(), g.evaluate());
+    }
+
+    #[test]
+    fn corrupt_json_rejected() {
+        assert!(graph_from_json("{not json").is_err());
+        assert!(graph_from_json("{}").is_err());
+        // forward reference
+        let bad = r#"{"nodes":[{"op":"ADD","src":[0,1]}]}"#;
+        assert!(graph_from_json(bad).is_err());
+        // wrong arity
+        let bad2 = r#"{"nodes":[{"in":1},{"op":"ADD","src":[0]}]}"#;
+        assert!(graph_from_json(bad2).is_err());
+        // unknown op
+        let bad3 = r#"{"nodes":[{"in":1},{"op":"XOR","src":[0,0]}]}"#;
+        assert!(graph_from_json(bad3).is_err());
+    }
+}

@@ -1,0 +1,37 @@
+//! # tdp-overlay
+//!
+//! A cycle-level reproduction of *"Out-of-Order Dataflow Scheduling for
+//! FPGA Overlays"* (Siddhartha & Kapre, 2017): a token-dataflow soft
+//! processor overlay for the Arria 10, with hundreds of PEs on a Hoplite
+//! 2-D torus NoC, comparing the paper's hierarchical leading-one-detector
+//! (LOD) out-of-order ready-node scheduler against the classical
+//! FIFO-based in-order scheduler.
+//!
+//! Layering (see DESIGN.md):
+//! * **L3 (this crate)** — the overlay simulator, schedulers, NoC,
+//!   workload generators, criticality labeling, resource model and the
+//!   experiment coordinator.
+//! * **L2/L1 (python, build-time only)** — a JAX levelized graph
+//!   evaluator calling a Pallas ALU kernel, AOT-lowered to HLO text in
+//!   `artifacts/`; loaded at runtime through [`runtime::XlaRuntime`]
+//!   (PJRT CPU) as the numerics oracle. Python never runs on the request
+//!   path.
+
+pub mod config;
+pub mod coordinator;
+pub mod criticality;
+pub mod graph;
+pub mod lod;
+pub mod noc;
+pub mod pe;
+pub mod place;
+pub mod resource;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use config::OverlayConfig;
+pub use graph::{DataflowGraph, NodeId, Op};
+pub use sim::{SimStats, Simulator};

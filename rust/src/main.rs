@@ -1,0 +1,406 @@
+//! `tdp` — the overlay coordinator CLI.
+//!
+//! Subcommands map 1:1 to the paper's experiments (DESIGN.md §4):
+//! `sweep` regenerates Figure 1, `resources` Table I, `capacity` the §III
+//! claim; `run`/`validate`/`gen`/`noc-stress` are the engineering tools
+//! around them.
+
+use anyhow::{anyhow, bail, Result};
+use std::path::PathBuf;
+use tdp::config::{OverlayConfig, WorkloadSpec};
+use tdp::coordinator::{
+    self, capacity_experiment, fig1_sweep, render_csv, render_markdown, scheduler_comparison,
+    Table,
+};
+use tdp::graph::{graph_from_json, graph_to_json, DataflowGraph};
+use tdp::noc::{Network, Packet};
+use tdp::pe::BramConfig;
+use tdp::resource;
+use tdp::runtime::XlaRuntime;
+use tdp::sched::SchedulerKind;
+use tdp::util::cli::Args;
+use tdp::util::rng::Rng;
+use tdp::workload;
+
+const USAGE: &str = "\
+tdp — out-of-order token dataflow overlay (Siddhartha & Kapre, 2017)
+
+USAGE: tdp <command> [flags]
+
+COMMANDS
+  run         simulate one workload          --workload <toml> | --graph <json>
+              [--cols 16 --rows 16 --scheduler both|in_order|out_of_order --seed 0]
+  sweep       regenerate Figure 1            [--cols 16 --rows 16 --seed 42
+              --threads N --format markdown|csv --out file]
+  gen         write a workload graph JSON    --workload <toml> --out <file> [--seed 0]
+  validate    check sim numerics vs native + PJRT oracle
+              --workload <toml> | --graph <json> [--cols 4 --rows 4
+              --artifacts artifacts --no-pjrt --seed 0]
+  resources   regenerate Table I             [--points 16,64 --detail --format ...]
+  capacity    regenerate the §III claim      [--pes 256 --edge-per-node 2.0]
+  noc-stress  synthetic NoC traffic          [--cols 16 --rows 16 --packets 100000
+              --inject-rate 0.5 --seed 0]
+  analyze     trace a run (queue occupancy / busyness / completion)
+              --workload <toml> | --graph <json> [--cols 16 --rows 16
+              --stride 0 --csv file --seed 0]
+  workload-stats  characterize a workload's shape (parallelism, fanout)
+              --workload <toml> | --graph <json> [--pes 256 --seed 0]
+
+Workload TOML example: 'kind = \"lu_banded\"\\nn = 100\\nhalf_bw = 4\\nfill = 0.8'
+";
+
+fn load_graph(
+    workload: Option<String>,
+    graph: Option<String>,
+    seed: u64,
+) -> Result<DataflowGraph> {
+    match (workload, graph) {
+        (Some(spec), None) => {
+            let spec =
+                WorkloadSpec::from_toml(&spec.replace("\\n", "\n")).map_err(|e| anyhow!(e))?;
+            spec.build(seed).map_err(|e| anyhow!("workload build: {e}"))
+        }
+        (None, Some(path)) => {
+            let text = std::fs::read_to_string(&path)?;
+            graph_from_json(&text).map_err(|e| anyhow!("graph load: {e}"))
+        }
+        _ => bail!("provide exactly one of --workload / --graph"),
+    }
+}
+
+fn emit(t: &Table, format: &str, out: Option<String>) -> Result<()> {
+    let text = match format {
+        "markdown" | "md" => render_markdown(t),
+        "csv" => render_csv(t),
+        other => bail!("unknown format '{other}' (markdown | csv)"),
+    };
+    print!("{text}");
+    if let Some(path) = out {
+        std::fs::write(&path, &text)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_run(mut a: Args) -> Result<()> {
+    let workload = a.str_opt("workload")?;
+    let graph = a.str_opt("graph")?;
+    let cols = a.usize_or("cols", 16)?;
+    let rows = a.usize_or("rows", 16)?;
+    let sched = a.str_or("scheduler", "both")?;
+    let seed = a.u64_or("seed", 0)?;
+    a.finish()?;
+    let g = load_graph(workload, graph, seed)?;
+    let s = g.stats();
+    println!(
+        "graph: {} nodes, {} edges, depth {}, max fanout {}",
+        s.nodes, s.edges, s.depth, s.max_fanout
+    );
+    let cfg = OverlayConfig::default().with_dims(cols, rows);
+    cfg.validate().map_err(|e| anyhow!(e))?;
+    if sched == "both" {
+        let outs = scheduler_comparison(&g, cfg, "run");
+        for o in &outs {
+            println!(
+                "{:>12}: {} cycles, util {:.1}%, {} deflections",
+                o.scheduler.name(),
+                o.cycles,
+                100.0 * o.utilization,
+                o.deflections
+            );
+        }
+        println!(
+            "speedup (in-order / out-of-order): {:.3}",
+            outs[0].cycles as f64 / outs[1].cycles as f64
+        );
+    } else {
+        let kind: SchedulerKind = sched.parse().map_err(|e: String| anyhow!(e))?;
+        let stats = coordinator::run_one(&g, cfg, kind);
+        println!("{}", stats.one_line());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(mut a: Args) -> Result<()> {
+    let cols = a.usize_or("cols", 16)?;
+    let rows = a.usize_or("rows", 16)?;
+    let seed = a.u64_or("seed", 42)?;
+    let mut threads = a.usize_or("threads", 0)?;
+    let format = a.str_or("format", "markdown")?;
+    let out = a.str_opt("out")?;
+    a.finish()?;
+    if threads == 0 {
+        threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    }
+    let cfg = coordinator::fig1_config().with_dims(cols, rows);
+    cfg.validate().map_err(|e| anyhow!(e))?;
+    eprintln!("generating Fig.1 workload ladder (seed {seed})...");
+    let ws = workload::fig1_workloads(seed);
+    eprintln!(
+        "running {} workloads x 2 schedulers on {threads} threads...",
+        ws.len()
+    );
+    let rows_out = fig1_sweep(&ws, cfg, threads);
+    let mut t = Table::new(
+        &format!("Figure 1 — OoO speedup vs graph size ({cols}x{rows} overlay)"),
+        &["workload", "nodes+edges", "depth", "in-order cyc", "ooo cyc", "speedup"],
+    );
+    for r in &rows_out {
+        t.push(vec![
+            r.label.clone(),
+            r.nodes_plus_edges.to_string(),
+            r.depth.to_string(),
+            r.cycles_inorder.to_string(),
+            r.cycles_ooo.to_string(),
+            format!("{:.3}", r.speedup),
+        ]);
+    }
+    emit(&t, &format, out)
+}
+
+fn cmd_gen(mut a: Args) -> Result<()> {
+    let workload = a.str_req("workload")?;
+    let out = a.str_req("out")?;
+    let seed = a.u64_or("seed", 0)?;
+    a.finish()?;
+    let g = load_graph(Some(workload), None, seed)?;
+    std::fs::write(&out, graph_to_json(&g))?;
+    let s = g.stats();
+    println!(
+        "wrote {out} ({} nodes, {} edges, depth {})",
+        s.nodes, s.edges, s.depth
+    );
+    Ok(())
+}
+
+fn cmd_validate(mut a: Args) -> Result<()> {
+    let workload = a.str_opt("workload")?;
+    let graph = a.str_opt("graph")?;
+    let cols = a.usize_or("cols", 4)?;
+    let rows = a.usize_or("rows", 4)?;
+    let artifacts = a.str_or("artifacts", "artifacts")?;
+    let no_pjrt = a.switch("no-pjrt");
+    let seed = a.u64_or("seed", 0)?;
+    a.finish()?;
+    let g = load_graph(workload, graph, seed)?;
+    let cfg = OverlayConfig::default().with_dims(cols, rows);
+    let rt = if no_pjrt {
+        None
+    } else {
+        Some(XlaRuntime::load(&PathBuf::from(artifacts))?)
+    };
+    if let Some(rt) = &rt {
+        rt.manifest.check_opcode_table()?;
+        println!("PJRT platform: {}", rt.platform());
+    }
+    let rep = coordinator::validate(&g, cfg, rt.as_ref()).map_err(|e| anyhow!("{e}"))?;
+    println!("{}", rep.stats.one_line());
+    println!(
+        "native-ref max |err| = {} over {} nodes",
+        rep.max_abs_err_native, rep.nodes_checked
+    );
+    match rep.max_abs_err_pjrt {
+        Some(e) => println!("PJRT-oracle max |err| = {e}"),
+        None => println!("PJRT oracle skipped (graph exceeds artifact geometry or --no-pjrt)"),
+    }
+    if rep.passed() {
+        println!("VALIDATION PASSED");
+        Ok(())
+    } else {
+        bail!("validation failed")
+    }
+}
+
+fn cmd_resources(mut a: Args) -> Result<()> {
+    let points = a.usize_list("points")?;
+    let detail = a.switch("detail");
+    let format = a.str_or("format", "markdown")?;
+    a.finish()?;
+    let rows = resource::table1(&points);
+    let mut t = Table::new(
+        "Table I — resource utilization (Arria 10 10AX115S)",
+        &["PEs", "ALMs", "REGs", "DSPs", "BRAMs", "Fmax (MHz)"],
+    );
+    for r in &rows {
+        t.push(vec![
+            r.pes.to_string(),
+            format!("{} ({:.1}%)", r.alms, r.alm_pct),
+            format!("{} ({:.1}%)", r.regs, r.reg_pct),
+            format!("{} ({:.1}%)", r.dsps, r.dsp_pct),
+            format!("{} ({:.1}%)", r.brams, r.bram_pct),
+            format!("{:.0}", r.fmax_mhz),
+        ]);
+    }
+    emit(&t, &format, None)?;
+    if detail {
+        let b = BramConfig::paper();
+        println!("\nBRAM budget per PE (words of 512x40b M20K):");
+        println!("  total: {}", b.total_words());
+        println!(
+            "  OoO flag overhead: {} ({:.2}% — paper: ~6%)",
+            b.flag_words(),
+            100.0 * b.flag_words() as f64 / b.total_words() as f64
+        );
+        println!("  in-order FIFO reserve: {}", b.fifo_words());
+        println!(
+            "  graph words: in-order {}, OoO {}",
+            b.graph_words(SchedulerKind::InOrder),
+            b.graph_words(SchedulerKind::OutOfOrder)
+        );
+        println!(
+            "  max overlay on device: {} PEs",
+            resource::max_overlay(&resource::ARRIA10_10AX115S, 1.0)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_capacity(mut a: Args) -> Result<()> {
+    let pes = a.usize_or("pes", 256)?;
+    let edge_per_node = a.f64_or("edge-per-node", 2.0)?;
+    a.finish()?;
+    let row = capacity_experiment(&BramConfig::paper(), pes, edge_per_node);
+    println!(
+        "{} PEs, edge/node = {edge_per_node}: in-order ≈{} items, OoO ≈{} items, ratio {:.2}x",
+        row.num_pes, row.max_items_inorder, row.max_items_ooo, row.ratio
+    );
+    println!("paper §III: ≈100K items vs ≈5x at 256 PEs");
+    Ok(())
+}
+
+fn cmd_noc_stress(mut a: Args) -> Result<()> {
+    let cols = a.usize_or("cols", 16)?;
+    let rows = a.usize_or("rows", 16)?;
+    let packets = a.usize_or("packets", 100_000)?;
+    let inject_rate = a.f64_or("inject-rate", 0.5)?;
+    let seed = a.u64_or("seed", 0)?;
+    a.finish()?;
+    let mut rng = Rng::seed_from_u64(seed);
+    let n = cols * rows;
+    let mut net = Network::new(cols, rows);
+    let mut sent = 0usize;
+    let mut cycles = 0u64;
+    while net.stats.delivered < packets as u64 {
+        let mut inject: Vec<Option<Packet>> = vec![None; n];
+        for (pe, slot) in inject.iter_mut().enumerate() {
+            if sent < packets && rng.gen_bool(inject_rate) {
+                let dest = rng.gen_range(n);
+                *slot = Some(Packet {
+                    dest_x: (dest % cols) as u8,
+                    dest_y: (dest / cols) as u8,
+                    local_idx: (pe % 8192) as u16,
+                    slot: 0,
+                    payload: pe as f32,
+                });
+            }
+        }
+        let granted = net.step(&inject).inject_ok.iter().filter(|&&g| g).count();
+        sent += granted;
+        cycles += 1;
+        if cycles > 100_000_000 {
+            bail!("NoC stress did not converge");
+        }
+    }
+    let s = net.stats;
+    println!(
+        "{cols}x{rows} torus: {} pkts in {cycles} cycles = {:.3} pkts/cycle ({:.4}/PE)",
+        s.delivered,
+        s.delivered as f64 / cycles as f64,
+        s.delivered as f64 / cycles as f64 / n as f64
+    );
+    println!(
+        "  deflections: {} ({:.2}%), inject stalls: {}, avg latency {:.1} cyc, max {}",
+        s.deflections,
+        100.0 * s.deflections as f64 / s.delivered as f64,
+        s.inject_stalls,
+        s.total_latency as f64 / s.delivered as f64,
+        s.max_latency
+    );
+    Ok(())
+}
+
+fn cmd_analyze(mut a: Args) -> Result<()> {
+    use tdp::place::PlacementPolicy;
+    use tdp::sim::Simulator;
+    let workload = a.str_opt("workload")?;
+    let graph = a.str_opt("graph")?;
+    let cols = a.usize_or("cols", 16)?;
+    let rows = a.usize_or("rows", 16)?;
+    let stride = a.u64_or("stride", 0)?;
+    let csv = a.str_opt("csv")?;
+    let seed = a.u64_or("seed", 0)?;
+    a.finish()?;
+    let g = load_graph(workload, graph, seed)?;
+    let prof = workload::profile(&g);
+    println!("{}\n", prof.report());
+    for kind in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
+        let mut cfg = OverlayConfig::default().with_dims(cols, rows).with_scheduler(kind);
+        cfg.placement = PlacementPolicy::Chunked;
+        let mut sim = Simulator::new(&g, cfg).map_err(|e| anyhow!("{e}"))?;
+        // auto-stride: ~400 samples per run
+        let est = (g.num_edges() as u64 / (cols * rows) as u64 + prof.depth as u64 * 12).max(400);
+        sim.enable_trace(if stride == 0 { est / 400 } else { stride });
+        let stats = sim.run().map_err(|e| anyhow!("{e}"))?;
+        let trace = sim.trace().unwrap();
+        println!("=== {} === ({} cycles)", kind.name(), stats.cycles);
+        println!("  ready queue : {}  (peak {})", trace.sparkline(|s| s.ready_total, 48), trace.peak_ready());
+        println!("  busy PEs    : {}  (mean {:.1}%)", trace.sparkline(|s| s.busy_pes, 48), 100.0 * trace.mean_busy(cols * rows));
+        println!("  in-flight   : {}", trace.sparkline(|s| s.in_flight, 48));
+        println!("  completion  : {}", trace.sparkline(|s| s.completed, 48));
+        if let Some(path) = &csv {
+            let file = format!("{path}.{}.csv", kind.toml_name());
+            std::fs::write(&file, trace.to_csv())?;
+            eprintln!("wrote {file}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_workload_stats(mut a: Args) -> Result<()> {
+    let workload = a.str_opt("workload")?;
+    let graph = a.str_opt("graph")?;
+    let pes = a.usize_or("pes", 256)?;
+    let seed = a.u64_or("seed", 0)?;
+    a.finish()?;
+    let g = load_graph(workload, graph, seed)?;
+    let prof = workload::profile(&g);
+    println!("{}", prof.report());
+    println!(
+        "saturates a {pes}-PE overlay: {} (avg parallelism {:.1} vs {} PEs)",
+        if prof.saturates(pes) { "YES" } else { "no" },
+        prof.avg_width,
+        pes
+    );
+    println!(
+        "graph-memory footprint: {} items -> {} BRAM words",
+        g.footprint(),
+        BramConfig::words_used(g.len(), g.num_edges())
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let mut argv = std::env::args().skip(1);
+    let Some(cmd) = argv.next() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest: Vec<String> = argv.collect();
+    let args = Args::parse(rest).map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+    match cmd.as_str() {
+        "run" => cmd_run(args),
+        "sweep" => cmd_sweep(args),
+        "gen" => cmd_gen(args),
+        "validate" => cmd_validate(args),
+        "resources" => cmd_resources(args),
+        "capacity" => cmd_capacity(args),
+        "noc-stress" => cmd_noc_stress(args),
+        "analyze" => cmd_analyze(args),
+        "workload-stats" => cmd_workload_stats(args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}

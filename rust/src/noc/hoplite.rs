@@ -1,0 +1,231 @@
+//! Single Hoplite router: combinational switch function.
+//!
+//! Ports: `W` input (X ring), `N` input (Y ring), PE injection; `E` output
+//! (X ring), `S` output (Y ring), PE eject. Dimension-ordered (X then Y)
+//! with deflection:
+//!
+//! * Y-ring traffic (from `N`) has highest priority — it continues south
+//!   or ejects; it never deflects.
+//! * X-ring traffic (from `W`) turns south / ejects when it reaches its
+//!   destination column; if it loses the port to Y-ring traffic it
+//!   **deflects east** and circles the X torus again.
+//! * PE injection has lowest priority and only proceeds if its first-hop
+//!   port is free (otherwise the PE stalls — backpressure).
+//!
+//! This is the austere bufferless arbitration that lets the FPGA router
+//! cost 130 ALMs (Table I footnote).
+
+use super::Packet;
+
+/// Inputs sampled by a router at the start of a cycle.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RouterIn {
+    pub west: Option<Packet>,
+    pub north: Option<Packet>,
+    pub inject: Option<Packet>,
+}
+
+/// Outputs driven by a router at the end of a cycle.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RouterOut {
+    pub east: Option<Packet>,
+    pub south: Option<Packet>,
+    pub eject: Option<Packet>,
+    /// true iff `inject` was accepted this cycle
+    pub inject_ok: bool,
+    /// a W-input packet lost arbitration and went east past its turn
+    pub deflected: bool,
+}
+
+/// Route one cycle at router (x, y).
+pub fn route(x: u8, y: u8, i: RouterIn) -> RouterOut {
+    let mut o = RouterOut::default();
+
+    // 1. Y-ring traffic: continue south or eject. Never deflects.
+    if let Some(p) = i.north {
+        debug_assert_eq!(p.dest_x, x, "packet on Y ring in wrong column");
+        if p.dest_y == y {
+            o.eject = Some(p);
+        } else {
+            o.south = Some(p);
+        }
+    }
+
+    // 2. X-ring traffic.
+    if let Some(p) = i.west {
+        if p.dest_x == x {
+            if p.dest_y == y {
+                // at destination: eject if port free, else deflect east
+                if o.eject.is_none() {
+                    o.eject = Some(p);
+                } else {
+                    o.east = Some(p);
+                    o.deflected = true;
+                }
+            } else {
+                // turn south if port free, else deflect east
+                if o.south.is_none() {
+                    o.south = Some(p);
+                } else {
+                    o.east = Some(p);
+                    o.deflected = true;
+                }
+            }
+        } else {
+            o.east = Some(p);
+        }
+    }
+
+    // 3. PE injection: lowest priority, needs its first-hop port free.
+    if let Some(p) = i.inject {
+        if p.dest_x == x && p.dest_y == y {
+            // local loopback delivery via the eject port
+            if o.eject.is_none() {
+                o.eject = Some(p);
+                o.inject_ok = true;
+            }
+        } else if p.dest_x == x {
+            if o.south.is_none() {
+                o.south = Some(p);
+                o.inject_ok = true;
+            }
+        } else if o.east.is_none() {
+            o.east = Some(p);
+            o.inject_ok = true;
+        }
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pkt(x: u8, y: u8) -> Packet {
+        Packet {
+            dest_x: x,
+            dest_y: y,
+            local_idx: 0,
+            slot: 0,
+            payload: 1.0,
+        }
+    }
+
+    #[test]
+    fn x_traffic_continues_east() {
+        let o = route(2, 2, RouterIn { west: Some(pkt(5, 2)), ..Default::default() });
+        assert_eq!(o.east, Some(pkt(5, 2)));
+        assert!(o.south.is_none() && o.eject.is_none());
+    }
+
+    #[test]
+    fn x_traffic_turns_south_at_column() {
+        let o = route(5, 2, RouterIn { west: Some(pkt(5, 7)), ..Default::default() });
+        assert_eq!(o.south, Some(pkt(5, 7)));
+    }
+
+    #[test]
+    fn y_traffic_ejects_at_destination() {
+        let o = route(5, 7, RouterIn { north: Some(pkt(5, 7)), ..Default::default() });
+        assert_eq!(o.eject, Some(pkt(5, 7)));
+        assert!(o.south.is_none());
+    }
+
+    #[test]
+    fn turn_conflict_deflects_x_traffic() {
+        let o = route(
+            5,
+            2,
+            RouterIn {
+                west: Some(pkt(5, 7)),   // wants S
+                north: Some(pkt(5, 9)),  // continuing S, has priority
+                ..Default::default()
+            },
+        );
+        assert_eq!(o.south, Some(pkt(5, 9)));
+        assert_eq!(o.east, Some(pkt(5, 7)), "loser deflects east");
+        assert!(o.deflected);
+    }
+
+    #[test]
+    fn eject_conflict_deflects_x_traffic() {
+        let o = route(
+            5,
+            7,
+            RouterIn {
+                west: Some(pkt(5, 7)),
+                north: Some(pkt(5, 7)),
+                ..Default::default()
+            },
+        );
+        assert_eq!(o.eject, Some(pkt(5, 7)));
+        assert!(o.deflected && o.east.is_some());
+    }
+
+    #[test]
+    fn inject_blocked_when_port_busy() {
+        // injection wants E but W-traffic holds it
+        let o = route(
+            2,
+            2,
+            RouterIn {
+                west: Some(pkt(9, 2)),
+                inject: Some(pkt(4, 4)),
+                ..Default::default()
+            },
+        );
+        assert!(!o.inject_ok);
+        assert_eq!(o.east, Some(pkt(9, 2)));
+    }
+
+    #[test]
+    fn inject_takes_free_south() {
+        let o = route(
+            2,
+            2,
+            RouterIn {
+                inject: Some(pkt(2, 5)),
+                ..Default::default()
+            },
+        );
+        assert!(o.inject_ok);
+        assert_eq!(o.south, Some(pkt(2, 5)));
+    }
+
+    #[test]
+    fn self_delivery_uses_eject() {
+        let o = route(2, 2, RouterIn { inject: Some(pkt(2, 2)), ..Default::default() });
+        assert!(o.inject_ok);
+        assert_eq!(o.eject, Some(pkt(2, 2)));
+    }
+
+    #[test]
+    fn self_delivery_blocked_by_arriving_packet() {
+        let o = route(
+            2,
+            2,
+            RouterIn {
+                north: Some(pkt(2, 2)),
+                inject: Some(pkt(2, 2)),
+                ..Default::default()
+            },
+        );
+        assert!(!o.inject_ok, "eject port busy; PE must retry");
+    }
+
+    #[test]
+    fn y_ring_never_deflects() {
+        // even with W wanting the same S port
+        let o = route(
+            1,
+            1,
+            RouterIn {
+                north: Some(pkt(1, 3)),
+                west: Some(pkt(1, 3)),
+                ..Default::default()
+            },
+        );
+        assert_eq!(o.south, Some(pkt(1, 3)));
+        assert!(o.deflected);
+    }
+}

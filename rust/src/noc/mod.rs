@@ -1,0 +1,18 @@
+//! Hoplite NoC model (Kapre & Gray, FPL'15) — the overlay interconnect.
+//!
+//! PEs and routers sit on a unidirectional 2-D torus. Packets use
+//! dimension-ordered routing (X then Y) with *deflection*: a packet that
+//! loses arbitration for the south port keeps circling the X ring instead
+//! of being buffered — Hoplite routers are bufferless (130 ALMs / 350
+//! registers each, Table I footnote).
+//!
+//! Width check: the paper's links are 56 b. [`packet::Packet::pack56`]
+//! proves our header + f32 payload fits.
+
+mod hoplite;
+mod network;
+mod packet;
+
+pub use hoplite::{route, RouterIn, RouterOut};
+pub use network::{Network, NetworkStats, StepResult};
+pub use packet::{Packet, MAX_DIM, MAX_LOCAL_NODES};

@@ -1,0 +1,341 @@
+//! The full torus: routers + link registers, stepped one cycle at a time.
+//!
+//! Link registers hold packets in flight: `x_link[(x,y)]` is the register
+//! on the E output of router (x,y) feeding the W input of router
+//! ((x+1)%w, y); `y_link[(x,y)]` feeds ((x, (y+1)%h)). All routers switch
+//! simultaneously (double-buffered update).
+//!
+//! Perf note (EXPERIMENTS.md §Perf): `step` is the simulator's hottest
+//! loop after the PE scan; all per-cycle state (`next_*` link buffers and
+//! the [`StepResult`]) is preallocated and swapped/reused — zero
+//! allocation at steady state.
+
+use super::hoplite::{route, RouterIn};
+use super::Packet;
+
+/// Cumulative network statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NetworkStats {
+    pub injected: u64,
+    pub delivered: u64,
+    pub deflections: u64,
+    pub inject_stalls: u64,
+    /// sum over delivered packets of (deliver cycle − inject cycle)
+    pub total_latency: u64,
+    pub max_latency: u64,
+}
+
+/// Result of one network cycle (buffers owned by [`Network`], reused).
+#[derive(Debug, Clone, Default)]
+pub struct StepResult {
+    /// packet delivered to each PE this cycle (index = y*w + x)
+    pub ejected: Vec<Option<Packet>>,
+    /// per-PE: was this PE's injection request accepted?
+    pub inject_ok: Vec<bool>,
+}
+
+/// The Hoplite torus.
+pub struct Network {
+    pub w: usize,
+    pub h: usize,
+    x_link: Vec<Option<(Packet, u64)>>, // (packet, inject cycle)
+    y_link: Vec<Option<(Packet, u64)>>,
+    // double buffers swapped with the live links each cycle
+    x_next: Vec<Option<(Packet, u64)>>,
+    y_next: Vec<Option<(Packet, u64)>>,
+    out: StepResult,
+    in_flight: usize,
+    cycle: u64,
+    pub stats: NetworkStats,
+}
+
+impl Network {
+    pub fn new(w: usize, h: usize) -> Self {
+        assert!(w >= 1 && h >= 1 && w <= 32 && h <= 32);
+        let n = w * h;
+        Self {
+            w,
+            h,
+            x_link: vec![None; n],
+            y_link: vec![None; n],
+            x_next: vec![None; n],
+            y_next: vec![None; n],
+            out: StepResult {
+                ejected: vec![None; n],
+                inject_ok: vec![false; n],
+            },
+            in_flight: 0,
+            cycle: 0,
+            stats: NetworkStats::default(),
+        }
+    }
+
+    #[inline]
+    fn idx(&self, x: usize, y: usize) -> usize {
+        y * self.w + x
+    }
+
+    /// Packets currently on links.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.in_flight == 0
+    }
+
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Advance one cycle. `inject[pe]` is each PE's injection request
+    /// (at most one per cycle, per the paper's packet-generation rate).
+    /// The returned result borrows internal buffers valid until the next
+    /// call.
+    pub fn step(&mut self, inject: &[Option<Packet>]) -> &StepResult {
+        debug_assert_eq!(inject.len(), self.w * self.h);
+        for slot in self.x_next.iter_mut() {
+            *slot = None;
+        }
+        for slot in self.y_next.iter_mut() {
+            *slot = None;
+        }
+        for slot in self.out.ejected.iter_mut() {
+            *slot = None;
+        }
+        for slot in self.out.inject_ok.iter_mut() {
+            *slot = false;
+        }
+        let mut in_flight = 0usize;
+
+        for y in 0..self.h {
+            for x in 0..self.w {
+                let me = self.idx(x, y);
+                // W input of (x,y) = x_link register of the router west of us.
+                let west_src = self.idx((x + self.w - 1) % self.w, y);
+                let north_src = self.idx(x, (y + self.h - 1) % self.h);
+                let w_in = self.x_link[west_src];
+                let n_in = self.y_link[north_src];
+                // fast path: idle router (most routers, most cycles)
+                if w_in.is_none() && n_in.is_none() && inject[me].is_none() {
+                    continue;
+                }
+                let io = RouterIn {
+                    west: w_in.map(|(p, _)| p),
+                    north: n_in.map(|(p, _)| p),
+                    inject: inject[me],
+                };
+                let o = route(x as u8, y as u8, io);
+
+                // reconstruct birth cycles for output packets
+                let birth_of = |p: &Packet| -> u64 {
+                    if let Some((q, b)) = w_in {
+                        if q == *p {
+                            return b;
+                        }
+                    }
+                    if let Some((q, b)) = n_in {
+                        if q == *p {
+                            return b;
+                        }
+                    }
+                    self.cycle // freshly injected
+                };
+
+                if let Some(p) = o.east {
+                    self.x_next[me] = Some((p, birth_of(&p)));
+                    in_flight += 1;
+                }
+                if let Some(p) = o.south {
+                    self.y_next[me] = Some((p, birth_of(&p)));
+                    in_flight += 1;
+                }
+                if let Some(p) = o.eject {
+                    let b = birth_of(&p);
+                    let lat = self.cycle - b;
+                    self.stats.delivered += 1;
+                    self.stats.total_latency += lat;
+                    self.stats.max_latency = self.stats.max_latency.max(lat);
+                    self.out.ejected[me] = Some(p);
+                }
+                if o.deflected {
+                    self.stats.deflections += 1;
+                }
+                if io.inject.is_some() {
+                    if o.inject_ok {
+                        self.stats.injected += 1;
+                        self.out.inject_ok[me] = true;
+                    } else {
+                        self.stats.inject_stalls += 1;
+                    }
+                }
+            }
+        }
+
+        std::mem::swap(&mut self.x_link, &mut self.x_next);
+        std::mem::swap(&mut self.y_link, &mut self.y_next);
+        self.in_flight = in_flight;
+        self.cycle += 1;
+        &self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pkt(x: u8, y: u8, tag: u16) -> Packet {
+        Packet {
+            dest_x: x,
+            dest_y: y,
+            local_idx: tag,
+            slot: 0,
+            payload: tag as f32,
+        }
+    }
+
+    /// drive the network until `want` packets are delivered or timeout
+    fn drain(net: &mut Network, mut pending: Vec<(usize, Packet)>, want: usize) -> Vec<(usize, Packet)> {
+        let n = net.w * net.h;
+        let mut delivered = Vec::new();
+        for _ in 0..10_000 {
+            let mut inject: Vec<Option<Packet>> = vec![None; n];
+            for &(pe, p) in pending.iter() {
+                if inject[pe].is_none() {
+                    inject[pe] = Some(p);
+                }
+            }
+            let res = net.step(&inject);
+            // remove accepted from pending (first queued per PE)
+            let mut granted = vec![false; n];
+            let inject_ok = res.inject_ok.clone();
+            for (pe, e) in res.ejected.iter().enumerate() {
+                if let Some(p) = e {
+                    delivered.push((pe, *p));
+                }
+            }
+            let mut still = Vec::new();
+            for (pe, p) in pending {
+                if !granted[pe] && inject_ok[pe] && inject[pe] == Some(p) {
+                    granted[pe] = true;
+                } else {
+                    still.push((pe, p));
+                }
+            }
+            pending = still;
+            if delivered.len() >= want && net.is_empty() && pending.is_empty() {
+                break;
+            }
+        }
+        delivered
+    }
+
+    #[test]
+    fn single_packet_dor_delivery() {
+        let mut net = Network::new(4, 4);
+        // from PE (0,0) to (2,3): 2 hops east + 3 hops south + eject
+        let p = pkt(2, 3, 7);
+        let delivered = drain(&mut net, vec![(0, p)], 1);
+        assert_eq!(delivered, vec![(3 * 4 + 2, p)]);
+        assert_eq!(net.stats.delivered, 1);
+        assert_eq!(net.stats.deflections, 0);
+    }
+
+    #[test]
+    fn self_delivery_works() {
+        let mut net = Network::new(3, 3);
+        let p = pkt(1, 1, 9);
+        let pe = 1 * 3 + 1;
+        let delivered = drain(&mut net, vec![(pe, p)], 1);
+        assert_eq!(delivered, vec![(pe, p)]);
+    }
+
+    #[test]
+    fn torus_wraparound() {
+        let mut net = Network::new(4, 4);
+        // (3,3) -> (0,0): wraps both dimensions
+        let p = pkt(0, 0, 3);
+        let delivered = drain(&mut net, vec![(3 * 4 + 3, p)], 1);
+        assert_eq!(delivered, vec![(0, p)]);
+    }
+
+    #[test]
+    fn all_to_one_hotspot_delivers_everything() {
+        let mut net = Network::new(4, 4);
+        let n = 16;
+        let mut pending = Vec::new();
+        for pe in 0..n {
+            if pe != 5 {
+                pending.push((pe, pkt(1, 1, pe as u16)));
+            }
+        }
+        let delivered = drain(&mut net, pending, 15);
+        assert_eq!(delivered.len(), 15, "every packet must arrive");
+        let mut tags: Vec<u16> = delivered.iter().map(|&(_, p)| p.local_idx).collect();
+        tags.sort_unstable();
+        let want: Vec<u16> = (0..16u16).filter(|&t| t != 5).collect();
+        assert_eq!(tags, want, "no loss, no duplication");
+        for (pe, _) in delivered {
+            assert_eq!(pe, 1 * 4 + 1);
+        }
+    }
+
+    #[test]
+    fn random_permutation_traffic() {
+        let mut net = Network::new(8, 8);
+        let n = 64;
+        let mut pending = Vec::new();
+        for pe in 0..n {
+            let dest = (pe * 37 + 11) % n; // fixed permutation
+            pending.push((pe, pkt((dest % 8) as u8, (dest / 8) as u8, pe as u16)));
+        }
+        let delivered = drain(&mut net, pending, n);
+        assert_eq!(delivered.len(), n);
+        assert!(net.is_empty());
+    }
+
+    #[test]
+    fn latency_stats_accumulate() {
+        let mut net = Network::new(4, 4);
+        let delivered = drain(&mut net, vec![(0, pkt(2, 3, 0))], 1);
+        assert_eq!(delivered.len(), 1);
+        // 2 east hops + turn + 3 south hops: latency >= 5 cycles
+        assert!(net.stats.max_latency >= 5, "{:?}", net.stats);
+        assert_eq!(net.stats.total_latency, net.stats.max_latency);
+    }
+
+    #[test]
+    fn one_by_one_torus_self_loop() {
+        let mut net = Network::new(1, 1);
+        let p = pkt(0, 0, 1);
+        let delivered = drain(&mut net, vec![(0, p)], 1);
+        assert_eq!(delivered, vec![(0, p)]);
+    }
+
+    #[test]
+    fn in_flight_tracking() {
+        let mut net = Network::new(4, 1);
+        let mut inject = vec![None; 4];
+        inject[0] = Some(pkt(2, 0, 0));
+        let ok = net.step(&inject).inject_ok[0];
+        assert!(ok);
+        assert_eq!(net.in_flight(), 1);
+        net.step(&vec![None; 4]);
+        let got = net.step(&vec![None; 4]).ejected[2];
+        // after 3 cycles: 2 hops + eject
+        assert!(got.is_some());
+        assert!(net.is_empty());
+    }
+
+    #[test]
+    fn step_result_buffers_reset_each_cycle() {
+        let mut net = Network::new(2, 2);
+        let mut inject = vec![None; 4];
+        inject[0] = Some(pkt(0, 0, 1)); // self delivery, cycle 0
+        let r = net.step(&inject);
+        assert!(r.ejected[0].is_some());
+        let r = net.step(&vec![None; 4]);
+        assert!(r.ejected[0].is_none(), "stale ejects must clear");
+        assert!(!r.inject_ok[0]);
+    }
+}

@@ -1,0 +1,121 @@
+//! The 56 b Hoplite packet.
+//!
+//! Field layout (LSB first):
+//! ```text
+//!   payload   : 32 b   f32 token value
+//!   dest_x    :  5 b   torus column   (overlays up to 32x32)
+//!   dest_y    :  5 b   torus row
+//!   local_idx : 13 b   node index in the destination PE's graph memory
+//!   slot      :  1 b   operand slot (0/1)
+//!   ------------------------------------------------------------------
+//!   total     : 56 b   == the paper's link width
+//! ```
+
+/// Max torus dimension supported by the 5 b coordinate fields.
+pub const MAX_DIM: usize = 32;
+/// Max local nodes addressable by the 13 b local index.
+pub const MAX_LOCAL_NODES: usize = 1 << 13;
+
+/// One dataflow token in flight.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Packet {
+    pub dest_x: u8,
+    pub dest_y: u8,
+    /// node index within the destination PE's local graph memory
+    pub local_idx: u16,
+    /// operand slot at the destination node
+    pub slot: u8,
+    /// token value
+    pub payload: f32,
+}
+
+impl Packet {
+    pub const WIDTH_BITS: u32 = 32 + 5 + 5 + 13 + 1;
+
+    /// Pack to the 56 b wire format (in the low bits of a u64).
+    pub fn pack56(&self) -> u64 {
+        debug_assert!((self.dest_x as usize) < MAX_DIM);
+        debug_assert!((self.dest_y as usize) < MAX_DIM);
+        debug_assert!((self.local_idx as usize) < MAX_LOCAL_NODES);
+        debug_assert!(self.slot < 2);
+        let mut w = self.payload.to_bits() as u64;
+        w |= (self.dest_x as u64) << 32;
+        w |= (self.dest_y as u64) << 37;
+        w |= (self.local_idx as u64) << 42;
+        w |= (self.slot as u64) << 55;
+        w
+    }
+
+    /// Unpack from the wire format.
+    pub fn unpack56(w: u64) -> Self {
+        Packet {
+            payload: f32::from_bits((w & 0xFFFF_FFFF) as u32),
+            dest_x: ((w >> 32) & 0x1F) as u8,
+            dest_y: ((w >> 37) & 0x1F) as u8,
+            local_idx: ((w >> 42) & 0x1FFF) as u16,
+            slot: ((w >> 55) & 0x1) as u8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn width_is_56_bits() {
+        assert_eq!(Packet::WIDTH_BITS, 56);
+        // wire image never uses bits >= 56
+        let p = Packet {
+            dest_x: 31,
+            dest_y: 31,
+            local_idx: (MAX_LOCAL_NODES - 1) as u16,
+            slot: 1,
+            payload: f32::from_bits(u32::MAX),
+        };
+        assert_eq!(p.pack56() >> 56, 0);
+    }
+
+    #[test]
+    fn roundtrip_exhaustive_fields() {
+        for &x in &[0u8, 1, 15, 31] {
+            for &y in &[0u8, 7, 31] {
+                for &idx in &[0u16, 1, 4095, 8191] {
+                    for slot in 0..2u8 {
+                        let p = Packet {
+                            dest_x: x,
+                            dest_y: y,
+                            local_idx: idx,
+                            slot,
+                            payload: -123.456,
+                        };
+                        assert_eq!(Packet::unpack56(p.pack56()), p);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn payload_bits_preserved() {
+        for bits in [0u32, 1, 0x7F80_0000 /* inf */, 0xFFC0_0000 /* nan */] {
+            let p = Packet {
+                dest_x: 3,
+                dest_y: 4,
+                local_idx: 77,
+                slot: 0,
+                payload: f32::from_bits(bits),
+            };
+            let q = Packet::unpack56(p.pack56());
+            assert_eq!(q.payload.to_bits(), bits);
+        }
+    }
+
+    #[test]
+    fn capacity_covers_paper_design_point() {
+        // 16x16 overlay, thousands of local nodes per PE (paper: "a large
+        // number of local nodes (thousands) per processor").
+        assert!(MAX_DIM * MAX_DIM >= 256);
+        assert!(MAX_LOCAL_NODES >= 4096);
+    }
+}

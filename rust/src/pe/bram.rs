@@ -1,0 +1,199 @@
+//! M20K BRAM geometry and the graph-memory capacity model (§II-B, §III).
+//!
+//! An Arria 10 M20K holds 20 Kb, configured 512×40 b. Each TDP is built
+//! from 8 of them (Table I) and *multipumps* them (clocking the RAM at 2×
+//! the fabric clock) to synthesize extra virtual ports.
+//!
+//! Graph-memory encoding (paper: "the graph structure is carefully
+//! encoded in order to maximize every bit"): a node costs
+//! [`BramConfig::NODE_WORDS`] words (instruction + operand/result
+//! storage); a fanout edge costs [`BramConfig::EDGE_WORDS`] word (a 24 b
+//! destination descriptor fits one 40 b word).
+//!
+//! Scheduler-dependent overheads:
+//! * out-of-order: `2*ceil(512/32) = 32` flag words per BRAM ≈ 6 %
+//!   (RDY + fanout-pending vectors, §II-B);
+//! * in-order: ready/token FIFOs sized for the deadlock-free worst case.
+//!   The paper reports the end points (256-PE FIFO overlay ⇒ ≈100 K
+//!   nodes+edges; OoO ⇒ ≈5×); it does not give the FIFO sizing formula,
+//!   so `fifo_brams` defaults to 6.5 of 8 — the value at which the
+//!   in-order graph budget is exactly 1/5 of the out-of-order one
+//!   (3840/5 = 768 words = 1.5 BRAMs). See DESIGN.md §2.
+
+use crate::sched::SchedulerKind;
+
+/// BRAM + memory-layout parameters of one PE.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BramConfig {
+    /// M20K blocks per PE (paper: 8).
+    pub brams_per_pe: usize,
+    /// words per BRAM in the 512×40 b configuration.
+    pub words_per_bram: usize,
+    /// word width in bits (40).
+    pub word_bits: usize,
+    /// flag bits used per word ("for simpler arithmetic, we use only 32").
+    pub flag_bits_used: usize,
+    /// BRAMs reserved for FIFOs in the in-order design (may be
+    /// fractional: half a BRAM = 256 words). Calibrated default: 6.5.
+    pub fifo_brams: f64,
+    /// multipump factor: virtual-port multiplier on the M20K's 2 physical
+    /// ports (paper multipumps 2×: 4 virtual ports per BRAM per cycle).
+    pub multipump: usize,
+}
+
+impl BramConfig {
+    /// BRAM words one node costs (instruction word + operand/result word).
+    pub const NODE_WORDS: usize = 2;
+    /// BRAM words one fanout edge costs.
+    pub const EDGE_WORDS: usize = 1;
+
+    pub fn paper() -> Self {
+        Self {
+            brams_per_pe: 8,
+            words_per_bram: 512,
+            word_bits: 40,
+            flag_bits_used: 32,
+            fifo_brams: 6.5,
+            multipump: 2,
+        }
+    }
+
+    /// Total physical words of graph-memory BRAM in one PE.
+    pub fn total_words(&self) -> usize {
+        self.brams_per_pe * self.words_per_bram
+    }
+
+    /// Flag-vector overhead of the OoO scheduler, §II-B arithmetic.
+    pub fn flag_words(&self) -> usize {
+        2 * self.words_per_bram.div_ceil(self.flag_bits_used) * self.brams_per_pe
+    }
+
+    /// Words consumed by in-order FIFOs (worst-case deadlock-free sizing).
+    pub fn fifo_words(&self) -> usize {
+        (self.fifo_brams * self.words_per_bram as f64).round() as usize
+    }
+
+    /// Words available for graph storage under each scheduler.
+    pub fn graph_words(&self, kind: SchedulerKind) -> usize {
+        match kind {
+            SchedulerKind::InOrder => self.total_words() - self.fifo_words(),
+            SchedulerKind::OutOfOrder => self.total_words() - self.flag_words(),
+        }
+    }
+
+    /// Max local nodes addressable (ignoring edges) — bounds FIFO sizing.
+    pub fn max_local_nodes(&self, kind: SchedulerKind) -> usize {
+        self.graph_words(kind) / Self::NODE_WORDS
+    }
+
+    /// Does a local subgraph of `nodes`/`edges` fit this PE?
+    pub fn fits(&self, nodes: usize, edges: usize, kind: SchedulerKind) -> bool {
+        nodes * Self::NODE_WORDS + edges * Self::EDGE_WORDS <= self.graph_words(kind)
+    }
+
+    /// Words used by a local subgraph.
+    pub fn words_used(nodes: usize, edges: usize) -> usize {
+        nodes * Self::NODE_WORDS + edges * Self::EDGE_WORDS
+    }
+
+    /// Virtual BRAM port budget per fabric cycle (dual-port × multipump).
+    pub fn ports_per_cycle(&self) -> usize {
+        2 * self.multipump
+    }
+
+    /// Full capacity report for an overlay of `num_pes`.
+    pub fn capacity_report(&self, num_pes: usize) -> CapacityReport {
+        let in_words = self.graph_words(SchedulerKind::InOrder);
+        let ooo_words = self.graph_words(SchedulerKind::OutOfOrder);
+        CapacityReport {
+            num_pes,
+            graph_words_per_pe_inorder: in_words,
+            graph_words_per_pe_ooo: ooo_words,
+            flag_overhead_pct: 100.0 * self.flag_words() as f64 / self.total_words() as f64,
+            capacity_ratio: ooo_words as f64 / in_words as f64,
+        }
+    }
+}
+
+impl Default for BramConfig {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+/// §III capacity comparison summary.
+#[derive(Debug, Clone, Copy)]
+pub struct CapacityReport {
+    pub num_pes: usize,
+    pub graph_words_per_pe_inorder: usize,
+    pub graph_words_per_pe_ooo: usize,
+    pub flag_overhead_pct: f64,
+    pub capacity_ratio: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry() {
+        let b = BramConfig::paper();
+        assert_eq!(b.total_words(), 4096);
+        assert_eq!(b.ports_per_cycle(), 4);
+        // 20Kb = 512 * 40b exactly
+        assert_eq!(b.words_per_bram * b.word_bits, 20 * 1024);
+    }
+
+    #[test]
+    fn flag_overhead_matches_paper_six_percent() {
+        let b = BramConfig::paper();
+        // 2*ceil(512/32) = 32 words/BRAM, 256 words over 8 BRAMs
+        assert_eq!(b.flag_words(), 256);
+        let pct = b.flag_words() as f64 / b.total_words() as f64;
+        assert!((pct - 0.0625).abs() < 1e-12, "≈6% (paper §II-B)");
+    }
+
+    #[test]
+    fn ooo_graph_budget() {
+        let b = BramConfig::paper();
+        assert_eq!(b.graph_words(SchedulerKind::OutOfOrder), 3840);
+    }
+
+    #[test]
+    fn capacity_ratio_is_about_five() {
+        let b = BramConfig::paper();
+        let r = b.capacity_report(256);
+        assert!(
+            (r.capacity_ratio - 5.0).abs() < 0.01,
+            "calibrated to the paper's ≈5x: {}",
+            r.capacity_ratio
+        );
+    }
+
+    #[test]
+    fn fits_is_monotone() {
+        let b = BramConfig::paper();
+        assert!(b.fits(100, 200, SchedulerKind::OutOfOrder));
+        assert!(!b.fits(2000, 1000, SchedulerKind::OutOfOrder));
+        // in-order budget is much smaller
+        assert!(b.fits(100, 200, SchedulerKind::InOrder));
+        assert!(!b.fits(300, 300, SchedulerKind::InOrder));
+    }
+
+    #[test]
+    fn words_used_encoding() {
+        assert_eq!(BramConfig::words_used(10, 15), 35);
+    }
+
+    #[test]
+    fn custom_geometry() {
+        // a half-size PE (4 BRAMs) still computes coherent budgets
+        let b = BramConfig {
+            brams_per_pe: 4,
+            ..BramConfig::paper()
+        };
+        assert_eq!(b.total_words(), 2048);
+        assert_eq!(b.flag_words(), 128);
+        assert!(b.graph_words(SchedulerKind::OutOfOrder) == 1920);
+    }
+}

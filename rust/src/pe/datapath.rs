@@ -1,0 +1,166 @@
+//! PE datapath building blocks (§II-A): the DSP ALU pipeline and the
+//! packet-generation unit's state machine. The simulator composes these
+//! per PE and drives them once per cycle.
+
+use std::collections::VecDeque;
+
+/// The PE's floating-point ALU: two hardened DSP blocks (ADD + MULTIPLY
+/// mode) in single-stage pipeline mode. Accepts at most one issue per
+/// cycle (operand match happens on packet arrival, ≤1 packet/cycle);
+/// results retire `latency` cycles later (writeback sets the RDY flag).
+#[derive(Debug, Clone)]
+pub struct AluPipeline {
+    latency: u64,
+    /// (retire cycle, local node index) — monotonically ordered.
+    in_flight: VecDeque<(u64, u32)>,
+    pub issued: u64,
+}
+
+impl AluPipeline {
+    pub fn new(latency: u64) -> Self {
+        assert!(latency >= 1);
+        Self {
+            latency,
+            in_flight: VecDeque::new(),
+            issued: 0,
+        }
+    }
+
+    /// Issue a fired node at `cycle`. Single-stage DSP pipeline: always
+    /// accepts one issue per cycle (the caller guarantees rate ≤ 1).
+    pub fn issue(&mut self, cycle: u64, local_idx: u32) {
+        debug_assert!(
+            self.in_flight.back().map_or(true, |&(c, _)| c < cycle + self.latency || c == cycle + self.latency),
+        );
+        self.in_flight.push_back((cycle + self.latency, local_idx));
+        self.issued += 1;
+    }
+
+    /// Pop all nodes retiring at `cycle`.
+    pub fn retire(&mut self, cycle: u64, out: &mut Vec<u32>) {
+        while let Some(idx) = self.pop_due(cycle) {
+            out.push(idx);
+        }
+    }
+
+    /// Is a result waiting to retire at `cycle`?
+    #[inline]
+    pub fn front_due(&self, cycle: u64) -> bool {
+        self.in_flight.front().is_some_and(|&(c, _)| c <= cycle)
+    }
+
+    /// Pop one due retirement (port-limited writeback path).
+    #[inline]
+    pub fn pop_due(&mut self, cycle: u64) -> Option<u32> {
+        if self.front_due(cycle) {
+            self.in_flight.pop_front().map(|(_, idx)| idx)
+        } else {
+            None
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.in_flight.is_empty()
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.in_flight.len()
+    }
+}
+
+/// Packet-generation unit state (§II-A: "a non-deterministic multi-cycle
+/// process: (1) nodes can have multiple fanouts, and (2) the network may
+/// be congested").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PgState {
+    /// no node claimed; will start a scheduling pass if any node is ready
+    Idle,
+    /// scheduling pass in progress (FIFO pop: 1 cycle; LOD: 2 cycles)
+    Picking { done_at: u64 },
+    /// emitting fanout packets of `local_idx`, next edge `edge`
+    Draining { local_idx: u32, edge: u32 },
+}
+
+/// Packet-generation unit bookkeeping (stats + state).
+#[derive(Debug, Clone)]
+pub struct PacketGen {
+    pub state: PgState,
+    /// cycles spent actually emitting packets
+    pub busy_cycles: u64,
+    /// cycles stalled on network backpressure
+    pub stall_cycles: u64,
+    /// completed scheduling passes
+    pub picks: u64,
+}
+
+impl PacketGen {
+    pub fn new() -> Self {
+        Self {
+            state: PgState::Idle,
+            busy_cycles: 0,
+            stall_cycles: 0,
+            picks: 0,
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.state == PgState::Idle
+    }
+}
+
+impl Default for PacketGen {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alu_retires_in_order_after_latency() {
+        let mut alu = AluPipeline::new(2);
+        alu.issue(10, 5);
+        alu.issue(11, 6);
+        let mut out = Vec::new();
+        alu.retire(11, &mut out);
+        assert!(out.is_empty());
+        alu.retire(12, &mut out);
+        assert_eq!(out, vec![5]);
+        alu.retire(13, &mut out);
+        assert_eq!(out, vec![5, 6]);
+        assert!(alu.is_empty());
+        assert_eq!(alu.issued, 2);
+    }
+
+    #[test]
+    fn alu_latency_one_retires_next_cycle() {
+        let mut alu = AluPipeline::new(1);
+        alu.issue(0, 9);
+        let mut out = Vec::new();
+        alu.retire(0, &mut out);
+        assert!(out.is_empty(), "no same-cycle retire");
+        alu.retire(1, &mut out);
+        assert_eq!(out, vec![9]);
+    }
+
+    #[test]
+    fn alu_pipelined_throughput_one_per_cycle() {
+        let mut alu = AluPipeline::new(3);
+        for c in 0..10u64 {
+            alu.issue(c, c as u32);
+        }
+        assert_eq!(alu.occupancy(), 10);
+        let mut out = Vec::new();
+        alu.retire(12, &mut out); // cycles 3..=12 retire ids 0..=9
+        assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn pg_starts_idle() {
+        let pg = PacketGen::new();
+        assert!(pg.is_idle());
+        assert_eq!(pg.picks, 0);
+    }
+}

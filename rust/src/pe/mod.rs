@@ -1,0 +1,11 @@
+//! Processing element substrate: BRAM geometry / capacity model and the
+//! PE datapath building blocks (ALU pipeline, packet-generation unit).
+//! The cycle-level composition lives in [`crate::sim`].
+
+mod bram;
+mod datapath;
+mod ports;
+
+pub use bram::{BramConfig, CapacityReport};
+pub use datapath::{AluPipeline, PacketGen, PgState};
+pub use ports::{PortArbiter, Unit};

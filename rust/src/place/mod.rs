@@ -1,0 +1,234 @@
+//! Node → PE placement.
+//!
+//! A [`Placement`] maps every graph node to a PE and to a *local index*
+//! inside that PE's graph memory. For the out-of-order scheduler the local
+//! index order **is** the scheduling priority (§II-B): nodes are laid out
+//! in decreasing criticality so the LOD's lowest-address pick is the most
+//! critical ready node. The in-order scheduler ignores layout order.
+
+use crate::criticality;
+use crate::graph::{DataflowGraph, NodeId};
+use crate::util::rng::Rng;
+
+/// Partitioning strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// node id modulo PE count — the classic scatter used by token
+    /// dataflow studies (spreads every level across all PEs).
+    #[default]
+    RoundRobin,
+    /// uniform random assignment (seeded).
+    Random,
+    /// contiguous blocks of the topological order (locality-preserving,
+    /// fewer network packets, less parallelism).
+    BlockContiguous,
+    /// chunks of `CHUNK` consecutive topo-order nodes dealt round-robin:
+    /// the practical middle ground a real toolflow uses — locality within
+    /// a chunk, load balance across PEs. This is the Fig. 1 default.
+    Chunked,
+}
+
+/// Chunk size for [`PlacementPolicy::Chunked`] (nodes per deal).
+pub const CHUNK_SIZE: usize = 64;
+
+/// Local memory ordering inside each PE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LocalOrder {
+    /// decreasing criticality — the paper's §II-B layout.
+    #[default]
+    ByCriticality,
+    /// placement arrival order (ablation: OoO without the heuristic).
+    ByNodeId,
+}
+
+/// The complete placement of a graph onto `num_pes` PEs.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub num_pes: usize,
+    /// node -> PE
+    pub pe_of: Vec<u32>,
+    /// node -> local index within its PE's graph memory
+    pub local_of: Vec<u32>,
+    /// per PE: local index -> node (the memory layout)
+    pub nodes_of: Vec<Vec<NodeId>>,
+}
+
+impl Placement {
+    /// Build a placement with the given policy and local ordering.
+    pub fn build(
+        g: &DataflowGraph,
+        num_pes: usize,
+        policy: PlacementPolicy,
+        order: LocalOrder,
+        seed: u64,
+    ) -> Self {
+        assert!(num_pes > 0);
+        let n = g.len();
+        let mut pe_of = vec![0u32; n];
+        match policy {
+            PlacementPolicy::RoundRobin => {
+                for (i, pe) in pe_of.iter_mut().enumerate() {
+                    *pe = (i % num_pes) as u32;
+                }
+            }
+            PlacementPolicy::Random => {
+                let mut rng = Rng::seed_from_u64(seed);
+                for pe in pe_of.iter_mut() {
+                    *pe = rng.gen_range(num_pes) as u32;
+                }
+            }
+            PlacementPolicy::BlockContiguous => {
+                let per = n.div_ceil(num_pes);
+                for (i, pe) in pe_of.iter_mut().enumerate() {
+                    *pe = (i / per) as u32;
+                }
+            }
+            PlacementPolicy::Chunked => {
+                for (i, pe) in pe_of.iter_mut().enumerate() {
+                    *pe = ((i / CHUNK_SIZE) % num_pes) as u32;
+                }
+            }
+        }
+        Self::from_assignment(g, num_pes, pe_of, order)
+    }
+
+    /// Build from an explicit node→PE map (used by tests and ablations).
+    pub fn from_assignment(
+        g: &DataflowGraph,
+        num_pes: usize,
+        pe_of: Vec<u32>,
+        order: LocalOrder,
+    ) -> Self {
+        let n = g.len();
+        assert_eq!(pe_of.len(), n);
+        let mut nodes_of: Vec<Vec<NodeId>> = vec![Vec::new(); num_pes];
+        for (node, &pe) in pe_of.iter().enumerate() {
+            assert!((pe as usize) < num_pes, "PE index out of range");
+            nodes_of[pe as usize].push(node as NodeId);
+        }
+        if order == LocalOrder::ByCriticality {
+            let crit = criticality::criticality(g);
+            for local in nodes_of.iter_mut() {
+                criticality::sort_by_criticality(local, &crit);
+            }
+        }
+        let mut local_of = vec![0u32; n];
+        for locals in &nodes_of {
+            for (idx, &node) in locals.iter().enumerate() {
+                local_of[node as usize] = idx as u32;
+            }
+        }
+        Self {
+            num_pes,
+            pe_of,
+            local_of,
+            nodes_of,
+        }
+    }
+
+    /// Largest local node count across PEs (capacity check input).
+    pub fn max_local_nodes(&self) -> usize {
+        self.nodes_of.iter().map(|v| v.len()).max().unwrap_or(0)
+    }
+
+    /// Largest local footprint (nodes + their fanout edges) across PEs —
+    /// what actually has to fit in a PE's graph memory.
+    pub fn max_local_footprint(&self, g: &DataflowGraph) -> usize {
+        self.nodes_of
+            .iter()
+            .map(|locals| {
+                locals
+                    .iter()
+                    .map(|&n| 1 + g.node(n).fanout.len())
+                    .sum::<usize>()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Op;
+    use crate::workload::layered_random;
+
+    fn sample() -> DataflowGraph {
+        layered_random(8, 6, 16, 2, 9)
+    }
+
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let g = sample();
+        let p = Placement::build(&g, 4, PlacementPolicy::RoundRobin, LocalOrder::ByNodeId, 0);
+        let counts: Vec<usize> = p.nodes_of.iter().map(|v| v.len()).collect();
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn mapping_is_bijective() {
+        let g = sample();
+        for policy in [
+            PlacementPolicy::RoundRobin,
+            PlacementPolicy::Random,
+            PlacementPolicy::BlockContiguous,
+        ] {
+            let p = Placement::build(&g, 5, policy, LocalOrder::ByCriticality, 3);
+            let mut seen = vec![false; g.len()];
+            for (pe, locals) in p.nodes_of.iter().enumerate() {
+                for (idx, &node) in locals.iter().enumerate() {
+                    assert_eq!(p.pe_of[node as usize] as usize, pe);
+                    assert_eq!(p.local_of[node as usize] as usize, idx);
+                    assert!(!seen[node as usize], "node placed twice");
+                    seen[node as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+
+    #[test]
+    fn criticality_order_is_decreasing() {
+        let g = sample();
+        let crit = criticality::criticality(&g);
+        let p = Placement::build(&g, 3, PlacementPolicy::RoundRobin, LocalOrder::ByCriticality, 0);
+        for locals in &p.nodes_of {
+            for w in locals.windows(2) {
+                assert!(
+                    crit[w[0] as usize] >= crit[w[1] as usize],
+                    "local memory must be sorted by decreasing criticality"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_pe_gets_everything() {
+        let g = sample();
+        let p = Placement::build(&g, 1, PlacementPolicy::Random, LocalOrder::ByCriticality, 7);
+        assert_eq!(p.nodes_of[0].len(), g.len());
+        assert_eq!(p.max_local_nodes(), g.len());
+    }
+
+    #[test]
+    fn local_footprint_counts_edges() {
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(1.0);
+        let b = g.add_input(2.0);
+        let c = g.op(Op::Add, &[a, b]);
+        let _ = g.op(Op::Mul, &[c, c]);
+        let p = Placement::build(&g, 1, PlacementPolicy::RoundRobin, LocalOrder::ByNodeId, 0);
+        // footprint = 4 nodes + 4 edges (a->c, b->c, c->d x2)
+        assert_eq!(p.max_local_footprint(&g), 8);
+    }
+
+    #[test]
+    fn random_is_seed_deterministic() {
+        let g = sample();
+        let p1 = Placement::build(&g, 7, PlacementPolicy::Random, LocalOrder::ByNodeId, 5);
+        let p2 = Placement::build(&g, 7, PlacementPolicy::Random, LocalOrder::ByNodeId, 5);
+        assert_eq!(p1.pe_of, p2.pe_of);
+    }
+}

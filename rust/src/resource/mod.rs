@@ -1,0 +1,176 @@
+//! Analytic FPGA resource & frequency model — regenerates Table I.
+//!
+//! We have no Quartus: the model is calibrated to the paper's published
+//! synthesis points (Table I and its router footnote) and exposes the
+//! scaling law between them. Calibration anchors:
+//!
+//! * one PE+router tile: ≈1.4 K ALMs, ≈2.2 K regs, 2 DSPs, 8 M20Ks;
+//! * one Hoplite router alone: 130 ALMs, 350 regs, >400 MHz;
+//! * 1×1 overlay: 306 MHz; 16×16 (256 PE): 258 MHz; ≈300 PEs: ≈250 MHz
+//!   — a ≈6 MHz Fmax derate per doubling of PE count (routing pressure);
+//! * device: Arria 10 10AX115S — 427,200 ALMs, 1,708,800 regs (4/ALM),
+//!   1,518 DSPs, 2,713 M20Ks.
+
+/// Arria 10 10AX115S device capacity.
+#[derive(Debug, Clone, Copy)]
+pub struct Device {
+    pub alms: u64,
+    pub regs: u64,
+    pub dsps: u64,
+    pub brams: u64,
+}
+
+pub const ARRIA10_10AX115S: Device = Device {
+    alms: 427_200,
+    regs: 1_708_800,
+    dsps: 1_518,
+    brams: 2_713,
+};
+
+/// Per-tile calibration constants (Table I anchors).
+pub mod tile {
+    /// full PE+router tile ALMs: 256 tiles = 367 K ALMs (Table I row 2)
+    pub const ALMS: u64 = 1_434;
+    /// registers per tile: 559 K / 256
+    pub const REGS: u64 = 2_184;
+    /// hardened FP DSP blocks per PE (ADD + MULTIPLY)
+    pub const DSPS: u64 = 2;
+    /// M20K blocks per PE
+    pub const BRAMS: u64 = 8;
+    /// Hoplite router share of the tile (footnote)
+    pub const ROUTER_ALMS: u64 = 130;
+    pub const ROUTER_REGS: u64 = 350;
+}
+
+/// Estimated utilization of one overlay design point.
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceEstimate {
+    pub pes: usize,
+    pub alms: u64,
+    pub regs: u64,
+    pub dsps: u64,
+    pub brams: u64,
+    pub alm_pct: f64,
+    pub reg_pct: f64,
+    pub dsp_pct: f64,
+    pub bram_pct: f64,
+    pub fmax_mhz: f64,
+}
+
+/// Fmax model: 306 MHz single tile, derated ~6 MHz per doubling
+/// (Table I: 306 @ 1, 258 @ 256; abstract: up to 300 PEs at ~250 MHz).
+pub fn fmax_mhz(pes: usize) -> f64 {
+    assert!(pes >= 1);
+    306.0 - 6.0 * (pes as f64).log2()
+}
+
+/// Estimate resources for an overlay of `pes` processors on `dev`.
+pub fn estimate(pes: usize, dev: &Device) -> ResourceEstimate {
+    let alms = tile::ALMS * pes as u64;
+    let regs = tile::REGS * pes as u64;
+    let dsps = tile::DSPS * pes as u64;
+    let brams = tile::BRAMS * pes as u64;
+    ResourceEstimate {
+        pes,
+        alms,
+        regs,
+        dsps,
+        brams,
+        alm_pct: 100.0 * alms as f64 / dev.alms as f64,
+        reg_pct: 100.0 * regs as f64 / dev.regs as f64,
+        dsp_pct: 100.0 * dsps as f64 / dev.dsps as f64,
+        bram_pct: 100.0 * brams as f64 / dev.brams as f64,
+        fmax_mhz: fmax_mhz(pes),
+    }
+}
+
+/// Largest overlay that fits the device (the abstract's "up to 300
+/// processors"), assuming `margin` headroom on ALMs for glue logic.
+pub fn max_overlay(dev: &Device, margin: f64) -> usize {
+    let by_alm = (dev.alms as f64 * margin / tile::ALMS as f64) as usize;
+    let by_reg = (dev.regs as f64 * margin / tile::REGS as f64) as usize;
+    let by_dsp = dev.dsps / tile::DSPS;
+    let by_bram = dev.brams / tile::BRAMS;
+    by_alm
+        .min(by_reg)
+        .min(by_dsp as usize)
+        .min(by_bram as usize)
+}
+
+/// Render the Table I rows (plus any extra design points).
+pub fn table1(extra_points: &[usize]) -> Vec<ResourceEstimate> {
+    let mut points = vec![1usize, 256];
+    points.extend_from_slice(extra_points);
+    points.sort_unstable();
+    points.dedup();
+    points
+        .into_iter()
+        .map(|p| estimate(p, &ARRIA10_10AX115S))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_row_one_pe() {
+        let e = estimate(1, &ARRIA10_10AX115S);
+        // paper: 1.4K ALMs (0.3%), 2.2K regs, 2 DSPs (0.1%), 8 BRAMs (0.3%), 306 MHz
+        assert!((e.alms as f64 - 1_400.0).abs() < 100.0);
+        assert!((e.regs as f64 - 2_200.0).abs() < 100.0);
+        assert_eq!(e.dsps, 2);
+        assert_eq!(e.brams, 8);
+        assert!((e.fmax_mhz - 306.0).abs() < 1e-9);
+        assert!(e.alm_pct < 0.5);
+    }
+
+    #[test]
+    fn table1_row_256_pe() {
+        let e = estimate(256, &ARRIA10_10AX115S);
+        // paper: 367K ALMs (86%), 559K regs, 512 DSPs (34%), 2K BRAMs (75%), 258 MHz
+        assert!((e.alms as f64 - 367_000.0).abs() < 1_000.0, "{}", e.alms);
+        assert!((e.regs as f64 - 559_000.0).abs() < 1_000.0, "{}", e.regs);
+        assert_eq!(e.dsps, 512);
+        assert_eq!(e.brams, 2_048);
+        assert!((e.fmax_mhz - 258.0).abs() < 0.01);
+        assert!((e.alm_pct - 86.0).abs() < 1.0);
+        assert!((e.dsp_pct - 34.0).abs() < 1.0);
+        assert!((e.bram_pct - 75.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn abstract_claim_300_pes_at_250mhz() {
+        // "we can create an overlay design of up to 300 processors ...
+        // at frequencies up to 250 MHz"
+        let max = max_overlay(&ARRIA10_10AX115S, 1.0);
+        assert!(max >= 295, "device fits ~300 tiles, got {max}");
+        let f = fmax_mhz(300);
+        assert!(f >= 250.0, "300 PEs still ≥250 MHz, got {f}");
+    }
+
+    #[test]
+    fn router_footnote() {
+        assert_eq!(tile::ROUTER_ALMS, 130);
+        assert_eq!(tile::ROUTER_REGS, 350);
+        // router is a small fraction of the tile
+        assert!(tile::ROUTER_ALMS * 4 < tile::ALMS);
+    }
+
+    #[test]
+    fn fmax_monotone_decreasing() {
+        let mut prev = f64::MAX;
+        for p in [1usize, 4, 16, 64, 256, 300] {
+            let f = fmax_mhz(p);
+            assert!(f < prev);
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn table1_includes_anchor_rows() {
+        let rows = table1(&[16, 64]);
+        let pes: Vec<usize> = rows.iter().map(|r| r.pes).collect();
+        assert_eq!(pes, vec![1, 16, 64, 256]);
+    }
+}

@@ -1,0 +1,194 @@
+//! `artifacts/manifest.json` — shapes, file names and the opcode table
+//! emitted by `python/compile/aot.py`. A test asserts the python opcode
+//! table matches [`crate::graph::Op`], keeping the two layers in sync.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, ensure, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub sha256_16: Option<String>,
+    pub batch: Option<usize>,
+    pub words: Option<usize>,
+    pub n: Option<usize>,
+    pub lmax: Option<usize>,
+}
+
+impl ArtifactInfo {
+    fn from_json(j: &Json) -> Result<Self> {
+        let file = j
+            .get("file")
+            .and_then(|f| f.as_str())
+            .ok_or_else(|| anyhow!("artifact entry missing 'file'"))?
+            .to_string();
+        Ok(Self {
+            file,
+            sha256_16: j.get("sha256_16").and_then(|s| s.as_str()).map(String::from),
+            batch: j.get("batch").and_then(|v| v.as_usize()),
+            words: j.get("words").and_then(|v| v.as_usize()),
+            n: j.get("n").and_then(|v| v.as_usize()),
+            lmax: j.get("lmax").and_then(|v| v.as_usize()),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub alu_batch: ArtifactInfo,
+    pub lod: ArtifactInfo,
+    pub graph_eval: ArtifactInfo,
+}
+
+#[derive(Debug, Clone)]
+pub struct OpcodeEntry {
+    pub name: String,
+    pub arity: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub opcodes: BTreeMap<u32, OpcodeEntry>,
+    pub artifacts: Artifacts,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let format = doc
+            .get("format")
+            .and_then(|f| f.as_str())
+            .ok_or_else(|| anyhow!("manifest missing 'format'"))?
+            .to_string();
+        ensure!(format == "hlo-text", "unknown artifact format {format}");
+        let mut opcodes = BTreeMap::new();
+        let ops = doc
+            .get("opcodes")
+            .and_then(|o| o.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing 'opcodes'"))?;
+        for (code, entry) in ops {
+            let code: u32 = code.parse().map_err(|_| anyhow!("bad opcode key {code}"))?;
+            let name = entry
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("opcode {code} missing name"))?
+                .to_string();
+            let arity = entry
+                .get("arity")
+                .and_then(|a| a.as_usize())
+                .ok_or_else(|| anyhow!("opcode {code} missing arity"))?;
+            opcodes.insert(code, OpcodeEntry { name, arity });
+        }
+        let arts = doc
+            .get("artifacts")
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let get = |name: &str| -> Result<ArtifactInfo> {
+            ArtifactInfo::from_json(
+                arts.get(name)
+                    .ok_or_else(|| anyhow!("manifest missing artifact '{name}'"))?,
+            )
+        };
+        Ok(Self {
+            format,
+            opcodes,
+            artifacts: Artifacts {
+                alu_batch: get("alu_batch")?,
+                lod: get("lod")?,
+                graph_eval: get("graph_eval")?,
+            },
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Assert the python opcode table matches `crate::graph::Op`.
+    pub fn check_opcode_table(&self) -> Result<()> {
+        use crate::graph::Op;
+        for op in Op::ALL {
+            let entry = self
+                .opcodes
+                .get(&op.code())
+                .ok_or_else(|| anyhow!("opcode {} missing from manifest", op.code()))?;
+            ensure!(
+                entry.name == op.name(),
+                "opcode {}: manifest says {}, rust says {}",
+                op.code(),
+                entry.name,
+                op.name()
+            );
+            ensure!(entry.arity == op.arity(), "opcode {} arity mismatch", op.code());
+        }
+        ensure!(
+            self.opcodes.len() == Op::ALL.len(),
+            "opcode table size mismatch: manifest {}, rust {}",
+            self.opcodes.len(),
+            Op::ALL.len()
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> String {
+        r#"{
+          "format": "hlo-text",
+          "opcodes": {
+            "0": {"name": "ADD", "arity": 2},
+            "1": {"name": "MUL", "arity": 2},
+            "2": {"name": "SUB", "arity": 2},
+            "3": {"name": "DIV", "arity": 2},
+            "4": {"name": "MAX", "arity": 2},
+            "5": {"name": "MIN", "arity": 2},
+            "6": {"name": "NEG", "arity": 1},
+            "7": {"name": "COPY", "arity": 1}
+          },
+          "artifacts": {
+            "alu_batch": {"file": "alu_batch.hlo.txt", "batch": 4096},
+            "lod": {"file": "lod.hlo.txt", "words": 128},
+            "graph_eval": {"file": "graph_eval.hlo.txt", "n": 2048, "lmax": 256}
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_and_check() {
+        let m = Manifest::parse(&sample_json()).unwrap();
+        assert_eq!(m.artifacts.alu_batch.batch, Some(4096));
+        assert_eq!(m.artifacts.graph_eval.lmax, Some(256));
+        m.check_opcode_table().unwrap();
+    }
+
+    #[test]
+    fn opcode_mismatch_detected() {
+        let bad = sample_json().replace("\"ADD\"", "\"XOR\"");
+        let m = Manifest::parse(&bad).unwrap();
+        assert!(m.check_opcode_table().is_err());
+    }
+
+    #[test]
+    fn missing_artifact_detected() {
+        let bad = sample_json().replace("\"lod\":", "\"lodx\":");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // When `make artifacts` has run, validate the real file too.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            m.check_opcode_table().unwrap();
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Ablation schedulers — alternative out-of-order pick orders that
+//! isolate *why* the paper's scheduler wins: it is not out-of-orderness
+//! per se but picking by **criticality**. Neither of these exists in the
+//! paper; they bound the design space in `sched_micro`'s ablation.
+
+use super::ReadyScheduler;
+use crate::util::rng::Rng;
+
+/// Most-recently-ready first (a stack). Same bit-flag storage cost as
+/// the LOD design; depth-first-ish order.
+pub struct LifoSched {
+    stack: Vec<u32>,
+    pending: u64,
+    max_occupancy: usize,
+    num_local: usize,
+}
+
+impl LifoSched {
+    pub fn new(num_local: usize) -> Self {
+        Self {
+            stack: Vec::new(),
+            pending: 0,
+            max_occupancy: 0,
+            num_local,
+        }
+    }
+}
+
+impl ReadyScheduler for LifoSched {
+    fn mark_ready(&mut self, local_idx: u32) {
+        self.stack.push(local_idx);
+        self.max_occupancy = self.max_occupancy.max(self.stack.len());
+    }
+
+    fn pick_latency(&self) -> u32 {
+        1
+    }
+
+    fn take(&mut self) -> Option<u32> {
+        let n = self.stack.pop();
+        if n.is_some() {
+            self.pending += 1;
+        }
+        n
+    }
+
+    fn is_empty(&self) -> bool {
+        self.stack.is_empty()
+    }
+
+    fn len(&self) -> usize {
+        self.stack.len()
+    }
+
+    fn fanout_done(&mut self, _local_idx: u32) {
+        self.pending = self.pending.saturating_sub(1);
+    }
+
+    fn mem_overhead_words(&self) -> usize {
+        self.num_local.max(1) // stack sized like the FIFO
+    }
+
+    fn max_occupancy(&self) -> usize {
+        self.max_occupancy
+    }
+}
+
+/// Uniform-random ready pick (seeded): out-of-order but criticality-blind.
+pub struct RandomSched {
+    ready: Vec<u32>,
+    rng: Rng,
+    pending: u64,
+    max_occupancy: usize,
+    num_local: usize,
+}
+
+impl RandomSched {
+    pub fn new(num_local: usize, seed: u64) -> Self {
+        Self {
+            ready: Vec::new(),
+            rng: Rng::seed_from_u64(seed),
+            pending: 0,
+            max_occupancy: 0,
+            num_local,
+        }
+    }
+}
+
+impl ReadyScheduler for RandomSched {
+    fn mark_ready(&mut self, local_idx: u32) {
+        self.ready.push(local_idx);
+        self.max_occupancy = self.max_occupancy.max(self.ready.len());
+    }
+
+    fn pick_latency(&self) -> u32 {
+        2 // charge the LOD's pick latency for a fair comparison
+    }
+
+    fn take(&mut self) -> Option<u32> {
+        if self.ready.is_empty() {
+            return None;
+        }
+        let i = self.rng.gen_range(self.ready.len());
+        self.pending += 1;
+        Some(self.ready.swap_remove(i))
+    }
+
+    fn is_empty(&self) -> bool {
+        self.ready.is_empty()
+    }
+
+    fn len(&self) -> usize {
+        self.ready.len()
+    }
+
+    fn fanout_done(&mut self, _local_idx: u32) {
+        self.pending = self.pending.saturating_sub(1);
+    }
+
+    fn mem_overhead_words(&self) -> usize {
+        2 * self.num_local.div_ceil(32) // flag-vector equivalent
+    }
+
+    fn max_occupancy(&self) -> usize {
+        self.max_occupancy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifo_order() {
+        let mut s = LifoSched::new(16);
+        for i in [1u32, 2, 3] {
+            s.mark_ready(i);
+        }
+        assert_eq!(s.take(), Some(3));
+        s.mark_ready(9);
+        assert_eq!(s.take(), Some(9));
+        assert_eq!(s.take(), Some(2));
+        assert_eq!(s.take(), Some(1));
+        assert_eq!(s.take(), None);
+    }
+
+    #[test]
+    fn random_is_a_permutation() {
+        let mut s = RandomSched::new(64, 7);
+        for i in 0..20u32 {
+            s.mark_ready(i);
+        }
+        let mut got: Vec<u32> = std::iter::from_fn(|| s.take()).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..20).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn random_is_seed_deterministic() {
+        let run = |seed| {
+            let mut s = RandomSched::new(64, seed);
+            for i in 0..10u32 {
+                s.mark_ready(i);
+            }
+            std::iter::from_fn(|| s.take()).collect::<Vec<u32>>()
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4));
+    }
+
+    #[test]
+    fn occupancy_tracked() {
+        let mut s = LifoSched::new(8);
+        s.mark_ready(0);
+        s.mark_ready(1);
+        s.take();
+        assert_eq!(s.max_occupancy(), 2);
+        assert_eq!(s.len(), 1);
+    }
+}

@@ -1,0 +1,137 @@
+//! The in-order baseline: a BRAM FIFO of ready node ids, FCFS.
+
+use super::ReadyScheduler;
+use std::collections::VecDeque;
+
+/// First-come-first-served ready queue.
+///
+/// Hardware cost model: to be deadlock-free the FIFO must be able to hold
+/// *every* local node simultaneously (all could be ready at once), so the
+/// worst-case depth equals the PE's node capacity — BRAM that the
+/// out-of-order design instead spends on graph storage (see
+/// `pe::BramConfig::fifo_words`). A bounded capacity models a
+/// under-provisioned FIFO; overflows are counted, not dropped (hardware
+/// would deadlock — the simulator keeps the node queued so runs finish,
+/// and reports `overflows() > 0` as a sizing violation).
+pub struct InOrderFifo {
+    queue: VecDeque<u32>,
+    capacity: usize,
+    pending: u64, // picked but fanout not finished (stats only)
+    max_occupancy: usize,
+    overflows: u64,
+}
+
+impl InOrderFifo {
+    pub fn new(num_local: usize, capacity: Option<usize>) -> Self {
+        let capacity = capacity.unwrap_or(num_local.max(1));
+        Self {
+            queue: VecDeque::with_capacity(capacity.min(1 << 16)),
+            capacity,
+            pending: 0,
+            max_occupancy: 0,
+            overflows: 0,
+        }
+    }
+}
+
+impl ReadyScheduler for InOrderFifo {
+    fn mark_ready(&mut self, local_idx: u32) {
+        if self.queue.len() >= self.capacity {
+            self.overflows += 1;
+        }
+        self.queue.push_back(local_idx);
+        self.max_occupancy = self.max_occupancy.max(self.queue.len());
+    }
+
+    fn pick_latency(&self) -> u32 {
+        1 // single-cycle FIFO pop
+    }
+
+    fn take(&mut self) -> Option<u32> {
+        let n = self.queue.pop_front();
+        if n.is_some() {
+            self.pending += 1;
+        }
+        n
+    }
+
+    fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn fanout_done(&mut self, _local_idx: u32) {
+        self.pending = self.pending.saturating_sub(1);
+    }
+
+    fn mem_overhead_words(&self) -> usize {
+        // one 40 b word per FIFO entry (13 b node id fits comfortably)
+        self.capacity
+    }
+
+    fn max_occupancy(&self) -> usize {
+        self.max_occupancy
+    }
+
+    fn overflows(&self) -> u64 {
+        self.overflows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::ReadyScheduler;
+
+    #[test]
+    fn strict_fcfs_order() {
+        let mut f = InOrderFifo::new(64, None);
+        for i in [5u32, 1, 9, 0, 3] {
+            f.mark_ready(i);
+        }
+        let got: Vec<u32> = std::iter::from_fn(|| f.take()).collect();
+        assert_eq!(got, vec![5, 1, 9, 0, 3], "FIFO must preserve arrival order");
+    }
+
+    #[test]
+    fn overflow_counted_not_dropped() {
+        let mut f = InOrderFifo::new(64, Some(2));
+        f.mark_ready(0);
+        f.mark_ready(1);
+        f.mark_ready(2);
+        assert_eq!(f.overflows(), 1);
+        assert_eq!(f.len(), 3, "simulator keeps the node to avoid deadlock");
+    }
+
+    #[test]
+    fn worst_case_capacity_is_local_node_count() {
+        let f = InOrderFifo::new(1000, None);
+        assert_eq!(f.mem_overhead_words(), 1000);
+    }
+
+    #[test]
+    fn occupancy_high_water_mark() {
+        let mut f = InOrderFifo::new(8, None);
+        f.mark_ready(1);
+        f.mark_ready(2);
+        f.take();
+        f.mark_ready(3);
+        assert_eq!(f.max_occupancy(), 2);
+    }
+
+    #[test]
+    fn interleaved_take_and_mark() {
+        let mut f = InOrderFifo::new(8, None);
+        f.mark_ready(1);
+        assert_eq!(f.take(), Some(1));
+        f.mark_ready(2);
+        f.mark_ready(3);
+        assert_eq!(f.take(), Some(2));
+        f.fanout_done(1);
+        assert_eq!(f.take(), Some(3));
+        assert!(f.is_empty());
+    }
+}

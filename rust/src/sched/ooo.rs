@@ -1,0 +1,250 @@
+//! The paper's out-of-order scheduler: RDY/PEND bit-flags + hierarchical
+//! leading-one detection over criticality-sorted graph memory.
+
+use super::ReadyScheduler;
+use crate::lod::{HierLod, NO_READY, WORD_BITS};
+
+/// Out-of-order, criticality-driven ready scheduler (§II-B).
+///
+/// State:
+/// * `rdy` — one bit per local node, packed 32/word exactly as in the
+///   paper's BRAM layout (32 of the M20K's 40 b used "for simpler
+///   arithmetic"). Set on ALU writeback, cleared when the node is claimed
+///   for fanout processing.
+/// * `pend` — the paper's second flag vector ("to avoid data corruption,
+///   we need RDY bit-flags to indicate if all fanouts of a node have been
+///   sent"): set while fanout packets are in flight.
+/// * `summary` — the OuterLOD's distributed-memory vector, one bit per
+///   `rdy` word, maintained incrementally.
+///
+/// A pick is a deterministic 2-cycle OuterLOD→InnerLOD pass. Because the
+/// placement sorts each PE's local memory in decreasing criticality, the
+/// lowest set bit is the most critical ready node.
+pub struct OutOfOrderLod {
+    num_local: usize,
+    rdy: Vec<u32>,
+    pend: Vec<u32>,
+    summary: Vec<u64>,
+    lod: HierLod,
+    ready_count: usize,
+    pending_count: usize,
+    max_occupancy: usize,
+}
+
+impl OutOfOrderLod {
+    pub fn new(num_local: usize) -> Self {
+        let words = num_local.div_ceil(WORD_BITS as usize).max(1);
+        let lod = HierLod::new(words);
+        let summary_words = lod.summary_words();
+        Self {
+            num_local,
+            rdy: vec![0; words],
+            pend: vec![0; words],
+            summary: vec![0; summary_words],
+            lod,
+            ready_count: 0,
+            pending_count: 0,
+            max_occupancy: 0,
+        }
+    }
+
+    /// The §II-B overhead arithmetic, per PE: `2 * ceil(addresses/32)`
+    /// flag words for every BRAM of `addresses` words.
+    pub fn paper_flag_words(words_per_bram: usize, brams: usize) -> usize {
+        2 * words_per_bram.div_ceil(32) * brams
+    }
+
+    #[inline]
+    fn set_bit(v: &mut [u32], idx: u32) {
+        v[(idx / WORD_BITS) as usize] |= 1 << (idx % WORD_BITS);
+    }
+
+    #[inline]
+    fn clear_bit(v: &mut [u32], idx: u32) {
+        v[(idx / WORD_BITS) as usize] &= !(1 << (idx % WORD_BITS));
+    }
+
+    #[inline]
+    fn bit(v: &[u32], idx: u32) -> bool {
+        v[(idx / WORD_BITS) as usize] >> (idx % WORD_BITS) & 1 == 1
+    }
+
+    /// Is `local_idx` pending (picked, fanout in flight)?
+    pub fn is_pending(&self, local_idx: u32) -> bool {
+        Self::bit(&self.pend, local_idx)
+    }
+
+    /// Is `local_idx` currently flagged ready?
+    pub fn is_ready(&self, local_idx: u32) -> bool {
+        Self::bit(&self.rdy, local_idx)
+    }
+
+    /// Expose flag words (integration test cross-checks the Pallas LOD
+    /// kernel against the hardware pick on live scheduler state).
+    pub fn rdy_words(&self) -> &[u32] {
+        &self.rdy
+    }
+}
+
+impl ReadyScheduler for OutOfOrderLod {
+    fn mark_ready(&mut self, local_idx: u32) {
+        debug_assert!((local_idx as usize) < self.num_local);
+        debug_assert!(!Self::bit(&self.rdy, local_idx), "node already ready");
+        debug_assert!(!Self::bit(&self.pend, local_idx), "node already pending");
+        Self::set_bit(&mut self.rdy, local_idx);
+        self.summary[(local_idx / WORD_BITS) as usize / 64] |=
+            1 << ((local_idx / WORD_BITS) as usize % 64);
+        self.ready_count += 1;
+        self.max_occupancy = self.max_occupancy.max(self.ready_count);
+    }
+
+    fn pick_latency(&self) -> u32 {
+        HierLod::PICK_LATENCY // OuterLOD + InnerLOD, §II-B
+    }
+
+    fn take(&mut self) -> Option<u32> {
+        let idx = self.lod.pick(&self.summary, &self.rdy);
+        if idx == NO_READY {
+            return None;
+        }
+        Self::clear_bit(&mut self.rdy, idx);
+        let word = (idx / WORD_BITS) as usize;
+        if self.rdy[word] == 0 {
+            self.summary[word / 64] &= !(1 << (word % 64));
+        }
+        Self::set_bit(&mut self.pend, idx);
+        self.ready_count -= 1;
+        self.pending_count += 1;
+        Some(idx)
+    }
+
+    fn is_empty(&self) -> bool {
+        self.ready_count == 0
+    }
+
+    fn len(&self) -> usize {
+        self.ready_count
+    }
+
+    fn fanout_done(&mut self, local_idx: u32) {
+        debug_assert!(Self::bit(&self.pend, local_idx), "fanout_done without pick");
+        Self::clear_bit(&mut self.pend, local_idx);
+        self.pending_count -= 1;
+    }
+
+    fn mem_overhead_words(&self) -> usize {
+        // RDY + PEND vectors in BRAM words (32 flags per word), plus the
+        // outer summary lives in distributed memory (free BRAM-wise).
+        2 * self.rdy.len()
+    }
+
+    fn max_occupancy(&self) -> usize {
+        self.max_occupancy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_lowest_index_first() {
+        let mut s = OutOfOrderLod::new(4096);
+        for i in [4000u32, 37, 2048, 38] {
+            s.mark_ready(i);
+        }
+        assert_eq!(s.take(), Some(37));
+        assert_eq!(s.take(), Some(38));
+        assert_eq!(s.take(), Some(2048));
+        assert_eq!(s.take(), Some(4000));
+        assert_eq!(s.take(), None);
+    }
+
+    #[test]
+    fn lowest_index_is_most_critical_by_construction() {
+        // Placement sorts local memory by decreasing criticality, so the
+        // invariant "pick == min ready local index" is the §II-B property.
+        let mut s = OutOfOrderLod::new(100);
+        s.mark_ready(99);
+        s.mark_ready(0);
+        assert_eq!(s.take(), Some(0));
+    }
+
+    #[test]
+    fn pend_guards_reselection() {
+        let mut s = OutOfOrderLod::new(64);
+        s.mark_ready(5);
+        assert_eq!(s.take(), Some(5));
+        assert!(s.is_pending(5));
+        assert!(!s.is_ready(5));
+        assert_eq!(s.take(), None, "picked node must not be re-picked");
+        s.fanout_done(5);
+        assert!(!s.is_pending(5));
+    }
+
+    #[test]
+    fn summary_tracks_word_emptiness() {
+        let mut s = OutOfOrderLod::new(32 * 70); // >64 words => 2 summary words
+        s.mark_ready(32 * 69); // node in word 69
+        assert_eq!(s.take(), Some(32 * 69));
+        assert!(s.summary.iter().all(|&w| w == 0));
+        assert_eq!(s.take(), None);
+    }
+
+    #[test]
+    fn interleaving_preserves_priority() {
+        let mut s = OutOfOrderLod::new(256);
+        s.mark_ready(100);
+        assert_eq!(s.take(), Some(100));
+        s.mark_ready(50);
+        s.mark_ready(150);
+        assert_eq!(s.take(), Some(50), "newly ready lower index wins");
+        s.fanout_done(100);
+        assert_eq!(s.take(), Some(150));
+    }
+
+    #[test]
+    fn paper_flag_overhead_is_six_percent() {
+        // §II-B: 2 * ceil(512/32) = 32 locations per 512-word BRAM
+        let per_bram = OutOfOrderLod::paper_flag_words(512, 1);
+        assert_eq!(per_bram, 32);
+        let overhead = per_bram as f64 / 512.0;
+        assert!((overhead - 0.0625).abs() < 1e-9, "≈6% (paper)");
+        // whole PE: 8 BRAMs -> 256 of 4096 words
+        assert_eq!(OutOfOrderLod::paper_flag_words(512, 8), 256);
+    }
+
+    #[test]
+    fn mem_overhead_scales_with_capacity() {
+        let s = OutOfOrderLod::new(4096);
+        // 4096 nodes: 128 RDY words + 128 PEND words
+        assert_eq!(s.mem_overhead_words(), 256);
+        let tiny = OutOfOrderLod::new(10);
+        assert_eq!(tiny.mem_overhead_words(), 2);
+    }
+
+    #[test]
+    fn occupancy_counting() {
+        let mut s = OutOfOrderLod::new(64);
+        for i in 0..10 {
+            s.mark_ready(i);
+        }
+        assert_eq!(s.len(), 10);
+        for _ in 0..10 {
+            s.take();
+        }
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.max_occupancy(), 10);
+    }
+
+    #[test]
+    fn boundary_indices() {
+        let mut s = OutOfOrderLod::new(65);
+        s.mark_ready(64);
+        s.mark_ready(31);
+        s.mark_ready(32);
+        assert_eq!(s.take(), Some(31));
+        assert_eq!(s.take(), Some(32));
+        assert_eq!(s.take(), Some(64));
+    }
+}

@@ -1,0 +1,614 @@
+//! Cycle-level overlay simulator: PEs (§II-A datapath) + Hoplite torus,
+//! stepped in lockstep one fabric cycle at a time.
+//!
+//! Per-cycle pipeline (all PEs in parallel, double-buffered network):
+//! 1. packet-gen units drive this cycle's injection requests;
+//! 2. the network switches; grants and ejects become visible;
+//! 3. each PE consumes its ejected packet: operand store → dataflow
+//!    firing rule → ALU issue;
+//! 4. ALU retirements write back and flag nodes ready (scheduler);
+//! 5. packet-gen state machines advance (scheduling passes, fanout
+//!    drains, completion).
+
+mod stats;
+mod trace;
+
+pub use stats::{PeStats, SimStats};
+pub use trace::{Sample, Trace};
+
+use crate::config::OverlayConfig;
+use crate::graph::{DataflowGraph, NodeKind};
+use crate::noc::{Network, Packet};
+use crate::pe::{AluPipeline, BramConfig, PacketGen, PgState, PortArbiter, Unit};
+use crate::place::Placement;
+use crate::sched::{make_scheduler, ReadyScheduler, SchedulerKind};
+
+/// Simulation failure modes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimError {
+    /// `max_cycles` elapsed before the graph completed (livelock guard).
+    CycleLimitExceeded { cycle: u64, completed: usize, total: usize },
+    /// a PE's local subgraph exceeds its BRAM budget
+    /// (only when `enforce_capacity` is set).
+    CapacityExceeded { pe: usize, words_needed: usize, words_available: usize },
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::CycleLimitExceeded { cycle, completed, total } => write!(
+                f,
+                "cycle limit hit at {cycle}: {completed}/{total} nodes complete"
+            ),
+            SimError::CapacityExceeded { pe, words_needed, words_available } => write!(
+                f,
+                "PE {pe} needs {words_needed} BRAM words, has {words_available}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+struct PeUnit {
+    sched: Box<dyn ReadyScheduler + Send>,
+    alu: AluPipeline,
+    pg: PacketGen,
+    /// BRAM virtual-port arbiter (multipump model, §II-C)
+    ports: PortArbiter,
+    /// skid buffer between the scheduling unit and packet-gen
+    next_node: Option<u32>,
+    /// in-flight scheduling pass completes at this cycle
+    pick_done_at: Option<u64>,
+    busy_cycles: u64,
+}
+
+/// The overlay simulator for one (graph, placement, config) instance.
+pub struct Simulator<'g> {
+    g: &'g DataflowGraph,
+    place: Placement,
+    cfg: OverlayConfig,
+    net: Network,
+    pes: Vec<PeUnit>,
+    // flat per-node state
+    value: Vec<f32>,
+    operand: Vec<[f32; 2]>,
+    arrived: Vec<u8>,
+    computed: Vec<bool>,
+    completed: usize,
+    cycle: u64,
+    inject_req: Vec<Option<Packet>>,
+    // per-cycle network-result copies (preallocated; the network's own
+    // StepResult buffers are reused and cannot be borrowed across the
+    // PE-update phase)
+    eject_buf: Vec<Option<Packet>>,
+    grant_buf: Vec<bool>,
+    trace: Option<Trace>,
+}
+
+impl<'g> Simulator<'g> {
+    /// Build a simulator; places the graph according to `cfg`.
+    pub fn new(g: &'g DataflowGraph, cfg: OverlayConfig) -> Result<Self, SimError> {
+        let place = Placement::build(g, cfg.num_pes(), cfg.placement, cfg.local_order, cfg.seed);
+        Self::with_placement(g, place, cfg)
+    }
+
+    /// Build with an explicit placement (tests, ablations).
+    pub fn with_placement(
+        g: &'g DataflowGraph,
+        place: Placement,
+        cfg: OverlayConfig,
+    ) -> Result<Self, SimError> {
+        Self::with_scheduler_factory(g, place, cfg, |kind, num_local| {
+            make_scheduler(kind, num_local, None)
+        })
+    }
+
+    /// Build with a custom scheduler constructor — the ablation hook
+    /// (e.g. `sched::{LifoSched, RandomSched}` in `sched_micro`).
+    pub fn with_scheduler_factory<F>(
+        g: &'g DataflowGraph,
+        place: Placement,
+        cfg: OverlayConfig,
+        factory: F,
+    ) -> Result<Self, SimError>
+    where
+        F: Fn(SchedulerKind, usize) -> Box<dyn ReadyScheduler + Send>,
+    {
+        assert_eq!(place.num_pes, cfg.num_pes());
+        if cfg.enforce_capacity {
+            let budget = cfg.bram.graph_words(cfg.scheduler);
+            for (pe, locals) in place.nodes_of.iter().enumerate() {
+                let nodes = locals.len();
+                let edges: usize = locals.iter().map(|&n| g.node(n).fanout.len()).sum();
+                let need = BramConfig::words_used(nodes, edges);
+                if need > budget {
+                    return Err(SimError::CapacityExceeded {
+                        pe,
+                        words_needed: need,
+                        words_available: budget,
+                    });
+                }
+            }
+        }
+        let n = g.len();
+        let num_pes = cfg.num_pes();
+        let pes = place
+            .nodes_of
+            .iter()
+            .map(|locals| PeUnit {
+                sched: factory(cfg.scheduler, locals.len()),
+                alu: AluPipeline::new(cfg.alu_latency),
+                pg: PacketGen::new(),
+                ports: PortArbiter::new(cfg.bram.ports_per_cycle() as u32),
+                next_node: None,
+                pick_done_at: None,
+                busy_cycles: 0,
+            })
+            .collect();
+        let mut sim = Self {
+            g,
+            place,
+            cfg,
+            net: Network::new(cfg.cols, cfg.rows),
+            pes,
+            value: vec![0f32; n],
+            operand: vec![[0f32; 2]; n],
+            arrived: vec![0u8; n],
+            computed: vec![false; n],
+            completed: 0,
+            cycle: 0,
+            inject_req: vec![None; num_pes],
+            eject_buf: vec![None; num_pes],
+            grant_buf: vec![false; num_pes],
+            trace: None,
+        };
+        sim.seed_inputs();
+        Ok(sim)
+    }
+
+    /// Inputs hold their token at cycle 0: value set, flagged ready for
+    /// fanout processing.
+    fn seed_inputs(&mut self) {
+        for (i, node) in self.g.nodes().iter().enumerate() {
+            if let NodeKind::Input { value } = node.kind {
+                self.value[i] = value;
+                self.computed[i] = true;
+                let pe = self.place.pe_of[i] as usize;
+                let local = self.place.local_of[i];
+                self.pes[pe].sched.mark_ready(local);
+            }
+        }
+    }
+
+    #[inline]
+    fn global_of(&self, pe: usize, local: u32) -> u32 {
+        self.place.nodes_of[pe][local as usize]
+    }
+
+    /// Packet for fanout `edge` of node `global`.
+    fn packet_for(&self, global: u32, edge: u32) -> Packet {
+        let (dst, slot) = self.g.node(global).fanout[edge as usize];
+        let dpe = self.place.pe_of[dst as usize] as usize;
+        Packet {
+            dest_x: (dpe % self.cfg.cols) as u8,
+            dest_y: (dpe / self.cfg.cols) as u8,
+            local_idx: self.place.local_of[dst as usize] as u16,
+            slot,
+            payload: self.value[global as usize],
+        }
+    }
+
+    /// Record a [`Trace`] of overlay state every `stride` cycles.
+    pub fn enable_trace(&mut self, stride: u64) {
+        self.trace = Some(Trace::new(stride));
+    }
+
+    /// The recorded trace, if tracing was enabled.
+    pub fn trace(&self) -> Option<&Trace> {
+        self.trace.as_ref()
+    }
+
+    /// Sample current overlay state (tracing).
+    fn sample(&self) -> Sample {
+        let mut ready_total = 0;
+        let mut ready_max = 0;
+        let mut busy = 0;
+        for pe in &self.pes {
+            let r = pe.sched.len();
+            ready_total += r;
+            ready_max = ready_max.max(r);
+            if !pe.pg.is_idle() || !pe.alu.is_empty() {
+                busy += 1;
+            }
+        }
+        Sample {
+            cycle: self.cycle,
+            ready_total,
+            ready_max,
+            busy_pes: busy,
+            in_flight: self.net.in_flight(),
+            completed: self.completed,
+        }
+    }
+
+    /// Advance one cycle. Returns true when the run is complete.
+    fn step(&mut self) -> bool {
+        let num_pes = self.pes.len();
+
+        // (1)+(2) network switches on this cycle's injection requests
+        {
+            let res = self.net.step(&self.inject_req);
+            self.eject_buf.copy_from_slice(&res.ejected);
+            self.grant_buf.copy_from_slice(&res.inject_ok);
+        }
+
+        // (3) consume ejected packets: operand store -> firing -> ALU issue
+        for pe in 0..num_pes {
+            self.pes[pe].ports.reset();
+            if let Some(pkt) = self.eject_buf[pe] {
+                // receive has top priority; budget >= 2 always grants it
+                let granted = self.pes[pe].ports.request(Unit::Receive);
+                debug_assert!(granted);
+                let global = self.global_of(pe, pkt.local_idx as u32) as usize;
+                debug_assert!(!self.computed[global], "operand for computed node");
+                self.operand[global][pkt.slot as usize] = pkt.payload;
+                self.arrived[global] += 1;
+                let node = self.g.node(global as u32);
+                if (self.arrived[global] as usize) == node.arity() {
+                    // dataflow firing rule satisfied: evaluate + issue
+                    let op = node.op().expect("interior node");
+                    self.value[global] =
+                        op.eval(self.operand[global][0], self.operand[global][1]);
+                    self.pes[pe].alu.issue(self.cycle, pkt.local_idx as u32);
+                }
+            }
+        }
+
+        // (4) ALU retirements: writeback + RDY flag (one writeback port
+        // request per result; with the paper's 2x multipump this never
+        // stalls, without it results wait for a free port)
+        for pe in 0..num_pes {
+            let unit = &mut self.pes[pe];
+            while unit.alu.front_due(self.cycle) {
+                if !unit.ports.request(Unit::Writeback) {
+                    break; // retry next cycle
+                }
+                let local = unit.alu.pop_due(self.cycle).unwrap();
+                unit.sched.mark_ready(local);
+                let global = self.place.nodes_of[pe][local as usize] as usize;
+                self.computed[global] = true;
+            }
+        }
+
+        // (5) packet-gen state machines + next cycle's injection requests
+        for pe in 0..num_pes {
+            // fast path: fully idle PE — nothing to resolve, start or emit
+            {
+                let unit = &self.pes[pe];
+                if unit.pg.state == PgState::Idle
+                    && unit.next_node.is_none()
+                    && unit.pick_done_at.is_none()
+                    && unit.alu.is_empty()
+                    && unit.sched.is_empty()
+                {
+                    debug_assert!(self.inject_req[pe].is_none());
+                    continue;
+                }
+            }
+            let granted = self.grant_buf[pe];
+            // resolve last cycle's drain first
+            if let PgState::Draining { local_idx, edge } = self.pes[pe].pg.state {
+                if self.inject_req[pe].is_some() {
+                    if granted {
+                        let global = self.global_of(pe, local_idx);
+                        let next = edge + 1;
+                        self.pes[pe].pg.busy_cycles += 1;
+                        if (next as usize) == self.g.node(global).fanout.len() {
+                            self.pes[pe].sched.fanout_done(local_idx);
+                            self.completed += 1;
+                            self.pes[pe].pg.state = PgState::Idle;
+                        } else {
+                            self.pes[pe].pg.state = PgState::Draining {
+                                local_idx,
+                                edge: next,
+                            };
+                        }
+                    } else {
+                        self.pes[pe].pg.stall_cycles += 1;
+                    }
+                }
+            }
+            self.inject_req[pe] = None;
+
+            // Scheduling unit — runs *concurrently* with the drain
+            // pipeline (in hardware the LOD/FIFO pop overlaps packet
+            // generation; the claimed node waits in a 1-entry skid
+            // buffer). Pick latency is only exposed when the PE is idle.
+            if self.pes[pe].next_node.is_none() {
+                match self.pes[pe].pick_done_at {
+                    None => {
+                        if !self.pes[pe].sched.is_empty() {
+                            let lat = self.pes[pe].sched.pick_latency() as u64;
+                            self.pes[pe].pick_done_at = Some(self.cycle + lat);
+                        }
+                    }
+                    Some(done_at) if self.cycle >= done_at => {
+                        self.pes[pe].pick_done_at = None;
+                        if let Some(local) = self.pes[pe].sched.take() {
+                            self.pes[pe].pg.picks += 1;
+                            self.pes[pe].next_node = Some(local);
+                        }
+                    }
+                    Some(_) => {}
+                }
+            }
+
+            // Packet-gen unit: when idle, adopt the claimed node.
+            if self.pes[pe].pg.state == PgState::Idle {
+                if let Some(local) = self.pes[pe].next_node.take() {
+                    let global = self.global_of(pe, local);
+                    if self.g.node(global).fanout.is_empty() {
+                        // sink: nothing to send
+                        self.pes[pe].sched.fanout_done(local);
+                        self.completed += 1;
+                    } else {
+                        self.pes[pe].pg.state = PgState::Draining {
+                            local_idx: local,
+                            edge: 0,
+                        };
+                    }
+                }
+            }
+
+            // emit this cycle's injection request (needs a fanout-edge
+            // read port; stalls without multipumping when receive is hot)
+            if let PgState::Draining { local_idx, edge } = self.pes[pe].pg.state {
+                if self.pes[pe].ports.request(Unit::PacketGen) {
+                    let global = self.global_of(pe, local_idx);
+                    self.inject_req[pe] = Some(self.packet_for(global, edge));
+                } else {
+                    self.pes[pe].pg.stall_cycles += 1;
+                }
+            }
+
+            // utilization accounting
+            if !self.pes[pe].pg.is_idle() || !self.pes[pe].alu.is_empty() {
+                self.pes[pe].busy_cycles += 1;
+            }
+        }
+
+        if let Some(trace) = &self.trace {
+            if trace.due(self.cycle) {
+                let s = self.sample();
+                self.trace.as_mut().unwrap().push(s);
+            }
+        }
+        self.cycle += 1;
+        self.completed == self.g.len()
+            && self.net.is_empty()
+            && self.inject_req.iter().all(|r| r.is_none())
+    }
+
+    /// Run to completion.
+    pub fn run(&mut self) -> Result<SimStats, SimError> {
+        while !self.step() {
+            if self.cycle >= self.cfg.max_cycles {
+                return Err(SimError::CycleLimitExceeded {
+                    cycle: self.cycle,
+                    completed: self.completed,
+                    total: self.g.len(),
+                });
+            }
+        }
+        Ok(self.stats())
+    }
+
+    /// Final (or current) node values — validated against the PJRT
+    /// `graph_eval` artifact and `DataflowGraph::evaluate`.
+    pub fn values(&self) -> &[f32] {
+        &self.value
+    }
+
+    pub fn all_computed(&self) -> bool {
+        self.computed.iter().all(|&c| c)
+    }
+
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Collect statistics.
+    pub fn stats(&self) -> SimStats {
+        let pe_stats: Vec<PeStats> = self
+            .pes
+            .iter()
+            .map(|p| PeStats {
+                busy_cycles: p.busy_cycles,
+                alu_ops: p.alu.issued,
+                picks: p.pg.picks,
+                pg_busy: p.pg.busy_cycles,
+                pg_stalls: p.pg.stall_cycles,
+                port_stalls: p.ports.stalls.iter().sum(),
+                max_ready: p.sched.max_occupancy(),
+                sched_mem_words: p.sched.mem_overhead_words(),
+                fifo_overflows: p.sched.overflows(),
+            })
+            .collect();
+        SimStats::collect(
+            self.cycle,
+            self.g.len(),
+            self.completed,
+            self.cfg.scheduler,
+            self.net.stats,
+            pe_stats,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Op;
+    use crate::workload::{layered_random, lu_factorization_graph, reduction_tree, SparseMatrix};
+
+    fn run_graph(g: &DataflowGraph, cfg: OverlayConfig) -> (SimStats, Vec<f32>) {
+        let mut sim = Simulator::new(g, cfg).unwrap();
+        let stats = sim.run().unwrap();
+        (stats, sim.values().to_vec())
+    }
+
+    fn check_values(g: &DataflowGraph, got: &[f32]) {
+        let want = g.evaluate();
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a == b) || (a.is_nan() && b.is_nan()),
+                "node {i}: sim={a}, ref={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_add_on_1x1() {
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(2.0);
+        let b = g.add_input(3.0);
+        g.op(Op::Add, &[a, b]);
+        let cfg = OverlayConfig::paper_1x1();
+        let (stats, vals) = run_graph(&g, cfg);
+        assert_eq!(vals[2], 5.0);
+        assert!(stats.cycles > 0);
+        assert_eq!(stats.completed, 3);
+    }
+
+    #[test]
+    fn diamond_both_schedulers_same_values() {
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(3.0);
+        let b = g.add_input(4.0);
+        let s = g.op(Op::Add, &[a, b]);
+        let p = g.op(Op::Mul, &[a, b]);
+        g.op(Op::Div, &[s, p]);
+        for kind in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
+            let cfg = OverlayConfig::paper_1x1().with_scheduler(kind);
+            let (_, vals) = run_graph(&g, cfg);
+            check_values(&g, &vals);
+        }
+    }
+
+    #[test]
+    fn layered_graph_multi_pe_matches_reference() {
+        let g = layered_random(16, 8, 24, 2, 3);
+        for (cols, rows) in [(1, 1), (2, 2), (4, 4), (5, 3)] {
+            for kind in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
+                let cfg = OverlayConfig::default()
+                    .with_dims(cols, rows)
+                    .with_scheduler(kind);
+                let (stats, vals) = run_graph(&g, cfg);
+                check_values(&g, &vals);
+                assert_eq!(stats.completed, g.len());
+            }
+        }
+    }
+
+    #[test]
+    fn lu_graph_simulates_correctly() {
+        let m = SparseMatrix::banded(24, 3, 0.9, 7);
+        let (g, _) = lu_factorization_graph(&m);
+        let cfg = OverlayConfig::default().with_dims(4, 4);
+        let (stats, vals) = run_graph(&g, cfg);
+        check_values(&g, &vals);
+        assert!(stats.net.delivered > 0);
+    }
+
+    #[test]
+    fn reduction_tree_completes() {
+        let g = reduction_tree(64, Op::Add, 1);
+        let cfg = OverlayConfig::default().with_dims(3, 3);
+        let (stats, vals) = run_graph(&g, cfg);
+        check_values(&g, &vals);
+        assert_eq!(stats.total_nodes, g.len());
+    }
+
+    #[test]
+    fn unary_chain_via_network() {
+        let mut g = DataflowGraph::new();
+        let mut prev = g.add_input(1.5);
+        for _ in 0..10 {
+            prev = g.op(Op::Neg, &[prev]);
+        }
+        let cfg = OverlayConfig::default().with_dims(2, 2);
+        let (_, vals) = run_graph(&g, cfg);
+        check_values(&g, &vals);
+        assert_eq!(vals[10], 1.5 * (-1f32).powi(10));
+    }
+
+    #[test]
+    fn same_source_both_operands() {
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(3.0);
+        let sq = g.op(Op::Mul, &[a, a]);
+        g.op(Op::Add, &[sq, a]);
+        let (_, vals) = run_graph(&g, OverlayConfig::paper_1x1());
+        assert_eq!(vals[1], 9.0);
+        assert_eq!(vals[2], 12.0);
+    }
+
+    #[test]
+    fn cycle_limit_error_reported() {
+        let g = layered_random(8, 4, 8, 1, 0);
+        let mut cfg = OverlayConfig::default().with_dims(2, 2);
+        cfg.max_cycles = 3;
+        let mut sim = Simulator::new(&g, cfg).unwrap();
+        match sim.run() {
+            Err(SimError::CycleLimitExceeded { cycle, .. }) => assert_eq!(cycle, 3),
+            other => panic!("expected cycle limit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn capacity_enforcement() {
+        let g = layered_random(64, 32, 128, 2, 0); // ~4K nodes on 1 PE
+        let mut cfg = OverlayConfig::paper_1x1();
+        cfg.enforce_capacity = true;
+        match Simulator::new(&g, cfg) {
+            Err(SimError::CapacityExceeded { words_needed, words_available, .. }) => {
+                assert!(words_needed > words_available);
+            }
+            other => panic!("expected capacity error, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn ooo_not_slower_than_inorder_on_wide_graphs() {
+        // a wide, shallow graph with skewed criticality: OoO should win
+        // (or at least tie) once ready queues form.
+        let m = SparseMatrix::banded(80, 4, 0.9, 5);
+        let (g, _) = lu_factorization_graph(&m);
+        let base = OverlayConfig::default().with_dims(4, 4);
+        let (s_in, _) = run_graph(&g, base.with_scheduler(SchedulerKind::InOrder));
+        let (s_ooo, _) = run_graph(&g, base.with_scheduler(SchedulerKind::OutOfOrder));
+        assert!(
+            (s_ooo.cycles as f64) <= 1.10 * s_in.cycles as f64,
+            "OoO {} vs in-order {}",
+            s_ooo.cycles,
+            s_in.cycles
+        );
+    }
+
+    #[test]
+    fn stats_consistency() {
+        let g = layered_random(8, 6, 12, 2, 2);
+        let (stats, _) = run_graph(&g, OverlayConfig::default().with_dims(2, 2));
+        assert_eq!(stats.completed, g.len());
+        // every edge becomes exactly one delivered packet
+        assert_eq!(stats.net.delivered as usize, g.num_edges());
+        assert_eq!(stats.net.injected, stats.net.delivered);
+        // ALU ops = interior nodes
+        let alu_total: u64 = stats.pe.iter().map(|p| p.alu_ops).sum();
+        assert_eq!(alu_total as usize, g.len() - g.num_inputs());
+        // picks = nodes (each node scheduled exactly once)
+        let picks: u64 = stats.pe.iter().map(|p| p.picks).sum();
+        assert!(picks as usize >= g.len());
+    }
+}

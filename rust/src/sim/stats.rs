@@ -1,0 +1,134 @@
+//! Simulation statistics: per-PE and aggregate.
+
+use crate::noc::NetworkStats;
+use crate::sched::SchedulerKind;
+
+/// Per-PE counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PeStats {
+    pub busy_cycles: u64,
+    pub alu_ops: u64,
+    pub picks: u64,
+    pub pg_busy: u64,
+    pub pg_stalls: u64,
+    /// BRAM port-arbitration stalls (0 with the paper's 2x multipump)
+    pub port_stalls: u64,
+    pub max_ready: usize,
+    pub sched_mem_words: usize,
+    pub fifo_overflows: u64,
+}
+
+/// Aggregate result of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimStats {
+    pub cycles: u64,
+    pub total_nodes: usize,
+    pub completed: usize,
+    pub scheduler: SchedulerKind,
+    pub net: NetworkStats,
+    pub pe: Vec<PeStats>,
+    // aggregates
+    pub avg_pe_utilization: f64,
+    pub max_ready_occupancy: usize,
+    pub total_fifo_overflows: u64,
+    pub total_pg_stalls: u64,
+}
+
+impl SimStats {
+    pub fn collect(
+        cycles: u64,
+        total_nodes: usize,
+        completed: usize,
+        scheduler: SchedulerKind,
+        net: NetworkStats,
+        pe: Vec<PeStats>,
+    ) -> Self {
+        let busy: u64 = pe.iter().map(|p| p.busy_cycles).sum();
+        let avg_pe_utilization = if cycles == 0 || pe.is_empty() {
+            0.0
+        } else {
+            busy as f64 / (cycles as f64 * pe.len() as f64)
+        };
+        let max_ready_occupancy = pe.iter().map(|p| p.max_ready).max().unwrap_or(0);
+        let total_fifo_overflows = pe.iter().map(|p| p.fifo_overflows).sum();
+        let total_pg_stalls = pe.iter().map(|p| p.pg_stalls).sum();
+        Self {
+            cycles,
+            total_nodes,
+            completed,
+            scheduler,
+            net,
+            pe,
+            avg_pe_utilization,
+            max_ready_occupancy,
+            total_fifo_overflows,
+            total_pg_stalls,
+        }
+    }
+
+    /// Wall-clock estimate at `freq_mhz` (resource model supplies Fmax).
+    pub fn runtime_us(&self, freq_mhz: f64) -> f64 {
+        self.cycles as f64 / freq_mhz
+    }
+
+    /// ALU operations per cycle across the overlay (throughput metric).
+    pub fn ops_per_cycle(&self) -> f64 {
+        let ops: u64 = self.pe.iter().map(|p| p.alu_ops).sum();
+        if self.cycles == 0 {
+            0.0
+        } else {
+            ops as f64 / self.cycles as f64
+        }
+    }
+
+    pub fn one_line(&self) -> String {
+        format!(
+            "{}: {} cycles, util {:.1}%, {} pkts ({} defl), max ready {}",
+            self.scheduler.name(),
+            self.cycles,
+            100.0 * self.avg_pe_utilization,
+            self.net.delivered,
+            self.net.deflections,
+            self.max_ready_occupancy
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let pe = vec![
+            PeStats { busy_cycles: 50, alu_ops: 10, max_ready: 3, ..Default::default() },
+            PeStats { busy_cycles: 100, alu_ops: 30, max_ready: 7, ..Default::default() },
+        ];
+        let s = SimStats::collect(
+            100,
+            64,
+            64,
+            SchedulerKind::OutOfOrder,
+            NetworkStats::default(),
+            pe,
+        );
+        assert!((s.avg_pe_utilization - 0.75).abs() < 1e-12);
+        assert_eq!(s.max_ready_occupancy, 7);
+        assert!((s.ops_per_cycle() - 0.4).abs() < 1e-12);
+        assert!((s.runtime_us(250.0) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_cycles_safe() {
+        let s = SimStats::collect(
+            0,
+            0,
+            0,
+            SchedulerKind::InOrder,
+            NetworkStats::default(),
+            vec![],
+        );
+        assert_eq!(s.avg_pe_utilization, 0.0);
+        assert_eq!(s.ops_per_cycle(), 0.0);
+    }
+}

@@ -1,0 +1,159 @@
+//! Execution tracing: sampled time series of the quantities that explain
+//! Fig. 1 — ready-queue occupancy (the regime detector), PE busyness and
+//! network load — plus a completion (retired-nodes) curve. Backs the
+//! `tdp analyze` subcommand.
+
+/// One sampled point of the overlay state.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Sample {
+    pub cycle: u64,
+    /// total ready nodes queued across all PEs
+    pub ready_total: usize,
+    /// deepest single-PE ready queue
+    pub ready_max: usize,
+    /// PEs with non-idle packet-gen or ALU
+    pub busy_pes: usize,
+    /// packets on network links
+    pub in_flight: usize,
+    /// nodes fully completed (fanout done)
+    pub completed: usize,
+}
+
+/// Sampling trace with a fixed stride (cycles between samples).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub stride: u64,
+    pub samples: Vec<Sample>,
+}
+
+impl Trace {
+    pub fn new(stride: u64) -> Self {
+        assert!(stride >= 1);
+        Self {
+            stride,
+            samples: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn due(&self, cycle: u64) -> bool {
+        cycle % self.stride == 0
+    }
+
+    pub fn push(&mut self, s: Sample) {
+        self.samples.push(s);
+    }
+
+    /// Peak total ready occupancy over the run.
+    pub fn peak_ready(&self) -> usize {
+        self.samples.iter().map(|s| s.ready_total).max().unwrap_or(0)
+    }
+
+    /// Mean PE busyness over sampled points (fraction of `num_pes`).
+    pub fn mean_busy(&self, num_pes: usize) -> f64 {
+        if self.samples.is_empty() || num_pes == 0 {
+            return 0.0;
+        }
+        self.samples.iter().map(|s| s.busy_pes).sum::<usize>() as f64
+            / (self.samples.len() * num_pes) as f64
+    }
+
+    /// Render a coarse ASCII sparkline of a series (reports/CLI).
+    pub fn sparkline<F: Fn(&Sample) -> usize>(&self, f: F, width: usize) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        if self.samples.is_empty() {
+            return String::new();
+        }
+        let series: Vec<usize> = self.samples.iter().map(|s| f(s)).collect();
+        let max = *series.iter().max().unwrap();
+        let bucket = series.len().div_ceil(width.max(1));
+        let mut out = String::new();
+        for chunk in series.chunks(bucket) {
+            let avg = chunk.iter().sum::<usize>() / chunk.len();
+            let idx = if max == 0 {
+                0
+            } else {
+                (avg * (GLYPHS.len() - 1)) / max
+            };
+            out.push(GLYPHS[idx]);
+        }
+        out
+    }
+
+    /// CSV dump (cycle, ready_total, ready_max, busy_pes, in_flight,
+    /// completed).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("cycle,ready_total,ready_max,busy_pes,in_flight,completed\n");
+        for s in &self.samples {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                s.cycle, s.ready_total, s.ready_max, s.busy_pes, s.in_flight, s.completed
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(cycle: u64, ready: usize, busy: usize) -> Sample {
+        Sample {
+            cycle,
+            ready_total: ready,
+            ready_max: ready / 2,
+            busy_pes: busy,
+            in_flight: 1,
+            completed: cycle as usize,
+        }
+    }
+
+    #[test]
+    fn stride_gates_sampling() {
+        let t = Trace::new(10);
+        assert!(t.due(0));
+        assert!(!t.due(5));
+        assert!(t.due(20));
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut t = Trace::new(1);
+        t.push(sample(0, 4, 2));
+        t.push(sample(1, 10, 4));
+        t.push(sample(2, 6, 0));
+        assert_eq!(t.peak_ready(), 10);
+        assert!((t.mean_busy(4) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparkline_shapes() {
+        let mut t = Trace::new(1);
+        for i in 0..100u64 {
+            t.push(sample(i, i as usize, 0));
+        }
+        let s = t.sparkline(|s| s.ready_total, 10);
+        assert_eq!(s.chars().count(), 10);
+        let first = s.chars().next().unwrap();
+        let last = s.chars().last().unwrap();
+        assert!(last > first, "rising series: {s}");
+    }
+
+    #[test]
+    fn csv_header_and_rows() {
+        let mut t = Trace::new(1);
+        t.push(sample(5, 1, 1));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("cycle,"));
+        assert!(csv.contains("5,1,0,1,1,5"));
+    }
+
+    #[test]
+    fn empty_trace_safe() {
+        let t = Trace::new(4);
+        assert_eq!(t.peak_ready(), 0);
+        assert_eq!(t.mean_busy(8), 0.0);
+        assert_eq!(t.sparkline(|s| s.ready_total, 10), "");
+    }
+}

@@ -1,0 +1,188 @@
+//! Flag-style CLI argument parser (the `clap` substitute).
+//!
+//! Grammar: `tdp <subcommand> [--flag value | --flag | --flag=value]...`
+//! Typed accessors consume recognized flags; [`Args::finish`] rejects
+//! anything left over, so typos fail loudly.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed arguments of one subcommand.
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, Option<String>>,
+}
+
+impl Args {
+    /// Parse `argv` (everything after the subcommand).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, CliError> {
+        let mut flags = BTreeMap::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                return Err(CliError(format!("unexpected positional argument '{arg}'")));
+            };
+            if name.is_empty() {
+                return Err(CliError("bare '--' not supported".into()));
+            }
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), Some(v.to_string()));
+            } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                flags.insert(name.to_string(), Some(it.next().unwrap()));
+            } else {
+                flags.insert(name.to_string(), None); // boolean flag
+            }
+        }
+        Ok(Self { flags })
+    }
+
+    /// String flag with default.
+    pub fn str_or(&mut self, name: &str, default: &str) -> Result<String, CliError> {
+        match self.flags.remove(name) {
+            None => Ok(default.to_string()),
+            Some(Some(v)) => Ok(v),
+            Some(None) => Err(CliError(format!("--{name} needs a value"))),
+        }
+    }
+
+    /// Optional string flag.
+    pub fn str_opt(&mut self, name: &str) -> Result<Option<String>, CliError> {
+        match self.flags.remove(name) {
+            None => Ok(None),
+            Some(Some(v)) => Ok(Some(v)),
+            Some(None) => Err(CliError(format!("--{name} needs a value"))),
+        }
+    }
+
+    /// Required string flag.
+    pub fn str_req(&mut self, name: &str) -> Result<String, CliError> {
+        self.str_opt(name)?
+            .ok_or_else(|| CliError(format!("--{name} is required")))
+    }
+
+    fn parse_num<T: std::str::FromStr>(name: &str, v: String) -> Result<T, CliError> {
+        v.parse()
+            .map_err(|_| CliError(format!("--{name}: cannot parse '{v}'")))
+    }
+
+    pub fn usize_or(&mut self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.str_opt(name)? {
+            None => Ok(default),
+            Some(v) => Self::parse_num(name, v),
+        }
+    }
+
+    pub fn u64_or(&mut self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.str_opt(name)? {
+            None => Ok(default),
+            Some(v) => Self::parse_num(name, v),
+        }
+    }
+
+    pub fn f64_or(&mut self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.str_opt(name)? {
+            None => Ok(default),
+            Some(v) => Self::parse_num(name, v),
+        }
+    }
+
+    /// Boolean switch (present = true).
+    pub fn switch(&mut self, name: &str) -> bool {
+        matches!(self.flags.remove(name), Some(_))
+    }
+
+    /// Comma-separated usize list.
+    pub fn usize_list(&mut self, name: &str) -> Result<Vec<usize>, CliError> {
+        match self.str_opt(name)? {
+            None => Ok(vec![]),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| Self::parse_num(name, s.to_string()))
+                .collect(),
+        }
+    }
+
+    /// Error on unconsumed flags.
+    pub fn finish(self) -> Result<(), CliError> {
+        if let Some(k) = self.flags.keys().next() {
+            return Err(CliError(format!("unknown flag --{k}")));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let mut a = args(&["--cols", "8", "--rows=4", "--verbose"]);
+        assert_eq!(a.usize_or("cols", 1).unwrap(), 8);
+        assert_eq!(a.usize_or("rows", 1).unwrap(), 4);
+        assert!(a.switch("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = args(&[]);
+        assert_eq!(a.usize_or("cols", 16).unwrap(), 16);
+        assert_eq!(a.f64_or("rate", 0.5).unwrap(), 0.5);
+        assert_eq!(a.str_or("fmt", "md").unwrap(), "md");
+        assert!(!a.switch("detail"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = args(&["--bogus", "1"]);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn required_flag() {
+        let mut a = args(&[]);
+        assert!(a.str_req("workload").is_err());
+    }
+
+    #[test]
+    fn numeric_parse_errors() {
+        let mut a = args(&["--cols", "abc"]);
+        assert!(a.usize_or("cols", 1).is_err());
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(Args::parse(vec!["run".to_string()]).is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let mut a = args(&["--points", "1,16,256"]);
+        assert_eq!(a.usize_list("points").unwrap(), vec![1, 16, 256]);
+    }
+
+    #[test]
+    fn boolean_flag_followed_by_flag() {
+        let mut a = args(&["--detail", "--cols", "4"]);
+        assert!(a.switch("detail"));
+        assert_eq!(a.usize_or("cols", 1).unwrap(), 4);
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree substrates replacing crates that are unavailable in the
+//! offline build universe (DESIGN.md §2): a deterministic PRNG (`rand`),
+//! a JSON parser/writer (`serde_json`), a TOML-subset parser (`toml`),
+//! and a flag-style CLI argument parser (`clap`).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod toml;

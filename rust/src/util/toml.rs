@@ -1,0 +1,292 @@
+//! TOML-subset parser for config files.
+//!
+//! Supports what [`crate::config`] needs: top-level and `[section]`
+//! key/value pairs with string, integer, float and boolean values,
+//! comments, and blank lines. (No arrays-of-tables, dates or multi-line
+//! strings — config files here don't use them.)
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A scalar TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => {
+                if x.fract() == 0.0 {
+                    write!(f, "{x:.1}")
+                } else {
+                    write!(f, "{x}")
+                }
+            }
+            Value::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+/// Parsed document: `sections[""]` is the root table.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Value at (section, key); section "" = root.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|t| t.get(key))
+    }
+
+    pub fn set(&mut self, section: &str, key: &str, v: Value) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), v);
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if let Some(root) = self.sections.get("") {
+            for (k, v) in root {
+                out.push_str(&format!("{k} = {v}\n"));
+            }
+        }
+        for (name, table) in &self.sections {
+            if name.is_empty() {
+                continue;
+            }
+            out.push_str(&format!("\n[{name}]\n"));
+            for (k, v) in table {
+                out.push_str(&format!("{k} = {v}\n"));
+            }
+        }
+        out
+    }
+}
+
+/// Parse error with line number (1-based).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+fn parse_value(raw: &str, line: usize) -> Result<Value, TomlError> {
+    let raw = raw.trim();
+    let err = |msg: &str| TomlError {
+        line,
+        msg: msg.to_string(),
+    };
+    if raw.is_empty() {
+        return Err(err("missing value"));
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string"))?;
+        let mut s = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('"') => s.push('"'),
+                    Some('\\') => s.push('\\'),
+                    Some('n') => s.push('\n'),
+                    Some('t') => s.push('\t'),
+                    _ => return Err(err("bad escape")),
+                }
+            } else {
+                s.push(c);
+            }
+        }
+        return Ok(Value::Str(s));
+    }
+    if raw == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(Value::Bool(false));
+    }
+    // int before float: "42" parses as both
+    if let Ok(i) = raw.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = raw.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(&format!("cannot parse value '{raw}'")))
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc, TomlError> {
+    let mut doc = Doc::new();
+    let mut section = String::new();
+    for (ln, raw_line) in text.lines().enumerate() {
+        let line_no = ln + 1;
+        // strip comments (naive: '#' not inside a string — handle by
+        // scanning with a quote flag)
+        let mut in_str = false;
+        let mut cut = raw_line.len();
+        for (i, c) in raw_line.char_indices() {
+            match c {
+                '"' => in_str = !in_str,
+                '#' if !in_str => {
+                    cut = i;
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let line = raw_line[..cut].trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| TomlError {
+                    line: line_no,
+                    msg: "unterminated section header".into(),
+                })?
+                .trim();
+            if name.is_empty() || name.contains('[') {
+                return Err(TomlError {
+                    line: line_no,
+                    msg: "bad section name".into(),
+                });
+            }
+            section = name.to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| TomlError {
+            line: line_no,
+            msg: "expected key = value".into(),
+        })?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(TomlError {
+                line: line_no,
+                msg: "empty key".into(),
+            });
+        }
+        let value = parse_value(&line[eq + 1..], line_no)?;
+        doc.set(&section, key, value);
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_root_and_sections() {
+        let doc = parse(
+            "cols = 16\nname = \"test\" # trailing comment\n\n[bram]\nbrams_per_pe = 8\nfifo_brams = 6.5\nenabled = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "cols"), Some(&Value::Int(16)));
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("test"));
+        assert_eq!(doc.get("bram", "fifo_brams").unwrap().as_f64(), Some(6.5));
+        assert_eq!(doc.get("bram", "enabled"), Some(&Value::Bool(true)));
+    }
+
+    #[test]
+    fn render_roundtrip() {
+        let mut doc = Doc::new();
+        doc.set("", "a", Value::Int(1));
+        doc.set("", "s", Value::Str("hi \"there\"".into()));
+        doc.set("sec", "f", Value::Float(2.5));
+        doc.set("sec", "g", Value::Float(3.0));
+        let text = doc.render();
+        let doc2 = parse(&text).unwrap();
+        assert_eq!(doc, doc2);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn negative_and_underscore_numbers() {
+        let doc = parse("a = -3\nb = 1_000\nc = -0.25\n").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&Value::Int(-3)));
+        assert_eq!(doc.get("", "b"), Some(&Value::Int(1000)));
+        assert_eq!(doc.get("", "c"), Some(&Value::Float(-0.25)));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let e = parse("a = 1\nbogus line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("k = \n").is_err());
+        assert!(parse("k = \"oops\n").is_err());
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let doc = parse("x = 2\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_f64(), Some(2.0));
+        assert_eq!(doc.get("", "x").unwrap().as_usize(), Some(2));
+    }
+}

@@ -1,0 +1,288 @@
+//! Sparse LU factorization → dataflow graph extraction.
+//!
+//! The paper's evaluation workloads are "dataflow graphs extracted from
+//! sparse matrix factorization kernels". This module performs a symbolic +
+//! numeric right-looking LU (no pivoting; inputs are made diagonally
+//! dominant) and records every floating-point operation as a dataflow
+//! node:
+//!
+//! ```text
+//! for k in 0..n:
+//!   for each i > k with A[i,k] != 0:
+//!     L[i,k] = A[i,k] / A[k,k]                      -- DIV node
+//!     for each j > k with A[k,j] != 0:
+//!       A[i,j] = A[i,j] - L[i,k] * A[k,j]           -- MUL + SUB nodes
+//!       (fill-in if A[i,j] was structurally zero -> NEG(MUL) node)
+//! ```
+//!
+//! The resulting DAG has the classic elimination-tree shape: wide early
+//! levels, a narrowing critical path through the pivots — exactly the
+//! regime where criticality-aware out-of-order issue pays off.
+
+use super::patterns::SparseMatrix;
+use crate::graph::{DataflowGraph, NodeId, Op};
+use std::collections::HashMap;
+
+/// Bookkeeping from graph extraction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FactorizationStats {
+    pub matrix_n: usize,
+    pub nnz_in: usize,
+    pub div_ops: usize,
+    pub mul_ops: usize,
+    pub sub_ops: usize,
+    pub fill_in: usize,
+}
+
+/// Extract the LU elimination dataflow graph of `m`.
+///
+/// Returns the graph plus stats. Node values are real: evaluating the
+/// graph performs the factorization, and tests check the L/U factors
+/// against a dense reference.
+pub fn lu_factorization_graph(m: &SparseMatrix) -> (DataflowGraph, FactorizationStats) {
+    let n = m.n;
+    let mut g = DataflowGraph::with_capacity(m.nnz() * 3);
+    // cur[(i,j)] = node currently holding the value of entry (i,j)
+    let mut cur: HashMap<(u32, u32), NodeId> = HashMap::with_capacity(m.nnz() * 2);
+    for (i, row) in m.rows.iter().enumerate() {
+        for &(j, v) in row {
+            let id = g.add_input(v);
+            cur.insert((i as u32, j as u32), id);
+        }
+    }
+    let mut stats = FactorizationStats {
+        matrix_n: n,
+        nnz_in: m.nnz(),
+        div_ops: 0,
+        mul_ops: 0,
+        sub_ops: 0,
+        fill_in: 0,
+    };
+
+    // Working sparsity: row -> sorted cols (evolves with fill-in).
+    let mut cols: Vec<Vec<u32>> = m
+        .rows
+        .iter()
+        .map(|r| r.iter().map(|&(c, _)| c as u32).collect())
+        .collect();
+    // column -> rows with a nonzero in that column below the diagonal
+    let mut rows_in_col: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for (i, r) in cols.iter().enumerate() {
+        for &c in r {
+            if (c as usize) < i {
+                // will be updated as elimination proceeds; initial subdiag
+            }
+            if i > c as usize {
+                rows_in_col[c as usize].push(i as u32);
+            }
+        }
+    }
+
+    for k in 0..n as u32 {
+        let pivot = *cur
+            .get(&(k, k))
+            .expect("diagonal entry exists (diagonally dominant input)");
+        // snapshot: the update row entries A[k, j>k]
+        let urow: Vec<u32> = cols[k as usize]
+            .iter()
+            .copied()
+            .filter(|&j| j > k)
+            .collect();
+        // rows below k with nonzero in column k (may have grown via fill-in)
+        let targets = std::mem::take(&mut rows_in_col[k as usize]);
+        for &i in targets.iter().filter(|&&i| i > k) {
+            let aik = match cur.get(&(i, k)) {
+                Some(&v) => v,
+                None => continue, // cancelled structurally (shouldn't happen)
+            };
+            let lik = g.op(Op::Div, &[aik, pivot]);
+            stats.div_ops += 1;
+            cur.insert((i, k), lik); // L factor stored in place
+            for &j in &urow {
+                let akj = *cur.get(&(k, j)).expect("update-row entry");
+                let prod = g.op(Op::Mul, &[lik, akj]);
+                stats.mul_ops += 1;
+                match cur.get(&(i, j)) {
+                    Some(&aij) => {
+                        let upd = g.op(Op::Sub, &[aij, prod]);
+                        stats.sub_ops += 1;
+                        cur.insert((i, j), upd);
+                    }
+                    None => {
+                        // fill-in: 0 - prod
+                        let fill = g.op(Op::Neg, &[prod]);
+                        stats.fill_in += 1;
+                        cur.insert((i, j), fill);
+                        // insert into working sparsity
+                        let row = &mut cols[i as usize];
+                        if let Err(pos) = row.binary_search(&j) {
+                            row.insert(pos, j);
+                        }
+                        if i > j {
+                            rows_in_col[j as usize].push(i);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (g, stats)
+}
+
+/// Dense LU reference (no pivoting) — tests only.
+#[cfg(test)]
+pub fn dense_lu(a: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let n = a.len();
+    let mut m: Vec<Vec<f32>> = a.to_vec();
+    for k in 0..n {
+        for i in k + 1..n {
+            if m[i][k] != 0.0 {
+                m[i][k] /= m[k][k];
+                let lik = m[i][k];
+                for j in k + 1..n {
+                    let akj = m[k][j];
+                    if akj != 0.0 {
+                        m[i][j] -= lik * akj;
+                    }
+                }
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_against_dense(m: &SparseMatrix) {
+        let (g, _) = lu_factorization_graph(m);
+        let vals = g.evaluate();
+        let want = dense_lu(&m.to_dense());
+
+        // Rebuild cur map by re-running extraction bookkeeping: simplest is
+        // to re-extract and track final node per entry.
+        let (_, _stats) = lu_factorization_graph(m);
+        // Instead of replicating bookkeeping, verify through a fresh
+        // extraction that returns the map:
+        let finals = final_entry_nodes(m);
+        for ((i, j), node) in finals {
+            let got = vals[node as usize];
+            let exp = want[i as usize][j as usize];
+            let tol = 1e-4 * (1.0 + exp.abs());
+            assert!(
+                (got - exp).abs() <= tol,
+                "entry ({i},{j}): got {got}, want {exp}"
+            );
+        }
+    }
+
+    /// Test helper: final node per matrix entry (duplicates the module's
+    /// bookkeeping; kept in tests to keep the public API lean).
+    fn final_entry_nodes(m: &SparseMatrix) -> HashMap<(u32, u32), NodeId> {
+        let n = m.n;
+        let mut g = DataflowGraph::new();
+        let mut cur: HashMap<(u32, u32), NodeId> = HashMap::new();
+        for (i, row) in m.rows.iter().enumerate() {
+            for &(j, v) in row {
+                let id = g.add_input(v);
+                cur.insert((i as u32, j as u32), id);
+            }
+        }
+        let mut cols: Vec<Vec<u32>> = m
+            .rows
+            .iter()
+            .map(|r| r.iter().map(|&(c, _)| c as u32).collect())
+            .collect();
+        let mut rows_in_col: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (i, r) in cols.iter().enumerate() {
+            for &c in r {
+                if i > c as usize {
+                    rows_in_col[c as usize].push(i as u32);
+                }
+            }
+        }
+        for k in 0..n as u32 {
+            let pivot = *cur.get(&(k, k)).unwrap();
+            let urow: Vec<u32> = cols[k as usize].iter().copied().filter(|&j| j > k).collect();
+            let targets = std::mem::take(&mut rows_in_col[k as usize]);
+            for &i in targets.iter().filter(|&&i| i > k) {
+                let aik = *cur.get(&(i, k)).unwrap();
+                let lik = g.op(Op::Div, &[aik, pivot]);
+                cur.insert((i, k), lik);
+                for &j in &urow {
+                    let akj = *cur.get(&(k, j)).unwrap();
+                    let prod = g.op(Op::Mul, &[lik, akj]);
+                    match cur.get(&(i, j)) {
+                        Some(&aij) => {
+                            let upd = g.op(Op::Sub, &[aij, prod]);
+                            cur.insert((i, j), upd);
+                        }
+                        None => {
+                            let fill = g.op(Op::Neg, &[prod]);
+                            cur.insert((i, j), fill);
+                            let row = &mut cols[i as usize];
+                            if let Err(pos) = row.binary_search(&j) {
+                                row.insert(pos, j);
+                            }
+                            if i > j {
+                                rows_in_col[j as usize].push(i);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        cur
+    }
+
+    #[test]
+    fn lu_graph_matches_dense_reference_banded() {
+        let m = SparseMatrix::banded(24, 3, 0.9, 7);
+        check_against_dense(&m);
+    }
+
+    #[test]
+    fn lu_graph_matches_dense_reference_random() {
+        let m = SparseMatrix::random(16, 0.25, 3);
+        check_against_dense(&m);
+    }
+
+    #[test]
+    fn lu_graph_matches_dense_reference_power_law() {
+        let m = SparseMatrix::power_law(20, 3, 11);
+        check_against_dense(&m);
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let m = SparseMatrix::banded(64, 4, 0.8, 5);
+        let (g, s) = lu_factorization_graph(&m);
+        assert_eq!(s.nnz_in, m.nnz());
+        assert_eq!(
+            g.len(),
+            s.nnz_in + s.div_ops + s.mul_ops + s.sub_ops + s.fill_in
+        );
+        assert!(s.div_ops > 0 && s.mul_ops > 0);
+        // every SUB pairs with a MUL; fill-ins replace SUBs
+        assert_eq!(s.mul_ops, s.sub_ops + s.fill_in);
+    }
+
+    #[test]
+    fn tridiagonal_has_linear_critical_path() {
+        let m = SparseMatrix::banded(50, 1, 1.0, 2);
+        let (g, _) = lu_factorization_graph(&m);
+        let depth = g.stats().depth;
+        // elimination of a tridiagonal is inherently sequential: depth ~ 3n
+        assert!(depth >= 50, "depth {depth} too shallow for tridiagonal");
+    }
+
+    #[test]
+    fn graph_is_valid_and_nontrivial() {
+        let m = SparseMatrix::banded(100, 5, 0.8, 1);
+        let (g, _) = lu_factorization_graph(&m);
+        g.validate().unwrap();
+        assert!(g.len() > 1000);
+        assert!(g.num_edges() >= g.len() - g.num_inputs());
+    }
+}

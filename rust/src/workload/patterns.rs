@@ -1,0 +1,258 @@
+//! Sparse matrix substrate: patterns + values, generators, Matrix Market.
+
+use crate::util::rng::Rng;
+
+/// A square sparse matrix in row-major coordinate form with values.
+/// Rows are kept sorted by column; duplicate entries are not allowed.
+#[derive(Debug, Clone)]
+pub struct SparseMatrix {
+    pub n: usize,
+    /// per-row sorted (col, value)
+    pub rows: Vec<Vec<(usize, f32)>>,
+}
+
+impl SparseMatrix {
+    pub fn empty(n: usize) -> Self {
+        Self {
+            n,
+            rows: vec![Vec::new(); n],
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rows.iter().map(|r| r.len()).sum()
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> Option<f32> {
+        self.rows[i]
+            .binary_search_by_key(&j, |&(c, _)| c)
+            .ok()
+            .map(|k| self.rows[i][k].1)
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        match self.rows[i].binary_search_by_key(&j, |&(c, _)| c) {
+            Ok(k) => self.rows[i][k].1 = v,
+            Err(k) => self.rows[i].insert(k, (j, v)),
+        }
+    }
+
+    /// Make the matrix strictly diagonally dominant (so LU without
+    /// pivoting is numerically stable — the paper's dataflow graphs are
+    /// pre-pivoted factorization traces).
+    pub fn make_diagonally_dominant(&mut self) {
+        for i in 0..self.n {
+            let off: f32 = self.rows[i]
+                .iter()
+                .filter(|&&(c, _)| c != i)
+                .map(|&(_, v)| v.abs())
+                .sum();
+            self.set(i, i, off + 1.0 + (i % 7) as f32 * 0.25);
+        }
+    }
+
+    /// Banded matrix: entries within `half_bw` of the diagonal, each
+    /// present with probability `fill` (diagonal always present).
+    pub fn banded(n: usize, half_bw: usize, fill: f64, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut m = Self::empty(n);
+        for i in 0..n {
+            let lo = i.saturating_sub(half_bw);
+            let hi = (i + half_bw).min(n - 1);
+            for j in lo..=hi {
+                if j == i || rng.gen_bool(fill) {
+                    let v = rng.gen_f32_in(-1.0, 1.0);
+                    m.set(i, j, v);
+                }
+            }
+        }
+        m.make_diagonally_dominant();
+        m
+    }
+
+    /// Uniform random sparsity with expected `density` off-diagonal fill.
+    pub fn random(n: usize, density: f64, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut m = Self::empty(n);
+        for i in 0..n {
+            for j in 0..n {
+                if j == i || rng.gen_bool(density) {
+                    m.set(i, j, rng.gen_f32_in(-1.0, 1.0));
+                }
+            }
+        }
+        m.make_diagonally_dominant();
+        m
+    }
+
+    /// Power-law column degrees (a few dense columns, many sparse) — the
+    /// skewed-fanout regime of circuit/graph matrices.
+    pub fn power_law(n: usize, avg_degree: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut m = Self::empty(n);
+        // zipf-ish column weights
+        let weights: Vec<f64> = (0..n).map(|j| 1.0 / ((j + 1) as f64)).collect();
+        let wsum: f64 = weights.iter().sum();
+        let total = n * avg_degree;
+        for _ in 0..total {
+            let i = rng.gen_range(n);
+            // inverse-CDF sample a column
+            let mut t = rng.gen_f64() * wsum;
+            let mut j = 0;
+            for (idx, &w) in weights.iter().enumerate() {
+                if t < w {
+                    j = idx;
+                    break;
+                }
+                t -= w;
+            }
+            m.set(i, j, rng.gen_f32_in(-1.0, 1.0));
+        }
+        for i in 0..n {
+            if m.get(i, i).is_none() {
+                m.set(i, i, 1.0);
+            }
+        }
+        m.make_diagonally_dominant();
+        m
+    }
+
+    /// Dense representation (tests only; O(n^2)).
+    pub fn to_dense(&self) -> Vec<Vec<f32>> {
+        let mut d = vec![vec![0f32; self.n]; self.n];
+        for (i, row) in self.rows.iter().enumerate() {
+            for &(j, v) in row {
+                d[i][j] = v;
+            }
+        }
+        d
+    }
+}
+
+/// Parse a Matrix Market file (`coordinate real/integer/pattern`,
+/// `general` or `symmetric`). Pattern entries get pseudorandom values.
+pub fn parse_matrix_market(text: &str) -> Result<SparseMatrix, String> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().ok_or("empty file")?;
+    if !header.starts_with("%%MatrixMarket") {
+        return Err("missing %%MatrixMarket header".into());
+    }
+    let h = header.to_ascii_lowercase();
+    if !h.contains("coordinate") {
+        return Err("only coordinate format supported".into());
+    }
+    let pattern = h.contains("pattern");
+    let symmetric = h.contains("symmetric");
+    let mut body = lines.filter(|l| !l.trim_start().starts_with('%'));
+    let dims = body.next().ok_or("missing size line")?;
+    let mut it = dims.split_whitespace();
+    let nr: usize = it.next().ok_or("bad size")?.parse().map_err(|e| format!("{e}"))?;
+    let nc: usize = it.next().ok_or("bad size")?.parse().map_err(|e| format!("{e}"))?;
+    let nnz: usize = it.next().ok_or("bad size")?.parse().map_err(|e| format!("{e}"))?;
+    if nr != nc {
+        return Err(format!("matrix must be square, got {nr}x{nc}"));
+    }
+    let mut m = SparseMatrix::empty(nr);
+    let mut count = 0usize;
+    let mut rng = Rng::seed_from_u64(0x4d4d);
+    for line in body {
+        let mut f = line.split_whitespace();
+        let i: usize = f.next().ok_or("bad entry")?.parse().map_err(|e| format!("{e}"))?;
+        let j: usize = f.next().ok_or("bad entry")?.parse().map_err(|e| format!("{e}"))?;
+        if i == 0 || j == 0 || i > nr || j > nc {
+            return Err(format!("1-based index out of range: {i} {j}"));
+        }
+        let v: f32 = if pattern {
+            rng.gen_f32_in(-1.0, 1.0)
+        } else {
+            f.next().ok_or("missing value")?.parse().map_err(|e| format!("{e}"))?
+        };
+        m.set(i - 1, j - 1, v);
+        if symmetric && i != j {
+            m.set(j - 1, i - 1, v);
+        }
+        count += 1;
+    }
+    if count != nnz {
+        return Err(format!("expected {nnz} entries, got {count}"));
+    }
+    m.make_diagonally_dominant();
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn banded_has_diagonal_and_band() {
+        let m = SparseMatrix::banded(32, 2, 1.0, 1);
+        assert_eq!(m.n, 32);
+        for i in 0..32 {
+            assert!(m.get(i, i).is_some());
+            assert!(m.get(i, (i + 3).min(31)).is_none() || i + 3 > 31);
+        }
+        // full band: row 10 has cols 8..=12
+        assert_eq!(m.rows[10].len(), 5);
+    }
+
+    #[test]
+    fn diagonal_dominance_holds() {
+        for seed in 0..3 {
+            let m = SparseMatrix::random(24, 0.2, seed);
+            for i in 0..m.n {
+                let d = m.get(i, i).unwrap().abs();
+                let off: f32 = m.rows[i]
+                    .iter()
+                    .filter(|&&(c, _)| c != i)
+                    .map(|&(_, v)| v.abs())
+                    .sum();
+                assert!(d > off, "row {i}: |d|={d} <= sum|off|={off}");
+            }
+        }
+    }
+
+    #[test]
+    fn power_law_is_skewed() {
+        let m = SparseMatrix::power_law(100, 4, 9);
+        let mut coldeg = vec![0usize; m.n];
+        for row in &m.rows {
+            for &(j, _) in row {
+                coldeg[j] += 1;
+            }
+        }
+        // column 0 should be much denser than the median column
+        let mut sorted = coldeg.clone();
+        sorted.sort_unstable();
+        assert!(coldeg[0] >= 3 * sorted[m.n / 2].max(1));
+    }
+
+    #[test]
+    fn matrix_market_general() {
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    % comment\n\
+                    3 3 4\n1 1 2.0\n2 2 3.0\n3 3 4.0\n3 1 -1.0\n";
+        let m = parse_matrix_market(text).unwrap();
+        assert_eq!(m.n, 3);
+        assert!(m.get(2, 0).is_some());
+        assert!(m.get(0, 2).is_none());
+    }
+
+    #[test]
+    fn matrix_market_symmetric_and_pattern() {
+        let text = "%%MatrixMarket matrix coordinate pattern symmetric\n\
+                    3 3 3\n1 1\n3 1\n3 3\n";
+        let m = parse_matrix_market(text).unwrap();
+        assert!(m.get(2, 0).is_some());
+        assert!(m.get(0, 2).is_some(), "symmetric mirror");
+    }
+
+    #[test]
+    fn matrix_market_errors() {
+        assert!(parse_matrix_market("").is_err());
+        assert!(parse_matrix_market("%%MatrixMarket matrix array real general\n2 2\n").is_err());
+        assert!(parse_matrix_market("%%MatrixMarket matrix coordinate real general\n2 3 1\n1 1 1.0\n").is_err());
+        assert!(parse_matrix_market("%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n").is_err());
+        assert!(parse_matrix_market("%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n").is_err());
+    }
+}

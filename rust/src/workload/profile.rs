@@ -1,0 +1,147 @@
+//! Workload characterization: the graph-shape metrics that determine
+//! which scheduling regime (Fig. 1) a workload lands in — per-level
+//! parallelism (width profile), fanout skew and criticality spread.
+
+use crate::criticality;
+use crate::graph::DataflowGraph;
+
+/// Shape profile of a dataflow graph.
+#[derive(Debug, Clone)]
+pub struct WorkloadProfile {
+    pub nodes: usize,
+    pub edges: usize,
+    pub depth: usize,
+    /// nodes per ASAP level (level 0 = inputs)
+    pub width_per_level: Vec<usize>,
+    pub max_width: usize,
+    /// mean nodes per level — the average parallelism
+    pub avg_width: f64,
+    /// fanout histogram: count of nodes with fanout 0,1,2,3,4+,
+    pub fanout_hist: [usize; 5],
+    pub max_fanout: usize,
+    /// fraction of nodes with zero slack (on a critical path)
+    pub critical_fraction: f64,
+}
+
+/// Profile `g` (one pass each over levels/fanouts/slack).
+pub fn profile(g: &DataflowGraph) -> WorkloadProfile {
+    let levels = criticality::asap(g);
+    let depth = levels.iter().copied().max().unwrap_or(0) as usize;
+    let mut width = vec![0usize; depth + 1];
+    for &l in &levels {
+        width[l as usize] += 1;
+    }
+    let mut fanout_hist = [0usize; 5];
+    let mut max_fanout = 0;
+    for node in g.nodes() {
+        let f = node.fanout.len();
+        fanout_hist[f.min(4)] += 1;
+        max_fanout = max_fanout.max(f);
+    }
+    let slack = criticality::slack(g);
+    let critical = slack.iter().filter(|&&s| s == 0).count();
+    WorkloadProfile {
+        nodes: g.len(),
+        edges: g.num_edges(),
+        depth,
+        max_width: width.iter().copied().max().unwrap_or(0),
+        avg_width: g.len() as f64 / (depth + 1) as f64,
+        width_per_level: width,
+        fanout_hist,
+        max_fanout,
+        critical_fraction: critical as f64 / g.len() as f64,
+    }
+}
+
+impl WorkloadProfile {
+    /// Does this graph saturate an overlay of `num_pes` PEs? (The Fig. 1
+    /// crossover condition: average parallelism well beyond PE count.)
+    pub fn saturates(&self, num_pes: usize) -> bool {
+        self.avg_width > num_pes as f64
+    }
+
+    /// Render the width profile as an ASCII sparkline.
+    pub fn width_sparkline(&self, width: usize) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        if self.width_per_level.is_empty() {
+            return String::new();
+        }
+        let max = self.max_width.max(1);
+        let bucket = self.width_per_level.len().div_ceil(width.max(1));
+        let mut out = String::new();
+        for chunk in self.width_per_level.chunks(bucket) {
+            let avg = chunk.iter().sum::<usize>() / chunk.len();
+            out.push(GLYPHS[(avg * (GLYPHS.len() - 1)) / max]);
+        }
+        out
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "nodes {}  edges {}  depth {}\n\
+             parallelism: avg {:.1} / max {} per level\n\
+             width profile: {}\n\
+             fanout histogram (0/1/2/3/4+): {:?} (max {})\n\
+             critical-path nodes: {:.1}%",
+            self.nodes,
+            self.edges,
+            self.depth,
+            self.avg_width,
+            self.max_width,
+            self.width_sparkline(48),
+            self.fanout_hist,
+            self.max_fanout,
+            100.0 * self.critical_fraction
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Op;
+    use crate::workload::{layered_random, lu_factorization_graph, reduction_tree, SparseMatrix};
+
+    #[test]
+    fn layered_profile() {
+        let g = layered_random(10, 5, 20, 1, 1);
+        let p = profile(&g);
+        assert_eq!(p.depth, 5);
+        assert_eq!(p.width_per_level[0], 10);
+        assert_eq!(p.width_per_level[3], 20);
+        assert_eq!(p.max_width, 20);
+        assert!(p.saturates(4));
+        assert!(!p.saturates(64));
+    }
+
+    #[test]
+    fn reduction_tree_profile() {
+        let g = reduction_tree(64, Op::Add, 1);
+        let p = profile(&g);
+        assert_eq!(p.depth, 6);
+        assert_eq!(p.width_per_level[0], 64);
+        assert_eq!(p.width_per_level[6], 1);
+        // interior nodes have fanout 1, root 0
+        assert_eq!(p.fanout_hist[0], 1);
+    }
+
+    #[test]
+    fn lu_profile_is_skewed() {
+        let m = SparseMatrix::power_law(60, 3, 2);
+        let (g, _) = lu_factorization_graph(&m);
+        let p = profile(&g);
+        assert!(p.max_fanout > 4, "power-law LU has hub nodes");
+        assert!(p.critical_fraction < 0.5, "most nodes off the critical path");
+        assert_eq!(p.width_per_level.iter().sum::<usize>(), p.nodes);
+    }
+
+    #[test]
+    fn sparkline_width() {
+        let g = layered_random(8, 20, 8, 1, 0);
+        let p = profile(&g);
+        // bucketing may undershoot the target width, never overshoot
+        let n = p.width_sparkline(12).chars().count();
+        assert!(n >= 6 && n <= 12, "sparkline width {n}");
+        assert!(!p.report().is_empty());
+    }
+}

@@ -1,0 +1,185 @@
+//! CLI integration: drive the `tdp` binary end-to-end through its
+//! subcommands (workload gen → file → run → validate paths, table
+//! rendering, error handling).
+
+use std::process::Command;
+
+fn tdp() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_tdp"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = tdp().args(args).output().expect("binary runs");
+    assert!(
+        out.status.success(),
+        "tdp {args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+#[test]
+fn help_without_args() {
+    let text = run_ok(&[]);
+    assert!(text.contains("USAGE"));
+    assert!(text.contains("sweep"));
+}
+
+#[test]
+fn resources_table() {
+    let text = run_ok(&["resources", "--points", "16", "--detail"]);
+    assert!(text.contains("Table I"));
+    assert!(text.contains("306"), "1-PE Fmax row");
+    assert!(text.contains("6.25%"), "flag overhead detail");
+}
+
+#[test]
+fn capacity_claim() {
+    let text = run_ok(&["capacity"]);
+    assert!(text.contains("5.0"), "ratio ≈5x: {text}");
+}
+
+#[test]
+fn run_small_workload_both_schedulers() {
+    let text = run_ok(&[
+        "run",
+        "--workload",
+        "kind = \"reduction\"\\nwidth = 64",
+        "--cols",
+        "2",
+        "--rows",
+        "2",
+    ]);
+    assert!(text.contains("speedup"));
+    assert!(text.contains("in-order"));
+}
+
+#[test]
+fn gen_then_run_graph_file() {
+    let dir = std::env::temp_dir().join(format!("tdp_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("g.json");
+    let text = run_ok(&[
+        "gen",
+        "--workload",
+        "kind = \"stencil\"\\nwidth = 10\\nsteps = 3",
+        "--out",
+        path.to_str().unwrap(),
+    ]);
+    assert!(text.contains("wrote"));
+    let text = run_ok(&[
+        "run",
+        "--graph",
+        path.to_str().unwrap(),
+        "--cols",
+        "2",
+        "--rows",
+        "2",
+        "--scheduler",
+        "out_of_order",
+    ]);
+    assert!(text.contains("out-of-order"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn validate_without_pjrt() {
+    let text = run_ok(&[
+        "validate",
+        "--workload",
+        "kind = \"butterfly\"\\nwidth = 32",
+        "--no-pjrt",
+        "--cols",
+        "2",
+        "--rows",
+        "2",
+    ]);
+    assert!(text.contains("VALIDATION PASSED"));
+}
+
+#[test]
+fn validate_with_pjrt_if_artifacts_present() {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let text = run_ok(&[
+        "validate",
+        "--workload",
+        "kind = \"lu_banded\"\\nn = 40\\nhalf_bw = 2\\nfill = 0.9",
+        "--artifacts",
+        artifacts.to_str().unwrap(),
+    ]);
+    assert!(text.contains("PJRT-oracle max |err| = 0"), "{text}");
+    assert!(text.contains("VALIDATION PASSED"));
+}
+
+#[test]
+fn noc_stress_reports_throughput() {
+    let text = run_ok(&[
+        "noc-stress",
+        "--cols",
+        "4",
+        "--rows",
+        "4",
+        "--packets",
+        "2000",
+        "--inject-rate",
+        "0.3",
+    ]);
+    assert!(text.contains("pkts/cycle"));
+}
+
+#[test]
+fn workload_stats_reports_shape() {
+    let text = run_ok(&[
+        "workload-stats",
+        "--workload",
+        "kind = \"layered\"\\ninputs = 8\\nlevels = 5\\nwidth = 16\\nlookback = 1",
+        "--pes",
+        "4",
+    ]);
+    assert!(text.contains("parallelism"));
+    assert!(text.contains("saturates a 4-PE overlay: YES"));
+}
+
+#[test]
+fn analyze_traces_both_schedulers() {
+    let text = run_ok(&[
+        "analyze",
+        "--workload",
+        "kind = \"reduction\"\\nwidth = 128",
+        "--cols",
+        "2",
+        "--rows",
+        "2",
+        "--stride",
+        "4",
+    ]);
+    assert!(text.contains("ready queue"));
+    assert!(text.contains("=== in-order ==="));
+    assert!(text.contains("=== out-of-order ==="));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = tdp().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn unknown_flag_fails() {
+    let out = tdp().args(["resources", "--bogus"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn bad_workload_spec_fails() {
+    let out = tdp()
+        .args(["run", "--workload", "kind = \"nope\""])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}

@@ -1,0 +1,143 @@
+//! PJRT runtime integration: the AOT artifacts (L1 Pallas kernels + L2
+//! graph_eval) against the rust models. Requires `make artifacts`; tests
+//! skip (with a loud message) when artifacts are absent so `cargo test`
+//! works standalone. `make test` always builds artifacts first.
+
+use std::path::Path;
+use tdp::graph::{DataflowGraph, Op};
+use tdp::lod::naive_scan;
+use tdp::runtime::XlaRuntime;
+use tdp::util::rng::Rng;
+use tdp::workload::{layered_random, lu_factorization_graph, SparseMatrix};
+
+/// PJRT handles are not Sync (Rc internally), so each test builds its own
+/// runtime; loading + compiling the three artifacts takes well under a
+/// second on the CPU client.
+fn runtime() -> Option<XlaRuntime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match XlaRuntime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIPPING runtime tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn opcode_tables_in_sync() {
+    let Some(rt) = runtime() else { return };
+    rt.manifest.check_opcode_table().unwrap();
+}
+
+#[test]
+fn alu_artifact_matches_rust_dsp_model() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::seed_from_u64(42);
+    for trial in 0..5 {
+        let n = [1usize, 7, 256, 1000, 4096][trial];
+        let a: Vec<f32> = (0..n).map(|_| rng.gen_f32_in(-50.0, 50.0)).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.gen_f32_in(-50.0, 50.0)).collect();
+        let ops: Vec<u32> = (0..n).map(|_| rng.gen_range(8) as u32).collect();
+        let got = rt.alu_batch(&a, &b, &ops).unwrap();
+        for i in 0..n {
+            let want = Op::from_code(ops[i]).unwrap().eval(a[i], b[i]);
+            assert!(
+                got[i] == want || (got[i].is_nan() && want.is_nan()),
+                "lane {i}: {} != {}",
+                got[i],
+                want
+            );
+        }
+    }
+}
+
+#[test]
+fn alu_artifact_ieee_edge_cases() {
+    let Some(rt) = runtime() else { return };
+    let a = [1.0f32, 0.0, f32::NAN, f32::INFINITY];
+    let b = [0.0f32, 0.0, 1.0, f32::INFINITY];
+    let ops = [Op::Div.code(), Op::Div.code(), Op::Add.code(), Op::Sub.code()];
+    let got = rt.alu_batch(&a, &b, &ops).unwrap();
+    assert!(got[0].is_infinite());
+    assert!(got[1].is_nan());
+    assert!(got[2].is_nan());
+    assert!(got[3].is_nan()); // inf - inf
+}
+
+#[test]
+fn lod_artifact_matches_naive_scan() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::seed_from_u64(7);
+    for _ in 0..30 {
+        let w = 1 + rng.gen_range(128);
+        let mut words = vec![0u32; w];
+        for word in words.iter_mut() {
+            if rng.gen_bool(0.3) {
+                *word = rng.next_u64() as u32;
+            }
+        }
+        let got = rt.lod_pick(&words).unwrap();
+        assert_eq!(got, naive_scan(&words));
+    }
+    // all-zero
+    assert_eq!(rt.lod_pick(&[0u32; 16]).unwrap(), tdp::lod::NO_READY);
+}
+
+#[test]
+fn graph_eval_artifact_matches_native_on_random_dags() {
+    let Some(rt) = runtime() else { return };
+    for seed in 0..5u64 {
+        let g = layered_random(16, 10, 40, 2, seed);
+        let got = rt.graph_eval(&g).unwrap();
+        let want = g.evaluate();
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+                "seed {seed} node {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn graph_eval_artifact_matches_native_on_lu() {
+    let Some(rt) = runtime() else { return };
+    let m = SparseMatrix::banded(64, 2, 0.9, 3);
+    let (g, _) = lu_factorization_graph(&m);
+    assert!(g.len() <= 2048, "fits artifact geometry");
+    let got = rt.graph_eval(&g).unwrap();
+    let want = g.evaluate();
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        // same op order => bit-exact
+        assert_eq!(a.to_bits(), b.to_bits(), "node {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn graph_eval_rejects_oversized_graphs() {
+    let Some(rt) = runtime() else { return };
+    let g = layered_random(64, 40, 128, 2, 0); // > 2048 nodes
+    assert!(rt.graph_eval(&g).is_err());
+}
+
+#[test]
+fn graph_eval_rejects_too_deep_graphs() {
+    let Some(rt) = runtime() else { return };
+    let mut g = DataflowGraph::new();
+    let mut prev = g.add_input(1.0);
+    for _ in 0..400 {
+        // depth 400 > lmax 256
+        prev = g.op(Op::Copy, &[prev]);
+    }
+    assert!(rt.graph_eval(&g).is_err());
+}
+
+#[test]
+fn batch_too_large_rejected() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest.artifacts.alu_batch.batch.unwrap() + 1;
+    let v = vec![0f32; n];
+    let ops = vec![0u32; n];
+    assert!(rt.alu_batch(&v, &v, &ops).is_err());
+}

@@ -1,0 +1,188 @@
+//! Integration tests: the full simulator stack (graph → criticality →
+//! placement → Hoplite → PEs → schedulers) against the functional
+//! reference, across workload families, overlay sizes and schedulers.
+
+use tdp::config::OverlayConfig;
+use tdp::graph::{DataflowGraph, Op};
+use tdp::place::{LocalOrder, PlacementPolicy};
+use tdp::sched::SchedulerKind;
+use tdp::sim::Simulator;
+use tdp::workload::*;
+
+fn values_match(g: &DataflowGraph, got: &[f32]) {
+    let want = g.evaluate();
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (a == b) || (a.is_nan() && b.is_nan()),
+            "node {i}: sim={a} ref={b}"
+        );
+    }
+}
+
+fn run_and_check(g: &DataflowGraph, cfg: OverlayConfig) -> tdp::sim::SimStats {
+    let mut sim = Simulator::new(g, cfg).expect("sim builds");
+    let stats = sim.run().expect("sim completes");
+    values_match(g, sim.values());
+    assert!(sim.all_computed());
+    stats
+}
+
+#[test]
+fn every_workload_family_on_every_scheduler() {
+    let workloads: Vec<(&str, DataflowGraph)> = vec![
+        ("lu_banded", lu_factorization_graph(&SparseMatrix::banded(40, 3, 0.9, 1)).0),
+        ("lu_random", lu_factorization_graph(&SparseMatrix::random(24, 0.15, 2)).0),
+        ("lu_power_law", lu_factorization_graph(&SparseMatrix::power_law(40, 3, 3)).0),
+        ("layered", layered_random(12, 6, 20, 2, 4)),
+        ("reduction", reduction_tree(37, Op::Add, 5)),
+        ("stencil", stencil_1d(12, 5, 6)),
+        ("butterfly", butterfly_graph(32, 7)),
+    ];
+    for (name, g) in &workloads {
+        for kind in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
+            let cfg = OverlayConfig::default().with_dims(4, 4).with_scheduler(kind);
+            let stats = run_and_check(g, cfg);
+            assert_eq!(stats.completed, g.len(), "{name}/{:?}", kind);
+            // conservation: every edge is exactly one delivered packet
+            assert_eq!(stats.net.delivered as usize, g.num_edges(), "{name}");
+            assert_eq!(stats.net.injected, stats.net.delivered, "{name}");
+        }
+    }
+}
+
+#[test]
+fn all_overlay_shapes() {
+    let g = layered_random(16, 8, 24, 2, 9);
+    for (c, r) in [(1, 1), (1, 4), (4, 1), (2, 3), (5, 5), (8, 8), (16, 16), (3, 7)] {
+        let cfg = OverlayConfig::default().with_dims(c, r);
+        run_and_check(&g, cfg);
+    }
+}
+
+#[test]
+fn all_placement_policies_and_orders() {
+    let g = lu_factorization_graph(&SparseMatrix::banded(48, 3, 0.8, 11)).0;
+    for policy in [
+        PlacementPolicy::RoundRobin,
+        PlacementPolicy::Random,
+        PlacementPolicy::BlockContiguous,
+        PlacementPolicy::Chunked,
+    ] {
+        for order in [LocalOrder::ByCriticality, LocalOrder::ByNodeId] {
+            for kind in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
+                let mut cfg = OverlayConfig::default().with_dims(3, 3).with_scheduler(kind);
+                cfg.placement = policy;
+                cfg.local_order = order;
+                run_and_check(&g, cfg);
+            }
+        }
+    }
+}
+
+#[test]
+fn determinism_same_seed_same_cycles() {
+    let g = layered_random(16, 10, 32, 2, 5);
+    let cfg = OverlayConfig::default().with_dims(4, 4);
+    let s1 = run_and_check(&g, cfg);
+    let s2 = run_and_check(&g, cfg);
+    assert_eq!(s1.cycles, s2.cycles);
+    assert_eq!(s1.net.delivered, s2.net.delivered);
+    assert_eq!(s1.net.deflections, s2.net.deflections);
+}
+
+#[test]
+fn alu_latency_sensitivity() {
+    let g = reduction_tree(64, Op::Add, 2);
+    let mut last = 0u64;
+    for lat in [1u64, 2, 4, 8] {
+        let mut cfg = OverlayConfig::default().with_dims(2, 2);
+        cfg.alu_latency = lat;
+        let stats = run_and_check(&g, cfg);
+        assert!(
+            stats.cycles > last,
+            "cycles must grow with ALU latency ({} !> {last})",
+            stats.cycles
+        );
+        last = stats.cycles;
+    }
+}
+
+#[test]
+fn speedup_regime_ooo_wins_with_chunked_placement() {
+    // the Fig.1 regime: locality-preserving placement + skewed DAG
+    let g = lu_factorization_graph(&SparseMatrix::power_law(140, 3, 44)).0;
+    let mut cfg = OverlayConfig::default();
+    cfg.placement = PlacementPolicy::Chunked;
+    let mut cycles = [0u64; 2];
+    for (i, kind) in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder]
+        .into_iter()
+        .enumerate()
+    {
+        cycles[i] = run_and_check(&g, cfg.with_scheduler(kind)).cycles;
+    }
+    let speedup = cycles[0] as f64 / cycles[1] as f64;
+    assert!(
+        speedup > 1.05,
+        "OoO must beat in-order in the queueing regime, got {speedup:.3}"
+    );
+}
+
+#[test]
+fn single_node_graph() {
+    let mut g = DataflowGraph::new();
+    g.add_input(42.0);
+    let stats = run_and_check(&g, OverlayConfig::paper_1x1());
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.net.delivered, 0);
+}
+
+#[test]
+fn graph_of_only_inputs() {
+    let mut g = DataflowGraph::new();
+    for i in 0..50 {
+        g.add_input(i as f32);
+    }
+    run_and_check(&g, OverlayConfig::default().with_dims(3, 3));
+}
+
+#[test]
+fn wide_fanout_hub() {
+    // one input feeding 500 consumers: drains 500 cycles through 1 pkt/cy
+    let mut g = DataflowGraph::new();
+    let hub = g.add_input(2.0);
+    for _ in 0..500 {
+        g.op(Op::Neg, &[hub]);
+    }
+    let stats = run_and_check(&g, OverlayConfig::default().with_dims(4, 4));
+    assert!(stats.cycles >= 500, "hub drain is serialized: {}", stats.cycles);
+}
+
+#[test]
+fn deep_chain_crosses_network() {
+    let mut g = DataflowGraph::new();
+    let mut prev = g.add_input(1.0);
+    for _ in 0..300 {
+        prev = g.op(Op::Copy, &[prev]);
+    }
+    let stats = run_and_check(&g, OverlayConfig::default().with_dims(4, 4));
+    // each hop pays network latency; chain must still complete exactly
+    assert!(stats.cycles > 300);
+}
+
+#[test]
+fn fifo_overflow_counted_when_underprovisioned() {
+    use tdp::place::Placement;
+    // NOTE: exercised through the public scheduler API (sim sizes FIFOs
+    // at the deadlock-free worst case, so overflow never happens there).
+    use tdp::sched::{make_scheduler, ReadyScheduler};
+    let mut s = make_scheduler(SchedulerKind::InOrder, 8, Some(4));
+    for i in 0..8 {
+        s.mark_ready(i);
+    }
+    assert!(s.overflows() > 0);
+    // placement still bijective under stress
+    let g = layered_random(8, 3, 8, 1, 0);
+    let p = Placement::build(&g, 4, PlacementPolicy::RoundRobin, LocalOrder::ByCriticality, 0);
+    assert_eq!(p.pe_of.len(), g.len());
+}

@@ -1,0 +1,285 @@
+//! Property-based tests over the DESIGN.md §5 invariants.
+//!
+//! `proptest` is not in the offline crate universe, so properties are
+//! checked over large seeded-random sample families (deterministic, no
+//! shrinking — failures print the seed for replay).
+
+use tdp::config::OverlayConfig;
+use tdp::criticality;
+use tdp::graph::{DataflowGraph, Op};
+use tdp::lod::{naive_scan, HierLod, NO_READY};
+use tdp::noc::{Network, Packet};
+use tdp::place::{LocalOrder, Placement, PlacementPolicy};
+use tdp::sched::{make_scheduler, OutOfOrderLod, ReadyScheduler, SchedulerKind};
+use tdp::sim::Simulator;
+use tdp::util::rng::Rng;
+
+/// Random DAG with arbitrary op mix (values kept finite-ish by
+/// construction not being required — NaN/inf equality is checked too).
+fn random_graph(rng: &mut Rng, max_nodes: usize) -> DataflowGraph {
+    let inputs = 1 + rng.gen_range(8);
+    let ops = rng.gen_range(max_nodes.max(2));
+    let mut g = DataflowGraph::new();
+    for _ in 0..inputs {
+        g.add_input(rng.gen_f32_in(-100.0, 100.0));
+    }
+    for _ in 0..ops {
+        let op = Op::ALL[rng.gen_range(Op::ALL.len())];
+        let n = g.len() as u32;
+        let a = rng.gen_range(n as usize) as u32;
+        let b = rng.gen_range(n as usize) as u32;
+        let srcs: Vec<u32> = if op.arity() == 1 { vec![a] } else { vec![a, b] };
+        g.add_op(op, &srcs).unwrap();
+    }
+    g
+}
+
+/// Invariant 1+2: any scheduler × placement × overlay computes exactly
+/// the reference values, every node exactly once.
+#[test]
+fn prop_sim_equals_reference_on_random_graphs() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let g = random_graph(&mut rng, 300);
+        let dims = [(1usize, 1usize), (2, 2), (3, 5), (8, 8)];
+        let (c, r) = dims[rng.gen_range(dims.len())];
+        let kind = if rng.gen_bool(0.5) {
+            SchedulerKind::InOrder
+        } else {
+            SchedulerKind::OutOfOrder
+        };
+        let policies = [
+            PlacementPolicy::RoundRobin,
+            PlacementPolicy::Random,
+            PlacementPolicy::BlockContiguous,
+            PlacementPolicy::Chunked,
+        ];
+        let mut cfg = OverlayConfig::default().with_dims(c, r).with_scheduler(kind);
+        cfg.placement = policies[rng.gen_range(policies.len())];
+        cfg.seed = seed;
+        let mut sim = Simulator::new(&g, cfg).unwrap();
+        let stats = sim.run().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(stats.completed, g.len(), "seed {seed}");
+        let want = g.evaluate();
+        for (i, (a, b)) in sim.values().iter().zip(&want).enumerate() {
+            assert!(
+                (a == b) || (a.is_nan() && b.is_nan()),
+                "seed {seed} node {i}: {a} != {b}"
+            );
+        }
+    }
+}
+
+/// Invariant 3: the OoO scheduler always returns the minimum ready local
+/// index (== most critical under the §II-B memory sort).
+#[test]
+fn prop_ooo_picks_minimum_ready() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xA5A5);
+        let n = 1 + rng.gen_range(4096);
+        let mut s = OutOfOrderLod::new(n);
+        let mut model: Vec<u32> = Vec::new(); // sorted ready set
+        for _ in 0..200 {
+            if model.is_empty() || rng.gen_bool(0.6) {
+                // mark a not-ready, not-pending node
+                let idx = rng.gen_range(n) as u32;
+                if !s.is_ready(idx) && !s.is_pending(idx) {
+                    s.mark_ready(idx);
+                    model.push(idx);
+                    model.sort_unstable();
+                }
+            } else {
+                let got = s.take();
+                let want = if model.is_empty() {
+                    None
+                } else {
+                    Some(model.remove(0))
+                };
+                assert_eq!(got, want, "seed {seed}");
+                if let Some(idx) = got {
+                    s.fanout_done(idx);
+                }
+            }
+            assert_eq!(s.len(), model.len(), "seed {seed}");
+        }
+    }
+}
+
+/// Invariant 4: the FIFO preserves arrival order exactly.
+#[test]
+fn prop_fifo_preserves_order() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x0F1F0);
+        let mut s = make_scheduler(SchedulerKind::InOrder, 1 << 13, None);
+        let mut model = std::collections::VecDeque::new();
+        for _ in 0..300 {
+            if model.is_empty() || rng.gen_bool(0.55) {
+                let idx = rng.gen_range(1 << 13) as u32;
+                s.mark_ready(idx);
+                model.push_back(idx);
+            } else {
+                assert_eq!(s.take(), model.pop_front(), "seed {seed}");
+            }
+        }
+    }
+}
+
+/// Invariant 5+6: the Hoplite torus delivers every packet exactly once,
+/// to the right PE, under arbitrary random traffic.
+#[test]
+fn prop_noc_conservation() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x1307);
+        let cols = 1 + rng.gen_range(8);
+        let rows = 1 + rng.gen_range(8);
+        let n = cols * rows;
+        let mut net = Network::new(cols, rows);
+        let total = 50 + rng.gen_range(400);
+        let mut sent: Vec<(usize, u16)> = Vec::new(); // (dest, tag)
+        let mut got: Vec<(usize, u16)> = Vec::new();
+        let mut tag = 0u16;
+        let mut inject: Vec<Option<Packet>> = vec![None; n];
+        let mut cycles = 0;
+        while got.len() < total {
+            for (pe, slot) in inject.iter_mut().enumerate() {
+                if slot.is_none() && (tag as usize) < total && pe == tag as usize % n {
+                    let dest = rng.gen_range(n);
+                    *slot = Some(Packet {
+                        dest_x: (dest % cols) as u8,
+                        dest_y: (dest / cols) as u8,
+                        local_idx: tag % 8192,
+                        slot: 0,
+                        payload: tag as f32,
+                    });
+                    sent.push((dest, tag % 8192));
+                    tag += 1;
+                }
+            }
+            let res = net.step(&inject);
+            for (pe, ok) in res.inject_ok.iter().enumerate() {
+                if *ok {
+                    inject[pe] = None;
+                }
+            }
+            for (pe, e) in res.ejected.iter().enumerate() {
+                if let Some(p) = e {
+                    got.push((pe, p.local_idx));
+                }
+            }
+            cycles += 1;
+            assert!(cycles < 1_000_000, "seed {seed}: livelock (delivered {}/{total})", got.len());
+        }
+        let mut a = sent.clone();
+        let mut b = got.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "seed {seed}: delivery must be exact (no loss/dup)");
+        assert!(net.is_empty());
+    }
+}
+
+/// Packet wire-format roundtrip over random field values.
+#[test]
+fn prop_packet_roundtrip() {
+    let mut rng = Rng::seed_from_u64(0xFACE);
+    for _ in 0..5000 {
+        let p = Packet {
+            dest_x: rng.gen_range(32) as u8,
+            dest_y: rng.gen_range(32) as u8,
+            local_idx: rng.gen_range(8192) as u16,
+            slot: rng.gen_range(2) as u8,
+            payload: f32::from_bits(rng.next_u64() as u32),
+        };
+        let q = Packet::unpack56(p.pack56());
+        assert_eq!(q.dest_x, p.dest_x);
+        assert_eq!(q.dest_y, p.dest_y);
+        assert_eq!(q.local_idx, p.local_idx);
+        assert_eq!(q.slot, p.slot);
+        assert_eq!(q.payload.to_bits(), p.payload.to_bits());
+    }
+}
+
+/// Hierarchical LOD == naive scan on random flag vectors of random width.
+#[test]
+fn prop_hier_lod_equals_naive() {
+    let mut rng = Rng::seed_from_u64(0x10D);
+    for _ in 0..400 {
+        let w = 1 + rng.gen_range(256);
+        let density = [0.0, 0.001, 0.05, 0.5][rng.gen_range(4)];
+        let mut words = vec![0u32; w];
+        let mut summary = vec![0u64; w.div_ceil(64)];
+        for i in 0..w {
+            for b in 0..32 {
+                if rng.gen_bool(density) {
+                    words[i] |= 1 << b;
+                }
+            }
+            if words[i] != 0 {
+                summary[i / 64] |= 1 << (i % 64);
+            }
+        }
+        let lod = HierLod::new(w);
+        assert_eq!(lod.pick(&summary, &words), naive_scan(&words));
+    }
+    // empty
+    let lod = HierLod::new(4);
+    assert_eq!(lod.pick(&[0u64], &[0u32; 4]), NO_READY);
+}
+
+/// Criticality invariants: slack ≥ 0; criticality decreases along every
+/// edge by ≥ 1; ASAP ≤ ALAP.
+#[test]
+fn prop_criticality_invariants() {
+    for seed in 100..140u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let g = random_graph(&mut rng, 400);
+        let crit = criticality::criticality(&g);
+        let asap = criticality::asap(&g);
+        let alap = criticality::alap(&g);
+        for (i, node) in g.nodes().iter().enumerate() {
+            assert!(asap[i] <= alap[i], "seed {seed} node {i}");
+            for &(dst, _) in &node.fanout {
+                assert!(
+                    crit[i] >= crit[dst as usize] + 1,
+                    "seed {seed}: criticality must dominate children"
+                );
+            }
+        }
+        // placement sort respects criticality within every PE
+        let p = Placement::build(&g, 7, PlacementPolicy::Random, LocalOrder::ByCriticality, seed);
+        for locals in &p.nodes_of {
+            for w in locals.windows(2) {
+                assert!(crit[w[0] as usize] >= crit[w[1] as usize], "seed {seed}");
+            }
+        }
+    }
+}
+
+/// Graph JSON (de)serialization roundtrips arbitrary graphs.
+#[test]
+fn prop_graph_json_roundtrip() {
+    use tdp::graph::{graph_from_json, graph_to_json};
+    for seed in 0..30u64 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x15);
+        let g = random_graph(&mut rng, 200);
+        let g2 = graph_from_json(&graph_to_json(&g)).unwrap();
+        assert_eq!(g.len(), g2.len(), "seed {seed}");
+        let a = g.evaluate();
+        let b = g2.evaluate();
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan()));
+        }
+    }
+}
+
+/// Scheduler memory-overhead model: OoO overhead stays ≈6% of the BRAM
+/// budget for any PE occupancy; FIFO overhead equals its capacity.
+#[test]
+fn prop_overhead_arithmetic() {
+    for n in [1usize, 31, 32, 33, 1000, 1920, 4096] {
+        let ooo = OutOfOrderLod::new(n);
+        assert_eq!(ooo.mem_overhead_words(), 2 * n.div_ceil(32));
+        let fifo = make_scheduler(SchedulerKind::InOrder, n, None);
+        assert_eq!(fifo.mem_overhead_words(), n.max(1));
+    }
+}

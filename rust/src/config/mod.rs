@@ -2,6 +2,7 @@
 //! placement, and workload specs — TOML loading (via `util::toml`) with
 //! paper-faithful defaults.
 
+use crate::engine::BackendKind;
 use crate::pe::BramConfig;
 use crate::place::{LocalOrder, PlacementPolicy};
 use crate::sched::SchedulerKind;
@@ -25,6 +26,26 @@ impl SchedulerKind {
         match self {
             SchedulerKind::InOrder => "in_order",
             SchedulerKind::OutOfOrder => "out_of_order",
+        }
+    }
+}
+
+impl FromStr for BackendKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "lockstep" | "lock-step" | "reference" => Ok(BackendKind::Lockstep),
+            "skip-ahead" | "skip_ahead" | "skipahead" | "event" => Ok(BackendKind::SkipAhead),
+            _ => Err(format!("unknown backend '{s}' (lockstep | skip-ahead)")),
+        }
+    }
+}
+
+impl BackendKind {
+    pub fn toml_name(self) -> &'static str {
+        match self {
+            BackendKind::Lockstep => "lockstep",
+            BackendKind::SkipAhead => "skip_ahead",
         }
     }
 }
@@ -95,6 +116,9 @@ pub struct OverlayConfig {
     /// enforce BRAM capacity at placement time (capacity experiments
     /// disable this to measure where designs *would* stop fitting)
     pub enforce_capacity: bool,
+    /// simulation engine ([`crate::engine`]): the cycle-by-cycle
+    /// reference or the bit-exact skip-ahead event backend
+    pub backend: BackendKind,
 }
 
 impl Default for OverlayConfig {
@@ -110,6 +134,7 @@ impl Default for OverlayConfig {
             seed: 0,
             max_cycles: 200_000_000,
             enforce_capacity: false,
+            backend: BackendKind::Lockstep,
         }
     }
 }
@@ -140,6 +165,11 @@ impl OverlayConfig {
     pub fn with_dims(mut self, cols: usize, rows: usize) -> Self {
         self.cols = cols;
         self.rows = rows;
+        self
+    }
+
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -200,6 +230,9 @@ impl OverlayConfig {
         if let Some(v) = doc.get("", "enforce_capacity") {
             cfg.enforce_capacity = v.as_bool().ok_or("enforce_capacity: expected bool")?;
         }
+        if let Some(v) = doc.get("", "backend") {
+            cfg.backend = v.as_str().ok_or("backend: expected string")?.parse()?;
+        }
         cfg.bram.brams_per_pe = get_usize(&doc, "bram", "brams_per_pe", cfg.bram.brams_per_pe)?;
         cfg.bram.words_per_bram =
             get_usize(&doc, "bram", "words_per_bram", cfg.bram.words_per_bram)?;
@@ -230,6 +263,7 @@ impl OverlayConfig {
         doc.set("", "seed", Value::Int(self.seed as i64));
         doc.set("", "max_cycles", Value::Int(self.max_cycles as i64));
         doc.set("", "enforce_capacity", Value::Bool(self.enforce_capacity));
+        doc.set("", "backend", Value::Str(self.backend.toml_name().into()));
         doc.set("bram", "brams_per_pe", Value::Int(self.bram.brams_per_pe as i64));
         doc.set("bram", "words_per_bram", Value::Int(self.bram.words_per_bram as i64));
         doc.set("bram", "word_bits", Value::Int(self.bram.word_bits as i64));
@@ -400,8 +434,33 @@ mod tests {
     }
 
     #[test]
+    fn backend_aliases_parse() {
+        for (s, k) in [
+            ("lockstep", BackendKind::Lockstep),
+            ("reference", BackendKind::Lockstep),
+            ("skip-ahead", BackendKind::SkipAhead),
+            ("skip_ahead", BackendKind::SkipAhead),
+            ("skipahead", BackendKind::SkipAhead),
+        ] {
+            assert_eq!(s.parse::<BackendKind>().unwrap(), k);
+        }
+        assert!("bogus".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn backend_toml_roundtrip() {
+        let c = OverlayConfig::paper_1x1().with_backend(BackendKind::SkipAhead);
+        let c2 = OverlayConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(c2.backend, BackendKind::SkipAhead);
+        let d = OverlayConfig::from_toml("backend = \"skip_ahead\"\n").unwrap();
+        assert_eq!(d.backend, BackendKind::SkipAhead);
+        assert_eq!(OverlayConfig::default().backend, BackendKind::Lockstep);
+    }
+
+    #[test]
     fn invalid_configs_rejected() {
         assert!(OverlayConfig::from_toml("cols = 0\n").is_err());
+        assert!(OverlayConfig::from_toml("backend = \"bogus\"\n").is_err());
         assert!(OverlayConfig::from_toml("cols = 64\n").is_err());
         assert!(OverlayConfig::from_toml("alu_latency = 0\n").is_err());
         assert!(OverlayConfig::from_toml("scheduler = \"bogus\"\n").is_err());

@@ -3,11 +3,12 @@
 
 use super::run_parallel;
 use crate::config::OverlayConfig;
+use crate::engine;
 use crate::graph::DataflowGraph;
 use crate::pe::BramConfig;
 use crate::place::Placement;
 use crate::sched::SchedulerKind;
-use crate::sim::{SimStats, Simulator};
+use crate::sim::SimStats;
 
 /// One (workload, scheduler) simulation outcome.
 #[derive(Debug, Clone)]
@@ -33,10 +34,10 @@ pub struct Fig1Row {
     pub speedup: f64,
 }
 
-/// Run one graph under `kind` on the configured overlay.
+/// Run one graph under `kind` on the configured overlay, through the
+/// engine backend `cfg.backend` selects.
 pub fn run_one(g: &DataflowGraph, cfg: OverlayConfig, kind: SchedulerKind) -> SimStats {
-    let mut sim = Simulator::new(g, cfg.with_scheduler(kind)).expect("sim construction");
-    sim.run().expect("simulation completes")
+    engine::run_with_backend(g, cfg.with_scheduler(kind)).expect("simulation completes")
 }
 
 /// The overlay configuration Figure 1 is measured on: the paper's 16×16
@@ -151,6 +152,18 @@ mod tests {
         for r in &rows {
             assert!(r.speedup > 0.5 && r.speedup < 3.0, "{r:?}");
             assert!(r.cycles_inorder > 0 && r.cycles_ooo > 0);
+        }
+    }
+
+    #[test]
+    fn run_one_backends_agree() {
+        use crate::engine::BackendKind;
+        let g = layered_random(16, 8, 32, 2, 1);
+        let cfg = OverlayConfig::default().with_dims(4, 4);
+        for kind in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
+            let a = run_one(&g, cfg, kind);
+            let b = run_one(&g, cfg.with_backend(BackendKind::SkipAhead), kind);
+            assert_eq!(a, b, "{kind:?}: backend choice must not change stats");
         }
     }
 

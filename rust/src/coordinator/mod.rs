@@ -15,9 +15,10 @@ pub use experiments::{
 pub use report::{render_csv, render_markdown, Table};
 
 use crate::config::OverlayConfig;
+use crate::engine::{self, SimBackend};
 use crate::graph::DataflowGraph;
 use crate::runtime::XlaRuntime;
-use crate::sim::{SimError, SimStats, Simulator};
+use crate::sim::{SimError, SimStats};
 
 /// Outcome of validating one simulated execution.
 #[derive(Debug, Clone)]
@@ -50,22 +51,23 @@ fn max_abs_err(a: &[f32], b: &[f32]) -> f32 {
         .fold(0.0f32, f32::max)
 }
 
-/// Run `g` on the overlay and validate the computed node values against
-/// the native topological evaluation and (when the graph fits the
-/// artifact geometry and `rt` is given) the PJRT oracle.
+/// Run `g` on the overlay (through the engine backend `cfg.backend`
+/// selects) and validate the computed node values against the native
+/// topological evaluation and (when the graph fits the artifact geometry
+/// and `rt` is given) the PJRT oracle.
 pub fn validate(
     g: &DataflowGraph,
     cfg: OverlayConfig,
     rt: Option<&XlaRuntime>,
 ) -> Result<ValidationReport, SimError> {
-    let mut sim = Simulator::new(g, cfg)?;
-    let stats = sim.run()?;
+    let mut backend = engine::make_backend(g, cfg)?;
+    let stats = backend.run()?;
     let native = g.evaluate();
-    let err_native = max_abs_err(sim.values(), &native);
+    let err_native = max_abs_err(backend.values(), &native);
     let err_pjrt = rt.and_then(|rt| {
         rt.graph_eval(g)
             .ok()
-            .map(|oracle| max_abs_err(sim.values(), &oracle))
+            .map(|oracle| max_abs_err(backend.values(), &oracle))
     });
     Ok(ValidationReport {
         stats,
@@ -142,6 +144,17 @@ mod tests {
         let rep = validate(&g, cfg, None).unwrap();
         assert!(rep.passed(), "sim values must be bit-exact: {rep:?}");
         assert_eq!(rep.nodes_checked, g.len());
+    }
+
+    #[test]
+    fn validate_honors_backend_choice() {
+        use crate::engine::BackendKind;
+        let g = layered_random(8, 4, 12, 2, 1);
+        let base = OverlayConfig::default().with_dims(2, 2);
+        let lock = validate(&g, base.with_backend(BackendKind::Lockstep), None).unwrap();
+        let skip = validate(&g, base.with_backend(BackendKind::SkipAhead), None).unwrap();
+        assert!(lock.passed() && skip.passed());
+        assert_eq!(lock.stats, skip.stats, "backends must produce identical stats");
     }
 
     #[test]

@@ -1,0 +1,50 @@
+//! The reference backend: a thin wrapper around [`Simulator`], stepping
+//! every PE and router once per fabric cycle.
+
+use super::{BackendKind, SimBackend};
+use crate::config::OverlayConfig;
+use crate::graph::DataflowGraph;
+use crate::sim::{SimError, SimStats, Simulator};
+
+/// Cycle-by-cycle reference engine. This is the seed simulator moved
+/// behind the [`SimBackend`] trait; its behavior defines correctness for
+/// every other backend (see [`crate::engine::parity`]).
+pub struct LockstepBackend<'g> {
+    sim: Simulator<'g>,
+}
+
+impl<'g> LockstepBackend<'g> {
+    pub fn new(g: &'g DataflowGraph, cfg: OverlayConfig) -> Result<Self, SimError> {
+        Ok(Self {
+            sim: Simulator::new(g, cfg)?,
+        })
+    }
+
+    /// The wrapped reference simulator — for tracing and ablation hooks
+    /// that only make sense cycle-by-cycle (e.g. `tdp analyze`).
+    pub fn simulator_mut(&mut self) -> &mut Simulator<'g> {
+        &mut self.sim
+    }
+}
+
+impl<'g> SimBackend for LockstepBackend<'g> {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Lockstep
+    }
+
+    fn run(&mut self) -> Result<SimStats, SimError> {
+        self.sim.run()
+    }
+
+    fn stats(&self) -> SimStats {
+        self.sim.stats()
+    }
+
+    fn values(&self) -> &[f32] {
+        self.sim.values()
+    }
+
+    fn cycle(&self) -> u64 {
+        self.sim.cycle()
+    }
+}

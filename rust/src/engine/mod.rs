@@ -1,0 +1,128 @@
+//! Pluggable simulation engines (DESIGN.md §6).
+//!
+//! Every experiment — CLI runs, coordinator sweeps, benches — routes
+//! through the [`SimBackend`] trait instead of constructing
+//! [`crate::sim::Simulator`] directly, so the stepping strategy is a
+//! configuration choice ([`crate::config::OverlayConfig::backend`]):
+//!
+//! * [`LockstepBackend`] — the reference cycle-level simulator: every PE
+//!   and every Hoplite router stepped once per fabric cycle,
+//!   O(PEs × cycles) even when the fabric is idle.
+//! * [`SkipAheadBackend`] — an event-horizon engine. Whenever the overlay
+//!   is *quiescent* (zero packets in flight, no packet-gen unit
+//!   mid-drain) it computes the earliest next event — ALU retirement,
+//!   scheduling-pass completion, pending pick or adoption — and advances
+//!   the clock there in one jump. While any packet is routing it falls
+//!   back to cycle-accurate stepping: Hoplite's deflection routing makes
+//!   in-flight cycles irreducible.
+//!
+//! Both backends are bit-exact: identical node values, identical
+//! completion cycles, identical [`crate::sim::SimStats`] down to every
+//! per-PE counter. [`parity::check_parity`] runs both on the same
+//! (graph, config) and asserts exactly that; `tests/engine_parity.rs`
+//! sweeps it across workload families, and `benches/engine_speedup.rs`
+//! measures what the jumps buy in wall-clock.
+
+mod lockstep;
+pub mod parity;
+mod skipahead;
+
+pub use lockstep::LockstepBackend;
+pub use parity::{check_parity, ParityError, ParityReport};
+pub use skipahead::SkipAheadBackend;
+
+use crate::config::OverlayConfig;
+use crate::graph::DataflowGraph;
+use crate::sim::{SimError, SimStats};
+
+/// Which stepping engine a run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// reference simulator, one step per fabric cycle
+    #[default]
+    Lockstep,
+    /// event-horizon engine, jumps over quiescent regions
+    SkipAhead,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 2] = [BackendKind::Lockstep, BackendKind::SkipAhead];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Lockstep => "lockstep",
+            BackendKind::SkipAhead => "skip-ahead",
+        }
+    }
+}
+
+/// Common interface of the simulation engines. One backend instance
+/// simulates one (graph, placement, config) run to completion.
+pub trait SimBackend {
+    fn kind(&self) -> BackendKind;
+
+    /// Run to completion (or until the cycle limit).
+    fn run(&mut self) -> Result<SimStats, SimError>;
+
+    /// Statistics of the current (usually final) state.
+    fn stats(&self) -> SimStats;
+
+    /// Final (or current) node values — bit-exact across backends.
+    fn values(&self) -> &[f32];
+
+    /// Current fabric cycle.
+    fn cycle(&self) -> u64;
+}
+
+/// Construct the backend selected by `cfg.backend`.
+pub fn make_backend<'g>(
+    g: &'g DataflowGraph,
+    cfg: OverlayConfig,
+) -> Result<Box<dyn SimBackend + 'g>, SimError> {
+    Ok(match cfg.backend {
+        BackendKind::Lockstep => Box::new(LockstepBackend::new(g, cfg)?),
+        BackendKind::SkipAhead => Box::new(SkipAheadBackend::new(g, cfg)?),
+    })
+}
+
+/// Build the configured backend and run it to completion.
+pub fn run_with_backend(g: &DataflowGraph, cfg: OverlayConfig) -> Result<SimStats, SimError> {
+    let mut backend = make_backend(g, cfg)?;
+    backend.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::layered_random;
+
+    #[test]
+    fn make_backend_honors_config() {
+        let g = layered_random(8, 4, 12, 2, 1);
+        for kind in BackendKind::ALL {
+            let cfg = OverlayConfig::default().with_dims(2, 2).with_backend(kind);
+            let be = make_backend(&g, cfg).unwrap();
+            assert_eq!(be.kind(), kind);
+        }
+    }
+
+    #[test]
+    fn run_with_backend_completes_on_both() {
+        let g = layered_random(8, 4, 12, 2, 1);
+        let mut cycles = Vec::new();
+        for kind in BackendKind::ALL {
+            let cfg = OverlayConfig::default().with_dims(2, 2).with_backend(kind);
+            let stats = run_with_backend(&g, cfg).unwrap();
+            assert_eq!(stats.completed, g.len());
+            cycles.push(stats.cycles);
+        }
+        assert_eq!(cycles[0], cycles[1], "backends must agree on completion cycle");
+    }
+
+    #[test]
+    fn backend_names() {
+        assert_eq!(BackendKind::Lockstep.name(), "lockstep");
+        assert_eq!(BackendKind::SkipAhead.name(), "skip-ahead");
+        assert_eq!(BackendKind::default(), BackendKind::Lockstep);
+    }
+}

@@ -1,0 +1,192 @@
+//! Cross-backend validation: run the same (graph, config) on the
+//! lockstep reference and the skip-ahead engine and assert they are
+//! indistinguishable — bit-exact node values and [`SimStats`] equality
+//! down to every per-PE counter (completion cycle, busy cycles, packet
+//! and deflection counts, port stalls, occupancy high-water marks).
+//!
+//! This is the safety net that lets sweeps default to the fast backend:
+//! `tests/engine_parity.rs` runs it across workload families × both
+//! schedulers, and the speedup bench re-checks it before timing.
+
+use super::{LockstepBackend, SimBackend, SkipAheadBackend};
+use crate::config::OverlayConfig;
+use crate::graph::DataflowGraph;
+use crate::sim::{SimError, SimStats};
+
+/// Outcome of a successful parity check.
+#[derive(Debug, Clone)]
+pub struct ParityReport {
+    /// the (identical) statistics of both runs
+    pub stats: SimStats,
+    /// clock jumps the skip-ahead backend took
+    pub jumps: u64,
+    /// fabric cycles it skipped instead of stepping
+    pub cycles_skipped: u64,
+}
+
+impl ParityReport {
+    /// Fraction of fabric cycles skipped, in [0, 1].
+    pub fn skip_fraction(&self) -> f64 {
+        if self.stats.cycles == 0 {
+            0.0
+        } else {
+            self.cycles_skipped as f64 / self.stats.cycles as f64
+        }
+    }
+}
+
+/// A parity violation (or a shared simulation failure).
+#[derive(Debug, Clone)]
+pub enum ParityError {
+    /// both backends failed with the same simulation error
+    Sim(SimError),
+    /// one backend failed (or they failed differently)
+    ErrorMismatch {
+        lockstep: Option<SimError>,
+        skip_ahead: Option<SimError>,
+    },
+    /// statistics diverged; `field` names the first differing counter
+    StatsMismatch {
+        field: String,
+        lockstep: String,
+        skip_ahead: String,
+    },
+    /// a node value diverged
+    ValueMismatch {
+        node: usize,
+        lockstep: f32,
+        skip_ahead: f32,
+    },
+}
+
+impl std::fmt::Display for ParityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParityError::Sim(e) => write!(f, "both backends failed: {e}"),
+            ParityError::ErrorMismatch { lockstep, skip_ahead } => write!(
+                f,
+                "backends disagree on failure: lockstep={lockstep:?}, skip-ahead={skip_ahead:?}"
+            ),
+            ParityError::StatsMismatch { field, lockstep, skip_ahead } => write!(
+                f,
+                "stats diverge at {field}: lockstep={lockstep}, skip-ahead={skip_ahead}"
+            ),
+            ParityError::ValueMismatch { node, lockstep, skip_ahead } => write!(
+                f,
+                "node {node} value diverges: lockstep={lockstep}, skip-ahead={skip_ahead}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ParityError {}
+
+/// First differing statistic, as (field, lockstep, skip-ahead) strings.
+fn diff_stats(a: &SimStats, b: &SimStats) -> Option<(String, String, String)> {
+    if a.cycles != b.cycles {
+        return Some(("cycles".into(), a.cycles.to_string(), b.cycles.to_string()));
+    }
+    if a.completed != b.completed {
+        return Some(("completed".into(), a.completed.to_string(), b.completed.to_string()));
+    }
+    if a.net != b.net {
+        return Some(("net".into(), format!("{:?}", a.net), format!("{:?}", b.net)));
+    }
+    if a.pe.len() != b.pe.len() {
+        return Some(("pe.len".into(), a.pe.len().to_string(), b.pe.len().to_string()));
+    }
+    for (i, (pa, pb)) in a.pe.iter().zip(&b.pe).enumerate() {
+        if pa != pb {
+            return Some((format!("pe[{i}]"), format!("{pa:?}"), format!("{pb:?}")));
+        }
+    }
+    if a != b {
+        return Some(("aggregate".into(), format!("{a:?}"), format!("{b:?}")));
+    }
+    None
+}
+
+/// Run `g` under `cfg` on both backends and assert equivalence.
+///
+/// `cfg.backend` is ignored — both engines always run. Returns the
+/// shared statistics plus the skip-ahead jump counters on success.
+pub fn check_parity(g: &DataflowGraph, cfg: OverlayConfig) -> Result<ParityReport, ParityError> {
+    let mut lock = LockstepBackend::new(g, cfg).map_err(ParityError::Sim)?;
+    let mut skip = SkipAheadBackend::new(g, cfg).map_err(ParityError::Sim)?;
+    let lock_res = lock.run();
+    let skip_res = skip.run();
+    match (lock_res, skip_res) {
+        (Ok(lock_stats), Ok(skip_stats)) => {
+            if let Some((field, l, s)) = diff_stats(&lock_stats, &skip_stats) {
+                return Err(ParityError::StatsMismatch {
+                    field,
+                    lockstep: l,
+                    skip_ahead: s,
+                });
+            }
+            for (node, (x, y)) in lock.values().iter().zip(skip.values()).enumerate() {
+                if x.to_bits() != y.to_bits() && !(x.is_nan() && y.is_nan()) {
+                    return Err(ParityError::ValueMismatch {
+                        node,
+                        lockstep: *x,
+                        skip_ahead: *y,
+                    });
+                }
+            }
+            Ok(ParityReport {
+                stats: lock_stats,
+                jumps: skip.jumps(),
+                cycles_skipped: skip.cycles_skipped(),
+            })
+        }
+        (Err(le), Err(se)) if le == se => Err(ParityError::Sim(le)),
+        (lock_res, skip_res) => Err(ParityError::ErrorMismatch {
+            lockstep: lock_res.err(),
+            skip_ahead: skip_res.err(),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Op;
+    use crate::sched::SchedulerKind;
+    use crate::workload::layered_random;
+
+    #[test]
+    fn diamond_parity_both_schedulers() {
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(3.0);
+        let b = g.add_input(4.0);
+        let s = g.op(Op::Add, &[a, b]);
+        let p = g.op(Op::Mul, &[a, b]);
+        g.op(Op::Div, &[s, p]);
+        for kind in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
+            let cfg = OverlayConfig::paper_1x1().with_scheduler(kind);
+            let rep = check_parity(&g, cfg).unwrap();
+            assert_eq!(rep.stats.completed, g.len());
+        }
+    }
+
+    #[test]
+    fn layered_parity_reports_skips() {
+        let g = layered_random(8, 6, 16, 2, 7);
+        let cfg = OverlayConfig::default().with_dims(2, 2);
+        let rep = check_parity(&g, cfg).unwrap();
+        assert!(rep.skip_fraction() >= 0.0 && rep.skip_fraction() <= 1.0);
+    }
+
+    #[test]
+    fn shared_cycle_limit_is_sim_error() {
+        let g = layered_random(8, 4, 8, 1, 0);
+        let mut cfg = OverlayConfig::default().with_dims(2, 2);
+        cfg.max_cycles = 3;
+        match check_parity(&g, cfg) {
+            Err(ParityError::Sim(SimError::CycleLimitExceeded { cycle, .. })) => {
+                assert_eq!(cycle, 3);
+            }
+            other => panic!("expected shared cycle-limit error, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! The skip-ahead event backend: cycle-accurate stepping while traffic is
+//! in flight, single-jump clock advances through quiescent regions.
+//!
+//! ## Why this is exact
+//!
+//! Between two consecutive events, a *quiescent* overlay (no packets on
+//! Hoplite links, no packet-gen unit mid-drain) executes only no-op
+//! lockstep cycles: the network switches nothing, no operands arrive, no
+//! node fires, no packet is injected. The only per-cycle state change is
+//! utilization accounting (a PE with results in its ALU pipeline counts
+//! as busy). `Simulator::jump_to` applies exactly that accounting for the
+//! skipped span, so the post-jump state is bit-identical to having
+//! stepped cycle by cycle.
+//!
+//! The events that end a quiescent region are all scheduled at known
+//! cycles — ALU retirements ([`crate::pe::AluPipeline::next_retire_cycle`])
+//! and scheduling-pass completions ([`crate::sched::ReadyScheduler::pick_completion`]) —
+//! so the horizon is their minimum. While any packet is routing
+//! ([`crate::noc::Network::in_flight`] > 0) the backend steps
+//! cycle-accurately: deflection routing makes those cycles irreducible.
+//!
+//! One observable difference to lockstep remains, by design: the
+//! network's *internal* clock is not advanced across jumps. It is only
+//! ever used for latency deltas within a single routing episode, and no
+//! packet exists across a quiescent region, so all [`crate::sim::SimStats`]
+//! — including packet latencies — are unaffected.
+
+use super::{BackendKind, SimBackend};
+use crate::config::OverlayConfig;
+use crate::graph::DataflowGraph;
+use crate::sim::{SimError, SimStats, Simulator};
+
+/// Event-horizon engine over the reference simulator.
+pub struct SkipAheadBackend<'g> {
+    sim: Simulator<'g>,
+    jumps: u64,
+    cycles_skipped: u64,
+}
+
+impl<'g> SkipAheadBackend<'g> {
+    pub fn new(g: &'g DataflowGraph, cfg: OverlayConfig) -> Result<Self, SimError> {
+        Ok(Self {
+            sim: Simulator::new(g, cfg)?,
+            jumps: 0,
+            cycles_skipped: 0,
+        })
+    }
+
+    /// Clock jumps taken so far.
+    pub fn jumps(&self) -> u64 {
+        self.jumps
+    }
+
+    /// Fabric cycles skipped (not stepped) so far.
+    pub fn cycles_skipped(&self) -> u64 {
+        self.cycles_skipped
+    }
+
+    fn cycle_limit_error(&self) -> SimError {
+        SimError::CycleLimitExceeded {
+            cycle: self.sim.cycle(),
+            completed: self.sim.completed_nodes(),
+            total: self.sim.total_nodes(),
+        }
+    }
+}
+
+impl<'g> SimBackend for SkipAheadBackend<'g> {
+    fn kind(&self) -> BackendKind {
+        BackendKind::SkipAhead
+    }
+
+    fn run(&mut self) -> Result<SimStats, SimError> {
+        let max_cycles = self.sim.max_cycles();
+        loop {
+            // Jump only through quiescent, incomplete states. The horizon
+            // is clamped to the cycle limit so a livelocked or overlong
+            // run reports the same `CycleLimitExceeded { cycle }` the
+            // lockstep backend would (lockstep checks the limit *before*
+            // executing the step at `max_cycles`, so an event scheduled
+            // exactly there never runs under either backend).
+            if self.sim.quiescent() && !self.sim.is_complete() {
+                let target = self
+                    .sim
+                    .next_event_cycle()
+                    .map_or(max_cycles, |t| t.min(max_cycles));
+                if target > self.sim.cycle() {
+                    self.jumps += 1;
+                    self.cycles_skipped += target - self.sim.cycle();
+                    self.sim.jump_to(target);
+                    if target >= max_cycles {
+                        return Err(self.cycle_limit_error());
+                    }
+                }
+            }
+            if self.sim.step() {
+                return Ok(self.sim.stats());
+            }
+            if self.sim.cycle() >= max_cycles {
+                return Err(self.cycle_limit_error());
+            }
+        }
+    }
+
+    fn stats(&self) -> SimStats {
+        self.sim.stats()
+    }
+
+    fn values(&self) -> &[f32] {
+        self.sim.values()
+    }
+
+    fn cycle(&self) -> u64 {
+        self.sim.cycle()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Op;
+    use crate::sched::SchedulerKind;
+
+    /// A dependency chain on one PE: every ALU-latency and pick-latency
+    /// window is quiescent, so the engine must take many jumps.
+    #[test]
+    fn sequential_chain_skips() {
+        let mut g = DataflowGraph::new();
+        let mut prev = g.add_input(1.5);
+        for _ in 0..100 {
+            prev = g.op(Op::Neg, &[prev]);
+        }
+        let mut cfg = OverlayConfig::paper_1x1().with_scheduler(SchedulerKind::OutOfOrder);
+        cfg.alu_latency = 8;
+        let mut be = SkipAheadBackend::new(&g, cfg).unwrap();
+        let stats = be.run().unwrap();
+        assert_eq!(stats.completed, g.len());
+        assert!(be.jumps() > 50, "chain must jump often, got {}", be.jumps());
+        assert!(
+            be.cycles_skipped() > stats.cycles / 2,
+            "most chain cycles are quiescent: skipped {} of {}",
+            be.cycles_skipped(),
+            stats.cycles
+        );
+        assert_eq!(be.values()[100], 1.5 * (-1f32).powi(100));
+    }
+
+    #[test]
+    fn cycle_limit_reported_like_lockstep() {
+        let g = crate::workload::layered_random(8, 4, 8, 1, 0);
+        let mut cfg = OverlayConfig::default().with_dims(2, 2);
+        cfg.max_cycles = 3;
+        let mut lock = Simulator::new(&g, cfg).unwrap();
+        let want = lock.run().unwrap_err();
+        let mut skip = SkipAheadBackend::new(&g, cfg).unwrap();
+        let got = skip.run().unwrap_err();
+        assert_eq!(got, want, "identical error on the cycle limit");
+    }
+}

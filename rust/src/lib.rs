@@ -8,9 +8,10 @@
 //! FIFO-based in-order scheduler.
 //!
 //! Layering (see DESIGN.md):
-//! * **L3 (this crate)** — the overlay simulator, schedulers, NoC,
-//!   workload generators, criticality labeling, resource model and the
-//!   experiment coordinator.
+//! * **L3 (this crate)** — the overlay simulator behind the pluggable
+//!   [`engine::SimBackend`] engines (lockstep reference + bit-exact
+//!   skip-ahead event backend), schedulers, NoC, workload generators,
+//!   criticality labeling, resource model and the experiment coordinator.
 //! * **L2/L1 (python, build-time only)** — a JAX levelized graph
 //!   evaluator calling a Pallas ALU kernel, AOT-lowered to HLO text in
 //!   `artifacts/`; loaded at runtime through [`runtime::XlaRuntime`]
@@ -20,6 +21,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod criticality;
+pub mod engine;
 pub mod graph;
 pub mod lod;
 pub mod noc;
@@ -33,5 +35,6 @@ pub mod util;
 pub mod workload;
 
 pub use config::OverlayConfig;
+pub use engine::{BackendKind, SimBackend};
 pub use graph::{DataflowGraph, NodeId, Op};
 pub use sim::{SimStats, Simulator};

@@ -75,7 +75,10 @@ impl Network {
         y * self.w + x
     }
 
-    /// Packets currently on links.
+    /// Packets currently on links. Deflection routing makes in-flight
+    /// cycles irreducible (a packet's path depends on every arbitration
+    /// it meets), so the skip-ahead engine only jumps the clock while
+    /// this is zero and falls back to cycle-accurate stepping otherwise.
     pub fn in_flight(&self) -> usize {
         self.in_flight
     }

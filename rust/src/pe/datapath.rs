@@ -66,6 +66,13 @@ impl AluPipeline {
     pub fn occupancy(&self) -> usize {
         self.in_flight.len()
     }
+
+    /// Cycle the oldest in-flight result retires, if any — the ALU's
+    /// next-wake time for the skip-ahead engine's event horizon.
+    #[inline]
+    pub fn next_retire_cycle(&self) -> Option<u64> {
+        self.in_flight.front().map(|&(c, _)| c)
+    }
 }
 
 /// Packet-generation unit state (§II-A: "a non-deterministic multi-cycle
@@ -155,6 +162,17 @@ mod tests {
         let mut out = Vec::new();
         alu.retire(12, &mut out); // cycles 3..=12 retire ids 0..=9
         assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn next_retire_cycle_tracks_oldest() {
+        let mut alu = AluPipeline::new(4);
+        assert_eq!(alu.next_retire_cycle(), None);
+        alu.issue(10, 1);
+        alu.issue(12, 2);
+        assert_eq!(alu.next_retire_cycle(), Some(14));
+        assert_eq!(alu.pop_due(14), Some(1));
+        assert_eq!(alu.next_retire_cycle(), Some(16));
     }
 
     #[test]

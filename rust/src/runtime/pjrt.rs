@@ -1,0 +1,154 @@
+//! The real PJRT bridge, compiled only with `--features xla` (requires
+//! the `xla` crate — xla-rs over xla_extension 0.5.1 — added under
+//! `[dependencies]`, plus the xla_extension toolchain; see Cargo.toml).
+//!
+//! Loading pattern (see /opt/xla-example/load_hlo.rs): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Text is the interchange format
+//! because xla_extension 0.5.1 rejects jax≥0.5 serialized protos
+//! (64-bit instruction ids).
+
+use super::{encode_graph, Manifest};
+use crate::graph::DataflowGraph;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Compiled executables for every artifact in the manifest.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    alu: xla::PjRtLoadedExecutable,
+    lod: xla::PjRtLoadedExecutable,
+    graph_eval: xla::PjRtLoadedExecutable,
+}
+
+impl XlaRuntime {
+    /// Load and compile all artifacts from `dir` (usually `artifacts/`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .context("reading artifacts/manifest.json (run `make artifacts`)")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path: PathBuf = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", path.display()))
+        };
+        let alu = compile(&manifest.artifacts.alu_batch.file)?;
+        let lod = compile(&manifest.artifacts.lod.file)?;
+        let graph_eval = compile(&manifest.artifacts.graph_eval.file)?;
+        Ok(Self {
+            client,
+            manifest,
+            alu,
+            lod,
+            graph_eval,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute the L1 Pallas ALU kernel on a batch of node operations.
+    /// Inputs shorter than the artifact batch are padded (with op=COPY on
+    /// zeroes); the result is truncated back to the input length.
+    pub fn alu_batch(&self, a: &[f32], b: &[f32], op: &[u32]) -> Result<Vec<f32>> {
+        let batch = self.manifest.artifacts.alu_batch.batch.unwrap_or(0);
+        anyhow::ensure!(a.len() == b.len() && a.len() == op.len(), "length mismatch");
+        anyhow::ensure!(a.len() <= batch, "batch {} exceeds artifact size {batch}", a.len());
+        let mut pa = a.to_vec();
+        let mut pb = b.to_vec();
+        let mut pop: Vec<i32> = op.iter().map(|&o| o as i32).collect();
+        pa.resize(batch, 0.0);
+        pb.resize(batch, 0.0);
+        pop.resize(batch, 7); // COPY
+        let la = xla::Literal::vec1(&pa);
+        let lb = xla::Literal::vec1(&pb);
+        let lop = xla::Literal::vec1(&pop);
+        let out = self
+            .alu
+            .execute::<xla::Literal>(&[la, lb, lop])
+            .map_err(|e| anyhow!("alu execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("alu fetch: {e}"))?;
+        let tuple = out.to_tuple1().map_err(|e| anyhow!("alu tuple: {e}"))?;
+        let mut v = tuple.to_vec::<f32>().map_err(|e| anyhow!("alu to_vec: {e}"))?;
+        v.truncate(a.len());
+        Ok(v)
+    }
+
+    /// Execute the L1 hierarchical LOD kernel over packed flag words.
+    /// Returns the leading node id, or `crate::lod::NO_READY` if none.
+    pub fn lod_pick(&self, words: &[u32]) -> Result<u32> {
+        let n = self.manifest.artifacts.lod.words.unwrap_or(0);
+        anyhow::ensure!(words.len() <= n, "{} words exceeds artifact size {n}", words.len());
+        let mut pw: Vec<i32> = words.iter().map(|&w| w as i32).collect();
+        pw.resize(n, 0);
+        let lw = xla::Literal::vec1(&pw);
+        let out = self
+            .lod
+            .execute::<xla::Literal>(&[lw])
+            .map_err(|e| anyhow!("lod execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("lod fetch: {e}"))?;
+        let tuple = out.to_tuple1().map_err(|e| anyhow!("lod tuple: {e}"))?;
+        let v = tuple.to_vec::<i32>().map_err(|e| anyhow!("lod to_vec: {e}"))?;
+        Ok(v[0] as u32)
+    }
+
+    /// Evaluate a whole dataflow graph through the L2 `graph_eval`
+    /// artifact (levelized gather → Pallas ALU → masked writeback).
+    ///
+    /// Errors if the graph exceeds the artifact's padded geometry
+    /// (`n` slots / `lmax` levels) — callers fall back to
+    /// [`DataflowGraph::evaluate`] for larger graphs.
+    pub fn graph_eval(&self, g: &DataflowGraph) -> Result<Vec<f32>> {
+        let enc = encode_graph(g);
+        let n = self.manifest.artifacts.graph_eval.n.unwrap_or(0);
+        let lmax = self.manifest.artifacts.graph_eval.lmax.unwrap_or(0) as u32;
+        anyhow::ensure!(
+            g.len() <= n,
+            "graph has {} nodes, artifact padded to {n}",
+            g.len()
+        );
+        anyhow::ensure!(
+            enc.depth <= lmax,
+            "graph depth {} exceeds artifact lmax {lmax}",
+            enc.depth
+        );
+        let pad = |mut v: Vec<i32>, fill: i32| -> Vec<i32> {
+            v.resize(n, fill);
+            v
+        };
+        let mut vals = enc.values0;
+        vals.resize(n, 0.0);
+        // padding slots: self-gather, COPY, level -1 (never fires)
+        let mut src0 = enc.src0;
+        let mut src1 = enc.src1;
+        for k in g.len()..n {
+            src0.push(k as i32);
+            src1.push(k as i32);
+        }
+        let lv = xla::Literal::vec1(&vals);
+        let ls0 = xla::Literal::vec1(&src0);
+        let ls1 = xla::Literal::vec1(&src1);
+        let lop = xla::Literal::vec1(&pad(enc.opcode, 7));
+        let llv = xla::Literal::vec1(&pad(enc.level, -1));
+        let out = self
+            .graph_eval
+            .execute::<xla::Literal>(&[lv, ls0, ls1, lop, llv])
+            .map_err(|e| anyhow!("graph_eval execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("graph_eval fetch: {e}"))?;
+        let tuple = out.to_tuple1().map_err(|e| anyhow!("graph_eval tuple: {e}"))?;
+        let mut v = tuple
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("graph_eval to_vec: {e}"))?;
+        v.truncate(g.len());
+        Ok(v)
+    }
+}

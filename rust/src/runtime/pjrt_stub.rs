@@ -1,0 +1,52 @@
+//! Stub PJRT bridge, compiled when the `xla` feature is **off** (the
+//! default — the `xla` crate is not in the offline crate universe, see
+//! Cargo.toml). [`XlaRuntime::load`] always fails, so every oracle
+//! consumer — `tests/integration_runtime.rs`, `tdp validate`, the
+//! `sparse_factorization` example — takes its artifacts-absent skip path.
+
+use super::Manifest;
+use crate::graph::DataflowGraph;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+const UNAVAILABLE: &str = "tdp was built without the `xla` feature: the PJRT oracle is \
+     unavailable (add the xla dependency and rebuild with `--features xla`)";
+
+/// API-compatible placeholder for the PJRT runtime. Never instantiable:
+/// [`XlaRuntime::load`] fails before construction.
+pub struct XlaRuntime {
+    pub manifest: Manifest,
+}
+
+impl XlaRuntime {
+    pub fn load(_dir: &Path) -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn alu_batch(&self, _a: &[f32], _b: &[f32], _op: &[u32]) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn lod_pick(&self, _words: &[u32]) -> Result<u32> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn graph_eval(&self, _g: &DataflowGraph) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_fails_loudly() {
+        let err = XlaRuntime::load(Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+}

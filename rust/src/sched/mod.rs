@@ -50,6 +50,12 @@ pub trait ReadyScheduler {
     /// (FIFO pop: 1; hierarchical LOD: 2 — paper §II-B).
     fn pick_latency(&self) -> u32;
 
+    /// Completion cycle of a scheduling pass started at `started_at` —
+    /// the pick-wake event the skip-ahead engine jumps to.
+    fn pick_completion(&self, started_at: u64) -> u64 {
+        started_at + self.pick_latency() as u64
+    }
+
     /// Claim the next node (highest priority ready). Clears its RDY state;
     /// the node stays pending until [`ReadyScheduler::fanout_done`].
     fn take(&mut self) -> Option<u32>;
@@ -124,5 +130,7 @@ mod tests {
         let o = make_scheduler(SchedulerKind::OutOfOrder, 8, None);
         assert_eq!(f.pick_latency(), 1);
         assert_eq!(o.pick_latency(), 2);
+        assert_eq!(f.pick_completion(10), 11);
+        assert_eq!(o.pick_completion(10), 12);
     }
 }

@@ -4,7 +4,7 @@ use crate::noc::NetworkStats;
 use crate::sched::SchedulerKind;
 
 /// Per-PE counters.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PeStats {
     pub busy_cycles: u64,
     pub alu_ops: u64,
@@ -19,7 +19,11 @@ pub struct PeStats {
 }
 
 /// Aggregate result of one simulation run.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares every counter (completion cycle, network stats,
+/// all per-PE counters) — the equality the `engine::parity` harness
+/// asserts between the lockstep and skip-ahead backends.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimStats {
     pub cycles: u64,
     pub total_nodes: usize,

@@ -141,7 +141,20 @@ pub fn parse_matrix_market(text: &str) -> Result<SparseMatrix, String> {
     if !h.contains("coordinate") {
         return Err("only coordinate format supported".into());
     }
+    if h.contains("complex") {
+        return Err(
+            "complex matrices are not supported: the overlay datapath is f32-only \
+             (field must be real, integer or pattern)"
+                .into(),
+        );
+    }
     let pattern = h.contains("pattern");
+    if !pattern && !h.contains("real") && !h.contains("integer") {
+        return Err(format!(
+            "unsupported field in header '{}' (real | integer | pattern)",
+            header.trim()
+        ));
+    }
     let symmetric = h.contains("symmetric");
     let mut body = lines.filter(|l| !l.trim_start().starts_with('%'));
     let dims = body.next().ok_or("missing size line")?;
@@ -160,7 +173,10 @@ pub fn parse_matrix_market(text: &str) -> Result<SparseMatrix, String> {
         let i: usize = f.next().ok_or("bad entry")?.parse().map_err(|e| format!("{e}"))?;
         let j: usize = f.next().ok_or("bad entry")?.parse().map_err(|e| format!("{e}"))?;
         if i == 0 || j == 0 || i > nr || j > nc {
-            return Err(format!("1-based index out of range: {i} {j}"));
+            return Err(format!(
+                "entry index ({i}, {j}) out of range for {nr}x{nc} matrix \
+                 (Matrix Market indices are 1-based)"
+            ));
         }
         let v: f32 = if pattern {
             rng.gen_f32_in(-1.0, 1.0)
@@ -245,6 +261,46 @@ mod tests {
         let m = parse_matrix_market(text).unwrap();
         assert!(m.get(2, 0).is_some());
         assert!(m.get(0, 2).is_some(), "symmetric mirror");
+    }
+
+    #[test]
+    fn matrix_market_complex_rejected() {
+        let text = "%%MatrixMarket matrix coordinate complex general\n\
+                    2 2 1\n1 1 1.0 0.0\n";
+        let err = parse_matrix_market(text).unwrap_err();
+        assert!(err.contains("complex"), "error must name the field: {err}");
+        // hermitian files are complex-by-definition in practice; the
+        // explicit complex check fires before any entry parsing
+        let text = "%%MatrixMarket matrix coordinate complex hermitian\n\
+                    2 2 1\n1 1 1.0 0.0\n";
+        assert!(parse_matrix_market(text).is_err());
+    }
+
+    #[test]
+    fn matrix_market_unknown_field_rejected() {
+        let text = "%%MatrixMarket matrix coordinate quaternion general\n2 2 1\n1 1 1.0\n";
+        let err = parse_matrix_market(text).unwrap_err();
+        assert!(err.contains("field"), "{err}");
+    }
+
+    #[test]
+    fn matrix_market_index_range_validated() {
+        let base = "%%MatrixMarket matrix coordinate real general\n3 3 1\n";
+        for entry in ["4 1 1.0", "1 4 1.0", "0 1 1.0", "1 0 1.0", "7 9 1.0"] {
+            let err = parse_matrix_market(&format!("{base}{entry}\n")).unwrap_err();
+            assert!(err.contains("out of range"), "entry '{entry}': {err}");
+        }
+        // boundary indices are valid
+        let m = parse_matrix_market(&format!("{base}3 3 1.0\n")).unwrap();
+        assert!(m.get(2, 2).is_some());
+    }
+
+    #[test]
+    fn matrix_market_integer_field_accepted() {
+        let text = "%%MatrixMarket matrix coordinate integer general\n2 2 2\n1 1 3\n2 2 -2\n";
+        let m = parse_matrix_market(text).unwrap();
+        assert_eq!(m.n, 2);
+        assert!(m.get(1, 1).is_some());
     }
 
     #[test]

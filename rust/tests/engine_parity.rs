@@ -1,0 +1,193 @@
+//! Cross-backend parity: `LockstepBackend` and `SkipAheadBackend` must be
+//! indistinguishable — bit-exact node values and identical `SimStats`
+//! down to every per-PE counter — across ≥3 workload families
+//! (synthetic, sparse LU factorization, Matrix Market) × both
+//! schedulers, plus seeded-random property sweeps (DESIGN.md §5/§6).
+
+use tdp::config::OverlayConfig;
+use tdp::engine::{check_parity, parity::ParityError, BackendKind, SimBackend, SkipAheadBackend};
+use tdp::graph::{DataflowGraph, Op};
+use tdp::place::PlacementPolicy;
+use tdp::sched::SchedulerKind;
+use tdp::sim::SimError;
+use tdp::util::rng::Rng;
+use tdp::workload::{
+    butterfly_graph, layered_random, lu_factorization_graph, parse_matrix_market, reduction_tree,
+    stencil_1d, SparseMatrix,
+};
+
+fn assert_parity(g: &DataflowGraph, cfg: OverlayConfig, label: &str) -> u64 {
+    match check_parity(g, cfg) {
+        Ok(rep) => {
+            assert_eq!(rep.stats.completed, g.len(), "{label}: incomplete run");
+            rep.cycles_skipped
+        }
+        Err(e) => panic!("{label}: parity violation: {e}"),
+    }
+}
+
+const SCHEDULERS: [SchedulerKind; 2] = [SchedulerKind::InOrder, SchedulerKind::OutOfOrder];
+
+#[test]
+fn synthetic_family_parity() {
+    let workloads: Vec<(&str, DataflowGraph)> = vec![
+        ("layered", layered_random(12, 6, 20, 2, 4)),
+        ("reduction", reduction_tree(64, Op::Add, 5)),
+        ("stencil", stencil_1d(12, 5, 6)),
+        ("butterfly", butterfly_graph(32, 7)),
+    ];
+    for (name, g) in &workloads {
+        for kind in SCHEDULERS {
+            for (c, r) in [(1, 1), (2, 2), (4, 4)] {
+                let cfg = OverlayConfig::default().with_dims(c, r).with_scheduler(kind);
+                assert_parity(g, cfg, &format!("{name}/{kind:?}/{c}x{r}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_lu_family_parity() {
+    let workloads: Vec<(&str, DataflowGraph)> = vec![
+        ("lu_banded", lu_factorization_graph(&SparseMatrix::banded(40, 3, 0.9, 1)).0),
+        ("lu_random", lu_factorization_graph(&SparseMatrix::random(24, 0.15, 2)).0),
+        ("lu_power_law", lu_factorization_graph(&SparseMatrix::power_law(40, 3, 3)).0),
+    ];
+    for (name, g) in &workloads {
+        for kind in SCHEDULERS {
+            let mut cfg = OverlayConfig::default().with_dims(4, 4).with_scheduler(kind);
+            cfg.placement = PlacementPolicy::Chunked;
+            assert_parity(g, cfg, &format!("{name}/{kind:?}"));
+        }
+    }
+}
+
+#[test]
+fn matrix_market_family_parity() {
+    let general = "%%MatrixMarket matrix coordinate real general\n\
+                   % tiny circuit-like pattern\n\
+                   6 6 10\n\
+                   1 1 2.0\n2 2 3.0\n3 3 4.0\n4 4 5.0\n5 5 6.0\n6 6 7.0\n\
+                   2 1 -1.0\n4 2 0.5\n5 3 -0.25\n6 1 1.5\n";
+    let symmetric = "%%MatrixMarket matrix coordinate pattern symmetric\n\
+                     5 5 8\n\
+                     1 1\n2 2\n3 3\n4 4\n5 5\n3 1\n4 2\n5 3\n";
+    for (name, text) in [("mm_general", general), ("mm_symmetric_pattern", symmetric)] {
+        let m = parse_matrix_market(text).unwrap();
+        let (g, _) = lu_factorization_graph(&m);
+        for kind in SCHEDULERS {
+            let cfg = OverlayConfig::default().with_dims(2, 2).with_scheduler(kind);
+            assert_parity(&g, cfg, &format!("{name}/{kind:?}"));
+        }
+    }
+}
+
+/// Random DAG with arbitrary op mix (NaN/inf paths included).
+fn random_graph(rng: &mut Rng, max_nodes: usize) -> DataflowGraph {
+    let inputs = 1 + rng.gen_range(8);
+    let ops = rng.gen_range(max_nodes.max(2));
+    let mut g = DataflowGraph::new();
+    for _ in 0..inputs {
+        g.add_input(rng.gen_f32_in(-100.0, 100.0));
+    }
+    for _ in 0..ops {
+        let op = Op::ALL[rng.gen_range(Op::ALL.len())];
+        let n = g.len() as u32;
+        let a = rng.gen_range(n as usize) as u32;
+        let b = rng.gen_range(n as usize) as u32;
+        let srcs: Vec<u32> = if op.arity() == 1 { vec![a] } else { vec![a, b] };
+        g.add_op(op, &srcs).unwrap();
+    }
+    g
+}
+
+/// Property (ISSUE satellite): for seeded random workloads the two
+/// backends produce identical `SimStats` — completion cycle, per-PE busy
+/// cycles and every other counter — under both scheduler kinds, across
+/// random overlay shapes and placement policies.
+#[test]
+fn prop_backend_parity_on_random_workloads() {
+    let policies = [
+        PlacementPolicy::RoundRobin,
+        PlacementPolicy::Random,
+        PlacementPolicy::BlockContiguous,
+        PlacementPolicy::Chunked,
+    ];
+    for seed in 0..30u64 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xE9613E);
+        let g = random_graph(&mut rng, 250);
+        let dims = [(1usize, 1usize), (2, 2), (3, 5), (8, 8)];
+        let (c, r) = dims[rng.gen_range(dims.len())];
+        for kind in SCHEDULERS {
+            let mut cfg = OverlayConfig::default().with_dims(c, r).with_scheduler(kind);
+            cfg.placement = policies[rng.gen_range(policies.len())];
+            cfg.seed = seed;
+            // vary the ALU depth too: larger latencies open wider
+            // quiescent windows and stress the jump accounting
+            cfg.alu_latency = 1 + rng.gen_range(8) as u64;
+            let rep = check_parity(&g, cfg)
+                .unwrap_or_else(|e| panic!("seed {seed} {kind:?} {c}x{r}: {e}"));
+            assert_eq!(rep.stats.completed, g.len(), "seed {seed}");
+        }
+    }
+}
+
+/// The skip-ahead engine must actually skip on sequential workloads —
+/// parity alone would also hold for a backend that never jumps.
+#[test]
+fn skip_ahead_skips_on_sequential_workloads() {
+    let m = SparseMatrix::banded(60, 1, 1.0, 9);
+    let (g, _) = lu_factorization_graph(&m);
+    let mut cfg = OverlayConfig::default()
+        .with_dims(8, 8)
+        .with_scheduler(SchedulerKind::OutOfOrder);
+    cfg.placement = PlacementPolicy::Chunked;
+    cfg.alu_latency = 8;
+    let skipped = assert_parity(&g, cfg, "sequential lu chain");
+    assert!(skipped > 0, "sequential chain must produce clock jumps");
+}
+
+/// Identical cycle-limit failures on both backends.
+#[test]
+fn cycle_limit_parity() {
+    let g = layered_random(8, 4, 8, 1, 0);
+    let mut cfg = OverlayConfig::default().with_dims(2, 2);
+    cfg.max_cycles = 3;
+    match check_parity(&g, cfg) {
+        Err(ParityError::Sim(SimError::CycleLimitExceeded { cycle, .. })) => assert_eq!(cycle, 3),
+        other => panic!("expected identical cycle-limit errors, got {other:?}"),
+    }
+}
+
+/// `OverlayConfig::backend` routes the whole stack through the chosen
+/// engine (the plumbing the CLI `--backend` flag relies on).
+#[test]
+fn backend_choice_flows_through_config() {
+    let g = layered_random(10, 5, 16, 2, 2);
+    let mut all_stats = Vec::new();
+    for kind in BackendKind::ALL {
+        let cfg = OverlayConfig::default().with_dims(2, 2).with_backend(kind);
+        let mut be = tdp::engine::make_backend(&g, cfg).unwrap();
+        assert_eq!(be.kind(), kind);
+        all_stats.push(be.run().unwrap());
+    }
+    assert_eq!(all_stats[0], all_stats[1]);
+}
+
+/// Direct use of the concrete backend type, including its jump counters.
+#[test]
+fn skip_ahead_backend_counters_consistent() {
+    let mut g = DataflowGraph::new();
+    let mut prev = g.add_input(2.0);
+    for _ in 0..50 {
+        prev = g.op(Op::Copy, &[prev]);
+    }
+    let mut cfg = OverlayConfig::paper_1x1();
+    cfg.alu_latency = 6;
+    let mut be = SkipAheadBackend::new(&g, cfg).unwrap();
+    let stats = be.run().unwrap();
+    assert!(be.jumps() > 0);
+    assert!(be.cycles_skipped() < stats.cycles, "cannot skip more than total");
+    assert_eq!(be.cycle(), stats.cycles);
+    assert_eq!(be.values()[50], 2.0);
+}

@@ -13,7 +13,7 @@ use tdp::config::OverlayConfig;
 use tdp::coordinator::run_one;
 use tdp::lod::{naive_scan, HierLod};
 use tdp::place::LocalOrder;
-use tdp::sched::{make_scheduler, SchedulerKind};
+use tdp::sched::{make_scheduler, ReadyScheduler, SchedulerKind};
 use tdp::util::rng::Rng;
 use tdp::workload::{lu_factorization_graph, SparseMatrix};
 
@@ -110,11 +110,11 @@ fn main() {
             &g,
             place,
             cfg,
-            move |_, num_local| -> Box<dyn tdp::sched::ReadyScheduler + Send> {
+            move |_, num_local| {
                 if which == 0 {
-                    Box::new(tdp::sched::LifoSched::new(num_local))
+                    tdp::sched::Scheduler::Lifo(tdp::sched::LifoSched::new(num_local))
                 } else {
-                    Box::new(tdp::sched::RandomSched::new(num_local, 99))
+                    tdp::sched::Scheduler::Random(tdp::sched::RandomSched::new(num_local, 99))
                 }
             },
         )

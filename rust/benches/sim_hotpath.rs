@@ -7,6 +7,7 @@
 mod harness;
 
 use tdp::config::OverlayConfig;
+use tdp::graph::{DataflowGraph, Op};
 use tdp::sched::SchedulerKind;
 use tdp::sim::Simulator;
 use tdp::workload::{lu_factorization_graph, SparseMatrix};
@@ -40,5 +41,38 @@ fn main() {
                 &format!("{cycles} cyc -> {:.1} M PE-cycles/s", rate / 1e6),
             );
         }
+    }
+
+    // The active-PE worklist's target regime: a 16x16 overlay (256 PEs)
+    // running a strictly sequential dependency chain, so ~1 PE (and ~1
+    // router) is busy on any given cycle while the other 255 idle. The
+    // pre-worklist simulator paid O(256) per cycle here regardless; with
+    // activity-proportional stepping the per-cycle cost is O(active),
+    // which is what the ISSUE's >= 2x acceptance bar measures. Wall
+    // clock (not PE-cycles/s) is the honest metric: the denominator is
+    // fabric size, which is exactly what idle PEs no longer cost.
+    harness::section("sparse activity — 16x16 overlay, 8000-node sequential chain");
+    let mut chain = DataflowGraph::new();
+    let mut prev = chain.add_input(1.5);
+    for _ in 0..8000 {
+        prev = chain.op(Op::Neg, &[prev]);
+    }
+    for kind in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
+        let cfg = OverlayConfig::default()
+            .with_dims(16, 16)
+            .with_scheduler(kind);
+        let mut cycles = 0u64;
+        let t = harness::time_it(1, 5, || {
+            let mut sim = Simulator::new(&chain, cfg).unwrap();
+            let stats = sim.run().unwrap();
+            cycles = stats.cycles;
+            stats.cycles
+        });
+        let rate = cycles as f64 / t.median.as_secs_f64();
+        harness::report(
+            &format!("16x16 chain {}", kind.name()),
+            &t,
+            &format!("{cycles} cyc -> {:.2} M fabric-cycles/s", rate / 1e6),
+        );
     }
 }

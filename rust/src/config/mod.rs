@@ -183,8 +183,20 @@ impl OverlayConfig {
         if self.alu_latency == 0 {
             return Err("alu_latency must be >= 1".into());
         }
+        if self.max_cycles == 0 {
+            return Err("max_cycles must be >= 1".into());
+        }
         if self.bram.brams_per_pe == 0 || self.bram.words_per_bram == 0 {
             return Err("BRAM geometry must be non-zero".into());
+        }
+        // both would otherwise panic deep in construction: flag_bits_used
+        // divides in BramConfig::flag_words, multipump sizes the
+        // PortArbiter budget (>= 2 physical ports required)
+        if self.bram.flag_bits_used == 0 || self.bram.flag_bits_used > self.bram.word_bits {
+            return Err("flag_bits_used must be in [1, word_bits]".into());
+        }
+        if self.bram.multipump == 0 {
+            return Err("multipump must be >= 1 (an M20K keeps its 2 physical ports)".into());
         }
         if self.bram.fifo_brams < 0.0 || self.bram.fifo_brams >= self.bram.brams_per_pe as f64 {
             return Err("fifo_brams must be in [0, brams_per_pe)".into());
@@ -465,6 +477,29 @@ mod tests {
         assert!(OverlayConfig::from_toml("alu_latency = 0\n").is_err());
         assert!(OverlayConfig::from_toml("scheduler = \"bogus\"\n").is_err());
         assert!(OverlayConfig::from_toml("[bram]\nfifo_brams = 8.0\n").is_err());
+        // regression: these used to pass validation and panic later —
+        // flag_bits_used = 0 divided by zero in BramConfig::flag_words,
+        // multipump = 0 tripped the PortArbiter budget assert, and
+        // max_cycles = 0 made every run report a bogus cycle-limit error
+        assert!(OverlayConfig::from_toml("[bram]\nflag_bits_used = 0\n").is_err());
+        assert!(OverlayConfig::from_toml("[bram]\nflag_bits_used = 64\n").is_err());
+        assert!(OverlayConfig::from_toml("[bram]\nmultipump = 0\n").is_err());
+        assert!(OverlayConfig::from_toml("max_cycles = 0\n").is_err());
+    }
+
+    /// The smallest legal values of the newly-validated knobs must still
+    /// construct and run (multipump = 1 is the no-multipump ablation).
+    #[test]
+    fn minimal_legal_bram_knobs_still_run() {
+        let toml = "cols = 1\nrows = 1\n[bram]\nmultipump = 1\nflag_bits_used = 1\n";
+        let c = OverlayConfig::from_toml(toml).unwrap();
+        assert_eq!(c.bram.ports_per_cycle(), 2);
+        let mut g = crate::graph::DataflowGraph::new();
+        let a = g.add_input(1.0);
+        let b = g.add_input(2.0);
+        g.op(crate::graph::Op::Add, &[a, b]);
+        let stats = crate::engine::run_with_backend(&g, c).unwrap();
+        assert_eq!(stats.completed, 3);
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub struct RunOutcome {
 }
 
 /// A row of Figure 1: one graph size, both schedulers, the speedup.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Fig1Row {
     pub label: String,
     pub nodes_plus_edges: usize,
@@ -53,25 +53,45 @@ pub fn fig1_config() -> OverlayConfig {
 ///
 /// `workloads` are (label, graph) pairs (see `workload::fig1_workloads`);
 /// each runs under both schedulers on the same overlay config.
+///
+/// The sweep grid is sharded at (workload × scheduler) granularity
+/// across `jobs` `std::thread::scope` workers — twice the parallelism
+/// of per-workload jobs, and the big in-order runs no longer serialize
+/// behind their own out-of-order halves. The grid is laid out
+/// scheduler-major (all in-order cells, then all out-of-order cells)
+/// so [`run_parallel`]'s static `i % jobs` chunking spreads the slow
+/// in-order runs across every worker instead of pinning them to the
+/// even ones. Each grid cell is an independent simulation and results
+/// come back in job order, so the rows — and any report rendered from
+/// them — are identical for every `jobs` value.
 pub fn fig1_sweep(
     workloads: &[(String, DataflowGraph)],
     cfg: OverlayConfig,
-    threads: usize,
+    jobs: usize,
 ) -> Vec<Fig1Row> {
-    let jobs: Vec<usize> = (0..workloads.len()).collect();
-    run_parallel(jobs, threads, |i: usize| {
-        let (label, g) = &workloads[i];
-        let s_in = run_one(g, cfg, SchedulerKind::InOrder);
-        let s_ooo = run_one(g, cfg, SchedulerKind::OutOfOrder);
-        Fig1Row {
-            label: label.clone(),
-            nodes_plus_edges: g.footprint(),
-            depth: g.stats().depth,
-            cycles_inorder: s_in.cycles,
-            cycles_ooo: s_ooo.cycles,
-            speedup: s_in.cycles as f64 / s_ooo.cycles as f64,
-        }
-    })
+    let n = workloads.len();
+    let grid: Vec<(usize, SchedulerKind)> = [SchedulerKind::InOrder, SchedulerKind::OutOfOrder]
+        .into_iter()
+        .flat_map(|kind| (0..n).map(move |i| (i, kind)))
+        .collect();
+    let stats = run_parallel(grid, jobs, |(i, kind): (usize, SchedulerKind)| {
+        run_one(&workloads[i].1, cfg, kind)
+    });
+    workloads
+        .iter()
+        .enumerate()
+        .map(|(i, (label, g))| {
+            let (s_in, s_ooo) = (&stats[i], &stats[n + i]);
+            Fig1Row {
+                label: label.clone(),
+                nodes_plus_edges: g.footprint(),
+                depth: g.stats().depth,
+                cycles_inorder: s_in.cycles,
+                cycles_ooo: s_ooo.cycles,
+                speedup: s_in.cycles as f64 / s_ooo.cycles as f64,
+            }
+        })
+        .collect()
 }
 
 /// Detailed scheduler comparison on one workload (used by `tdp run` and
@@ -152,6 +172,22 @@ mod tests {
         for r in &rows {
             assert!(r.speedup > 0.5 && r.speedup < 3.0, "{r:?}");
             assert!(r.cycles_inorder > 0 && r.cycles_ooo > 0);
+        }
+    }
+
+    /// Determinism across worker counts: the acceptance bar behind the
+    /// CLI guarantee that `sweep --jobs N` reports byte-match `--jobs 1`.
+    #[test]
+    fn fig1_sweep_rows_invariant_under_job_count() {
+        let ws: Vec<(String, DataflowGraph)> = vec![
+            ("a".into(), layered_random(12, 6, 24, 2, 1)),
+            ("b".into(), layered_random(16, 8, 32, 2, 2)),
+            ("c".into(), layered_random(8, 4, 16, 1, 3)),
+        ];
+        let cfg = OverlayConfig::default().with_dims(4, 4);
+        let serial = fig1_sweep(&ws, cfg, 1);
+        for jobs in [2, 4, 16] {
+            assert_eq!(fig1_sweep(&ws, cfg, jobs), serial, "jobs = {jobs}");
         }
     }
 

@@ -34,7 +34,8 @@ COMMANDS
               --backend lockstep|skip-ahead --seed 0]
   sweep       regenerate Figure 1            [--cols 16 --rows 16 --seed 42
               --backend lockstep|skip-ahead
-              --threads N --format markdown|csv --out file]
+              --jobs N (0 = all cores; --threads is a legacy alias)
+              --format markdown|csv --out file]
   gen         write a workload graph JSON    --workload <toml> --out <file> [--seed 0]
   validate    check sim numerics vs native + PJRT oracle
               --workload <toml> | --graph <json> [--cols 4 --rows 4
@@ -143,23 +144,27 @@ fn cmd_sweep(mut a: Args) -> Result<()> {
     let rows = a.usize_or("rows", 16)?;
     let seed = a.u64_or("seed", 42)?;
     let backend = backend_flag(&mut a)?;
-    let mut threads = a.usize_or("threads", 0)?;
+    let mut jobs = a.usize_or("jobs", 0)?;
+    let threads_legacy = a.usize_or("threads", 0)?; // pre---jobs spelling
     let format = a.str_or("format", "markdown")?;
     let out = a.str_opt("out")?;
     a.finish()?;
-    if threads == 0 {
-        threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    if jobs == 0 {
+        jobs = threads_legacy;
+    }
+    if jobs == 0 {
+        jobs = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     }
     let cfg = coordinator::fig1_config().with_dims(cols, rows).with_backend(backend);
     cfg.validate().map_err(|e| anyhow!(e))?;
     eprintln!("generating Fig.1 workload ladder (seed {seed})...");
     let ws = workload::fig1_workloads(seed);
     eprintln!(
-        "running {} workloads x 2 schedulers on {threads} threads ({} backend)...",
+        "running {} workloads x 2 schedulers on {jobs} jobs ({} backend)...",
         ws.len(),
         backend.name()
     );
-    let rows_out = fig1_sweep(&ws, cfg, threads);
+    let rows_out = fig1_sweep(&ws, cfg, jobs);
     let mut t = Table::new(
         &format!("Figure 1 — OoO speedup vs graph size ({cols}x{rows} overlay)"),
         &["workload", "nodes+edges", "depth", "in-order cyc", "ooo cyc", "speedup"],

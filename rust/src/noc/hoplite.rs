@@ -12,25 +12,34 @@
 //! * PE injection has lowest priority and only proceeds if its first-hop
 //!   port is free (otherwise the PE stalls — backpressure).
 //!
+//! Every packet carries its inject cycle as a [`TaggedPacket`] sideband
+//! the switch threads through unchanged — the network computes delivery
+//! latency from the tag on eject. (Structurally identical packets are
+//! common — same destination node, same payload — so recovering the
+//! birth cycle by packet equality is ambiguous; the tag is not.)
+//!
 //! This is the austere bufferless arbitration that lets the FPGA router
 //! cost 130 ALMs (Table I footnote).
 
 use super::Packet;
 
+/// A packet plus the fabric cycle it was injected on.
+pub type TaggedPacket = (Packet, u64);
+
 /// Inputs sampled by a router at the start of a cycle.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RouterIn {
-    pub west: Option<Packet>,
-    pub north: Option<Packet>,
-    pub inject: Option<Packet>,
+    pub west: Option<TaggedPacket>,
+    pub north: Option<TaggedPacket>,
+    pub inject: Option<TaggedPacket>,
 }
 
 /// Outputs driven by a router at the end of a cycle.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RouterOut {
-    pub east: Option<Packet>,
-    pub south: Option<Packet>,
-    pub eject: Option<Packet>,
+    pub east: Option<TaggedPacket>,
+    pub south: Option<TaggedPacket>,
+    pub eject: Option<TaggedPacket>,
     /// true iff `inject` was accepted this cycle
     pub inject_ok: bool,
     /// a W-input packet lost arbitration and went east past its turn
@@ -42,55 +51,55 @@ pub fn route(x: u8, y: u8, i: RouterIn) -> RouterOut {
     let mut o = RouterOut::default();
 
     // 1. Y-ring traffic: continue south or eject. Never deflects.
-    if let Some(p) = i.north {
+    if let Some((p, b)) = i.north {
         debug_assert_eq!(p.dest_x, x, "packet on Y ring in wrong column");
         if p.dest_y == y {
-            o.eject = Some(p);
+            o.eject = Some((p, b));
         } else {
-            o.south = Some(p);
+            o.south = Some((p, b));
         }
     }
 
     // 2. X-ring traffic.
-    if let Some(p) = i.west {
+    if let Some((p, b)) = i.west {
         if p.dest_x == x {
             if p.dest_y == y {
                 // at destination: eject if port free, else deflect east
                 if o.eject.is_none() {
-                    o.eject = Some(p);
+                    o.eject = Some((p, b));
                 } else {
-                    o.east = Some(p);
+                    o.east = Some((p, b));
                     o.deflected = true;
                 }
             } else {
                 // turn south if port free, else deflect east
                 if o.south.is_none() {
-                    o.south = Some(p);
+                    o.south = Some((p, b));
                 } else {
-                    o.east = Some(p);
+                    o.east = Some((p, b));
                     o.deflected = true;
                 }
             }
         } else {
-            o.east = Some(p);
+            o.east = Some((p, b));
         }
     }
 
     // 3. PE injection: lowest priority, needs its first-hop port free.
-    if let Some(p) = i.inject {
+    if let Some((p, b)) = i.inject {
         if p.dest_x == x && p.dest_y == y {
             // local loopback delivery via the eject port
             if o.eject.is_none() {
-                o.eject = Some(p);
+                o.eject = Some((p, b));
                 o.inject_ok = true;
             }
         } else if p.dest_x == x {
             if o.south.is_none() {
-                o.south = Some(p);
+                o.south = Some((p, b));
                 o.inject_ok = true;
             }
         } else if o.east.is_none() {
-            o.east = Some(p);
+            o.east = Some((p, b));
             o.inject_ok = true;
         }
     }
@@ -111,23 +120,29 @@ mod tests {
         }
     }
 
+    /// Tag a packet with a birth cycle of 0 (the tests only check
+    /// switching; the latency tag rides along unchanged).
+    fn t(p: Packet) -> TaggedPacket {
+        (p, 0)
+    }
+
     #[test]
     fn x_traffic_continues_east() {
-        let o = route(2, 2, RouterIn { west: Some(pkt(5, 2)), ..Default::default() });
-        assert_eq!(o.east, Some(pkt(5, 2)));
+        let o = route(2, 2, RouterIn { west: Some(t(pkt(5, 2))), ..Default::default() });
+        assert_eq!(o.east, Some(t(pkt(5, 2))));
         assert!(o.south.is_none() && o.eject.is_none());
     }
 
     #[test]
     fn x_traffic_turns_south_at_column() {
-        let o = route(5, 2, RouterIn { west: Some(pkt(5, 7)), ..Default::default() });
-        assert_eq!(o.south, Some(pkt(5, 7)));
+        let o = route(5, 2, RouterIn { west: Some(t(pkt(5, 7))), ..Default::default() });
+        assert_eq!(o.south, Some(t(pkt(5, 7))));
     }
 
     #[test]
     fn y_traffic_ejects_at_destination() {
-        let o = route(5, 7, RouterIn { north: Some(pkt(5, 7)), ..Default::default() });
-        assert_eq!(o.eject, Some(pkt(5, 7)));
+        let o = route(5, 7, RouterIn { north: Some(t(pkt(5, 7))), ..Default::default() });
+        assert_eq!(o.eject, Some(t(pkt(5, 7))));
         assert!(o.south.is_none());
     }
 
@@ -137,13 +152,13 @@ mod tests {
             5,
             2,
             RouterIn {
-                west: Some(pkt(5, 7)),   // wants S
-                north: Some(pkt(5, 9)),  // continuing S, has priority
+                west: Some(t(pkt(5, 7))),  // wants S
+                north: Some(t(pkt(5, 9))), // continuing S, has priority
                 ..Default::default()
             },
         );
-        assert_eq!(o.south, Some(pkt(5, 9)));
-        assert_eq!(o.east, Some(pkt(5, 7)), "loser deflects east");
+        assert_eq!(o.south, Some(t(pkt(5, 9))));
+        assert_eq!(o.east, Some(t(pkt(5, 7))), "loser deflects east");
         assert!(o.deflected);
     }
 
@@ -153,13 +168,32 @@ mod tests {
             5,
             7,
             RouterIn {
-                west: Some(pkt(5, 7)),
-                north: Some(pkt(5, 7)),
+                west: Some(t(pkt(5, 7))),
+                north: Some(t(pkt(5, 7))),
                 ..Default::default()
             },
         );
-        assert_eq!(o.eject, Some(pkt(5, 7)));
+        assert_eq!(o.eject, Some(t(pkt(5, 7))));
         assert!(o.deflected && o.east.is_some());
+    }
+
+    /// The latency tag must follow each packet through arbitration:
+    /// two identical packets with different birth cycles keep their own
+    /// tags on whichever ports they win (the misattribution the old
+    /// equality-matching birth recovery got wrong).
+    #[test]
+    fn tags_follow_packets_through_arbitration() {
+        let o = route(
+            5,
+            7,
+            RouterIn {
+                west: Some((pkt(5, 7), 31)),
+                north: Some((pkt(5, 7), 40)),
+                ..Default::default()
+            },
+        );
+        assert_eq!(o.eject, Some((pkt(5, 7), 40)), "N wins eject, keeps its tag");
+        assert_eq!(o.east, Some((pkt(5, 7), 31)), "W deflects, keeps its tag");
     }
 
     #[test]
@@ -169,13 +203,13 @@ mod tests {
             2,
             2,
             RouterIn {
-                west: Some(pkt(9, 2)),
-                inject: Some(pkt(4, 4)),
+                west: Some(t(pkt(9, 2))),
+                inject: Some(t(pkt(4, 4))),
                 ..Default::default()
             },
         );
         assert!(!o.inject_ok);
-        assert_eq!(o.east, Some(pkt(9, 2)));
+        assert_eq!(o.east, Some(t(pkt(9, 2))));
     }
 
     #[test]
@@ -184,19 +218,19 @@ mod tests {
             2,
             2,
             RouterIn {
-                inject: Some(pkt(2, 5)),
+                inject: Some(t(pkt(2, 5))),
                 ..Default::default()
             },
         );
         assert!(o.inject_ok);
-        assert_eq!(o.south, Some(pkt(2, 5)));
+        assert_eq!(o.south, Some(t(pkt(2, 5))));
     }
 
     #[test]
     fn self_delivery_uses_eject() {
-        let o = route(2, 2, RouterIn { inject: Some(pkt(2, 2)), ..Default::default() });
+        let o = route(2, 2, RouterIn { inject: Some(t(pkt(2, 2))), ..Default::default() });
         assert!(o.inject_ok);
-        assert_eq!(o.eject, Some(pkt(2, 2)));
+        assert_eq!(o.eject, Some(t(pkt(2, 2))));
     }
 
     #[test]
@@ -205,8 +239,8 @@ mod tests {
             2,
             2,
             RouterIn {
-                north: Some(pkt(2, 2)),
-                inject: Some(pkt(2, 2)),
+                north: Some(t(pkt(2, 2))),
+                inject: Some(t(pkt(2, 2))),
                 ..Default::default()
             },
         );
@@ -220,12 +254,12 @@ mod tests {
             1,
             1,
             RouterIn {
-                north: Some(pkt(1, 3)),
-                west: Some(pkt(1, 3)),
+                north: Some(t(pkt(1, 3))),
+                west: Some(t(pkt(1, 3))),
                 ..Default::default()
             },
         );
-        assert_eq!(o.south, Some(pkt(1, 3)));
+        assert_eq!(o.south, Some(t(pkt(1, 3))));
         assert!(o.deflected);
     }
 }

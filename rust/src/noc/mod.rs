@@ -13,6 +13,6 @@ mod hoplite;
 mod network;
 mod packet;
 
-pub use hoplite::{route, RouterIn, RouterOut};
+pub use hoplite::{route, RouterIn, RouterOut, TaggedPacket};
 pub use network::{Network, NetworkStats, StepResult};
 pub use packet::{Packet, MAX_DIM, MAX_LOCAL_NODES};

@@ -5,12 +5,21 @@
 //! ((x+1)%w, y); `y_link[(x,y)]` feeds ((x, (y+1)%h)). All routers switch
 //! simultaneously (double-buffered update).
 //!
-//! Perf note (EXPERIMENTS.md §Perf): `step` is the simulator's hottest
-//! loop after the PE scan; all per-cycle state (`next_*` link buffers and
-//! the [`StepResult`]) is preallocated and swapped/reused — zero
-//! allocation at steady state.
+//! Perf note (DESIGN.md §7): `step` is activity-proportional. Only
+//! routers that can do anything this cycle — routers fed by an occupied
+//! link register, plus routers with an injection request — are visited;
+//! everything else costs nothing. The occupied-slot lists (`x_occ` /
+//! `y_occ`) are maintained incrementally as outputs are written, and the
+//! per-cycle [`StepResult`] buffers are cleared lazily (only the slots
+//! written last cycle), so an idle region of the torus is never touched.
+//! All buffers are preallocated — zero allocation at steady state.
+//!
+//! Every in-flight packet carries its inject cycle as a
+//! [`TaggedPacket`]; delivery latency is the tag delta at eject.
+//! (Recovering the birth by structural packet equality — the old scheme
+//! — silently swapped the birth cycles of identical-payload packets.)
 
-use super::hoplite::{route, RouterIn};
+use super::hoplite::{route, RouterIn, TaggedPacket};
 use super::Packet;
 
 /// Cumulative network statistics.
@@ -32,17 +41,33 @@ pub struct StepResult {
     pub ejected: Vec<Option<Packet>>,
     /// per-PE: was this PE's injection request accepted?
     pub inject_ok: Vec<bool>,
+    /// PEs with a delivery in `ejected` this cycle (sparse mirror, so
+    /// consumers need not scan the dense buffer)
+    pub ejected_pes: Vec<u32>,
 }
 
 /// The Hoplite torus.
 pub struct Network {
     pub w: usize,
     pub h: usize,
-    x_link: Vec<Option<(Packet, u64)>>, // (packet, inject cycle)
-    y_link: Vec<Option<(Packet, u64)>>,
+    x_link: Vec<Option<TaggedPacket>>,
+    y_link: Vec<Option<TaggedPacket>>,
     // double buffers swapped with the live links each cycle
-    x_next: Vec<Option<(Packet, u64)>>,
-    y_next: Vec<Option<(Packet, u64)>>,
+    x_next: Vec<Option<TaggedPacket>>,
+    y_next: Vec<Option<TaggedPacket>>,
+    /// occupied slots of `x_link` / `y_link` — the seed of the
+    /// active-router set, swapped with `*_occ_next` like the links
+    x_occ: Vec<u32>,
+    y_occ: Vec<u32>,
+    x_occ_next: Vec<u32>,
+    y_occ_next: Vec<u32>,
+    /// routers visited this cycle (rebuilt each step; `mark` dedupes)
+    active: Vec<u32>,
+    mark: Vec<bool>,
+    /// `out.inject_ok` slots set last cycle (lazy clearing)
+    granted: Vec<u32>,
+    /// scratch injector list for the dense-inject [`Network::step`]
+    scan_buf: Vec<u32>,
     out: StepResult,
     in_flight: usize,
     cycle: u64,
@@ -60,19 +85,23 @@ impl Network {
             y_link: vec![None; n],
             x_next: vec![None; n],
             y_next: vec![None; n],
+            x_occ: Vec::new(),
+            y_occ: Vec::new(),
+            x_occ_next: Vec::new(),
+            y_occ_next: Vec::new(),
+            active: Vec::new(),
+            mark: vec![false; n],
+            granted: Vec::new(),
+            scan_buf: Vec::new(),
             out: StepResult {
                 ejected: vec![None; n],
                 inject_ok: vec![false; n],
+                ejected_pes: Vec::new(),
             },
             in_flight: 0,
             cycle: 0,
             stats: NetworkStats::default(),
         }
-    }
-
-    #[inline]
-    fn idx(&self, x: usize, y: usize) -> usize {
-        y * self.w + x
     }
 
     /// Packets currently on links. Deflection routing makes in-flight
@@ -95,89 +124,137 @@ impl Network {
     /// (at most one per cycle, per the paper's packet-generation rate).
     /// The returned result borrows internal buffers valid until the next
     /// call.
+    ///
+    /// This convenience form scans `inject` for requests; hot callers
+    /// that already know their injectors (the simulator's active-PE
+    /// worklist) use [`Network::step_sparse`] and skip the scan.
     pub fn step(&mut self, inject: &[Option<Packet>]) -> &StepResult {
+        let mut injectors = std::mem::take(&mut self.scan_buf);
+        injectors.clear();
+        for (pe, slot) in inject.iter().enumerate() {
+            if slot.is_some() {
+                injectors.push(pe as u32);
+            }
+        }
+        self.step_sparse(inject, &injectors);
+        self.scan_buf = injectors;
+        &self.out
+    }
+
+    /// [`Network::step`] with the injecting PEs named up front:
+    /// `injectors` must list exactly the indices where `inject` is
+    /// `Some`. Cost is proportional to packets in flight + injections,
+    /// not to the torus size.
+    pub fn step_sparse(&mut self, inject: &[Option<Packet>], injectors: &[u32]) -> &StepResult {
         debug_assert_eq!(inject.len(), self.w * self.h);
-        for slot in self.x_next.iter_mut() {
-            *slot = None;
-        }
-        for slot in self.y_next.iter_mut() {
-            *slot = None;
-        }
-        for slot in self.out.ejected.iter_mut() {
-            *slot = None;
-        }
-        for slot in self.out.inject_ok.iter_mut() {
-            *slot = false;
-        }
-        let mut in_flight = 0usize;
+        debug_assert!(injectors.iter().all(|&pe| inject[pe as usize].is_some()));
+        debug_assert_eq!(
+            injectors.len(),
+            inject.iter().filter(|s| s.is_some()).count(),
+            "injectors must name every Some slot of inject"
+        );
 
-        for y in 0..self.h {
-            for x in 0..self.w {
-                let me = self.idx(x, y);
-                // W input of (x,y) = x_link register of the router west of us.
-                let west_src = self.idx((x + self.w - 1) % self.w, y);
-                let north_src = self.idx(x, (y + self.h - 1) % self.h);
-                let w_in = self.x_link[west_src];
-                let n_in = self.y_link[north_src];
-                // fast path: idle router (most routers, most cycles)
-                if w_in.is_none() && n_in.is_none() && inject[me].is_none() {
-                    continue;
-                }
-                let io = RouterIn {
-                    west: w_in.map(|(p, _)| p),
-                    north: n_in.map(|(p, _)| p),
-                    inject: inject[me],
-                };
-                let o = route(x as u8, y as u8, io);
+        // lazily clear last cycle's sparse outputs
+        for &pe in &self.out.ejected_pes {
+            self.out.ejected[pe as usize] = None;
+        }
+        self.out.ejected_pes.clear();
+        for &pe in &self.granted {
+            self.out.inject_ok[pe as usize] = false;
+        }
+        self.granted.clear();
 
-                // reconstruct birth cycles for output packets
-                let birth_of = |p: &Packet| -> u64 {
-                    if let Some((q, b)) = w_in {
-                        if q == *p {
-                            return b;
-                        }
-                    }
-                    if let Some((q, b)) = n_in {
-                        if q == *p {
-                            return b;
-                        }
-                    }
-                    self.cycle // freshly injected
-                };
+        // active routers: the ones fed by an occupied link register,
+        // plus the injectors. Everyone else switches nothing.
+        debug_assert!(self.active.is_empty());
+        for &s in &self.x_occ {
+            let (x, y) = (s as usize % self.w, s as usize / self.w);
+            let me = y * self.w + (x + 1) % self.w;
+            if !self.mark[me] {
+                self.mark[me] = true;
+                self.active.push(me as u32);
+            }
+        }
+        for &s in &self.y_occ {
+            let (x, y) = (s as usize % self.w, s as usize / self.w);
+            let me = ((y + 1) % self.h) * self.w + x;
+            if !self.mark[me] {
+                self.mark[me] = true;
+                self.active.push(me as u32);
+            }
+        }
+        for &pe in injectors {
+            let me = pe as usize;
+            if !self.mark[me] {
+                self.mark[me] = true;
+                self.active.push(me as u32);
+            }
+        }
 
-                if let Some(p) = o.east {
-                    self.x_next[me] = Some((p, birth_of(&p)));
-                    in_flight += 1;
-                }
-                if let Some(p) = o.south {
-                    self.y_next[me] = Some((p, birth_of(&p)));
-                    in_flight += 1;
-                }
-                if let Some(p) = o.eject {
-                    let b = birth_of(&p);
-                    let lat = self.cycle - b;
-                    self.stats.delivered += 1;
-                    self.stats.total_latency += lat;
-                    self.stats.max_latency = self.stats.max_latency.max(lat);
-                    self.out.ejected[me] = Some(p);
-                }
-                if o.deflected {
-                    self.stats.deflections += 1;
-                }
-                if io.inject.is_some() {
-                    if o.inject_ok {
-                        self.stats.injected += 1;
-                        self.out.inject_ok[me] = true;
-                    } else {
-                        self.stats.inject_stalls += 1;
-                    }
+        for &r in &self.active {
+            let me = r as usize;
+            let x = me % self.w;
+            let y = me / self.w;
+            // W input of (x,y) = x_link register of the router west of us.
+            let west_src = y * self.w + (x + self.w - 1) % self.w;
+            let north_src = ((y + self.h - 1) % self.h) * self.w + x;
+            let io = RouterIn {
+                west: self.x_link[west_src],
+                north: self.y_link[north_src],
+                inject: inject[me].map(|p| (p, self.cycle)),
+            };
+            let o = route(x as u8, y as u8, io);
+
+            if let Some(t) = o.east {
+                self.x_next[me] = Some(t);
+                self.x_occ_next.push(me as u32);
+            }
+            if let Some(t) = o.south {
+                self.y_next[me] = Some(t);
+                self.y_occ_next.push(me as u32);
+            }
+            if let Some((p, birth)) = o.eject {
+                let lat = self.cycle - birth;
+                self.stats.delivered += 1;
+                self.stats.total_latency += lat;
+                self.stats.max_latency = self.stats.max_latency.max(lat);
+                self.out.ejected[me] = Some(p);
+                self.out.ejected_pes.push(me as u32);
+            }
+            if o.deflected {
+                self.stats.deflections += 1;
+            }
+            if io.inject.is_some() {
+                if o.inject_ok {
+                    self.stats.injected += 1;
+                    self.out.inject_ok[me] = true;
+                    self.granted.push(me as u32);
+                } else {
+                    self.stats.inject_stalls += 1;
                 }
             }
         }
 
+        // reset the dedupe marks and consume the routed link registers
+        // (every occupied input link feeds an active router, which
+        // always forwards or ejects its packet — bufferless routing)
+        for &me in &self.active {
+            self.mark[me as usize] = false;
+        }
+        self.active.clear();
+        for &s in &self.x_occ {
+            self.x_link[s as usize] = None;
+        }
+        for &s in &self.y_occ {
+            self.y_link[s as usize] = None;
+        }
         std::mem::swap(&mut self.x_link, &mut self.x_next);
         std::mem::swap(&mut self.y_link, &mut self.y_next);
-        self.in_flight = in_flight;
+        std::mem::swap(&mut self.x_occ, &mut self.x_occ_next);
+        std::mem::swap(&mut self.y_occ, &mut self.y_occ_next);
+        self.x_occ_next.clear();
+        self.y_occ_next.clear();
+        self.in_flight = self.x_occ.len() + self.y_occ.len();
         self.cycle += 1;
         &self.out
     }
@@ -307,6 +384,52 @@ mod tests {
         assert_eq!(net.stats.total_latency, net.stats.max_latency);
     }
 
+    /// Regression (latency misattribution): two structurally identical
+    /// packets in flight at once must each keep their own birth cycle.
+    /// The old code recovered births by `Packet` equality against the
+    /// router inputs, so when the two met at the destination router the
+    /// ejecting one was charged the *other's* (younger) birth.
+    ///
+    /// 3×3 torus, both packets addressed to (1,1) with equal payloads:
+    /// * B injected at (1,2) on cycle 0 rides the Y ring and ejects on
+    ///   cycle 2 — latency 2;
+    /// * A injected at (0,1) on cycle 1 reaches (1,1) on cycle 2, loses
+    ///   the eject port to B, deflects around the X ring, and ejects on
+    ///   cycle 5 — latency 4.
+    /// Total 6, max 4. The buggy scheme reported total 5 (B charged A's
+    /// birth of 1).
+    #[test]
+    fn identical_packets_keep_their_birth_cycles() {
+        let mut net = Network::new(3, 3);
+        let p = pkt(1, 1, 0); // same destination, same payload for both
+        let n = 9;
+        let pe_a = 3; // (0,1)
+        let pe_b = 7; // (1,2)
+
+        let mut inject: Vec<Option<Packet>> = vec![None; n];
+        inject[pe_b] = Some(p); // B, born cycle 0
+        assert!(net.step(&inject).inject_ok[pe_b]);
+
+        let mut inject: Vec<Option<Packet>> = vec![None; n];
+        inject[pe_a] = Some(p); // A, born cycle 1
+        assert!(net.step(&inject).inject_ok[pe_a]);
+
+        let none: Vec<Option<Packet>> = vec![None; n];
+        let res = net.step(&none); // cycle 2: B ejects, A deflects
+        assert_eq!(res.ejected[4], Some(p), "B delivered at (1,1)");
+        assert_eq!(net.stats.delivered, 1);
+        assert_eq!(net.stats.total_latency, 2, "B charged its own birth");
+        assert_eq!(net.stats.deflections, 1, "A deflected east");
+
+        for _ in 0..3 {
+            net.step(&none); // cycles 3-5: A circles the X ring
+        }
+        assert_eq!(net.stats.delivered, 2);
+        assert!(net.is_empty());
+        assert_eq!(net.stats.total_latency, 2 + 4);
+        assert_eq!(net.stats.max_latency, 4);
+    }
+
     #[test]
     fn one_by_one_torus_self_loop() {
         let mut net = Network::new(1, 1);
@@ -337,8 +460,34 @@ mod tests {
         inject[0] = Some(pkt(0, 0, 1)); // self delivery, cycle 0
         let r = net.step(&inject);
         assert!(r.ejected[0].is_some());
+        assert_eq!(r.ejected_pes, vec![0]);
         let r = net.step(&vec![None; 4]);
         assert!(r.ejected[0].is_none(), "stale ejects must clear");
         assert!(!r.inject_ok[0]);
+        assert!(r.ejected_pes.is_empty());
+    }
+
+    /// `step_sparse` with an explicit injector list is the same machine
+    /// as the scanning `step`.
+    #[test]
+    fn sparse_step_matches_dense_step() {
+        let mut dense = Network::new(4, 4);
+        let mut sparse = Network::new(4, 4);
+        let n = 16;
+        for cycle in 0..40u64 {
+            let mut inject: Vec<Option<Packet>> = vec![None; n];
+            let mut injectors = Vec::new();
+            if cycle < 16 && cycle % 3 != 2 {
+                let pe = cycle as usize;
+                inject[pe] = Some(pkt((pe as u8 * 7 + 3) % 4, (pe as u8 * 5 + 1) % 4, pe as u16));
+                injectors.push(pe as u32);
+            }
+            let a = dense.step(&inject).clone();
+            let b = sparse.step_sparse(&inject, &injectors).clone();
+            assert_eq!(a.ejected, b.ejected, "cycle {cycle}");
+            assert_eq!(a.inject_ok, b.inject_ok, "cycle {cycle}");
+        }
+        assert_eq!(dense.stats, sparse.stats);
+        assert_eq!(dense.in_flight(), sparse.in_flight());
     }
 }

@@ -80,6 +80,85 @@ pub trait ReadyScheduler {
     }
 }
 
+/// Devirtualized scheduler dispatch: one enum per PE instead of a
+/// `Box<dyn ReadyScheduler + Send>`, so the simulator's per-cycle hot
+/// path (`is_empty`/`take`/`mark_ready` on every active PE) compiles to
+/// an inlined match instead of a vtable call per query. The trait stays
+/// the behavioural contract; the conformance suite still exercises every
+/// implementation — including this enum — through trait objects.
+pub enum Scheduler {
+    Fifo(InOrderFifo),
+    Lod(OutOfOrderLod),
+    Lifo(LifoSched),
+    Random(RandomSched),
+}
+
+impl Scheduler {
+    /// The scheduler `kind` selects (the two paper designs). The
+    /// ablation variants (`Lifo`/`Random`) are constructed explicitly.
+    pub fn new(kind: SchedulerKind, num_local: usize, fifo_capacity: Option<usize>) -> Self {
+        match kind {
+            SchedulerKind::InOrder => Scheduler::Fifo(InOrderFifo::new(num_local, fifo_capacity)),
+            SchedulerKind::OutOfOrder => Scheduler::Lod(OutOfOrderLod::new(num_local)),
+        }
+    }
+}
+
+macro_rules! dispatch {
+    ($self:expr, $s:ident => $body:expr) => {
+        match $self {
+            Scheduler::Fifo($s) => $body,
+            Scheduler::Lod($s) => $body,
+            Scheduler::Lifo($s) => $body,
+            Scheduler::Random($s) => $body,
+        }
+    };
+}
+
+impl ReadyScheduler for Scheduler {
+    #[inline]
+    fn mark_ready(&mut self, local_idx: u32) {
+        dispatch!(self, s => s.mark_ready(local_idx))
+    }
+
+    #[inline]
+    fn pick_latency(&self) -> u32 {
+        dispatch!(self, s => s.pick_latency())
+    }
+
+    #[inline]
+    fn take(&mut self) -> Option<u32> {
+        dispatch!(self, s => s.take())
+    }
+
+    #[inline]
+    fn is_empty(&self) -> bool {
+        dispatch!(self, s => s.is_empty())
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        dispatch!(self, s => s.len())
+    }
+
+    #[inline]
+    fn fanout_done(&mut self, local_idx: u32) {
+        dispatch!(self, s => s.fanout_done(local_idx))
+    }
+
+    fn mem_overhead_words(&self) -> usize {
+        dispatch!(self, s => s.mem_overhead_words())
+    }
+
+    fn max_occupancy(&self) -> usize {
+        dispatch!(self, s => s.max_occupancy())
+    }
+
+    fn overflows(&self) -> u64 {
+        dispatch!(self, s => s.overflows())
+    }
+}
+
 /// Construct a scheduler for a PE with `num_local` nodes.
 ///
 /// `fifo_capacity` bounds the in-order ready queue (None = unbounded,
@@ -88,11 +167,8 @@ pub fn make_scheduler(
     kind: SchedulerKind,
     num_local: usize,
     fifo_capacity: Option<usize>,
-) -> Box<dyn ReadyScheduler + Send> {
-    match kind {
-        SchedulerKind::InOrder => Box::new(InOrderFifo::new(num_local, fifo_capacity)),
-        SchedulerKind::OutOfOrder => Box::new(OutOfOrderLod::new(num_local)),
-    }
+) -> Scheduler {
+    Scheduler::new(kind, num_local, fifo_capacity)
 }
 
 #[cfg(test)]
@@ -120,8 +196,52 @@ mod tests {
 
     #[test]
     fn both_schedulers_conform() {
-        conformance(make_scheduler(SchedulerKind::InOrder, 16, None));
-        conformance(make_scheduler(SchedulerKind::OutOfOrder, 16, None));
+        conformance(Box::new(InOrderFifo::new(16, None)));
+        conformance(Box::new(OutOfOrderLod::new(16)));
+    }
+
+    #[test]
+    fn ablation_schedulers_conform() {
+        conformance(Box::new(LifoSched::new(16)));
+        conformance(Box::new(RandomSched::new(16, 7)));
+    }
+
+    /// The devirtualized enum must be indistinguishable from the boxed
+    /// trait objects it replaces — run every variant through the same
+    /// conformance suite, as a trait object.
+    #[test]
+    fn enum_dispatch_conforms() {
+        conformance(Box::new(Scheduler::new(SchedulerKind::InOrder, 16, None)));
+        conformance(Box::new(Scheduler::new(SchedulerKind::OutOfOrder, 16, None)));
+        conformance(Box::new(Scheduler::Lifo(LifoSched::new(16))));
+        conformance(Box::new(Scheduler::Random(RandomSched::new(16, 11))));
+    }
+
+    /// Enum dispatch and direct construction agree operation-for-
+    /// operation on an interleaved mark/take/fanout script.
+    #[test]
+    fn enum_matches_concrete_schedulers() {
+        for kind in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
+            let mut via_enum = Scheduler::new(kind, 64, None);
+            let mut concrete: Box<dyn ReadyScheduler + Send> = match kind {
+                SchedulerKind::InOrder => Box::new(InOrderFifo::new(64, None)),
+                SchedulerKind::OutOfOrder => Box::new(OutOfOrderLod::new(64)),
+            };
+            for i in [9u32, 3, 27, 14] {
+                via_enum.mark_ready(i);
+                concrete.mark_ready(i);
+            }
+            for _ in 0..4 {
+                assert_eq!(via_enum.len(), concrete.len());
+                let (a, b) = (via_enum.take(), concrete.take());
+                assert_eq!(a, b, "{kind:?}");
+                via_enum.fanout_done(a.unwrap());
+                concrete.fanout_done(b.unwrap());
+            }
+            assert_eq!(via_enum.take(), None);
+            assert_eq!(via_enum.max_occupancy(), concrete.max_occupancy());
+            assert_eq!(via_enum.mem_overhead_words(), concrete.mem_overhead_words());
+        }
     }
 
     #[test]

@@ -13,6 +13,11 @@
 //! 4. ALU retirements write back and flag nodes ready (scheduler);
 //! 5. packet-gen state machines advance (scheduling passes, fanout
 //!    drains, completion).
+//!
+//! Stages (3)–(5) are fused and walk the active-PE worklist instead of
+//! sweeping the whole fabric, so host cost tracks *activity*, not
+//! `num_pes` (DESIGN.md §7) — bit-exactly, as `tests/engine_parity.rs`
+//! enforces.
 
 mod stats;
 mod trace;
@@ -25,7 +30,7 @@ use crate::graph::{DataflowGraph, NodeKind};
 use crate::noc::{Network, Packet};
 use crate::pe::{AluPipeline, BramConfig, PacketGen, PgState, PortArbiter, Unit};
 use crate::place::Placement;
-use crate::sched::{make_scheduler, ReadyScheduler, SchedulerKind};
+use crate::sched::{ReadyScheduler, Scheduler, SchedulerKind};
 
 /// Simulation failure modes.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -55,7 +60,7 @@ impl std::fmt::Display for SimError {
 impl std::error::Error for SimError {}
 
 struct PeUnit {
-    sched: Box<dyn ReadyScheduler + Send>,
+    sched: Scheduler,
     alu: AluPipeline,
     pg: PacketGen,
     /// BRAM virtual-port arbiter (multipump model, §II-C)
@@ -82,11 +87,23 @@ pub struct Simulator<'g> {
     completed: usize,
     cycle: u64,
     inject_req: Vec<Option<Packet>>,
+    /// PEs with `inject_req` set, i.e. exactly the `Some` slots — handed
+    /// to [`Network::step_sparse`] so neither side scans the fabric
+    injectors: Vec<u32>,
     // per-cycle network-result copies (preallocated; the network's own
     // StepResult buffers are reused and cannot be borrowed across the
-    // PE-update phase)
+    // PE-update phase). Only slots of PEs with a delivery / an injection
+    // are written, and they are consumed the same cycle.
     eject_buf: Vec<Option<Packet>>,
     grant_buf: Vec<bool>,
+    /// The active-PE worklist: exactly the PEs that can do anything —
+    /// ready or claimed nodes, an in-flight scheduling pass, ALU
+    /// occupancy, or a draining packet-gen unit. The per-cycle PE update
+    /// visits only these (plus PEs receiving a packet, which join here);
+    /// a fully idle PE costs nothing.
+    active: Vec<u32>,
+    /// membership flags for `active` (index = PE)
+    is_active: Vec<bool>,
     /// PEs whose packet-gen unit is mid-drain (O(1) quiescence check for
     /// the skip-ahead engine; every Draining PE injects or stalls each
     /// cycle, so `draining_pes == 0` ⟺ no injection requests pending).
@@ -108,7 +125,7 @@ impl<'g> Simulator<'g> {
         cfg: OverlayConfig,
     ) -> Result<Self, SimError> {
         Self::with_scheduler_factory(g, place, cfg, |kind, num_local| {
-            make_scheduler(kind, num_local, None)
+            Scheduler::new(kind, num_local, None)
         })
     }
 
@@ -121,7 +138,7 @@ impl<'g> Simulator<'g> {
         factory: F,
     ) -> Result<Self, SimError>
     where
-        F: Fn(SchedulerKind, usize) -> Box<dyn ReadyScheduler + Send>,
+        F: Fn(SchedulerKind, usize) -> Scheduler,
     {
         assert_eq!(place.num_pes, cfg.num_pes());
         if cfg.enforce_capacity {
@@ -167,8 +184,11 @@ impl<'g> Simulator<'g> {
             completed: 0,
             cycle: 0,
             inject_req: vec![None; num_pes],
+            injectors: Vec::new(),
             eject_buf: vec![None; num_pes],
             grant_buf: vec![false; num_pes],
+            active: Vec::new(),
+            is_active: vec![false; num_pes],
             draining_pes: 0,
             trace: None,
         };
@@ -177,7 +197,7 @@ impl<'g> Simulator<'g> {
     }
 
     /// Inputs hold their token at cycle 0: value set, flagged ready for
-    /// fanout processing.
+    /// fanout processing (which puts their PEs on the active worklist).
     fn seed_inputs(&mut self) {
         for (i, node) in self.g.nodes().iter().enumerate() {
             if let NodeKind::Input { value } = node.kind {
@@ -186,6 +206,10 @@ impl<'g> Simulator<'g> {
                 let pe = self.place.pe_of[i] as usize;
                 let local = self.place.local_of[i];
                 self.pes[pe].sched.mark_ready(local);
+                if !self.is_active[pe] {
+                    self.is_active[pe] = true;
+                    self.active.push(pe as u32);
+                }
             }
         }
     }
@@ -242,150 +266,49 @@ impl<'g> Simulator<'g> {
     }
 
     /// Advance one cycle. Returns true when the run is complete.
+    ///
+    /// Cost is proportional to *activity*, not fabric size: the network
+    /// visits only routers with traffic, and the PE update walks the
+    /// active worklist — a 16×16 overlay running a sequential chain pays
+    /// for ~1 PE per cycle, not 256.
     pub(crate) fn step(&mut self) -> bool {
-        let num_pes = self.pes.len();
-
-        // (1)+(2) network switches on this cycle's injection requests
+        // (1)+(2) network switches on this cycle's injection requests;
+        // results are copied out sparsely (deliveries + injector grants)
         {
-            let res = self.net.step(&self.inject_req);
-            self.eject_buf.copy_from_slice(&res.ejected);
-            self.grant_buf.copy_from_slice(&res.inject_ok);
-        }
-
-        // (3) consume ejected packets: operand store -> firing -> ALU issue
-        for pe in 0..num_pes {
-            self.pes[pe].ports.reset();
-            if let Some(pkt) = self.eject_buf[pe] {
-                // receive has top priority; budget >= 2 always grants it
-                let granted = self.pes[pe].ports.request(Unit::Receive);
-                debug_assert!(granted);
-                let global = self.global_of(pe, pkt.local_idx as u32) as usize;
-                debug_assert!(!self.computed[global], "operand for computed node");
-                self.operand[global][pkt.slot as usize] = pkt.payload;
-                self.arrived[global] += 1;
-                let node = self.g.node(global as u32);
-                if (self.arrived[global] as usize) == node.arity() {
-                    // dataflow firing rule satisfied: evaluate + issue
-                    let op = node.op().expect("interior node");
-                    self.value[global] =
-                        op.eval(self.operand[global][0], self.operand[global][1]);
-                    self.pes[pe].alu.issue(self.cycle, pkt.local_idx as u32);
+            let res = self.net.step_sparse(&self.inject_req, &self.injectors);
+            for &pe in &res.ejected_pes {
+                let pe = pe as usize;
+                self.eject_buf[pe] = res.ejected[pe];
+                // a delivery (re)activates the destination PE
+                if !self.is_active[pe] {
+                    self.is_active[pe] = true;
+                    self.active.push(pe as u32);
                 }
             }
-        }
-
-        // (4) ALU retirements: writeback + RDY flag (one writeback port
-        // request per result; with the paper's 2x multipump this never
-        // stalls, without it results wait for a free port)
-        for pe in 0..num_pes {
-            let unit = &mut self.pes[pe];
-            while unit.alu.front_due(self.cycle) {
-                if !unit.ports.request(Unit::Writeback) {
-                    break; // retry next cycle
-                }
-                let local = unit.alu.pop_due(self.cycle).unwrap();
-                unit.sched.mark_ready(local);
-                let global = self.place.nodes_of[pe][local as usize] as usize;
-                self.computed[global] = true;
+            for &pe in &self.injectors {
+                self.grant_buf[pe as usize] = res.inject_ok[pe as usize];
             }
         }
+        self.injectors.clear();
 
-        // (5) packet-gen state machines + next cycle's injection requests
-        for pe in 0..num_pes {
-            // fast path: fully idle PE — nothing to resolve, start or emit
+        // (3)-(5) fused per active PE (stages only couple through the
+        // network, which already switched, so per-PE order is free)
+        let mut i = 0;
+        while i < self.active.len() {
+            let pe = self.active[i] as usize;
+            self.step_pe(pe);
+            let unit = &self.pes[pe];
+            if unit.pg.state == PgState::Idle
+                && unit.next_node.is_none()
+                && unit.pick_done_at.is_none()
+                && unit.alu.is_empty()
+                && unit.sched.is_empty()
             {
-                let unit = &self.pes[pe];
-                if unit.pg.state == PgState::Idle
-                    && unit.next_node.is_none()
-                    && unit.pick_done_at.is_none()
-                    && unit.alu.is_empty()
-                    && unit.sched.is_empty()
-                {
-                    debug_assert!(self.inject_req[pe].is_none());
-                    continue;
-                }
-            }
-            let granted = self.grant_buf[pe];
-            // resolve last cycle's drain first
-            if let PgState::Draining { local_idx, edge } = self.pes[pe].pg.state {
-                if self.inject_req[pe].is_some() {
-                    if granted {
-                        let global = self.global_of(pe, local_idx);
-                        let next = edge + 1;
-                        self.pes[pe].pg.busy_cycles += 1;
-                        if (next as usize) == self.g.node(global).fanout.len() {
-                            self.pes[pe].sched.fanout_done(local_idx);
-                            self.completed += 1;
-                            self.pes[pe].pg.state = PgState::Idle;
-                            self.draining_pes -= 1;
-                        } else {
-                            self.pes[pe].pg.state = PgState::Draining {
-                                local_idx,
-                                edge: next,
-                            };
-                        }
-                    } else {
-                        self.pes[pe].pg.stall_cycles += 1;
-                    }
-                }
-            }
-            self.inject_req[pe] = None;
-
-            // Scheduling unit — runs *concurrently* with the drain
-            // pipeline (in hardware the LOD/FIFO pop overlaps packet
-            // generation; the claimed node waits in a 1-entry skid
-            // buffer). Pick latency is only exposed when the PE is idle.
-            if self.pes[pe].next_node.is_none() {
-                match self.pes[pe].pick_done_at {
-                    None => {
-                        if !self.pes[pe].sched.is_empty() {
-                            let done = self.pes[pe].sched.pick_completion(self.cycle);
-                            self.pes[pe].pick_done_at = Some(done);
-                        }
-                    }
-                    Some(done_at) if self.cycle >= done_at => {
-                        self.pes[pe].pick_done_at = None;
-                        if let Some(local) = self.pes[pe].sched.take() {
-                            self.pes[pe].pg.picks += 1;
-                            self.pes[pe].next_node = Some(local);
-                        }
-                    }
-                    Some(_) => {}
-                }
-            }
-
-            // Packet-gen unit: when idle, adopt the claimed node.
-            if self.pes[pe].pg.state == PgState::Idle {
-                if let Some(local) = self.pes[pe].next_node.take() {
-                    let global = self.global_of(pe, local);
-                    if self.g.node(global).fanout.is_empty() {
-                        // sink: nothing to send
-                        self.pes[pe].sched.fanout_done(local);
-                        self.completed += 1;
-                    } else {
-                        self.pes[pe].pg.state = PgState::Draining {
-                            local_idx: local,
-                            edge: 0,
-                        };
-                        self.draining_pes += 1;
-                    }
-                }
-            }
-
-            // emit this cycle's injection request (needs a fanout-edge
-            // read port; stalls without multipumping when receive is hot)
-            if let PgState::Draining { local_idx, edge } = self.pes[pe].pg.state {
-                if self.pes[pe].ports.request(Unit::PacketGen) {
-                    let global = self.global_of(pe, local_idx);
-                    self.inject_req[pe] = Some(self.packet_for(global, edge));
-                } else {
-                    self.pes[pe].pg.stall_cycles += 1;
-                }
-            }
-
-            // utilization accounting
-            if !self.pes[pe].pg.is_idle() || !self.pes[pe].alu.is_empty() {
-                self.pes[pe].busy_cycles += 1;
+                // fully idle: only a future delivery can wake this PE
+                self.is_active[pe] = false;
+                self.active.swap_remove(i);
+            } else {
+                i += 1;
             }
         }
 
@@ -399,11 +322,136 @@ impl<'g> Simulator<'g> {
         self.is_complete()
     }
 
+    /// One cycle of one PE: stages (3) eject consume, (4) ALU retire,
+    /// (5) packet-gen — identical semantics to the former per-stage
+    /// all-PE sweeps.
+    fn step_pe(&mut self, pe: usize) {
+        // (3) consume the ejected packet: operand store -> firing -> issue
+        self.pes[pe].ports.reset();
+        if let Some(pkt) = self.eject_buf[pe].take() {
+            // receive has top priority; budget >= 2 always grants it
+            let granted = self.pes[pe].ports.request(Unit::Receive);
+            debug_assert!(granted);
+            let global = self.global_of(pe, pkt.local_idx as u32) as usize;
+            debug_assert!(!self.computed[global], "operand for computed node");
+            self.operand[global][pkt.slot as usize] = pkt.payload;
+            self.arrived[global] += 1;
+            let node = self.g.node(global as u32);
+            if (self.arrived[global] as usize) == node.arity() {
+                // dataflow firing rule satisfied: evaluate + issue
+                let op = node.op().expect("interior node");
+                self.value[global] = op.eval(self.operand[global][0], self.operand[global][1]);
+                self.pes[pe].alu.issue(self.cycle, pkt.local_idx as u32);
+            }
+        }
+
+        // (4) ALU retirements: writeback + RDY flag (one writeback port
+        // request per result; with the paper's 2x multipump this never
+        // stalls, without it results wait for a free port)
+        {
+            let unit = &mut self.pes[pe];
+            while unit.alu.front_due(self.cycle) {
+                if !unit.ports.request(Unit::Writeback) {
+                    break; // retry next cycle
+                }
+                let local = unit.alu.pop_due(self.cycle).unwrap();
+                unit.sched.mark_ready(local);
+                let global = self.place.nodes_of[pe][local as usize] as usize;
+                self.computed[global] = true;
+            }
+        }
+
+        // (5) packet-gen state machine + next cycle's injection request
+        let granted = self.grant_buf[pe];
+        // resolve last cycle's drain first
+        if let PgState::Draining { local_idx, edge } = self.pes[pe].pg.state {
+            if self.inject_req[pe].is_some() {
+                if granted {
+                    let global = self.global_of(pe, local_idx);
+                    let next = edge + 1;
+                    self.pes[pe].pg.busy_cycles += 1;
+                    if (next as usize) == self.g.node(global).fanout.len() {
+                        self.pes[pe].sched.fanout_done(local_idx);
+                        self.completed += 1;
+                        self.pes[pe].pg.state = PgState::Idle;
+                        self.draining_pes -= 1;
+                    } else {
+                        self.pes[pe].pg.state = PgState::Draining {
+                            local_idx,
+                            edge: next,
+                        };
+                    }
+                } else {
+                    self.pes[pe].pg.stall_cycles += 1;
+                }
+            }
+        }
+        self.inject_req[pe] = None;
+
+        // Scheduling unit — runs *concurrently* with the drain
+        // pipeline (in hardware the LOD/FIFO pop overlaps packet
+        // generation; the claimed node waits in a 1-entry skid
+        // buffer). Pick latency is only exposed when the PE is idle.
+        if self.pes[pe].next_node.is_none() {
+            match self.pes[pe].pick_done_at {
+                None => {
+                    if !self.pes[pe].sched.is_empty() {
+                        let done = self.pes[pe].sched.pick_completion(self.cycle);
+                        self.pes[pe].pick_done_at = Some(done);
+                    }
+                }
+                Some(done_at) if self.cycle >= done_at => {
+                    self.pes[pe].pick_done_at = None;
+                    if let Some(local) = self.pes[pe].sched.take() {
+                        self.pes[pe].pg.picks += 1;
+                        self.pes[pe].next_node = Some(local);
+                    }
+                }
+                Some(_) => {}
+            }
+        }
+
+        // Packet-gen unit: when idle, adopt the claimed node.
+        if self.pes[pe].pg.state == PgState::Idle {
+            if let Some(local) = self.pes[pe].next_node.take() {
+                let global = self.global_of(pe, local);
+                if self.g.node(global).fanout.is_empty() {
+                    // sink: nothing to send
+                    self.pes[pe].sched.fanout_done(local);
+                    self.completed += 1;
+                } else {
+                    self.pes[pe].pg.state = PgState::Draining {
+                        local_idx: local,
+                        edge: 0,
+                    };
+                    self.draining_pes += 1;
+                }
+            }
+        }
+
+        // emit this cycle's injection request (needs a fanout-edge
+        // read port; stalls without multipumping when receive is hot)
+        if let PgState::Draining { local_idx, edge } = self.pes[pe].pg.state {
+            if self.pes[pe].ports.request(Unit::PacketGen) {
+                let global = self.global_of(pe, local_idx);
+                self.inject_req[pe] = Some(self.packet_for(global, edge));
+                self.injectors.push(pe as u32);
+            } else {
+                self.pes[pe].pg.stall_cycles += 1;
+            }
+        }
+
+        // utilization accounting
+        if !self.pes[pe].pg.is_idle() || !self.pes[pe].alu.is_empty() {
+            self.pes[pe].busy_cycles += 1;
+        }
+    }
+
     /// Every node completed its fanout and the overlay has fully drained.
+    /// (`injectors` lists exactly the pending `inject_req` slots, so the
+    /// emptiness check is O(1), not an O(num_pes) scan.)
     pub(crate) fn is_complete(&self) -> bool {
-        self.completed == self.g.len()
-            && self.net.is_empty()
-            && self.inject_req.iter().all(|r| r.is_none())
+        self.completed == self.g.len() && self.net.is_empty() && self.injectors.is_empty()
     }
 
     /// Nothing can change overlay state until a scheduled event fires: no
@@ -422,8 +470,12 @@ impl<'g> Simulator<'g> {
     /// adoption — and `None` when nothing is pending at all (a quiescent
     /// `None` with the graph incomplete is a livelock).
     pub(crate) fn next_event_cycle(&self) -> Option<u64> {
+        // only active PEs can hold a pending event: an idle PE has an
+        // empty ALU, an empty ready set, no pass in flight and no
+        // claimed node (that is what evicted it from the worklist)
         let mut next: Option<u64> = None;
-        for unit in &self.pes {
+        for &pe in &self.active {
+            let unit = &self.pes[pe as usize];
             if (unit.next_node.is_some() && unit.pg.is_idle())
                 || (unit.pick_done_at.is_none() && !unit.sched.is_empty())
             {
@@ -451,7 +503,9 @@ impl<'g> Simulator<'g> {
         if delta == 0 {
             return;
         }
-        for unit in self.pes.iter_mut() {
+        // only active PEs can hold ALU results (idle ⟹ empty pipeline)
+        for &pe in &self.active {
+            let unit = &mut self.pes[pe as usize];
             if !unit.alu.is_empty() {
                 unit.busy_cycles += delta;
             }
@@ -711,8 +765,77 @@ mod tests {
         // ALU ops = interior nodes
         let alu_total: u64 = stats.pe.iter().map(|p| p.alu_ops).sum();
         assert_eq!(alu_total as usize, g.len() - g.num_inputs());
-        // picks = nodes (each node scheduled exactly once)
+        // picks = nodes: each node is marked ready exactly once (inputs
+        // at seed time, interiors at their single writeback), and a
+        // ready node is claimed by exactly one completed pass
         let picks: u64 = stats.pe.iter().map(|p| p.picks).sum();
-        assert!(picks as usize >= g.len());
+        assert_eq!(picks as usize, g.len());
+    }
+
+    #[test]
+    fn worklist_drains_with_completion() {
+        let g = layered_random(12, 5, 16, 2, 4);
+        let cfg = OverlayConfig::default().with_dims(4, 4);
+        let mut sim = Simulator::new(&g, cfg).unwrap();
+        sim.run().unwrap();
+        assert!(
+            sim.active.is_empty(),
+            "all PEs must leave the worklist once idle"
+        );
+        assert!(sim.is_active.iter().all(|&a| !a));
+        assert!(sim.injectors.is_empty());
+    }
+
+    /// An under-provisioned in-order ready FIFO must surface its
+    /// overflow count through the full simulator into `SimStats` (the
+    /// sizing-violation evidence the §III capacity argument rests on).
+    #[test]
+    fn bounded_fifo_overflows_surface_in_sim_stats() {
+        use crate::sched::InOrderFifo;
+        // wide and shallow on one PE: many nodes ready simultaneously
+        let g = layered_random(16, 2, 24, 2, 8);
+        let cfg = OverlayConfig::paper_1x1().with_scheduler(SchedulerKind::InOrder);
+        let place = Placement::build(&g, 1, cfg.placement, cfg.local_order, cfg.seed);
+        let mut sim = Simulator::with_scheduler_factory(&g, place, cfg, |_, num_local| {
+            Scheduler::Fifo(InOrderFifo::new(num_local, Some(1)))
+        })
+        .unwrap();
+        let stats = sim.run().unwrap();
+        assert_eq!(stats.completed, g.len(), "overflowing FIFO still completes");
+        assert!(
+            stats.total_fifo_overflows > 0,
+            "capacity-1 FIFO must overflow: {stats:?}"
+        );
+        assert_eq!(
+            stats.total_fifo_overflows,
+            stats.pe.iter().map(|p| p.fifo_overflows).sum::<u64>()
+        );
+        // the unbounded default never overflows on the same run
+        let baseline = Simulator::new(&g, cfg).unwrap().run().unwrap();
+        assert_eq!(baseline.total_fifo_overflows, 0);
+    }
+
+    /// The ablation schedulers run the full simulator too (the enum has
+    /// `Lifo`/`Random` variants precisely so `sched_micro` can), and all
+    /// pick orders compute identical values.
+    #[test]
+    fn ablation_schedulers_complete_through_simulator() {
+        use crate::sched::{LifoSched, RandomSched};
+        let g = layered_random(12, 4, 16, 2, 6);
+        let cfg = OverlayConfig::default().with_dims(2, 2);
+        for which in 0..2 {
+            let place = Placement::build(&g, 4, cfg.placement, cfg.local_order, cfg.seed);
+            let mut sim = Simulator::with_scheduler_factory(&g, place, cfg, move |_, n| {
+                if which == 0 {
+                    Scheduler::Lifo(LifoSched::new(n))
+                } else {
+                    Scheduler::Random(RandomSched::new(n, 42))
+                }
+            })
+            .unwrap();
+            let stats = sim.run().unwrap();
+            assert_eq!(stats.completed, g.len());
+            check_values(&g, sim.values());
+        }
     }
 }

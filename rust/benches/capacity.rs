@@ -10,9 +10,10 @@
 #[path = "harness.rs"]
 mod harness;
 
-use tdp::config::OverlayConfig;
-use tdp::coordinator::{capacity_experiment, graph_fits};
+use tdp::config::{Overlay, OverlayConfig};
+use tdp::coordinator::capacity_experiment;
 use tdp::pe::BramConfig;
+use tdp::program::Program;
 use tdp::sched::SchedulerKind;
 use tdp::workload::{lu_factorization_graph, SparseMatrix};
 
@@ -32,17 +33,20 @@ fn main() {
     println!("paper at 256 PEs: ≈100K items in-order, ≈5x out-of-order");
 
     harness::section("§III capacity — empirical (grow LU until placement fails)");
-    let cfg = OverlayConfig::default(); // 16x16
+    // one compile per workload answers the fit question for both
+    // schedulers (the scan used to re-place per scheduler)
+    let overlay = Overlay::from_config(OverlayConfig::default()).unwrap(); // 16x16
     let mut last_fit = [0usize; 2]; // [in-order, ooo] footprints
     for n in (100..=3400).step_by(150) {
         let m = SparseMatrix::banded(n, 6, 0.8, 7);
         let (g, _) = lu_factorization_graph(&m);
         let fp = g.footprint();
+        let program = Program::compile(&g, &overlay).unwrap();
         for (i, kind) in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder]
             .into_iter()
             .enumerate()
         {
-            if graph_fits(&g, &cfg, kind) {
+            if program.fits(kind) {
                 last_fit[i] = last_fit[i].max(fp);
             }
         }
@@ -58,7 +62,8 @@ fn main() {
     let t = harness::time_it(1, 5, || {
         let m = SparseMatrix::banded(800, 6, 0.8, 7);
         let (g, _) = lu_factorization_graph(&m);
-        graph_fits(&g, &cfg, SchedulerKind::OutOfOrder)
+        let program = Program::compile(&g, &overlay).unwrap();
+        program.fits(SchedulerKind::InOrder) | program.fits(SchedulerKind::OutOfOrder)
     });
-    harness::report("fit-check (800x800 banded LU)", &t, "");
+    harness::report("compile + fit-check (800x800 banded LU)", &t, "");
 }

@@ -1,0 +1,85 @@
+//! Measures what the compile-once API buys: the wall-clock of a
+//! (scheduler × backend) variant sweep with per-cell recompile (the old
+//! `run_one` shape — placement + criticality labeling re-run for every
+//! cell) vs one shared [`tdp::Program`] per workload. The compile
+//! fraction of the sweep should vanish in the shared column.
+//! (`cargo bench --bench compile_amortization`)
+
+#[path = "harness.rs"]
+mod harness;
+
+use tdp::config::Overlay;
+use tdp::coordinator::fig1_config;
+use tdp::program::{run_batch, Program, RunVariant};
+use tdp::workload::{lu_factorization_graph, SparseMatrix};
+
+fn main() {
+    harness::section("compile-once amortization (per-cell recompile vs shared Program)");
+    // A compile-heavy regime: a large graph whose placement/labeling
+    // cost is material next to its simulation cost.
+    let m = SparseMatrix::banded(600, 5, 0.9, 11);
+    let (g, _) = lu_factorization_graph(&m);
+    let overlay = Overlay::from_config(fig1_config()).unwrap();
+    let variants = RunVariant::all();
+    println!(
+        "workload: banded LU -> {} nodes, {} edges; {} variants/sweep",
+        g.len(),
+        g.num_edges(),
+        variants.len()
+    );
+
+    // compile alone: the one-time cost under the microscope
+    let t_compile = harness::time_it(1, 5, || Program::compile(&g, &overlay).unwrap());
+    harness::report("compile (place + label + images)", &t_compile, "");
+
+    // per-cell recompile: what every sweep paid before the redesign
+    let t_percell = harness::time_it(1, 5, || {
+        for v in &variants {
+            let program = Program::compile(&g, &overlay).unwrap();
+            program
+                .session()
+                .with_scheduler(v.scheduler)
+                .with_backend(v.backend)
+                .run()
+                .unwrap();
+        }
+    });
+    harness::report("sweep, per-cell recompile", &t_percell, "");
+
+    // compile once, share across the same cells
+    let t_shared = harness::time_it(1, 5, || {
+        let program = Program::compile(&g, &overlay).unwrap();
+        for v in &variants {
+            program
+                .session()
+                .with_scheduler(v.scheduler)
+                .with_backend(v.backend)
+                .run()
+                .unwrap();
+        }
+    });
+    harness::report("sweep, shared Program", &t_shared, "");
+
+    // shared + threaded: the run_batch entry point
+    let t_batch = harness::time_it(1, 5, || {
+        let program = Program::compile(&g, &overlay).unwrap();
+        let results = run_batch(&program, &variants, variants.len());
+        assert!(results.iter().all(|r| r.is_ok()));
+    });
+    harness::report("sweep, shared Program + run_batch", &t_batch, "");
+
+    let compile_ns = t_compile.median.as_nanos() as f64;
+    let percell_ns = t_percell.median.as_nanos() as f64;
+    let shared_ns = t_shared.median.as_nanos() as f64;
+    println!(
+        "\ncompile fraction: per-cell recompile {:.1}% of sweep -> shared {:.1}%",
+        100.0 * (compile_ns * variants.len() as f64) / percell_ns,
+        100.0 * compile_ns / shared_ns
+    );
+    println!(
+        "shared-Program speedup over per-cell recompile: {:.3}x \
+         ({:.2} ms of redundant compile removed per sweep)",
+        percell_ns / shared_ns,
+        (variants.len() as f64 - 1.0) * compile_ns / 1e6
+    );
+}

@@ -25,7 +25,7 @@ fn main() {
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let cfg = fig1_config(); // 16x16, paper BRAM geometry, chunked placement
     let t0 = std::time::Instant::now();
-    let rows = fig1_sweep(&ws, cfg, threads);
+    let rows = fig1_sweep(&ws, cfg, threads).expect("sweep completes");
     println!(
         "{:<22} {:>12} {:>7} {:>14} {:>12} {:>8}",
         "workload", "nodes+edges", "depth", "in-order cyc", "ooo cyc", "speedup"

@@ -9,10 +9,10 @@
 #[path = "harness.rs"]
 mod harness;
 
-use tdp::config::OverlayConfig;
-use tdp::coordinator::run_one;
+use tdp::config::{Overlay, OverlayConfig};
 use tdp::lod::{naive_scan, HierLod};
 use tdp::place::LocalOrder;
+use tdp::program::Program;
 use tdp::sched::{make_scheduler, ReadyScheduler, SchedulerKind};
 use tdp::util::rng::Rng;
 use tdp::workload::{lu_factorization_graph, SparseMatrix};
@@ -92,7 +92,8 @@ fn main() {
     ] {
         let mut cfg = base.with_scheduler(kind);
         cfg.local_order = order;
-        let stats = run_one(&g, cfg, kind);
+        let program = Program::compile(&g, &Overlay::from_config(cfg).unwrap()).unwrap();
+        let stats = program.session().run().unwrap();
         rows.push((label.to_string(), stats.cycles));
     }
     // pick-order bounds: LIFO and uniform-random (criticality-blind OoO)

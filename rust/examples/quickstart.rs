@@ -1,17 +1,17 @@
-//! Quickstart: build a small dataflow graph by hand, run it on a 4×4
-//! overlay under both schedulers, and check the computed values against
-//! the reference evaluation.
+//! Quickstart — the canonical compile-once snippet (DESIGN.md §8).
+//!
+//! Build a small dataflow graph by hand, validate a 4×4 overlay
+//! description, compile the graph for it **once** (placement +
+//! criticality labeling), then run cheap sessions under both schedulers
+//! and check the computed values against the reference evaluation.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use tdp::config::OverlayConfig;
-use tdp::graph::{DataflowGraph, Op};
-use tdp::sched::SchedulerKind;
-use tdp::sim::Simulator;
+use tdp::{DataflowGraph, Op, Overlay, Program, SchedulerKind};
 
-fn main() {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // f(a, b) = (a + b) * (a - b), replicated over a few token sets, plus
     // a reduction over the results — a toy dataflow kernel.
     let mut g = DataflowGraph::new();
@@ -37,11 +37,24 @@ fn main() {
     let reference = g.evaluate();
     println!("reference result (max of (a+b)(a-b)) = {}", reference[acc as usize]);
 
+    // 1. Overlay: the validated hardware description.
+    let overlay = Overlay::builder().dims(4, 4).build()?;
+
+    // 2. Program: the one-time compile artifact — placement, criticality
+    //    labels, per-PE BRAM images. Never recomputed below.
+    let program = Program::compile(&g, &overlay)?;
+    println!(
+        "compiled: {} PEs, max {} graph words/PE, {} flag words/PE",
+        overlay.num_pes(),
+        program.max_graph_words(),
+        program.flag_layout().words_per_pe
+    );
+
+    // 3. Sessions: cheap repeatable runs over the shared program.
     for kind in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
-        let cfg = OverlayConfig::default().with_dims(4, 4).with_scheduler(kind);
-        let mut sim = Simulator::new(&g, cfg).expect("placement fits");
-        let stats = sim.run().expect("graph completes");
-        let ok = sim.values() == &reference[..];
+        let mut backend = program.session().with_scheduler(kind).backend()?;
+        let stats = backend.run()?;
+        let ok = backend.values() == &reference[..];
         println!(
             "{:>12}: {:>5} cycles, {} packets, values {}",
             kind.name(),
@@ -52,4 +65,5 @@ fn main() {
         assert!(ok, "simulated dataflow must equal reference");
     }
     println!("quickstart OK");
+    Ok(())
 }

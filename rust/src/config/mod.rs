@@ -1,14 +1,151 @@
 //! Configuration system: every architectural knob of the overlay, the
-//! placement, and workload specs — TOML loading (via `util::toml`) with
-//! paper-faithful defaults.
+//! placement, and workload specs — TOML/JSON (de)serialization (via
+//! `util::toml` / `util::json`) with paper-faithful defaults, and the
+//! validated [`Overlay`] front door of the compile-once API
+//! ([`Overlay`] → [`crate::program::Program`] →
+//! [`crate::program::Session`], DESIGN.md §8).
 
 use crate::engine::BackendKind;
 use crate::pe::BramConfig;
 use crate::place::{LocalOrder, PlacementPolicy};
 use crate::sched::SchedulerKind;
+use crate::util::json::{self, Json};
 use crate::util::toml::{self, Doc, Value};
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::str::FromStr;
+
+/// A rejected overlay configuration (the `ConfigError` arm of
+/// [`crate::error::Error`]): every constraint violation
+/// [`OverlayConfig::validate`] / [`OverlayBuilder::build`] can detect,
+/// with a human-readable message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError(pub String);
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid overlay config: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// A *validated* hardware description — the only way to get one is
+/// through a constructor that ran the constraint checks
+/// ([`Overlay::builder`] / [`Overlay::from_config`]), so every API that
+/// takes an `&Overlay` can assume the knobs are coherent instead of
+/// re-validating or panicking deep in construction.
+///
+/// This is the first layer of the compile-once API:
+/// `Overlay` (validated hardware) → [`crate::program::Program`] (placed
+/// + labeled graph) → [`crate::program::Session`] (cheap repeatable run).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Overlay {
+    cfg: OverlayConfig,
+}
+
+impl Overlay {
+    /// Start a builder at the paper's 16×16 defaults.
+    pub fn builder() -> OverlayBuilder {
+        OverlayBuilder {
+            cfg: OverlayConfig::default(),
+        }
+    }
+
+    /// Validate an existing raw config.
+    pub fn from_config(cfg: OverlayConfig) -> Result<Self, ConfigError> {
+        cfg.validate()?;
+        Ok(Self { cfg })
+    }
+
+    /// Wrap a config *without* validating — for the deprecated shims
+    /// that must keep the seed behavior (garbage knobs fail as deep
+    /// asserts, not typed errors). Never expose this publicly.
+    pub(crate) fn trusted(cfg: OverlayConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// The validated knobs.
+    pub fn config(&self) -> &OverlayConfig {
+        &self.cfg
+    }
+
+    pub fn num_pes(&self) -> usize {
+        self.cfg.num_pes()
+    }
+}
+
+/// Typed builder for [`Overlay`]: set knobs, then `build()` — validation
+/// is not skippable, so an invalid combination is caught at construction
+/// instead of panicking mid-simulation.
+#[derive(Debug, Clone)]
+pub struct OverlayBuilder {
+    cfg: OverlayConfig,
+}
+
+impl OverlayBuilder {
+    /// Start from an existing config instead of the defaults.
+    pub fn from_config(cfg: OverlayConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Torus dimensions (cols × rows).
+    pub fn dims(mut self, cols: usize, rows: usize) -> Self {
+        self.cfg.cols = cols;
+        self.cfg.rows = rows;
+        self
+    }
+
+    pub fn scheduler(mut self, kind: SchedulerKind) -> Self {
+        self.cfg.scheduler = kind;
+        self
+    }
+
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
+    pub fn placement(mut self, policy: PlacementPolicy) -> Self {
+        self.cfg.placement = policy;
+        self
+    }
+
+    pub fn local_order(mut self, order: LocalOrder) -> Self {
+        self.cfg.local_order = order;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn alu_latency(mut self, cycles: u64) -> Self {
+        self.cfg.alu_latency = cycles;
+        self
+    }
+
+    pub fn max_cycles(mut self, cycles: u64) -> Self {
+        self.cfg.max_cycles = cycles;
+        self
+    }
+
+    pub fn enforce_capacity(mut self, on: bool) -> Self {
+        self.cfg.enforce_capacity = on;
+        self
+    }
+
+    pub fn bram(mut self, bram: BramConfig) -> Self {
+        self.cfg.bram = bram;
+        self
+    }
+
+    /// Validate and produce the [`Overlay`].
+    pub fn build(self) -> Result<Overlay, ConfigError> {
+        Overlay::from_config(self.cfg)
+    }
+}
 
 impl FromStr for SchedulerKind {
     type Err = String;
@@ -173,39 +310,89 @@ impl OverlayConfig {
         self
     }
 
-    pub fn validate(&self) -> Result<(), String> {
+    /// Check every cross-knob constraint. Prefer [`Overlay::builder`] /
+    /// [`Overlay::from_config`], which make validation non-optional.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let err = |msg: &str| Err(ConfigError(msg.to_string()));
         if self.cols == 0 || self.rows == 0 {
-            return Err("overlay dimensions must be >= 1".into());
+            return err("overlay dimensions must be >= 1");
         }
         if self.cols > 32 || self.rows > 32 {
-            return Err("torus coordinates are 5b: max 32x32 (packet format)".into());
+            return err("torus coordinates are 5b: max 32x32 (packet format)");
         }
         if self.alu_latency == 0 {
-            return Err("alu_latency must be >= 1".into());
+            return err("alu_latency must be >= 1");
         }
         if self.max_cycles == 0 {
-            return Err("max_cycles must be >= 1".into());
+            return err("max_cycles must be >= 1");
         }
         if self.bram.brams_per_pe == 0 || self.bram.words_per_bram == 0 {
-            return Err("BRAM geometry must be non-zero".into());
+            return err("BRAM geometry must be non-zero");
         }
         // both would otherwise panic deep in construction: flag_bits_used
         // divides in BramConfig::flag_words, multipump sizes the
         // PortArbiter budget (>= 2 physical ports required)
         if self.bram.flag_bits_used == 0 || self.bram.flag_bits_used > self.bram.word_bits {
-            return Err("flag_bits_used must be in [1, word_bits]".into());
+            return err("flag_bits_used must be in [1, word_bits]");
         }
         if self.bram.multipump == 0 {
-            return Err("multipump must be >= 1 (an M20K keeps its 2 physical ports)".into());
+            return err("multipump must be >= 1 (an M20K keeps its 2 physical ports)");
         }
         if self.bram.fifo_brams < 0.0 || self.bram.fifo_brams >= self.bram.brams_per_pe as f64 {
-            return Err("fifo_brams must be in [0, brams_per_pe)".into());
+            return err("fifo_brams must be in [0, brams_per_pe)");
+        }
+        Ok(())
+    }
+
+    /// Recognized keys of the root table and the `[bram]` section —
+    /// anything else is rejected by the strict loaders, so a typo'd knob
+    /// fails loudly instead of silently keeping its default.
+    const ROOT_KEYS: [&'static str; 10] = [
+        "cols",
+        "rows",
+        "scheduler",
+        "alu_latency",
+        "placement",
+        "local_order",
+        "seed",
+        "max_cycles",
+        "enforce_capacity",
+        "backend",
+    ];
+    const BRAM_KEYS: [&'static str; 6] = [
+        "brams_per_pe",
+        "words_per_bram",
+        "word_bits",
+        "flag_bits_used",
+        "fifo_brams",
+        "multipump",
+    ];
+
+    /// Reject unknown sections/keys in a parsed TOML document.
+    fn check_known_keys(doc: &Doc) -> Result<(), String> {
+        for (section, table) in &doc.sections {
+            let allowed: &[&str] = match section.as_str() {
+                "" => &Self::ROOT_KEYS,
+                "bram" => &Self::BRAM_KEYS,
+                other => return Err(format!("unknown config section '[{other}]'")),
+            };
+            for key in table.keys() {
+                if !allowed.contains(&key.as_str()) {
+                    let ctx = if section.is_empty() {
+                        key.clone()
+                    } else {
+                        format!("{section}.{key}")
+                    };
+                    return Err(format!("unknown config key '{ctx}'"));
+                }
+            }
         }
         Ok(())
     }
 
     pub fn from_toml(text: &str) -> Result<Self, String> {
         let doc = toml::parse(text).map_err(|e| e.to_string())?;
+        Self::check_known_keys(&doc)?;
         let mut cfg = Self::default();
         let get_usize = |doc: &Doc, sec: &str, key: &str, cur: usize| -> Result<usize, String> {
             match doc.get(sec, key) {
@@ -213,13 +400,17 @@ impl OverlayConfig {
                 Some(v) => v.as_usize().ok_or_else(|| format!("{key}: expected integer")),
             }
         };
+        // u64 knobs above i64::MAX are written as strings (the TOML
+        // subset's Int is i64) — accept both encodings
         let get_u64 = |doc: &Doc, key: &str, cur: u64| -> Result<u64, String> {
             match doc.get("", key) {
                 None => Ok(cur),
-                Some(v) => v
-                    .as_i64()
-                    .and_then(|i| u64::try_from(i).ok())
-                    .ok_or_else(|| format!("{key}: expected non-negative integer")),
+                Some(Value::Int(i)) => u64::try_from(*i)
+                    .map_err(|_| format!("{key}: expected non-negative integer")),
+                Some(Value::Str(s)) => s
+                    .parse::<u64>()
+                    .map_err(|_| format!("{key}: expected non-negative integer")),
+                Some(_) => Err(format!("{key}: expected non-negative integer")),
             }
         };
         cfg.cols = get_usize(&doc, "", "cols", cfg.cols)?;
@@ -255,7 +446,7 @@ impl OverlayConfig {
         if let Some(v) = doc.get("bram", "fifo_brams") {
             cfg.bram.fifo_brams = v.as_f64().ok_or("fifo_brams: expected number")?;
         }
-        cfg.validate()?;
+        cfg.validate().map_err(|e| e.0)?;
         Ok(cfg)
     }
 
@@ -264,16 +455,26 @@ impl OverlayConfig {
         Self::from_toml(&text)
     }
 
+    /// Exact TOML encoding for a u64 knob: Int up to i64::MAX, decimal
+    /// string beyond (the strict loader accepts both) — a huge `seed`
+    /// must survive save→load, not wrap negative.
+    fn toml_u64(v: u64) -> Value {
+        match i64::try_from(v) {
+            Ok(i) => Value::Int(i),
+            Err(_) => Value::Str(v.to_string()),
+        }
+    }
+
     pub fn to_toml(&self) -> String {
         let mut doc = Doc::new();
         doc.set("", "cols", Value::Int(self.cols as i64));
         doc.set("", "rows", Value::Int(self.rows as i64));
         doc.set("", "scheduler", Value::Str(self.scheduler.toml_name().into()));
-        doc.set("", "alu_latency", Value::Int(self.alu_latency as i64));
+        doc.set("", "alu_latency", Self::toml_u64(self.alu_latency));
         doc.set("", "placement", Value::Str(self.placement.toml_name().into()));
         doc.set("", "local_order", Value::Str(self.local_order.toml_name().into()));
-        doc.set("", "seed", Value::Int(self.seed as i64));
-        doc.set("", "max_cycles", Value::Int(self.max_cycles as i64));
+        doc.set("", "seed", Self::toml_u64(self.seed));
+        doc.set("", "max_cycles", Self::toml_u64(self.max_cycles));
         doc.set("", "enforce_capacity", Value::Bool(self.enforce_capacity));
         doc.set("", "backend", Value::Str(self.backend.toml_name().into()));
         doc.set("bram", "brams_per_pe", Value::Int(self.bram.brams_per_pe as i64));
@@ -283,6 +484,121 @@ impl OverlayConfig {
         doc.set("bram", "fifo_brams", Value::Float(self.bram.fifo_brams));
         doc.set("bram", "multipump", Value::Int(self.bram.multipump as i64));
         doc.render()
+    }
+
+    /// Exact JSON encoding for a u64 knob: a number while exactly
+    /// representable as an f64 (≤ 2^53), a decimal string beyond (the
+    /// strict loader accepts both) — never a silently rounded value.
+    fn json_u64(v: u64) -> Json {
+        if v <= (1u64 << 53) {
+            Json::Num(v as f64)
+        } else {
+            Json::Str(v.to_string())
+        }
+    }
+
+    /// JSON form of the config (same schema as the TOML form: flat knobs
+    /// plus a nested `bram` object). u64 knobs above 2^53 are encoded as
+    /// decimal strings (see [`OverlayConfig::from_json`]).
+    pub fn to_json(&self) -> String {
+        let mut bram = BTreeMap::new();
+        bram.insert("brams_per_pe".to_string(), Json::Num(self.bram.brams_per_pe as f64));
+        bram.insert("words_per_bram".to_string(), Json::Num(self.bram.words_per_bram as f64));
+        bram.insert("word_bits".to_string(), Json::Num(self.bram.word_bits as f64));
+        bram.insert("flag_bits_used".to_string(), Json::Num(self.bram.flag_bits_used as f64));
+        bram.insert("fifo_brams".to_string(), Json::Num(self.bram.fifo_brams));
+        bram.insert("multipump".to_string(), Json::Num(self.bram.multipump as f64));
+        let mut root = BTreeMap::new();
+        root.insert("cols".to_string(), Json::Num(self.cols as f64));
+        root.insert("rows".to_string(), Json::Num(self.rows as f64));
+        root.insert("scheduler".to_string(), Json::Str(self.scheduler.toml_name().into()));
+        root.insert("alu_latency".to_string(), Self::json_u64(self.alu_latency));
+        root.insert("placement".to_string(), Json::Str(self.placement.toml_name().into()));
+        root.insert("local_order".to_string(), Json::Str(self.local_order.toml_name().into()));
+        root.insert("seed".to_string(), Self::json_u64(self.seed));
+        root.insert("max_cycles".to_string(), Self::json_u64(self.max_cycles));
+        root.insert("enforce_capacity".to_string(), Json::Bool(self.enforce_capacity));
+        root.insert("backend".to_string(), Json::Str(self.backend.toml_name().into()));
+        root.insert("bram".to_string(), Json::Obj(bram));
+        json::write(&Json::Obj(root))
+    }
+
+    /// Strict inverse of [`OverlayConfig::to_json`]: absent keys keep
+    /// their defaults, unknown keys are rejected, and the result is
+    /// validated.
+    pub fn from_json(text: &str) -> Result<Self, String> {
+        let j = json::parse(text).map_err(|e| e.to_string())?;
+        let obj = j.as_obj().ok_or("config JSON must be an object")?;
+        let mut cfg = Self::default();
+        // JSON numbers are doubles: above 2^53 the parse silently rounds,
+        // which would load a *different* config (e.g. a changed seed)
+        // with no diagnostic — reject instead of guessing
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        let usz = |key: &str, v: &Json| -> Result<usize, String> {
+            v.as_f64()
+                .filter(|n| *n >= 0.0 && *n <= MAX_EXACT && n.fract() == 0.0)
+                .map(|n| n as usize)
+                .ok_or_else(|| format!("{key}: expected non-negative integer (< 2^53)"))
+        };
+        // u64 knobs: a number (exact below 2^53) or a decimal string
+        // (the exact encoding to_json uses above that)
+        let u64v = |key: &str, v: &Json| -> Result<u64, String> {
+            match v {
+                Json::Num(n) if *n >= 0.0 && *n <= MAX_EXACT && n.fract() == 0.0 => {
+                    Ok(*n as u64)
+                }
+                Json::Str(s) => s
+                    .parse::<u64>()
+                    .map_err(|_| format!("{key}: cannot parse '{s}' as u64")),
+                _ => Err(format!(
+                    "{key}: expected non-negative integer (number < 2^53, or decimal string)"
+                )),
+            }
+        };
+        let strv = |key: &str, v: &Json| -> Result<String, String> {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| format!("{key}: expected string"))
+        };
+        for (key, v) in obj {
+            match key.as_str() {
+                "cols" => cfg.cols = usz(key, v)?,
+                "rows" => cfg.rows = usz(key, v)?,
+                "scheduler" => cfg.scheduler = strv(key, v)?.parse()?,
+                "alu_latency" => cfg.alu_latency = u64v(key, v)?,
+                "placement" => cfg.placement = strv(key, v)?.parse()?,
+                "local_order" => cfg.local_order = strv(key, v)?.parse()?,
+                "seed" => cfg.seed = u64v(key, v)?,
+                "max_cycles" => cfg.max_cycles = u64v(key, v)?,
+                "enforce_capacity" => {
+                    cfg.enforce_capacity = match v {
+                        Json::Bool(b) => *b,
+                        _ => return Err("enforce_capacity: expected bool".into()),
+                    }
+                }
+                "backend" => cfg.backend = strv(key, v)?.parse()?,
+                "bram" => {
+                    let table = v.as_obj().ok_or("bram: expected object")?;
+                    for (k, bv) in table {
+                        match k.as_str() {
+                            "brams_per_pe" => cfg.bram.brams_per_pe = usz(k, bv)?,
+                            "words_per_bram" => cfg.bram.words_per_bram = usz(k, bv)?,
+                            "word_bits" => cfg.bram.word_bits = usz(k, bv)?,
+                            "flag_bits_used" => cfg.bram.flag_bits_used = usz(k, bv)?,
+                            "fifo_brams" => {
+                                cfg.bram.fifo_brams =
+                                    bv.as_f64().ok_or("fifo_brams: expected number")?
+                            }
+                            "multipump" => cfg.bram.multipump = usz(k, bv)?,
+                            other => return Err(format!("unknown config key 'bram.{other}'")),
+                        }
+                    }
+                }
+                other => return Err(format!("unknown config key '{other}'")),
+            }
+        }
+        cfg.validate().map_err(|e| e.0)?;
+        Ok(cfg)
     }
 }
 
@@ -498,8 +814,80 @@ mod tests {
         let a = g.add_input(1.0);
         let b = g.add_input(2.0);
         g.op(crate::graph::Op::Add, &[a, b]);
-        let stats = crate::engine::run_with_backend(&g, c).unwrap();
+        let overlay = Overlay::from_config(c).unwrap();
+        let program = crate::program::Program::compile(&g, &overlay).unwrap();
+        let stats = program.session().run().unwrap();
         assert_eq!(stats.completed, 3);
+    }
+
+    #[test]
+    fn unknown_toml_keys_rejected() {
+        let e = OverlayConfig::from_toml("cols = 4\nbogus_knob = 1\n").unwrap_err();
+        assert!(e.contains("bogus_knob"), "{e}");
+        let e = OverlayConfig::from_toml("[bram]\nbogus = 1\n").unwrap_err();
+        assert!(e.contains("bram.bogus"), "{e}");
+        let e = OverlayConfig::from_toml("[nonsense]\nx = 1\n").unwrap_err();
+        assert!(e.contains("nonsense"), "{e}");
+    }
+
+    /// The knob name lists exist in several places (struct, serializers,
+    /// strict-loader allowlists); this pins them together so a knob
+    /// added to the serializers but not the allowlists fails here with
+    /// an explicit message instead of as a puzzling round-trip error.
+    #[test]
+    fn serializers_and_allowlists_stay_in_sync() {
+        let doc = toml::parse(&OverlayConfig::default().to_toml()).unwrap();
+        let root: Vec<&str> = doc.sections[""].keys().map(|s| s.as_str()).collect();
+        let mut want = OverlayConfig::ROOT_KEYS.to_vec();
+        want.sort_unstable();
+        assert_eq!(root, want, "to_toml must write exactly the accepted root keys");
+        let bram: Vec<&str> = doc.sections["bram"].keys().map(|s| s.as_str()).collect();
+        let mut want_bram = OverlayConfig::BRAM_KEYS.to_vec();
+        want_bram.sort_unstable();
+        assert_eq!(bram, want_bram, "to_toml must write exactly the accepted [bram] keys");
+        // and the JSON serializer emits the same schema (bram nested)
+        let j = json::parse(&OverlayConfig::default().to_json()).unwrap();
+        let obj = j.as_obj().unwrap();
+        let mut json_root: Vec<&str> =
+            obj.keys().map(|s| s.as_str()).filter(|k| *k != "bram").collect();
+        json_root.sort_unstable();
+        assert_eq!(json_root, want, "to_json must write exactly the accepted root keys");
+        let json_bram: Vec<&str> =
+            obj["bram"].as_obj().unwrap().keys().map(|s| s.as_str()).collect();
+        assert_eq!(json_bram, want_bram);
+    }
+
+    #[test]
+    fn json_roundtrip_defaults() {
+        let c = OverlayConfig::default();
+        let c2 = OverlayConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn unknown_json_keys_rejected() {
+        assert!(OverlayConfig::from_json("{\"bogus\": 1}").is_err());
+        assert!(OverlayConfig::from_json("{\"bram\": {\"bogus\": 1}}").is_err());
+        assert!(OverlayConfig::from_json("{\"cols\": \"sixteen\"}").is_err());
+        assert!(OverlayConfig::from_json("[1, 2]").is_err());
+    }
+
+    #[test]
+    fn builder_validates_on_build() {
+        let overlay = Overlay::builder()
+            .dims(2, 3)
+            .scheduler(SchedulerKind::InOrder)
+            .backend(BackendKind::SkipAhead)
+            .seed(7)
+            .build()
+            .unwrap();
+        assert_eq!(overlay.num_pes(), 6);
+        assert_eq!(overlay.config().scheduler, SchedulerKind::InOrder);
+        assert_eq!(overlay.config().backend, BackendKind::SkipAhead);
+        assert!(Overlay::builder().dims(0, 4).build().is_err());
+        assert!(Overlay::builder().dims(33, 1).build().is_err());
+        assert!(Overlay::builder().alu_latency(0).build().is_err());
+        assert!(Overlay::from_config(OverlayConfig::default()).is_ok());
     }
 
     #[test]

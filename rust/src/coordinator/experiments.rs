@@ -1,14 +1,19 @@
 //! The paper's experiments as reusable drivers (benches and the CLI call
 //! into these; DESIGN.md §4 maps each to its table/figure).
+//!
+//! All drivers run on the compile-once API (DESIGN.md §8): each workload
+//! is compiled to a [`Program`] exactly once per overlay shape, and
+//! every scheduler/backend variant runs as a cheap [`Session`] over the
+//! shared artifact — `tests/compile_once.rs` enforces it.
 
-use super::run_parallel;
-use crate::config::OverlayConfig;
-use crate::engine;
+use crate::config::{Overlay, OverlayConfig};
+use crate::error::Error;
 use crate::graph::DataflowGraph;
 use crate::pe::BramConfig;
-use crate::place::Placement;
+use crate::program::{Program, Session};
 use crate::sched::SchedulerKind;
-use crate::sim::SimStats;
+use crate::sim::{SimError, SimStats};
+use crate::util::par::run_parallel;
 
 /// One (workload, scheduler) simulation outcome.
 #[derive(Debug, Clone)]
@@ -36,8 +41,18 @@ pub struct Fig1Row {
 
 /// Run one graph under `kind` on the configured overlay, through the
 /// engine backend `cfg.backend` selects.
-pub fn run_one(g: &DataflowGraph, cfg: OverlayConfig, kind: SchedulerKind) -> SimStats {
-    engine::run_with_backend(g, cfg.with_scheduler(kind)).expect("simulation completes")
+#[deprecated(
+    note = "compile once with `Program::compile` and run through `Session` — \
+            this shim re-places and re-labels the graph on every call"
+)]
+pub fn run_one(
+    g: &DataflowGraph,
+    cfg: OverlayConfig,
+    kind: SchedulerKind,
+) -> Result<SimStats, SimError> {
+    let overlay = Overlay::trusted(cfg.with_scheduler(kind));
+    let program = Program::compile(g, &overlay).map_err(SimError::from)?;
+    program.session().run()
 }
 
 /// The overlay configuration Figure 1 is measured on: the paper's 16×16
@@ -52,32 +67,48 @@ pub fn fig1_config() -> OverlayConfig {
 /// Figure 1: out-of-order speedup over in-order vs. dataflow graph size.
 ///
 /// `workloads` are (label, graph) pairs (see `workload::fig1_workloads`);
-/// each runs under both schedulers on the same overlay config.
+/// each is compiled to a [`Program`] **once** (placement + criticality
+/// labeling are static one-time costs, §II-B) and then runs under both
+/// schedulers as [`Session`]s over the shared artifact.
 ///
-/// The sweep grid is sharded at (workload × scheduler) granularity
+/// The run grid is sharded at (workload × scheduler) granularity
 /// across `jobs` `std::thread::scope` workers — twice the parallelism
 /// of per-workload jobs, and the big in-order runs no longer serialize
 /// behind their own out-of-order halves. The grid is laid out
 /// scheduler-major (all in-order cells, then all out-of-order cells)
 /// so [`run_parallel`]'s static `i % jobs` chunking spreads the slow
 /// in-order runs across every worker instead of pinning them to the
-/// even ones. Each grid cell is an independent simulation and results
-/// come back in job order, so the rows — and any report rendered from
-/// them — are identical for every `jobs` value.
+/// even ones. Each grid cell is an independent session over its
+/// workload's compiled program and results come back in job order, so
+/// the rows — and any report rendered from them — are identical for
+/// every `jobs` value.
 pub fn fig1_sweep(
     workloads: &[(String, DataflowGraph)],
     cfg: OverlayConfig,
     jobs: usize,
-) -> Vec<Fig1Row> {
-    let n = workloads.len();
+) -> Result<Vec<Fig1Row>, Error> {
+    let overlay = Overlay::from_config(cfg)?;
+    // compile phase: one Program per workload, fanned across the same
+    // worker pool (compiles are independent and deterministic, so the
+    // exactly-once guarantee is preserved and compile wall-clock
+    // overlaps instead of serializing on the caller thread)
+    let programs: Vec<Program<'_>> = run_parallel(
+        (0..workloads.len()).collect(),
+        jobs,
+        |i: usize| Program::compile(&workloads[i].1, &overlay),
+    )
+    .into_iter()
+    .collect::<Result<_, _>>()?;
+    let n = programs.len();
     let grid: Vec<(usize, SchedulerKind)> = [SchedulerKind::InOrder, SchedulerKind::OutOfOrder]
         .into_iter()
         .flat_map(|kind| (0..n).map(move |i| (i, kind)))
         .collect();
     let stats = run_parallel(grid, jobs, |(i, kind): (usize, SchedulerKind)| {
-        run_one(&workloads[i].1, cfg, kind)
+        programs[i].session().with_scheduler(kind).run()
     });
-    workloads
+    let stats: Vec<SimStats> = stats.into_iter().collect::<Result<_, SimError>>()?;
+    Ok(workloads
         .iter()
         .enumerate()
         .map(|(i, (label, g))| {
@@ -91,17 +122,23 @@ pub fn fig1_sweep(
                 speedup: s_in.cycles as f64 / s_ooo.cycles as f64,
             }
         })
-        .collect()
+        .collect())
 }
 
 /// Detailed scheduler comparison on one workload (used by `tdp run` and
-/// the ablation bench): returns both outcomes.
-pub fn scheduler_comparison(g: &DataflowGraph, cfg: OverlayConfig, label: &str) -> Vec<RunOutcome> {
+/// the ablation bench): compiles once, runs both schedulers as sessions
+/// over the shared [`Program`], and returns both outcomes.
+pub fn scheduler_comparison(
+    g: &DataflowGraph,
+    cfg: OverlayConfig,
+    label: &str,
+) -> Result<Vec<RunOutcome>, Error> {
+    let program = Program::compile(g, &Overlay::from_config(cfg)?)?;
     [SchedulerKind::InOrder, SchedulerKind::OutOfOrder]
         .into_iter()
         .map(|kind| {
-            let s = run_one(g, cfg, kind);
-            RunOutcome {
+            let s = Session::new(&program).with_scheduler(kind).run()?;
+            Ok(RunOutcome {
                 label: label.to_string(),
                 scheduler: kind,
                 nodes: g.len(),
@@ -109,7 +146,7 @@ pub fn scheduler_comparison(g: &DataflowGraph, cfg: OverlayConfig, label: &str) 
                 cycles: s.cycles,
                 utilization: s.avg_pe_utilization,
                 deflections: s.net.deflections,
-            }
+            })
         })
         .collect()
 }
@@ -145,14 +182,18 @@ pub fn capacity_experiment(bram: &BramConfig, num_pes: usize, edge_per_node: f64
 }
 
 /// Empirical capacity check: does `g` fit the overlay under `kind`?
+#[deprecated(
+    note = "compile a `Program` once and query `Program::fits` for every \
+            scheduler — this shim re-places the graph on each call"
+)]
 pub fn graph_fits(g: &DataflowGraph, cfg: &OverlayConfig, kind: SchedulerKind) -> bool {
-    let place = Placement::build(g, cfg.num_pes(), cfg.placement, cfg.local_order, cfg.seed);
-    let budget = cfg.bram.graph_words(kind);
-    place.nodes_of.iter().all(|locals| {
-        let nodes = locals.len();
-        let edges: usize = locals.iter().map(|&n| g.node(n).fanout.len()).sum();
-        BramConfig::words_used(nodes, edges) <= budget
-    })
+    let mut probe = *cfg;
+    // fits() is a query, not an error: never fail the compile itself
+    probe.enforce_capacity = false;
+    match Program::compile(g, &Overlay::trusted(probe)) {
+        Ok(program) => program.fits(kind),
+        Err(_) => false,
+    }
 }
 
 #[cfg(test)]
@@ -167,7 +208,7 @@ mod tests {
             ("b".into(), layered_random(16, 16, 48, 2, 2)),
         ];
         let cfg = OverlayConfig::default().with_dims(4, 4);
-        let rows = fig1_sweep(&ws, cfg, 2);
+        let rows = fig1_sweep(&ws, cfg, 2).unwrap();
         assert_eq!(rows.len(), 2);
         for r in &rows {
             assert!(r.speedup > 0.5 && r.speedup < 3.0, "{r:?}");
@@ -185,21 +226,35 @@ mod tests {
             ("c".into(), layered_random(8, 4, 16, 1, 3)),
         ];
         let cfg = OverlayConfig::default().with_dims(4, 4);
-        let serial = fig1_sweep(&ws, cfg, 1);
+        let serial = fig1_sweep(&ws, cfg, 1).unwrap();
         for jobs in [2, 4, 16] {
-            assert_eq!(fig1_sweep(&ws, cfg, jobs), serial, "jobs = {jobs}");
+            assert_eq!(fig1_sweep(&ws, cfg, jobs).unwrap(), serial, "jobs = {jobs}");
         }
     }
 
     #[test]
-    fn run_one_backends_agree() {
+    fn fig1_sweep_rejects_invalid_config() {
+        let ws: Vec<(String, DataflowGraph)> = vec![("a".into(), layered_random(4, 2, 4, 1, 0))];
+        let mut cfg = OverlayConfig::default();
+        cfg.cols = 0;
+        assert!(matches!(fig1_sweep(&ws, cfg, 1), Err(Error::Config(_))));
+    }
+
+    /// The deprecated shim still produces bit-identical stats to the
+    /// compile-once path, on both backends.
+    #[test]
+    #[allow(deprecated)]
+    fn run_one_shim_matches_program_path_on_both_backends() {
         use crate::engine::BackendKind;
         let g = layered_random(16, 8, 32, 2, 1);
         let cfg = OverlayConfig::default().with_dims(4, 4);
         for kind in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
-            let a = run_one(&g, cfg, kind);
-            let b = run_one(&g, cfg.with_backend(BackendKind::SkipAhead), kind);
+            let a = run_one(&g, cfg, kind).unwrap();
+            let b = run_one(&g, cfg.with_backend(BackendKind::SkipAhead), kind).unwrap();
             assert_eq!(a, b, "{kind:?}: backend choice must not change stats");
+            let overlay = Overlay::from_config(cfg.with_scheduler(kind)).unwrap();
+            let fresh = Program::compile(&g, &overlay).unwrap().session().run().unwrap();
+            assert_eq!(a, fresh, "{kind:?}: shim must match the Program path");
         }
     }
 
@@ -218,19 +273,27 @@ mod tests {
     }
 
     #[test]
-    fn graph_fits_respects_scheduler_budget() {
+    fn program_fits_respects_scheduler_budget() {
         let m = SparseMatrix::banded(80, 3, 0.8, 3);
         let (g, _) = lu_factorization_graph(&m);
         let cfg = OverlayConfig::default().with_dims(2, 2);
         // ~2K nodes on 4 PEs: fits OoO (3840 w/PE) but not in-order (768 w/PE)
-        assert!(graph_fits(&g, &cfg, SchedulerKind::OutOfOrder));
-        assert!(!graph_fits(&g, &cfg, SchedulerKind::InOrder));
+        let program = Program::compile(&g, &Overlay::from_config(cfg).unwrap()).unwrap();
+        assert!(program.fits(SchedulerKind::OutOfOrder));
+        assert!(!program.fits(SchedulerKind::InOrder));
+        // the deprecated shim agrees
+        #[allow(deprecated)]
+        {
+            assert!(graph_fits(&g, &cfg, SchedulerKind::OutOfOrder));
+            assert!(!graph_fits(&g, &cfg, SchedulerKind::InOrder));
+        }
     }
 
     #[test]
     fn scheduler_comparison_runs_both() {
         let g = layered_random(8, 6, 16, 2, 0);
-        let out = scheduler_comparison(&g, OverlayConfig::default().with_dims(2, 2), "t");
+        let out =
+            scheduler_comparison(&g, OverlayConfig::default().with_dims(2, 2), "t").unwrap();
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].scheduler, SchedulerKind::InOrder);
         assert_eq!(out[1].scheduler, SchedulerKind::OutOfOrder);

@@ -8,15 +8,21 @@
 mod experiments;
 mod report;
 
+#[allow(deprecated)]
+pub use experiments::{graph_fits, run_one};
 pub use experiments::{
-    capacity_experiment, fig1_config, fig1_sweep, graph_fits, run_one, scheduler_comparison,
-    CapacityRow, Fig1Row, RunOutcome,
+    capacity_experiment, fig1_config, fig1_sweep, scheduler_comparison, CapacityRow, Fig1Row,
+    RunOutcome,
 };
 pub use report::{render_csv, render_markdown, Table};
 
-use crate::config::OverlayConfig;
-use crate::engine::{self, SimBackend};
+/// Re-exported for compatibility: the job pool now lives in
+/// [`crate::util::par`].
+pub use crate::util::par::{run_parallel, JobFn};
+
+use crate::config::{Overlay, OverlayConfig};
 use crate::graph::DataflowGraph;
+use crate::program::Program;
 use crate::runtime::XlaRuntime;
 use crate::sim::{SimError, SimStats};
 
@@ -60,7 +66,8 @@ pub fn validate(
     cfg: OverlayConfig,
     rt: Option<&XlaRuntime>,
 ) -> Result<ValidationReport, SimError> {
-    let mut backend = engine::make_backend(g, cfg)?;
+    let program = Program::compile(g, &Overlay::trusted(cfg)).map_err(SimError::from)?;
+    let mut backend = program.session().backend()?;
     let stats = backend.run()?;
     let native = g.evaluate();
     let err_native = max_abs_err(backend.values(), &native);
@@ -75,61 +82,6 @@ pub fn validate(
         max_abs_err_pjrt: err_pjrt,
         nodes_checked: g.len(),
     })
-}
-
-/// Run a set of jobs on `threads` OS threads (simple static partition —
-/// jobs are similar-sized simulator runs).
-pub fn run_parallel<T, F>(jobs: Vec<T>, threads: usize, f: F) -> Vec<<F as JobFn<T>>::Out>
-where
-    T: Send,
-    F: JobFn<T> + Sync,
-    <F as JobFn<T>>::Out: Send,
-{
-    let threads = threads.max(1);
-    let mut out: Vec<Option<<F as JobFn<T>>::Out>> = Vec::new();
-    out.resize_with(jobs.len(), || None);
-    let jobs: Vec<(usize, T)> = jobs.into_iter().enumerate().collect();
-    let chunks: Vec<Vec<(usize, T)>> = {
-        let mut cs: Vec<Vec<(usize, T)>> = (0..threads).map(|_| Vec::new()).collect();
-        for (i, job) in jobs {
-            cs[i % threads].push((i, job));
-        }
-        cs
-    };
-    let slots: Vec<std::sync::Mutex<Vec<(usize, <F as JobFn<T>>::Out)>>> =
-        (0..threads).map(|_| std::sync::Mutex::new(Vec::new())).collect();
-    std::thread::scope(|s| {
-        for (t, chunk) in chunks.into_iter().enumerate() {
-            let f = &f;
-            let slot = &slots[t];
-            s.spawn(move || {
-                let mut results = Vec::with_capacity(chunk.len());
-                for (i, job) in chunk {
-                    results.push((i, f.call(job)));
-                }
-                *slot.lock().unwrap() = results;
-            });
-        }
-    });
-    for slot in slots {
-        for (i, r) in slot.into_inner().unwrap() {
-            out[i] = Some(r);
-        }
-    }
-    out.into_iter().map(|o| o.expect("job completed")).collect()
-}
-
-/// Function-object trait for [`run_parallel`] (stable-rust friendly).
-pub trait JobFn<T> {
-    type Out;
-    fn call(&self, job: T) -> Self::Out;
-}
-
-impl<T, O, F: Fn(T) -> O> JobFn<T> for F {
-    type Out = O;
-    fn call(&self, job: T) -> O {
-        self(job)
-    }
 }
 
 #[cfg(test)]
@@ -155,18 +107,5 @@ mod tests {
         let skip = validate(&g, base.with_backend(BackendKind::SkipAhead), None).unwrap();
         assert!(lock.passed() && skip.passed());
         assert_eq!(lock.stats, skip.stats, "backends must produce identical stats");
-    }
-
-    #[test]
-    fn run_parallel_preserves_order() {
-        let jobs: Vec<u64> = (0..37).collect();
-        let out = run_parallel(jobs, 4, |j: u64| j * 2);
-        assert_eq!(out, (0..37).map(|j| j * 2).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn run_parallel_single_thread() {
-        let out = run_parallel(vec![1, 2, 3], 1, |j: i32| j + 1);
-        assert_eq!(out, vec![2, 3, 4]);
     }
 }

@@ -9,12 +9,29 @@
 //! the lowest address) implicitly issues the most critical ready node.
 
 use crate::graph::{DataflowGraph, NodeId, NodeKind};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of criticality labelings performed (see
+/// [`labeling_count`]).
+static LABELINGS: AtomicU64 = AtomicU64::new(0);
+
+/// Number of [`criticality`] labeling passes since process start.
+///
+/// Labeling is part of the one-time compile cost of a
+/// [`crate::program::Program`]; compile-once tests snapshot this counter
+/// around a sweep to prove labeling is not re-run per scheduler or
+/// backend variant. Monotonic and process-global: compare *deltas*, and
+/// only from a test that owns the whole process.
+pub fn labeling_count() -> u64 {
+    LABELINGS.load(Ordering::Relaxed)
+}
 
 /// Per-node criticality = longest path (in edges) from the node to a sink.
 ///
 /// Computed in one reverse topological sweep (node ids are topologically
 /// ordered by construction).
 pub fn criticality(g: &DataflowGraph) -> Vec<u32> {
+    LABELINGS.fetch_add(1, Ordering::Relaxed);
     let n = g.len();
     let mut height = vec![0u32; n];
     for i in (0..n).rev() {

@@ -4,7 +4,9 @@
 use super::{BackendKind, SimBackend};
 use crate::config::OverlayConfig;
 use crate::graph::DataflowGraph;
+use crate::place::Placement;
 use crate::sim::{SimError, SimStats, Simulator};
+use std::sync::Arc;
 
 /// Cycle-by-cycle reference engine. This is the seed simulator moved
 /// behind the [`SimBackend`] trait; its behavior defines correctness for
@@ -17,6 +19,18 @@ impl<'g> LockstepBackend<'g> {
     pub fn new(g: &'g DataflowGraph, cfg: OverlayConfig) -> Result<Self, SimError> {
         Ok(Self {
             sim: Simulator::new(g, cfg)?,
+        })
+    }
+
+    /// Build over a compiled, shared placement (the
+    /// [`crate::program::Session`] path — no placement work here).
+    pub fn with_shared_placement(
+        g: &'g DataflowGraph,
+        place: Arc<Placement>,
+        cfg: OverlayConfig,
+    ) -> Result<Self, SimError> {
+        Ok(Self {
+            sim: Simulator::with_shared_placement(g, place, cfg)?,
         })
     }
 

@@ -33,7 +33,9 @@ pub use skipahead::SkipAheadBackend;
 
 use crate::config::OverlayConfig;
 use crate::graph::DataflowGraph;
+use crate::place::Placement;
 use crate::sim::{SimError, SimStats};
+use std::sync::Arc;
 
 /// Which stepping engine a run uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -74,7 +76,10 @@ pub trait SimBackend {
     fn cycle(&self) -> u64;
 }
 
-/// Construct the backend selected by `cfg.backend`.
+/// Construct the backend selected by `cfg.backend`. Places the graph as
+/// part of construction; for repeated runs of the same workload prefer
+/// compiling a [`crate::program::Program`] once and opening
+/// [`crate::program::Session`]s (which route through [`backend_for`]).
 pub fn make_backend<'g>(
     g: &'g DataflowGraph,
     cfg: OverlayConfig,
@@ -85,10 +90,31 @@ pub fn make_backend<'g>(
     })
 }
 
+/// Construct the backend selected by `cfg.backend` over an
+/// already-compiled, shared placement — the [`crate::program::Session`]
+/// execution path. No placement or labeling happens here.
+pub fn backend_for<'g>(
+    g: &'g DataflowGraph,
+    place: Arc<Placement>,
+    cfg: OverlayConfig,
+) -> Result<Box<dyn SimBackend + 'g>, SimError> {
+    Ok(match cfg.backend {
+        BackendKind::Lockstep => Box::new(LockstepBackend::with_shared_placement(g, place, cfg)?),
+        BackendKind::SkipAhead => {
+            Box::new(SkipAheadBackend::with_shared_placement(g, place, cfg)?)
+        }
+    })
+}
+
 /// Build the configured backend and run it to completion.
+#[deprecated(
+    note = "compile once with `Program::compile` and run through `Session` — \
+            this shim re-places and re-labels the graph on every call"
+)]
 pub fn run_with_backend(g: &DataflowGraph, cfg: OverlayConfig) -> Result<SimStats, SimError> {
-    let mut backend = make_backend(g, cfg)?;
-    backend.run()
+    let overlay = crate::config::Overlay::trusted(cfg);
+    let program = crate::program::Program::compile(g, &overlay).map_err(SimError::from)?;
+    program.session().run()
 }
 
 #[cfg(test)]
@@ -107,6 +133,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn run_with_backend_completes_on_both() {
         let g = layered_random(8, 4, 12, 2, 1);
         let mut cycles = Vec::new();
@@ -117,6 +144,23 @@ mod tests {
             cycles.push(stats.cycles);
         }
         assert_eq!(cycles[0], cycles[1], "backends must agree on completion cycle");
+    }
+
+    /// The deprecated shim and the compile-once path must be
+    /// bit-identical — the migration guarantee of the API redesign.
+    #[test]
+    #[allow(deprecated)]
+    fn shim_matches_program_session_path() {
+        use crate::config::Overlay;
+        use crate::program::Program;
+        let g = layered_random(10, 5, 16, 2, 3);
+        for kind in BackendKind::ALL {
+            let cfg = OverlayConfig::default().with_dims(3, 3).with_backend(kind);
+            let shim = run_with_backend(&g, cfg).unwrap();
+            let program = Program::compile(&g, &Overlay::from_config(cfg).unwrap()).unwrap();
+            let fresh = program.session().run().unwrap();
+            assert_eq!(shim, fresh, "{kind:?}");
+        }
     }
 
     #[test]

@@ -28,7 +28,9 @@
 use super::{BackendKind, SimBackend};
 use crate::config::OverlayConfig;
 use crate::graph::DataflowGraph;
+use crate::place::Placement;
 use crate::sim::{SimError, SimStats, Simulator};
+use std::sync::Arc;
 
 /// Event-horizon engine over the reference simulator.
 pub struct SkipAheadBackend<'g> {
@@ -41,6 +43,20 @@ impl<'g> SkipAheadBackend<'g> {
     pub fn new(g: &'g DataflowGraph, cfg: OverlayConfig) -> Result<Self, SimError> {
         Ok(Self {
             sim: Simulator::new(g, cfg)?,
+            jumps: 0,
+            cycles_skipped: 0,
+        })
+    }
+
+    /// Build over a compiled, shared placement (the
+    /// [`crate::program::Session`] path — no placement work here).
+    pub fn with_shared_placement(
+        g: &'g DataflowGraph,
+        place: Arc<Placement>,
+        cfg: OverlayConfig,
+    ) -> Result<Self, SimError> {
+        Ok(Self {
+            sim: Simulator::with_shared_placement(g, place, cfg)?,
             jumps: 0,
             cycles_skipped: 0,
         })

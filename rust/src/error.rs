@@ -1,0 +1,84 @@
+//! The crate-wide error surface: everything the compile-once pipeline
+//! ([`crate::config::Overlay`] → [`crate::program::Program`] →
+//! [`crate::program::Session`]) can fail with, as one enum the CLI maps
+//! to non-zero exit codes. Layer-local APIs keep their precise types
+//! ([`ConfigError`], [`CompileError`], [`SimError`]); `Error` is the
+//! union the orchestration layer ([`crate::coordinator`]) and `main`
+//! propagate.
+
+use crate::config::ConfigError;
+use crate::program::CompileError;
+use crate::sim::SimError;
+
+/// A failure anywhere in the validate → compile → run pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Error {
+    /// the overlay description is invalid (validation phase)
+    Config(ConfigError),
+    /// the one-time compile phase failed (placement/capacity)
+    Compile(CompileError),
+    /// the simulation itself failed (cycle limit, runtime capacity)
+    Sim(SimError),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(e) => write!(f, "{e}"),
+            Error::Compile(e) => write!(f, "compile failed: {e}"),
+            Error::Sim(e) => write!(f, "simulation failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Config(e) => Some(e),
+            Error::Compile(e) => Some(e),
+            Error::Sim(e) => Some(e),
+        }
+    }
+}
+
+impl From<ConfigError> for Error {
+    fn from(e: ConfigError) -> Self {
+        Error::Config(e)
+    }
+}
+
+impl From<CompileError> for Error {
+    fn from(e: CompileError) -> Self {
+        Error::Compile(e)
+    }
+}
+
+impl From<SimError> for Error {
+    fn from(e: SimError) -> Self {
+        Error::Sim(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_and_display() {
+        let c: Error = ConfigError("bad knob".into()).into();
+        assert!(c.to_string().contains("bad knob"));
+        let k: Error = CompileError::CapacityExceeded {
+            pe: 3,
+            words_needed: 10,
+            words_available: 5,
+        }
+        .into();
+        assert!(k.to_string().contains("PE 3"), "{k}");
+        let s: Error = SimError::CycleLimitExceeded { cycle: 9, completed: 1, total: 2 }.into();
+        assert!(s.to_string().contains("cycle limit"), "{s}");
+        assert_ne!(c, k);
+        for e in [c, k, s] {
+            assert!(std::error::Error::source(&e).is_some());
+        }
+    }
+}

@@ -17,16 +17,29 @@
 //!   `artifacts/`; loaded at runtime through [`runtime::XlaRuntime`]
 //!   (PJRT CPU) as the numerics oracle. Python never runs on the request
 //!   path.
+//!
+//! Execution API (DESIGN.md §8) — compile once, run many times:
+//! ```no_run
+//! use tdp::{Overlay, Program, SchedulerKind};
+//! # fn demo(g: &tdp::DataflowGraph) -> Result<(), tdp::Error> {
+//! let overlay = Overlay::builder().dims(4, 4).build()?;   // validated hardware
+//! let program = Program::compile(g, &overlay)?;           // place + label once
+//! let ooo = program.session().run()?;                     // cheap repeatable runs
+//! let fifo = program.session().with_scheduler(SchedulerKind::InOrder).run()?;
+//! # let _ = (ooo, fifo); Ok(()) }
+//! ```
 
 pub mod config;
 pub mod coordinator;
 pub mod criticality;
 pub mod engine;
+pub mod error;
 pub mod graph;
 pub mod lod;
 pub mod noc;
 pub mod pe;
 pub mod place;
+pub mod program;
 pub mod resource;
 pub mod runtime;
 pub mod sched;
@@ -34,7 +47,10 @@ pub mod sim;
 pub mod util;
 pub mod workload;
 
-pub use config::OverlayConfig;
+pub use config::{ConfigError, Overlay, OverlayBuilder, OverlayConfig};
 pub use engine::{BackendKind, SimBackend};
+pub use error::Error;
 pub use graph::{DataflowGraph, NodeId, Op};
-pub use sim::{SimStats, Simulator};
+pub use program::{run_batch, CompileError, Program, RunVariant, Session};
+pub use sched::SchedulerKind;
+pub use sim::{SimError, SimStats, Simulator};

@@ -7,15 +7,16 @@
 
 use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
-use tdp::config::{OverlayConfig, WorkloadSpec};
-use tdp::engine::{self, BackendKind};
+use tdp::config::{Overlay, OverlayConfig, WorkloadSpec};
 use tdp::coordinator::{
     self, capacity_experiment, fig1_sweep, render_csv, render_markdown, scheduler_comparison,
     Table,
 };
+use tdp::engine::BackendKind;
 use tdp::graph::{graph_from_json, graph_to_json, DataflowGraph};
 use tdp::noc::{Network, Packet};
 use tdp::pe::BramConfig;
+use tdp::program::Program;
 use tdp::resource;
 use tdp::runtime::XlaRuntime;
 use tdp::sched::SchedulerKind;
@@ -31,7 +32,7 @@ USAGE: tdp <command> [flags]
 COMMANDS
   run         simulate one workload          --workload <toml> | --graph <json>
               [--cols 16 --rows 16 --scheduler both|in_order|out_of_order
-              --backend lockstep|skip-ahead --seed 0]
+              --backend lockstep|skip-ahead --max-cycles N --seed 0]
   sweep       regenerate Figure 1            [--cols 16 --rows 16 --seed 42
               --backend lockstep|skip-ahead
               --jobs N (0 = all cores; --threads is a legacy alias)
@@ -102,6 +103,7 @@ fn cmd_run(mut a: Args) -> Result<()> {
     let rows = a.usize_or("rows", 16)?;
     let sched = a.str_or("scheduler", "both")?;
     let backend = backend_flag(&mut a)?;
+    let max_cycles = a.u64_or("max-cycles", 0)?; // 0 = config default
     let seed = a.u64_or("seed", 0)?;
     a.finish()?;
     let g = load_graph(workload, graph, seed)?;
@@ -114,10 +116,12 @@ fn cmd_run(mut a: Args) -> Result<()> {
         s.max_fanout,
         backend.name()
     );
-    let cfg = OverlayConfig::default().with_dims(cols, rows).with_backend(backend);
-    cfg.validate().map_err(|e| anyhow!(e))?;
+    let mut cfg = OverlayConfig::default().with_dims(cols, rows).with_backend(backend);
+    if max_cycles > 0 {
+        cfg.max_cycles = max_cycles;
+    }
     if sched == "both" {
-        let outs = scheduler_comparison(&g, cfg, "run");
+        let outs = scheduler_comparison(&g, cfg, "run")?;
         for o in &outs {
             println!(
                 "{:>12}: {} cycles, util {:.1}%, {} deflections",
@@ -133,7 +137,9 @@ fn cmd_run(mut a: Args) -> Result<()> {
         );
     } else {
         let kind: SchedulerKind = sched.parse().map_err(|e: String| anyhow!(e))?;
-        let stats = coordinator::run_one(&g, cfg, kind);
+        let overlay = Overlay::from_config(cfg.with_scheduler(kind))?;
+        let program = Program::compile(&g, &overlay)?;
+        let stats = program.session().run()?;
         println!("{}", stats.one_line());
     }
     Ok(())
@@ -156,15 +162,16 @@ fn cmd_sweep(mut a: Args) -> Result<()> {
         jobs = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     }
     let cfg = coordinator::fig1_config().with_dims(cols, rows).with_backend(backend);
-    cfg.validate().map_err(|e| anyhow!(e))?;
+    Overlay::from_config(cfg)?; // fail fast, before generating workloads
     eprintln!("generating Fig.1 workload ladder (seed {seed})...");
     let ws = workload::fig1_workloads(seed);
     eprintln!(
-        "running {} workloads x 2 schedulers on {jobs} jobs ({} backend)...",
+        "running {} workloads x 2 schedulers on {jobs} jobs ({} backend, \
+         each workload compiled once)...",
         ws.len(),
         backend.name()
     );
-    let rows_out = fig1_sweep(&ws, cfg, jobs);
+    let rows_out = fig1_sweep(&ws, cfg, jobs)?;
     let mut t = Table::new(
         &format!("Figure 1 — OoO speedup vs graph size ({cols}x{rows} overlay)"),
         &["workload", "nodes+edges", "depth", "in-order cyc", "ooo cyc", "speedup"],
@@ -209,6 +216,7 @@ fn cmd_validate(mut a: Args) -> Result<()> {
     a.finish()?;
     let g = load_graph(workload, graph, seed)?;
     let cfg = OverlayConfig::default().with_dims(cols, rows).with_backend(backend);
+    Overlay::from_config(cfg)?;
     let rt = if no_pjrt {
         None
     } else {
@@ -330,17 +338,22 @@ fn cmd_capacity(mut a: Args) -> Result<()> {
         Some((cols, rows)) => {
             let m = workload::SparseMatrix::banded(120, 4, 0.9, 1);
             let (g, _) = workload::lu_factorization_graph(&m);
-            let mut cfg = OverlayConfig::default()
-                .with_dims(cols, rows)
-                .with_backend(backend);
-            cfg.enforce_capacity = true;
-            match engine::run_with_backend(&g, cfg) {
-                Ok(stats) => println!(
-                    "probe: lu_banded(n=120) placed under enforcement on {cols}x{rows}, \
-                     {} backend: {} cycles",
-                    backend.name(),
-                    stats.cycles
-                ),
+            let overlay = Overlay::builder()
+                .dims(cols, rows)
+                .backend(backend)
+                .enforce_capacity(true)
+                .build()?;
+            // compile once; the capacity check *is* the compile phase
+            match Program::compile(&g, &overlay) {
+                Ok(program) => match program.session().run() {
+                    Ok(stats) => println!(
+                        "probe: lu_banded(n=120) placed under enforcement on {cols}x{rows}, \
+                         {} backend: {} cycles",
+                        backend.name(),
+                        stats.cycles
+                    ),
+                    Err(e) => println!("probe: lu_banded(n=120) on {cols}x{rows}: {e}"),
+                },
                 Err(e) => println!("probe: lu_banded(n=120) on {cols}x{rows}: {e}"),
             }
         }

@@ -9,6 +9,21 @@
 use crate::criticality;
 use crate::graph::{DataflowGraph, NodeId};
 use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of placements built (see [`build_count`]).
+static BUILDS: AtomicU64 = AtomicU64::new(0);
+
+/// Number of [`Placement`] constructions since process start.
+///
+/// Placement is the dominant one-time compile cost of a
+/// [`crate::program::Program`]; compile-once tests snapshot this counter
+/// around a sweep to prove the same placement is shared across every
+/// scheduler and backend variant. Monotonic and process-global: compare
+/// *deltas*, and only from a test that owns the whole process.
+pub fn build_count() -> u64 {
+    BUILDS.load(Ordering::Relaxed)
+}
 
 /// Partitioning strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -62,6 +77,30 @@ impl Placement {
         order: LocalOrder,
         seed: u64,
     ) -> Self {
+        let pe_of = Self::assign(g, num_pes, policy, seed);
+        Self::from_assignment_with(g, num_pes, pe_of, order, None)
+    }
+
+    /// Build with a precomputed criticality labeling — the compile-once
+    /// path ([`crate::program::Program::compile`]) labels the graph once
+    /// and hands the labels down so the sort does not recompute them.
+    /// `crit[n]` must be the labeling [`criticality::criticality`] would
+    /// return for `g` (one entry per node).
+    pub fn build_with(
+        g: &DataflowGraph,
+        num_pes: usize,
+        policy: PlacementPolicy,
+        order: LocalOrder,
+        seed: u64,
+        crit: &[u32],
+    ) -> Self {
+        let pe_of = Self::assign(g, num_pes, policy, seed);
+        Self::from_assignment_with(g, num_pes, pe_of, order, Some(crit))
+    }
+
+    /// The node→PE assignment of `policy` (shared by [`Placement::build`]
+    /// and [`Placement::build_with`]).
+    fn assign(g: &DataflowGraph, num_pes: usize, policy: PlacementPolicy, seed: u64) -> Vec<u32> {
         assert!(num_pes > 0);
         let n = g.len();
         let mut pe_of = vec![0u32; n];
@@ -89,7 +128,7 @@ impl Placement {
                 }
             }
         }
-        Self::from_assignment(g, num_pes, pe_of, order)
+        pe_of
     }
 
     /// Build from an explicit node→PE map (used by tests and ablations).
@@ -99,6 +138,17 @@ impl Placement {
         pe_of: Vec<u32>,
         order: LocalOrder,
     ) -> Self {
+        Self::from_assignment_with(g, num_pes, pe_of, order, None)
+    }
+
+    fn from_assignment_with(
+        g: &DataflowGraph,
+        num_pes: usize,
+        pe_of: Vec<u32>,
+        order: LocalOrder,
+        crit: Option<&[u32]>,
+    ) -> Self {
+        BUILDS.fetch_add(1, Ordering::Relaxed);
         let n = g.len();
         assert_eq!(pe_of.len(), n);
         let mut nodes_of: Vec<Vec<NodeId>> = vec![Vec::new(); num_pes];
@@ -107,9 +157,19 @@ impl Placement {
             nodes_of[pe as usize].push(node as NodeId);
         }
         if order == LocalOrder::ByCriticality {
-            let crit = criticality::criticality(g);
+            let computed;
+            let crit: &[u32] = match crit {
+                Some(c) => {
+                    debug_assert_eq!(c.len(), n, "criticality labeling size mismatch");
+                    c
+                }
+                None => {
+                    computed = criticality::criticality(g);
+                    &computed
+                }
+            };
             for local in nodes_of.iter_mut() {
-                criticality::sort_by_criticality(local, &crit);
+                criticality::sort_by_criticality(local, crit);
             }
         }
         let mut local_of = vec![0u32; n];
@@ -222,6 +282,29 @@ mod tests {
         let p = Placement::build(&g, 1, PlacementPolicy::RoundRobin, LocalOrder::ByNodeId, 0);
         // footprint = 4 nodes + 4 edges (a->c, b->c, c->d x2)
         assert_eq!(p.max_local_footprint(&g), 8);
+    }
+
+    /// The compile-once path (precomputed labels) must produce the exact
+    /// placement the self-labeling path does — this is what lets a
+    /// `Program` stand in for per-run placement bit-for-bit.
+    #[test]
+    fn build_with_precomputed_criticality_matches_build() {
+        let g = sample();
+        let crit = criticality::criticality(&g);
+        for policy in [
+            PlacementPolicy::RoundRobin,
+            PlacementPolicy::Random,
+            PlacementPolicy::BlockContiguous,
+            PlacementPolicy::Chunked,
+        ] {
+            for order in [LocalOrder::ByCriticality, LocalOrder::ByNodeId] {
+                let a = Placement::build(&g, 4, policy, order, 9);
+                let b = Placement::build_with(&g, 4, policy, order, 9, &crit);
+                assert_eq!(a.pe_of, b.pe_of, "{policy:?}/{order:?}");
+                assert_eq!(a.local_of, b.local_of, "{policy:?}/{order:?}");
+                assert_eq!(a.nodes_of, b.nodes_of, "{policy:?}/{order:?}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,437 @@
+//! The compile-once execution API (DESIGN.md §8).
+//!
+//! The paper's node labeling and placement are a *static one-time* cost
+//! ("a static one-time node labeling algorithm to sort nodes based on
+//! criticality"), yet the pre-redesign entry points re-ran them on every
+//! simulation. This module splits the pipeline the way the paper (and a
+//! real toolflow) does:
+//!
+//! * [`crate::config::Overlay`] — the validated hardware description;
+//! * [`Program`] — the one-time compile artifact: placed graph,
+//!   criticality labels, per-PE BRAM images and the flag-word layout,
+//!   produced by [`Program::compile`];
+//! * [`Session`] — a cheap, resettable executor over a borrowed
+//!   `Program`: pick a scheduler/backend variant, [`Session::run`], and
+//!   repeat — placement and labeling are never redone.
+//!
+//! [`run_batch`] fans a set of scheduler/backend variants across OS
+//! threads, all borrowing the same compiled artifact. Sweeps
+//! ([`crate::coordinator::fig1_sweep`]) and capacity scans
+//! ([`Program::fits`]) compile each workload exactly once per overlay
+//! shape — `tests/compile_once.rs` holds them to that via
+//! [`crate::place::build_count`] / [`crate::criticality::labeling_count`],
+//! and `benches/compile_amortization.rs` measures what the sharing buys.
+
+use crate::config::{Overlay, OverlayConfig};
+use crate::criticality;
+use crate::engine::{self, BackendKind, SimBackend};
+use crate::graph::DataflowGraph;
+use crate::pe::BramConfig;
+use crate::place::Placement;
+use crate::sched::SchedulerKind;
+use crate::sim::{SimError, SimStats};
+use crate::util::par::run_parallel;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Process-wide count of program compilations (see [`compile_count`]).
+static COMPILES: AtomicU64 = AtomicU64::new(0);
+
+/// Number of [`Program::compile`] calls since process start. Monotonic
+/// and process-global: compare *deltas*, and only from a test that owns
+/// the whole process.
+pub fn compile_count() -> u64 {
+    COMPILES.load(Ordering::Relaxed)
+}
+
+/// A failure of the one-time compile phase (the `CompileError` arm of
+/// [`crate::error::Error`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CompileError {
+    /// A PE's local subgraph exceeds its BRAM budget (only checked when
+    /// the overlay sets `enforce_capacity`; the budget is the compile
+    /// scheduler's [`BramConfig::graph_words`]).
+    CapacityExceeded {
+        pe: usize,
+        words_needed: usize,
+        words_available: usize,
+    },
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::CapacityExceeded { pe, words_needed, words_available } => write!(
+                f,
+                "PE {pe} needs {words_needed} BRAM words, has {words_available}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+/// Compile-time capacity failures map onto the simulator's capacity
+/// error (identical fields) so the deprecated one-shot shims keep their
+/// exact pre-redesign error surface.
+impl From<CompileError> for SimError {
+    fn from(e: CompileError) -> Self {
+        match e {
+            CompileError::CapacityExceeded { pe, words_needed, words_available } => {
+                SimError::CapacityExceeded { pe, words_needed, words_available }
+            }
+        }
+    }
+}
+
+/// The compiled BRAM image summary of one PE: what its local subgraph
+/// costs in graph-memory words (§II-B encoding: 2 words per node, 1 per
+/// fanout edge).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeImage {
+    /// nodes resident in this PE's graph memory
+    pub nodes: usize,
+    /// fanout edges stored alongside them
+    pub edges: usize,
+    /// total graph-memory words ([`BramConfig::words_used`])
+    pub graph_words: usize,
+}
+
+/// The flag-word layout of the out-of-order scheduler's RDY/PEND bit
+/// vectors (§II-B: flags packed `flag_bits_used` per word, two vectors
+/// per BRAM) — fixed at compile time by the BRAM geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlagLayout {
+    /// flag bits packed per BRAM word ("for simpler arithmetic" the
+    /// paper uses 32 of the 40)
+    pub bits_per_word: usize,
+    /// RDY + PEND flag words per BRAM
+    pub words_per_bram: usize,
+    /// total flag words per PE ([`BramConfig::flag_words`])
+    pub words_per_pe: usize,
+}
+
+impl FlagLayout {
+    fn of(bram: &BramConfig) -> Self {
+        Self {
+            bits_per_word: bram.flag_bits_used,
+            words_per_bram: 2 * bram.words_per_bram.div_ceil(bram.flag_bits_used),
+            words_per_pe: bram.flag_words(),
+        }
+    }
+}
+
+/// The one-time compile artifact: a graph placed and labeled for one
+/// overlay shape. Immutable once built; any number of [`Session`]s can
+/// borrow it (concurrently — it is `Sync`) and run scheduler/backend
+/// variants without re-placing or re-labeling.
+#[derive(Clone)]
+pub struct Program<'g> {
+    g: &'g DataflowGraph,
+    overlay: Overlay,
+    place: Arc<Placement>,
+    criticality: Vec<u32>,
+    pe_images: Vec<PeImage>,
+    flags: FlagLayout,
+}
+
+impl<'g> Program<'g> {
+    /// Compile `g` for `overlay`: label criticality (one reverse
+    /// topological sweep), place (criticality-sorted local layouts), and
+    /// summarize per-PE BRAM images. This is the entire one-time cost —
+    /// every [`Session`] run afterwards starts from here for free.
+    pub fn compile(g: &'g DataflowGraph, overlay: &Overlay) -> Result<Self, CompileError> {
+        COMPILES.fetch_add(1, Ordering::Relaxed);
+        let cfg = *overlay.config();
+        let crit = criticality::criticality(g);
+        let place = Placement::build_with(
+            g,
+            cfg.num_pes(),
+            cfg.placement,
+            cfg.local_order,
+            cfg.seed,
+            &crit,
+        );
+        let pe_images: Vec<PeImage> = place
+            .nodes_of
+            .iter()
+            .map(|locals| {
+                let nodes = locals.len();
+                let edges: usize = locals.iter().map(|&n| g.node(n).fanout.len()).sum();
+                PeImage {
+                    nodes,
+                    edges,
+                    graph_words: BramConfig::words_used(nodes, edges),
+                }
+            })
+            .collect();
+        // the same check (one implementation) guards direct Simulator
+        // construction, so compile-time and runtime verdicts agree
+        if let Err(SimError::CapacityExceeded { pe, words_needed, words_available }) =
+            crate::sim::check_capacity(g, &place, &cfg)
+        {
+            return Err(CompileError::CapacityExceeded { pe, words_needed, words_available });
+        }
+        Ok(Self {
+            g,
+            overlay: *overlay,
+            place: Arc::new(place),
+            criticality: crit,
+            pe_images,
+            flags: FlagLayout::of(&cfg.bram),
+        })
+    }
+
+    /// The compiled graph.
+    pub fn graph(&self) -> &'g DataflowGraph {
+        self.g
+    }
+
+    /// The overlay this program was compiled for.
+    pub fn overlay(&self) -> &Overlay {
+        &self.overlay
+    }
+
+    /// The node→PE placement and per-PE memory layouts.
+    pub fn placement(&self) -> &Placement {
+        &self.place
+    }
+
+    /// The shared placement handle ([`Session`]s and custom engine
+    /// drivers pass this to [`engine::backend_for`]).
+    pub fn shared_placement(&self) -> Arc<Placement> {
+        Arc::clone(&self.place)
+    }
+
+    /// Per-node criticality labels (§II-B: height to the farthest sink).
+    pub fn criticality(&self) -> &[u32] {
+        &self.criticality
+    }
+
+    /// Per-PE BRAM image summaries.
+    pub fn pe_images(&self) -> &[PeImage] {
+        &self.pe_images
+    }
+
+    /// The out-of-order scheduler's flag-word layout.
+    pub fn flag_layout(&self) -> FlagLayout {
+        self.flags
+    }
+
+    /// Largest per-PE graph-memory footprint (words).
+    pub fn max_graph_words(&self) -> usize {
+        self.pe_images.iter().map(|i| i.graph_words).max().unwrap_or(0)
+    }
+
+    /// Does every PE's image fit `kind`'s BRAM budget? The capacity-scan
+    /// query: one compile answers it for every scheduler.
+    pub fn fits(&self, kind: SchedulerKind) -> bool {
+        let budget = self.overlay.config().bram.graph_words(kind);
+        self.max_graph_words() <= budget
+    }
+
+    /// Open a session at the overlay's default scheduler/backend.
+    pub fn session(&self) -> Session<'_, 'g> {
+        Session::new(self)
+    }
+}
+
+/// A cheap, resettable executor over a compiled [`Program`].
+///
+/// A session is a *plan*, not a running simulator: `with_*` pick the
+/// variant, and every [`Session::run`] call builds a fresh simulator
+/// over the shared placement — so repeated runs are independent (no
+/// state leaks) and sessions can run concurrently from many threads.
+#[derive(Clone, Copy)]
+pub struct Session<'p, 'g> {
+    program: &'p Program<'g>,
+    cfg: OverlayConfig,
+}
+
+impl<'p, 'g> Session<'p, 'g> {
+    /// A session at the program's overlay defaults.
+    pub fn new(program: &'p Program<'g>) -> Self {
+        Self {
+            program,
+            cfg: *program.overlay().config(),
+        }
+    }
+
+    /// Run under `kind` instead of the overlay's default scheduler.
+    pub fn with_scheduler(mut self, kind: SchedulerKind) -> Self {
+        self.cfg.scheduler = kind;
+        self
+    }
+
+    /// Run on `backend` instead of the overlay's default engine.
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
+    /// Override the cycle limit (livelock guard) for this session.
+    pub fn with_max_cycles(mut self, max_cycles: u64) -> Self {
+        self.cfg.max_cycles = max_cycles;
+        self
+    }
+
+    /// The effective scheduler of this session.
+    pub fn scheduler(&self) -> SchedulerKind {
+        self.cfg.scheduler
+    }
+
+    /// The effective engine backend of this session.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.cfg.backend
+    }
+
+    /// Construct (without running) the configured engine backend — for
+    /// callers that need `values()` or incremental control afterwards.
+    pub fn backend(&self) -> Result<Box<dyn SimBackend + 'g>, SimError> {
+        engine::backend_for(self.program.graph(), self.program.shared_placement(), self.cfg)
+    }
+
+    /// Run the compiled program to completion on this session's variant.
+    pub fn run(&self) -> Result<SimStats, SimError> {
+        let mut backend = self.backend()?;
+        backend.run()
+    }
+}
+
+/// One scheduler/backend combination for [`run_batch`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunVariant {
+    pub scheduler: SchedulerKind,
+    pub backend: BackendKind,
+}
+
+impl RunVariant {
+    /// Every scheduler × backend combination (scheduler-major; sized by
+    /// [`BackendKind::ALL`], so new backends are picked up automatically).
+    pub fn all() -> Vec<RunVariant> {
+        [SchedulerKind::InOrder, SchedulerKind::OutOfOrder]
+            .into_iter()
+            .flat_map(|scheduler| {
+                BackendKind::ALL.into_iter().map(move |backend| RunVariant { scheduler, backend })
+            })
+            .collect()
+    }
+}
+
+/// Fan `variants` across `jobs` OS threads, every run borrowing the same
+/// compiled `program` (placement and labels are shared, not recomputed —
+/// the compile cost is paid exactly once for the whole batch). Results
+/// come back in variant order.
+pub fn run_batch(
+    program: &Program<'_>,
+    variants: &[RunVariant],
+    jobs: usize,
+) -> Vec<Result<SimStats, SimError>> {
+    run_parallel(variants.to_vec(), jobs, |v: RunVariant| {
+        program
+            .session()
+            .with_scheduler(v.scheduler)
+            .with_backend(v.backend)
+            .run()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::layered_random;
+
+    fn overlay_2x2() -> Overlay {
+        Overlay::builder().dims(2, 2).build().unwrap()
+    }
+
+    #[test]
+    fn compile_then_run_matches_one_shot_simulator() {
+        let g = layered_random(8, 4, 12, 2, 1);
+        let overlay = overlay_2x2();
+        let program = Program::compile(&g, &overlay).unwrap();
+        let from_program = program.session().run().unwrap();
+        let mut one_shot = crate::sim::Simulator::new(&g, *overlay.config()).unwrap();
+        let direct = one_shot.run().unwrap();
+        assert_eq!(from_program, direct);
+    }
+
+    #[test]
+    fn program_exposes_compile_artifacts() {
+        let g = layered_random(8, 4, 12, 2, 1);
+        let overlay = overlay_2x2();
+        let program = Program::compile(&g, &overlay).unwrap();
+        assert_eq!(program.criticality().len(), g.len());
+        assert_eq!(program.pe_images().len(), 4);
+        let nodes: usize = program.pe_images().iter().map(|i| i.nodes).sum();
+        let edges: usize = program.pe_images().iter().map(|i| i.edges).sum();
+        assert_eq!(nodes, g.len());
+        assert_eq!(edges, g.num_edges());
+        for (pe, img) in program.pe_images().iter().enumerate() {
+            assert_eq!(img.nodes, program.placement().nodes_of[pe].len());
+            assert_eq!(img.graph_words, BramConfig::words_used(img.nodes, img.edges));
+        }
+        // paper geometry: 32 bits/word, 2*16 words/BRAM, 256 words/PE
+        let flags = program.flag_layout();
+        assert_eq!(flags.bits_per_word, 32);
+        assert_eq!(flags.words_per_bram, 32);
+        assert_eq!(flags.words_per_pe, 256);
+    }
+
+    #[test]
+    fn sessions_are_independent_and_reconfigurable() {
+        let g = layered_random(10, 5, 16, 2, 2);
+        let overlay = overlay_2x2();
+        let program = Program::compile(&g, &overlay).unwrap();
+        let base = program.session().run().unwrap();
+        for _ in 0..3 {
+            assert_eq!(program.session().run().unwrap(), base, "no state leaks");
+        }
+        let in_order = program.session().with_scheduler(SchedulerKind::InOrder).run().unwrap();
+        assert_eq!(in_order.scheduler, SchedulerKind::InOrder);
+        let skip = program.session().with_backend(BackendKind::SkipAhead).run().unwrap();
+        assert_eq!(skip, base, "backends are bit-exact over the same program");
+    }
+
+    #[test]
+    fn session_max_cycles_override_fails_like_simulator() {
+        let g = layered_random(8, 4, 8, 1, 0);
+        let overlay = overlay_2x2();
+        let program = Program::compile(&g, &overlay).unwrap();
+        match program.session().with_max_cycles(3).run() {
+            Err(SimError::CycleLimitExceeded { cycle, .. }) => assert_eq!(cycle, 3),
+            other => panic!("expected cycle limit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn compile_enforces_capacity() {
+        let g = layered_random(64, 32, 128, 2, 0); // ~4K nodes on 1 PE
+        let overlay = Overlay::builder().dims(1, 1).enforce_capacity(true).build().unwrap();
+        match Program::compile(&g, &overlay) {
+            Err(CompileError::CapacityExceeded { words_needed, words_available, .. }) => {
+                assert!(words_needed > words_available);
+            }
+            Ok(_) => panic!("expected capacity error"),
+        }
+        assert!(!Program::compile(&g, &overlay_2x2()).unwrap().fits(SchedulerKind::InOrder));
+    }
+
+    #[test]
+    fn run_batch_covers_all_variants_in_order() {
+        let g = layered_random(8, 4, 12, 2, 4);
+        let overlay = overlay_2x2();
+        let program = Program::compile(&g, &overlay).unwrap();
+        let variants = RunVariant::all();
+        let results = run_batch(&program, &variants, 3);
+        assert_eq!(results.len(), variants.len());
+        for (v, r) in variants.iter().zip(&results) {
+            let stats = r.as_ref().unwrap();
+            assert_eq!(stats.scheduler, v.scheduler, "results stay in variant order");
+            assert_eq!(stats.completed, g.len());
+        }
+        // lockstep and skip-ahead agree per scheduler
+        assert_eq!(results[0].as_ref().unwrap(), results[1].as_ref().unwrap());
+        assert_eq!(results[2].as_ref().unwrap(), results[3].as_ref().unwrap());
+    }
+}

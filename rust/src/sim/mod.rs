@@ -31,6 +31,7 @@ use crate::noc::{Network, Packet};
 use crate::pe::{AluPipeline, BramConfig, PacketGen, PgState, PortArbiter, Unit};
 use crate::place::Placement;
 use crate::sched::{ReadyScheduler, Scheduler, SchedulerKind};
+use std::sync::Arc;
 
 /// Simulation failure modes.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -59,6 +60,35 @@ impl std::fmt::Display for SimError {
 
 impl std::error::Error for SimError {}
 
+/// The per-PE BRAM budget check (no-op unless `cfg.enforce_capacity`),
+/// shared by the compile phase ([`crate::program::Program::compile`])
+/// and direct simulator construction — one implementation, so the
+/// compile-time and runtime capacity verdicts (and their error fields)
+/// can never diverge.
+pub(crate) fn check_capacity(
+    g: &DataflowGraph,
+    place: &Placement,
+    cfg: &OverlayConfig,
+) -> Result<(), SimError> {
+    if !cfg.enforce_capacity {
+        return Ok(());
+    }
+    let budget = cfg.bram.graph_words(cfg.scheduler);
+    for (pe, locals) in place.nodes_of.iter().enumerate() {
+        let nodes = locals.len();
+        let edges: usize = locals.iter().map(|&n| g.node(n).fanout.len()).sum();
+        let need = BramConfig::words_used(nodes, edges);
+        if need > budget {
+            return Err(SimError::CapacityExceeded {
+                pe,
+                words_needed: need,
+                words_available: budget,
+            });
+        }
+    }
+    Ok(())
+}
+
 struct PeUnit {
     sched: Scheduler,
     alu: AluPipeline,
@@ -73,9 +103,15 @@ struct PeUnit {
 }
 
 /// The overlay simulator for one (graph, placement, config) instance.
+///
+/// The placement is held behind an [`Arc`] so a compiled
+/// [`crate::program::Program`] can hand the same placement to any number
+/// of concurrent sessions without re-placing (or even cloning) the
+/// graph; the one-shot constructors wrap their freshly built placement
+/// in a private `Arc`.
 pub struct Simulator<'g> {
     g: &'g DataflowGraph,
-    place: Placement,
+    place: Arc<Placement>,
     cfg: OverlayConfig,
     net: Network,
     pes: Vec<PeUnit>,
@@ -124,7 +160,18 @@ impl<'g> Simulator<'g> {
         place: Placement,
         cfg: OverlayConfig,
     ) -> Result<Self, SimError> {
-        Self::with_scheduler_factory(g, place, cfg, |kind, num_local| {
+        Self::with_shared_placement(g, Arc::new(place), cfg)
+    }
+
+    /// Build over an already-compiled, shared placement — the
+    /// compile-once path ([`crate::program::Session`]): no placement or
+    /// labeling work happens here, only per-PE unit construction.
+    pub fn with_shared_placement(
+        g: &'g DataflowGraph,
+        place: Arc<Placement>,
+        cfg: OverlayConfig,
+    ) -> Result<Self, SimError> {
+        Self::with_scheduler_factory_shared(g, place, cfg, |kind, num_local| {
             Scheduler::new(kind, num_local, None)
         })
     }
@@ -140,22 +187,21 @@ impl<'g> Simulator<'g> {
     where
         F: Fn(SchedulerKind, usize) -> Scheduler,
     {
+        Self::with_scheduler_factory_shared(g, Arc::new(place), cfg, factory)
+    }
+
+    /// [`Simulator::with_scheduler_factory`] over a shared placement.
+    pub fn with_scheduler_factory_shared<F>(
+        g: &'g DataflowGraph,
+        place: Arc<Placement>,
+        cfg: OverlayConfig,
+        factory: F,
+    ) -> Result<Self, SimError>
+    where
+        F: Fn(SchedulerKind, usize) -> Scheduler,
+    {
         assert_eq!(place.num_pes, cfg.num_pes());
-        if cfg.enforce_capacity {
-            let budget = cfg.bram.graph_words(cfg.scheduler);
-            for (pe, locals) in place.nodes_of.iter().enumerate() {
-                let nodes = locals.len();
-                let edges: usize = locals.iter().map(|&n| g.node(n).fanout.len()).sum();
-                let need = BramConfig::words_used(nodes, edges);
-                if need > budget {
-                    return Err(SimError::CapacityExceeded {
-                        pe,
-                        words_needed: need,
-                        words_available: budget,
-                    });
-                }
-            }
-        }
+        check_capacity(g, &place, &cfg)?;
         let n = g.len();
         let num_pes = cfg.num_pes();
         let pes = place

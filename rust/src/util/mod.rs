@@ -1,9 +1,11 @@
 //! In-tree substrates replacing crates that are unavailable in the
 //! offline build universe (DESIGN.md §2): a deterministic PRNG (`rand`),
 //! a JSON parser/writer (`serde_json`), a TOML-subset parser (`toml`),
-//! and a flag-style CLI argument parser (`clap`).
+//! a flag-style CLI argument parser (`clap`), and a scoped-thread job
+//! pool (`rayon`).
 
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod toml;

@@ -1,0 +1,94 @@
+//! Scoped-thread job pool: run a batch of similar-sized jobs on N OS
+//! threads with a simple static partition, returning results in job
+//! order regardless of completion order (the determinism guarantee the
+//! sweep reports rely on).
+
+/// Run a set of jobs on `threads` OS threads (simple static partition —
+/// jobs are similar-sized simulator runs). Results come back in job
+/// order: report rows are byte-identical for every thread count.
+pub fn run_parallel<T, F>(jobs: Vec<T>, threads: usize, f: F) -> Vec<<F as JobFn<T>>::Out>
+where
+    T: Send,
+    F: JobFn<T> + Sync,
+    <F as JobFn<T>>::Out: Send,
+{
+    let threads = threads.max(1);
+    let total = jobs.len();
+    let jobs: Vec<(usize, T)> = jobs.into_iter().enumerate().collect();
+    let chunks: Vec<Vec<(usize, T)>> = {
+        let mut cs: Vec<Vec<(usize, T)>> = (0..threads).map(|_| Vec::new()).collect();
+        for (i, job) in jobs {
+            cs[i % threads].push((i, job));
+        }
+        cs
+    };
+    let slots: Vec<std::sync::Mutex<Vec<(usize, <F as JobFn<T>>::Out)>>> =
+        (0..threads).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+    std::thread::scope(|s| {
+        for (t, chunk) in chunks.into_iter().enumerate() {
+            let f = &f;
+            let slot = &slots[t];
+            s.spawn(move || {
+                let mut results = Vec::with_capacity(chunk.len());
+                for (i, job) in chunk {
+                    results.push((i, f.call(job)));
+                }
+                *slot.lock().unwrap() = results;
+            });
+        }
+    });
+    // Every job ran exactly once: a panicking worker has already
+    // propagated through the scope's implicit join, so reaching this
+    // point means all (index, result) pairs are present — restore job
+    // order by index.
+    let mut results: Vec<(usize, <F as JobFn<T>>::Out)> = Vec::with_capacity(total);
+    for slot in slots {
+        results.append(&mut slot.into_inner().unwrap());
+    }
+    debug_assert_eq!(results.len(), total);
+    results.sort_unstable_by_key(|e| e.0);
+    results.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Function-object trait for [`run_parallel`] (stable-rust friendly).
+pub trait JobFn<T> {
+    type Out;
+    fn call(&self, job: T) -> Self::Out;
+}
+
+impl<T, O, F: Fn(T) -> O> JobFn<T> for F {
+    type Out = O;
+    fn call(&self, job: T) -> O {
+        self(job)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_parallel_preserves_order() {
+        let jobs: Vec<u64> = (0..37).collect();
+        let out = run_parallel(jobs, 4, |j: u64| j * 2);
+        assert_eq!(out, (0..37).map(|j| j * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_parallel_single_thread() {
+        let out = run_parallel(vec![1, 2, 3], 1, |j: i32| j + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn run_parallel_more_threads_than_jobs() {
+        let out = run_parallel(vec![5usize], 16, |j: usize| j * j);
+        assert_eq!(out, vec![25]);
+    }
+
+    #[test]
+    fn run_parallel_empty() {
+        let out = run_parallel(Vec::<u32>::new(), 4, |j: u32| j);
+        assert!(out.is_empty());
+    }
+}

@@ -163,6 +163,53 @@ fn analyze_traces_both_schedulers() {
     assert!(text.contains("=== out-of-order ==="));
 }
 
+/// A failing simulation must exit non-zero with the typed error on
+/// stderr (the `Error` → exit-code propagation of the compile-once API).
+#[test]
+fn simulation_failure_exits_nonzero() {
+    let out = tdp()
+        .args([
+            "run",
+            "--workload",
+            "kind = \"reduction\"\\nwidth = 64",
+            "--cols",
+            "2",
+            "--rows",
+            "2",
+            "--scheduler",
+            "out_of_order",
+            "--max-cycles",
+            "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "cycle-limited run must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("cycle limit"), "typed error on stderr: {err}");
+}
+
+/// An invalid overlay description fails at validation, not as a panic.
+#[test]
+fn invalid_overlay_exits_nonzero() {
+    let out = tdp()
+        .args([
+            "run",
+            "--workload",
+            "kind = \"reduction\"\\nwidth = 8",
+            "--cols",
+            "64",
+            "--rows",
+            "1",
+            "--scheduler",
+            "out_of_order",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("invalid overlay config"), "{err}");
+}
+
 #[test]
 fn unknown_command_fails() {
     let out = tdp().arg("frobnicate").output().unwrap();

@@ -1,0 +1,72 @@
+//! Compile-once acceptance (ISSUE): the Fig.1 sweep and the capacity
+//! scan compile each workload exactly once per overlay shape —
+//! placement and criticality labeling are never re-run per scheduler or
+//! backend variant. Verified with the process-global construction
+//! counters (`place::build_count`, `criticality::labeling_count`,
+//! `program::compile_count`).
+//!
+//! NOTE: the counters are process-global and `cargo test` runs tests of
+//! one binary concurrently, so this file holds exactly ONE `#[test]`
+//! (its own process) and measures strictly sequential deltas.
+
+use tdp::config::Overlay;
+use tdp::coordinator::{fig1_config, fig1_sweep};
+use tdp::criticality;
+use tdp::graph::DataflowGraph;
+use tdp::place;
+use tdp::program::{compile_count, run_batch, Program, RunVariant};
+use tdp::sched::SchedulerKind;
+use tdp::workload::layered_random;
+
+#[test]
+fn sweeps_and_scans_compile_each_workload_exactly_once() {
+    let ws: Vec<(String, DataflowGraph)> = vec![
+        ("a".into(), layered_random(12, 6, 24, 2, 1)),
+        ("b".into(), layered_random(16, 8, 32, 2, 2)),
+        ("c".into(), layered_random(8, 4, 16, 1, 3)),
+    ];
+    let cfg = fig1_config().with_dims(4, 4);
+    let overlay = Overlay::from_config(cfg).unwrap();
+
+    // --- Fig.1 sweep: N workloads x 2 schedulers, N compiles ---
+    let places0 = place::build_count();
+    let labels0 = criticality::labeling_count();
+    let compiles0 = compile_count();
+    let rows = fig1_sweep(&ws, cfg, 4).unwrap();
+    assert_eq!(rows.len(), ws.len());
+    assert_eq!(
+        compile_count() - compiles0,
+        ws.len() as u64,
+        "one Program per workload"
+    );
+    assert_eq!(
+        place::build_count() - places0,
+        ws.len() as u64,
+        "placement must not be re-run per scheduler"
+    );
+    assert_eq!(
+        criticality::labeling_count() - labels0,
+        ws.len() as u64,
+        "criticality labeling must not be re-run per scheduler"
+    );
+
+    // --- capacity scan: one compile answers both schedulers ---
+    let places1 = place::build_count();
+    for (_, g) in &ws {
+        let program = Program::compile(g, &overlay).unwrap();
+        let in_order = program.fits(SchedulerKind::InOrder);
+        let ooo = program.fits(SchedulerKind::OutOfOrder);
+        assert!(ooo || !in_order, "OoO budget dominates in-order");
+    }
+    assert_eq!(place::build_count() - places1, ws.len() as u64);
+
+    // --- run_batch: 4 variants, still a single placement ---
+    let places2 = place::build_count();
+    let labels2 = criticality::labeling_count();
+    let program = Program::compile(&ws[0].1, &overlay).unwrap();
+    let results = run_batch(&program, &RunVariant::all(), 2);
+    assert_eq!(results.len(), 4);
+    assert!(results.iter().all(|r| r.is_ok()));
+    assert_eq!(place::build_count() - places2, 1, "run_batch shares one placement");
+    assert_eq!(criticality::labeling_count() - labels2, 1);
+}

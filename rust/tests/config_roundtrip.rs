@@ -1,0 +1,151 @@
+//! OverlayConfig serialization round-trips (ISSUE satellite): every
+//! field survives save→load through both TOML and JSON, and unknown
+//! keys are rejected by both strict loaders.
+
+use tdp::config::OverlayConfig;
+use tdp::engine::BackendKind;
+use tdp::pe::BramConfig;
+use tdp::place::{LocalOrder, PlacementPolicy};
+use tdp::sched::SchedulerKind;
+
+/// A config where *every* field differs from its default (and still
+/// validates), so a field dropped by either serializer fails the
+/// round-trip assertion instead of hiding behind a default.
+fn every_field_nondefault() -> OverlayConfig {
+    let cfg = OverlayConfig {
+        cols: 5,
+        rows: 7,
+        scheduler: SchedulerKind::InOrder,
+        bram: BramConfig {
+            brams_per_pe: 4,
+            words_per_bram: 256,
+            word_bits: 36,
+            flag_bits_used: 18,
+            fifo_brams: 1.25,
+            multipump: 3,
+        },
+        alu_latency: 9,
+        placement: PlacementPolicy::Random,
+        local_order: LocalOrder::ByNodeId,
+        seed: 123_456_789,
+        max_cycles: 77_000,
+        enforce_capacity: true,
+        backend: BackendKind::SkipAhead,
+    };
+    let d = OverlayConfig::default();
+    assert_ne!(cfg.cols, d.cols);
+    assert_ne!(cfg.rows, d.rows);
+    assert_ne!(cfg.scheduler, d.scheduler);
+    assert_ne!(cfg.bram, d.bram);
+    assert_ne!(cfg.alu_latency, d.alu_latency);
+    assert_ne!(cfg.placement, d.placement);
+    assert_ne!(cfg.local_order, d.local_order);
+    assert_ne!(cfg.seed, d.seed);
+    assert_ne!(cfg.max_cycles, d.max_cycles);
+    assert_ne!(cfg.enforce_capacity, d.enforce_capacity);
+    assert_ne!(cfg.backend, d.backend);
+    cfg.validate().unwrap();
+    cfg
+}
+
+#[test]
+fn toml_roundtrip_preserves_every_field() {
+    let cfg = every_field_nondefault();
+    let text = cfg.to_toml();
+    let back = OverlayConfig::from_toml(&text).unwrap();
+    assert_eq!(back, cfg, "TOML save->load must be the identity:\n{text}");
+}
+
+#[test]
+fn json_roundtrip_preserves_every_field() {
+    let cfg = every_field_nondefault();
+    let text = cfg.to_json();
+    let back = OverlayConfig::from_json(&text).unwrap();
+    assert_eq!(back, cfg, "JSON save->load must be the identity:\n{text}");
+}
+
+#[test]
+fn formats_agree_on_defaults() {
+    let d = OverlayConfig::default();
+    assert_eq!(OverlayConfig::from_toml(&d.to_toml()).unwrap(), d);
+    assert_eq!(OverlayConfig::from_json(&d.to_json()).unwrap(), d);
+    // cross-format: TOML text -> config -> JSON text -> config
+    let via_both = OverlayConfig::from_json(
+        &OverlayConfig::from_toml(&every_field_nondefault().to_toml()).unwrap().to_json(),
+    )
+    .unwrap();
+    assert_eq!(via_both, every_field_nondefault());
+}
+
+/// u64 knobs beyond the formats' exact-integer ranges (i64 for the TOML
+/// subset, 2^53 for JSON doubles) must still round-trip — they are
+/// written as decimal strings, never silently wrapped or rounded.
+#[test]
+fn huge_u64_knobs_roundtrip_exactly() {
+    let mut cfg = OverlayConfig::default();
+    for seed in [u64::MAX, (1 << 53) + 1, i64::MAX as u64 + 1] {
+        cfg.seed = seed;
+        let t = OverlayConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(t.seed, seed, "TOML roundtrip of seed {seed}");
+        let j = OverlayConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(j.seed, seed, "JSON roundtrip of seed {seed}");
+    }
+    // string encoding is also accepted directly
+    assert_eq!(
+        OverlayConfig::from_json("{\"seed\": \"18446744073709551615\"}").unwrap().seed,
+        u64::MAX
+    );
+    assert_eq!(
+        OverlayConfig::from_toml("seed = \"18446744073709551615\"\n").unwrap().seed,
+        u64::MAX
+    );
+}
+
+#[test]
+fn toml_unknown_keys_rejected() {
+    for (text, needle) in [
+        ("cols = 4\nbogus = 1\n", "bogus"),
+        ("collumns = 4\n", "collumns"),
+        ("[bram]\ntypo_knob = 8\n", "bram.typo_knob"),
+        ("[brams]\nbrams_per_pe = 8\n", "brams"),
+    ] {
+        let err = OverlayConfig::from_toml(text).unwrap_err();
+        assert!(err.contains(needle), "'{text}' -> {err}");
+    }
+}
+
+#[test]
+fn json_unknown_keys_rejected() {
+    for (text, needle) in [
+        ("{\"cols\": 4, \"bogus\": 1}", "bogus"),
+        ("{\"bram\": {\"typo_knob\": 8}}", "bram.typo_knob"),
+    ] {
+        let err = OverlayConfig::from_json(text).unwrap_err();
+        assert!(err.contains(needle), "'{text}' -> {err}");
+    }
+}
+
+#[test]
+fn json_type_and_shape_errors() {
+    assert!(OverlayConfig::from_json("[]").is_err());
+    assert!(OverlayConfig::from_json("{\"cols\": \"x\"}").is_err());
+    assert!(OverlayConfig::from_json("{\"cols\": 2.5}").is_err());
+    assert!(OverlayConfig::from_json("{\"seed\": -1}").is_err());
+    assert!(OverlayConfig::from_json("{\"enforce_capacity\": 1}").is_err());
+    assert!(OverlayConfig::from_json("{\"bram\": 4}").is_err());
+    // loaded configs are validated like built ones
+    assert!(OverlayConfig::from_json("{\"cols\": 0}").is_err());
+    assert!(OverlayConfig::from_json("{\"cols\": 64}").is_err());
+}
+
+#[test]
+fn partial_documents_keep_defaults() {
+    let t = OverlayConfig::from_toml("cols = 4\n").unwrap();
+    let j = OverlayConfig::from_json("{\"cols\": 4}").unwrap();
+    assert_eq!(t, j);
+    assert_eq!(t.rows, OverlayConfig::default().rows);
+    assert_eq!(
+        OverlayConfig::from_json("{}").unwrap(),
+        OverlayConfig::default()
+    );
+}

@@ -1,0 +1,158 @@
+//! Program reuse (ISSUE satellite): compile once, run under every
+//! scheduler and both engine backends, and assert the stats are
+//! identical to the fresh-compile path — no state leaks across
+//! `Session` runs, and the deprecated one-shot shims stay bit-identical.
+
+use tdp::config::{Overlay, OverlayConfig};
+use tdp::engine::BackendKind;
+use tdp::program::{run_batch, Program, RunVariant};
+use tdp::sched::{LifoSched, RandomSched, Scheduler, SchedulerKind};
+use tdp::sim::Simulator;
+use tdp::workload::{layered_random, lu_factorization_graph, SparseMatrix};
+
+const SCHEDULERS: [SchedulerKind; 2] = [SchedulerKind::InOrder, SchedulerKind::OutOfOrder];
+
+#[test]
+fn one_program_all_variants_matches_fresh_compile() {
+    let m = SparseMatrix::banded(40, 3, 0.9, 1);
+    let (g, _) = lu_factorization_graph(&m);
+    let cfg = OverlayConfig::default().with_dims(4, 4);
+    let overlay = Overlay::from_config(cfg).unwrap();
+    let shared = Program::compile(&g, &overlay).unwrap();
+    for kind in SCHEDULERS {
+        for backend in BackendKind::ALL {
+            let from_shared = shared
+                .session()
+                .with_scheduler(kind)
+                .with_backend(backend)
+                .run()
+                .unwrap();
+            // fresh compile per variant — the old cost model
+            let fresh = Program::compile(&g, &overlay)
+                .unwrap()
+                .session()
+                .with_scheduler(kind)
+                .with_backend(backend)
+                .run()
+                .unwrap();
+            assert_eq!(from_shared, fresh, "{kind:?}/{backend:?}");
+            // the legacy one-shot simulator agrees bit-for-bit
+            let direct_cfg = cfg.with_scheduler(kind).with_backend(backend);
+            let mut sim = Simulator::new(&g, direct_cfg).unwrap();
+            assert_eq!(sim.run().unwrap(), from_shared, "{kind:?}/{backend:?} vs Simulator");
+            // and so does the deprecated shim
+            #[allow(deprecated)]
+            let shim = tdp::coordinator::run_one(&g, cfg.with_backend(backend), kind).unwrap();
+            assert_eq!(shim, from_shared, "{kind:?}/{backend:?} vs run_one shim");
+        }
+    }
+}
+
+#[test]
+fn repeated_sessions_leak_no_state() {
+    let g = layered_random(16, 8, 24, 2, 3);
+    let overlay = Overlay::builder().dims(3, 3).build().unwrap();
+    let program = Program::compile(&g, &overlay).unwrap();
+    for kind in SCHEDULERS {
+        for backend in BackendKind::ALL {
+            let session = program.session().with_scheduler(kind).with_backend(backend);
+            let first = session.run().unwrap();
+            for rep in 0..3 {
+                assert_eq!(session.run().unwrap(), first, "{kind:?}/{backend:?} rep {rep}");
+            }
+        }
+    }
+}
+
+#[test]
+fn session_values_match_reference_evaluation() {
+    let g = layered_random(12, 6, 20, 2, 7);
+    let want = g.evaluate();
+    let overlay = Overlay::builder().dims(2, 2).build().unwrap();
+    let program = Program::compile(&g, &overlay).unwrap();
+    for kind in SCHEDULERS {
+        let mut backend = program.session().with_scheduler(kind).backend().unwrap();
+        backend.run().unwrap();
+        for (i, (a, b)) in backend.values().iter().zip(&want).enumerate() {
+            assert!(
+                (a == b) || (a.is_nan() && b.is_nan()),
+                "{kind:?} node {i}: sim={a}, ref={b}"
+            );
+        }
+    }
+}
+
+/// All four scheduler variants run over one compiled placement: the two
+/// paper schedulers through `Session`, the LIFO/random ablations through
+/// the scheduler-factory hook on the program's placement — nothing
+/// re-places the graph.
+#[test]
+fn ablation_schedulers_reuse_compiled_placement() {
+    let g = layered_random(12, 4, 16, 2, 6);
+    let cfg = OverlayConfig::default().with_dims(2, 2);
+    let overlay = Overlay::from_config(cfg).unwrap();
+    let program = Program::compile(&g, &overlay).unwrap();
+    for kind in SCHEDULERS {
+        let stats = program.session().with_scheduler(kind).run().unwrap();
+        assert_eq!(stats.completed, g.len());
+    }
+    for which in 0..2 {
+        let mut sim = Simulator::with_scheduler_factory_shared(
+            &g,
+            program.shared_placement(),
+            cfg,
+            move |_, n| {
+                if which == 0 {
+                    Scheduler::Lifo(LifoSched::new(n))
+                } else {
+                    Scheduler::Random(RandomSched::new(n, 42))
+                }
+            },
+        )
+        .unwrap();
+        let stats = sim.run().unwrap();
+        assert_eq!(stats.completed, g.len(), "ablation {which}");
+    }
+}
+
+#[test]
+fn run_batch_matches_serial_sessions() {
+    let g = layered_random(14, 6, 20, 2, 9);
+    let overlay = Overlay::builder().dims(3, 3).build().unwrap();
+    let program = Program::compile(&g, &overlay).unwrap();
+    let variants = RunVariant::all();
+    let batch = run_batch(&program, &variants, 4);
+    assert_eq!(batch.len(), variants.len());
+    for (v, r) in variants.iter().zip(batch) {
+        let serial = program
+            .session()
+            .with_scheduler(v.scheduler)
+            .with_backend(v.backend)
+            .run()
+            .unwrap();
+        assert_eq!(r.unwrap(), serial, "{v:?}");
+    }
+}
+
+/// Compile-time capacity errors carry the same fields the runtime check
+/// reported before the redesign, and the deprecated shim still surfaces
+/// them as `SimError`.
+#[test]
+fn capacity_error_shapes_agree_across_paths() {
+    use tdp::program::CompileError;
+    use tdp::sim::SimError;
+    let g = layered_random(64, 32, 128, 2, 0); // ~4K nodes on 1 PE
+    let mut cfg = OverlayConfig::default().with_dims(1, 1);
+    cfg.enforce_capacity = true;
+    let overlay = Overlay::from_config(cfg).unwrap();
+    let CompileError::CapacityExceeded { pe, words_needed, words_available } =
+        Program::compile(&g, &overlay).unwrap_err();
+    #[allow(deprecated)]
+    let shim_err = tdp::engine::run_with_backend(&g, cfg).unwrap_err();
+    assert_eq!(
+        shim_err,
+        SimError::CapacityExceeded { pe, words_needed, words_available }
+    );
+    let direct_err = Simulator::new(&g, cfg).err().unwrap();
+    assert_eq!(shim_err, direct_err, "shim matches the pre-redesign error");
+}

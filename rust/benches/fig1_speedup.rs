@@ -17,7 +17,9 @@ use tdp::workload;
 fn main() {
     harness::section("Figure 1 — OoO speedup vs graph size (16x16 overlay)");
     let full = std::env::var("FIG1_FULL").is_ok();
-    let mut ws = workload::fig1_workloads(42);
+    // specs, not graphs: generation happens inside the service engine
+    // the sweep runs on (the ladder is ordered smallest matrix first)
+    let mut ws = workload::fig1_specs(42);
     if !full {
         ws.truncate(6);
         eprintln!("(set FIG1_FULL=1 for the full ladder)");

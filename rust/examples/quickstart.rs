@@ -9,6 +9,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
+use tdp::service::{Engine, JobSpec};
 use tdp::{DataflowGraph, Op, Overlay, Program, SchedulerKind};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -64,6 +65,19 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         );
         assert!(ok, "simulated dataflow must equal reference");
     }
+    // 4. Service (DESIGN.md §9): for request streams, let an Engine own
+    //    the compile cache — jobs name workloads by spec string, and
+    //    duplicates are served from the already-compiled Program.
+    let engine = Engine::new();
+    let job = JobSpec::from_json(r#"{"workload": "chain:256:seed=7", "cols": 4, "rows": 4}"#)?;
+    let cold = engine.submit(&job)?;
+    let warm = engine.submit(&job)?;
+    assert!(warm.cache_hit && warm.stats == cold.stats);
+    println!(
+        "service: {} compiled in {}us, replayed from cache in {}us ({} cycles)",
+        warm.workload, cold.compile_micros, warm.run_micros, warm.stats.cycles
+    );
+
     println!("quickstart OK");
     Ok(())
 }

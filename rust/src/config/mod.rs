@@ -501,6 +501,12 @@ impl OverlayConfig {
     /// plus a nested `bram` object). u64 knobs above 2^53 are encoded as
     /// decimal strings (see [`OverlayConfig::from_json`]).
     pub fn to_json(&self) -> String {
+        json::write(&self.to_json_value())
+    }
+
+    /// The [`OverlayConfig::to_json`] object as a [`Json`] value — for
+    /// embedding in larger documents (service job specs).
+    pub fn to_json_value(&self) -> Json {
         let mut bram = BTreeMap::new();
         bram.insert("brams_per_pe".to_string(), Json::Num(self.bram.brams_per_pe as f64));
         bram.insert("words_per_bram".to_string(), Json::Num(self.bram.words_per_bram as f64));
@@ -520,7 +526,7 @@ impl OverlayConfig {
         root.insert("enforce_capacity".to_string(), Json::Bool(self.enforce_capacity));
         root.insert("backend".to_string(), Json::Str(self.backend.toml_name().into()));
         root.insert("bram".to_string(), Json::Obj(bram));
-        json::write(&Json::Obj(root))
+        Json::Obj(root)
     }
 
     /// Strict inverse of [`OverlayConfig::to_json`]: absent keys keep
@@ -528,6 +534,12 @@ impl OverlayConfig {
     /// validated.
     pub fn from_json(text: &str) -> Result<Self, String> {
         let j = json::parse(text).map_err(|e| e.to_string())?;
+        Self::from_json_value(&j)
+    }
+
+    /// Parse from an already-parsed [`Json`] value (see
+    /// [`OverlayConfig::from_json`]).
+    pub fn from_json_value(j: &Json) -> Result<Self, String> {
         let obj = j.as_obj().ok_or("config JSON must be an object")?;
         let mut cfg = Self::default();
         // JSON numbers are doubles: above 2^53 the parse silently rounds,
@@ -625,6 +637,17 @@ pub enum WorkloadSpec {
     Stencil { width: usize, steps: usize },
     /// FFT butterfly
     Butterfly { width: usize },
+    /// pure sequential pivot chain: sparse-LU of a tridiagonal matrix
+    /// (the depth-dominated extreme of the factorization regimes)
+    Chain { n: usize },
+    /// deep pivot chain + wide power-law bulk updates in one graph
+    /// ([`crate::workload::factorization_mix`] — the shape of real
+    /// elimination DAGs)
+    Mix {
+        chain_n: usize,
+        bulk_n: usize,
+        bulk_deg: usize,
+    },
     /// Matrix Market file on disk
     MatrixMarket { path: String },
 }
@@ -673,6 +696,12 @@ impl WorkloadSpec {
                 steps: usz("steps")?,
             },
             "butterfly" => WorkloadSpec::Butterfly { width: usz("width")? },
+            "chain" => WorkloadSpec::Chain { n: usz("n")? },
+            "mix" => WorkloadSpec::Mix {
+                chain_n: usz("chain_n")?,
+                bulk_n: usz("bulk_n")?,
+                bulk_deg: usz("bulk_deg")?,
+            },
             "matrix_market" => WorkloadSpec::MatrixMarket {
                 path: doc
                     .get("", "path")
@@ -711,6 +740,13 @@ impl WorkloadSpec {
             }
             WorkloadSpec::Stencil { width, steps } => stencil_1d(*width, *steps, seed),
             WorkloadSpec::Butterfly { width } => butterfly_graph(*width, seed),
+            WorkloadSpec::Chain { n } => {
+                let m = SparseMatrix::banded(*n, 1, 1.0, seed);
+                lu_factorization_graph(&m).0
+            }
+            WorkloadSpec::Mix { chain_n, bulk_n, bulk_deg } => {
+                crate::workload::factorization_mix(*chain_n, *bulk_n, *bulk_deg, seed)
+            }
             WorkloadSpec::MatrixMarket { path } => {
                 let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
                 let m = parse_matrix_market(&text)?;
@@ -905,6 +941,8 @@ mod tests {
             WorkloadSpec::Reduction { width: 16 },
             WorkloadSpec::Stencil { width: 8, steps: 2 },
             WorkloadSpec::Butterfly { width: 8 },
+            WorkloadSpec::Chain { n: 16 },
+            WorkloadSpec::Mix { chain_n: 12, bulk_n: 16, bulk_deg: 2 },
         ];
         for s in &specs {
             let g = s.build(1).unwrap();
@@ -920,5 +958,11 @@ mod tests {
         assert_eq!(s, WorkloadSpec::LuBanded { n: 10, half_bw: 2, fill: 0.5 });
         assert!(WorkloadSpec::from_toml("kind = \"nope\"\n").is_err());
         assert!(WorkloadSpec::from_toml("kind = \"lu_banded\"\nn = 10\n").is_err());
+        let c = WorkloadSpec::from_toml("kind = \"chain\"\nn = 32\n").unwrap();
+        assert_eq!(c, WorkloadSpec::Chain { n: 32 });
+        let m =
+            WorkloadSpec::from_toml("kind = \"mix\"\nchain_n = 20\nbulk_n = 40\nbulk_deg = 2\n")
+                .unwrap();
+        assert_eq!(m, WorkloadSpec::Mix { chain_n: 20, bulk_n: 40, bulk_deg: 2 });
     }
 }

@@ -12,8 +12,9 @@ use crate::graph::DataflowGraph;
 use crate::pe::BramConfig;
 use crate::program::{Program, Session};
 use crate::sched::SchedulerKind;
+use crate::service::{Engine, JobResult, JobSpec};
 use crate::sim::{SimError, SimStats};
-use crate::util::par::run_parallel;
+use crate::workload::Spec;
 
 /// One (workload, scheduler) simulation outcome.
 #[derive(Debug, Clone)]
@@ -66,63 +67,64 @@ pub fn fig1_config() -> OverlayConfig {
 
 /// Figure 1: out-of-order speedup over in-order vs. dataflow graph size.
 ///
-/// `workloads` are (label, graph) pairs (see `workload::fig1_workloads`);
-/// each is compiled to a [`Program`] **once** (placement + criticality
-/// labeling are static one-time costs, §II-B) and then runs under both
-/// schedulers as [`Session`]s over the shared artifact.
+/// A thin client of the service layer: `workloads` are (label,
+/// [`Spec`]) pairs (see `workload::fig1_specs`), turned into a
+/// (workload × scheduler) [`JobSpec`] grid and submitted to a
+/// [`Engine`] batch — graph generation, the compile-exactly-once
+/// guarantee (content-addressed Program cache: placement + criticality
+/// labeling are static one-time costs, §II-B) and worker-pool sharding
+/// all live in [`Engine::submit_batch`] now. Rows are assembled from
+/// the [`JobResult`]s and presented smallest graph first.
 ///
-/// The run grid is sharded at (workload × scheduler) granularity
-/// across `jobs` `std::thread::scope` workers — twice the parallelism
-/// of per-workload jobs, and the big in-order runs no longer serialize
-/// behind their own out-of-order halves. The grid is laid out
-/// scheduler-major (all in-order cells, then all out-of-order cells)
-/// so [`run_parallel`]'s static `i % jobs` chunking spreads the slow
-/// in-order runs across every worker instead of pinning them to the
-/// even ones. Each grid cell is an independent session over its
-/// workload's compiled program and results come back in job order, so
-/// the rows — and any report rendered from them — are identical for
-/// every `jobs` value.
+/// The grid is laid out scheduler-major (all in-order cells, then all
+/// out-of-order cells) so the pool's static `i % jobs` chunking spreads
+/// the slow in-order runs across every worker instead of pinning them
+/// to the even ones. Batch results come back in job order, so the rows
+/// — and any report rendered from them — are identical for every
+/// `jobs` value.
 pub fn fig1_sweep(
-    workloads: &[(String, DataflowGraph)],
+    workloads: &[(String, Spec)],
     cfg: OverlayConfig,
     jobs: usize,
 ) -> Result<Vec<Fig1Row>, Error> {
-    let overlay = Overlay::from_config(cfg)?;
-    // compile phase: one Program per workload, fanned across the same
-    // worker pool (compiles are independent and deterministic, so the
-    // exactly-once guarantee is preserved and compile wall-clock
-    // overlaps instead of serializing on the caller thread)
-    let programs: Vec<Program<'_>> = run_parallel(
-        (0..workloads.len()).collect(),
-        jobs,
-        |i: usize| Program::compile(&workloads[i].1, &overlay),
-    )
-    .into_iter()
-    .collect::<Result<_, _>>()?;
-    let n = programs.len();
-    let grid: Vec<(usize, SchedulerKind)> = [SchedulerKind::InOrder, SchedulerKind::OutOfOrder]
+    Overlay::from_config(cfg)?; // fail fast, before any generation
+    let engine = Engine::new();
+    let n = workloads.len();
+    let grid: Vec<JobSpec> = [SchedulerKind::InOrder, SchedulerKind::OutOfOrder]
         .into_iter()
-        .flat_map(|kind| (0..n).map(move |i| (i, kind)))
+        .flat_map(|kind| {
+            workloads.iter().map(move |(_, spec)| JobSpec {
+                workload: spec.canonical(),
+                scheduler: kind,
+                backend: cfg.backend,
+                overlay: cfg,
+                max_cycles: None,
+            })
+        })
         .collect();
-    let stats = run_parallel(grid, jobs, |(i, kind): (usize, SchedulerKind)| {
-        programs[i].session().with_scheduler(kind).run()
-    });
-    let stats: Vec<SimStats> = stats.into_iter().collect::<Result<_, SimError>>()?;
-    Ok(workloads
-        .iter()
-        .enumerate()
-        .map(|(i, (label, g))| {
-            let (s_in, s_ooo) = (&stats[i], &stats[n + i]);
+    let results: Vec<JobResult> = engine
+        .submit_batch(&grid, jobs)
+        .into_iter()
+        .collect::<Result<_, _>>()?;
+    let mut rows: Vec<Fig1Row> = (0..n)
+        .map(|i| {
+            let (r_in, r_ooo) = (&results[i], &results[n + i]);
             Fig1Row {
-                label: label.clone(),
-                nodes_plus_edges: g.footprint(),
-                depth: g.stats().depth,
-                cycles_inorder: s_in.cycles,
-                cycles_ooo: s_ooo.cycles,
-                speedup: s_in.cycles as f64 / s_ooo.cycles as f64,
+                label: workloads[i].0.clone(),
+                nodes_plus_edges: r_in.nodes + r_in.edges,
+                depth: r_in.depth,
+                cycles_inorder: r_in.stats.cycles,
+                cycles_ooo: r_ooo.stats.cycles,
+                speedup: r_in.stats.cycles as f64 / r_ooo.stats.cycles as f64,
             }
         })
-        .collect())
+        .collect();
+    // fill-in makes footprint noisy across seeds; present in size order
+    // (deterministic: ties break on the label)
+    rows.sort_by(|a, b| {
+        (a.nodes_plus_edges, &a.label).cmp(&(b.nodes_plus_edges, &b.label))
+    });
+    Ok(rows)
 }
 
 /// Detailed scheduler comparison on one workload (used by `tdp run` and
@@ -201,12 +203,18 @@ mod tests {
     use super::*;
     use crate::workload::{layered_random, lu_factorization_graph, SparseMatrix};
 
+    fn specs(list: &[(&str, &str)]) -> Vec<(String, Spec)> {
+        list.iter()
+            .map(|(label, s)| (label.to_string(), s.parse().unwrap()))
+            .collect()
+    }
+
     #[test]
     fn fig1_rows_have_sane_speedups() {
-        let ws: Vec<(String, DataflowGraph)> = vec![
-            ("a".into(), layered_random(16, 8, 32, 2, 1)),
-            ("b".into(), layered_random(16, 16, 48, 2, 2)),
-        ];
+        let ws = specs(&[
+            ("a", "layered:16:8:32:2:seed=1"),
+            ("b", "layered:16:16:48:2:seed=2"),
+        ]);
         let cfg = OverlayConfig::default().with_dims(4, 4);
         let rows = fig1_sweep(&ws, cfg, 2).unwrap();
         assert_eq!(rows.len(), 2);
@@ -214,17 +222,41 @@ mod tests {
             assert!(r.speedup > 0.5 && r.speedup < 3.0, "{r:?}");
             assert!(r.cycles_inorder > 0 && r.cycles_ooo > 0);
         }
+        // rows carry the real graph shape and come back smallest first
+        assert!(rows[0].nodes_plus_edges <= rows[1].nodes_plus_edges);
+        assert!(rows.iter().all(|r| r.nodes_plus_edges > 0 && r.depth > 0));
+    }
+
+    /// The sweep matches the pre-service path: compile the same graph by
+    /// hand and run sessions — the engine route must be bit-identical.
+    #[test]
+    fn fig1_sweep_matches_direct_program_path() {
+        let ws = specs(&[("a", "layered:12:6:24:2:seed=5")]);
+        let cfg = OverlayConfig::default().with_dims(4, 4);
+        let rows = fig1_sweep(&ws, cfg, 2).unwrap();
+        let g = ws[0].1.build().unwrap();
+        let overlay = Overlay::from_config(cfg).unwrap();
+        let program = Program::compile(&g, &overlay).unwrap();
+        for (kind, cycles) in [
+            (SchedulerKind::InOrder, rows[0].cycles_inorder),
+            (SchedulerKind::OutOfOrder, rows[0].cycles_ooo),
+        ] {
+            let direct = program.session().with_scheduler(kind).run().unwrap();
+            assert_eq!(direct.cycles, cycles, "{kind:?}");
+        }
+        assert_eq!(rows[0].nodes_plus_edges, g.footprint());
+        assert_eq!(rows[0].depth, g.stats().depth);
     }
 
     /// Determinism across worker counts: the acceptance bar behind the
     /// CLI guarantee that `sweep --jobs N` reports byte-match `--jobs 1`.
     #[test]
     fn fig1_sweep_rows_invariant_under_job_count() {
-        let ws: Vec<(String, DataflowGraph)> = vec![
-            ("a".into(), layered_random(12, 6, 24, 2, 1)),
-            ("b".into(), layered_random(16, 8, 32, 2, 2)),
-            ("c".into(), layered_random(8, 4, 16, 1, 3)),
-        ];
+        let ws = specs(&[
+            ("a", "layered:12:6:24:2:seed=1"),
+            ("b", "layered:16:8:32:2:seed=2"),
+            ("c", "layered:8:4:16:1:seed=3"),
+        ]);
         let cfg = OverlayConfig::default().with_dims(4, 4);
         let serial = fig1_sweep(&ws, cfg, 1).unwrap();
         for jobs in [2, 4, 16] {
@@ -234,10 +266,20 @@ mod tests {
 
     #[test]
     fn fig1_sweep_rejects_invalid_config() {
-        let ws: Vec<(String, DataflowGraph)> = vec![("a".into(), layered_random(4, 2, 4, 1, 0))];
+        let ws = specs(&[("a", "layered:4:2:4:1")]);
         let mut cfg = OverlayConfig::default();
         cfg.cols = 0;
         assert!(matches!(fig1_sweep(&ws, cfg, 1), Err(Error::Config(_))));
+        // an unbuildable spec surfaces as a typed Spec error
+        let mut with_bad_spec =
+            vec![("x".to_string(), "layered:4:2:4:1".parse::<Spec>().unwrap())];
+        with_bad_spec[0].1.workload = crate::config::WorkloadSpec::MatrixMarket {
+            path: "/nonexistent/matrix.mtx".into(),
+        };
+        assert!(matches!(
+            fig1_sweep(&with_bad_spec, OverlayConfig::default().with_dims(2, 2), 1),
+            Err(Error::Spec(_))
+        ));
     }
 
     /// The deprecated shim still produces bit-identical stats to the

@@ -14,7 +14,7 @@ pub use experiments::{
     capacity_experiment, fig1_config, fig1_sweep, scheduler_comparison, CapacityRow, Fig1Row,
     RunOutcome,
 };
-pub use report::{render_csv, render_markdown, Table};
+pub use report::{render_csv, render_json, render_markdown, Table};
 
 /// Re-exported for compatibility: the job pool now lives in
 /// [`crate::util::par`].

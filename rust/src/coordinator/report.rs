@@ -1,4 +1,7 @@
-//! Report rendering: experiment rows → CSV / markdown tables.
+//! Report rendering: experiment rows → CSV / markdown / JSON tables.
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
 
 /// A simple column-oriented table.
 #[derive(Debug, Clone)]
@@ -42,6 +45,31 @@ pub fn render_csv(t: &Table) -> String {
         out.push_str(&escaped.join(","));
         out.push('\n');
     }
+    out
+}
+
+/// Render as one JSON object: `{"title": ..., "headers": [...],
+/// "rows": [[...], ...]}` (cells stay strings — formatting decisions,
+/// e.g. speedup precision, are made by the table builder). One trailing
+/// newline so files and pipes end cleanly.
+pub fn render_json(t: &Table) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("title".to_string(), Json::Str(t.title.clone()));
+    m.insert(
+        "headers".to_string(),
+        Json::Arr(t.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+    );
+    m.insert(
+        "rows".to_string(),
+        Json::Arr(
+            t.rows
+                .iter()
+                .map(|row| Json::Arr(row.iter().map(|c| Json::Str(c.clone())).collect()))
+                .collect(),
+        ),
+    );
+    let mut out = json::write(&Json::Obj(m));
+    out.push('\n');
     out
 }
 
@@ -100,6 +128,17 @@ mod tests {
         let lines: Vec<&str> = md.lines().filter(|l| l.starts_with('|')).collect();
         let lens: Vec<usize> = lines.iter().map(|l| l.len()).collect();
         assert!(lens.windows(2).all(|w| w[0] == w[1]), "{md}");
+    }
+
+    #[test]
+    fn json_parses_and_preserves_cells() {
+        let text = render_json(&sample());
+        assert!(text.ends_with('\n'));
+        let j = json::parse(text.trim_end()).unwrap();
+        assert_eq!(j.get("title").unwrap().as_str(), Some("Speedups"));
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].as_arr().unwrap()[0].as_str(), Some("100,000"));
     }
 
     #[test]

@@ -10,9 +10,13 @@ use crate::config::ConfigError;
 use crate::program::CompileError;
 use crate::sim::SimError;
 
-/// A failure anywhere in the validate → compile → run pipeline.
+/// A failure anywhere in the spec → validate → compile → run pipeline.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Error {
+    /// a job/workload specification could not be parsed or built
+    /// (service layer: bad spec string, malformed job JSON, unreadable
+    /// matrix file)
+    Spec(String),
     /// the overlay description is invalid (validation phase)
     Config(ConfigError),
     /// the one-time compile phase failed (placement/capacity)
@@ -24,6 +28,7 @@ pub enum Error {
 impl std::fmt::Display for Error {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
+            Error::Spec(msg) => write!(f, "invalid job spec: {msg}"),
             Error::Config(e) => write!(f, "{e}"),
             Error::Compile(e) => write!(f, "compile failed: {e}"),
             Error::Sim(e) => write!(f, "simulation failed: {e}"),
@@ -34,6 +39,7 @@ impl std::fmt::Display for Error {
 impl std::error::Error for Error {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
+            Error::Spec(_) => None,
             Error::Config(e) => Some(e),
             Error::Compile(e) => Some(e),
             Error::Sim(e) => Some(e),
@@ -80,5 +86,8 @@ mod tests {
         for e in [c, k, s] {
             assert!(std::error::Error::source(&e).is_some());
         }
+        let j = Error::Spec("unknown workload kind 'bogus'".into());
+        assert!(j.to_string().contains("invalid job spec"), "{j}");
+        assert!(std::error::Error::source(&j).is_none());
     }
 }

@@ -227,6 +227,51 @@ impl DataflowGraph {
         Ok(())
     }
 
+    /// Stable content fingerprint (FNV-1a 64) over the full executable
+    /// identity of the graph: node count, then every node's kind, op,
+    /// operand ids and input value bits, in id order.
+    ///
+    /// Two identical graphs always fingerprint equal, and differing
+    /// graphs differ except with the collision probability of a 64-bit
+    /// non-cryptographic hash — which is why the service layer's
+    /// content-addressed cache key pairs this with the canonical
+    /// workload spec (× overlay shape) rather than trusting the hash
+    /// alone. Node ids are part
+    /// of the identity on purpose: placement walks nodes in id order,
+    /// so the *same* structural DAG built in a different insertion
+    /// order is a different executable and must not share an artifact.
+    /// The hash reads only the `Vec` of nodes (no map iteration), so it
+    /// is reproducible across runs, platforms and process restarts.
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn eat(h: u64, byte: u8) -> u64 {
+            (h ^ byte as u64).wrapping_mul(FNV_PRIME)
+        }
+        fn eat32(mut h: u64, v: u32) -> u64 {
+            for b in v.to_le_bytes() {
+                h = eat(h, b);
+            }
+            h
+        }
+        let mut h = eat32(FNV_OFFSET, self.nodes.len() as u32);
+        for node in &self.nodes {
+            match node.kind {
+                NodeKind::Input { value } => {
+                    h = eat(h, 0x01);
+                    h = eat32(h, value.to_bits());
+                }
+                NodeKind::Operation { op, src } => {
+                    h = eat(h, 0x02);
+                    h = eat(h, op.code() as u8);
+                    h = eat32(h, src[0]);
+                    h = eat32(h, src[1]);
+                }
+            }
+        }
+        h
+    }
+
     /// Graphviz DOT export (debugging / documentation).
     pub fn to_dot(&self) -> String {
         let mut out = String::from("digraph dataflow {\n  rankdir=TB;\n");
@@ -318,6 +363,41 @@ mod tests {
         let dot = diamond().to_dot();
         assert!(dot.contains("n0 -> n2"));
         assert!(dot.contains("ADD"));
+    }
+
+    /// Golden fingerprint: pins the hash function itself, so cache keys
+    /// are reproducible across runs, platforms and releases. If this
+    /// assert fires, the fingerprint algorithm changed and every
+    /// persisted cache key is invalidated — bump it knowingly.
+    #[test]
+    fn fingerprint_golden_value() {
+        assert_eq!(diamond().fingerprint(), 0xda70_7bbb_d2f6_ebdc);
+        // deterministic: same builder calls, same value
+        assert_eq!(diamond().fingerprint(), diamond().fingerprint());
+    }
+
+    /// Node-insertion order is part of the executable identity (placement
+    /// walks nodes in id order), so the same structural DAG built in a
+    /// different order must fingerprint differently.
+    #[test]
+    fn fingerprint_tracks_insertion_order_and_content() {
+        let mut g = DataflowGraph::new();
+        let b = g.add_input(4.0);
+        let a = g.add_input(3.0);
+        let s = g.op(Op::Add, &[b, a]);
+        let p = g.op(Op::Mul, &[b, a]);
+        g.op(Op::Sub, &[s, p]);
+        assert_eq!(g.evaluate()[4], diamond().evaluate()[4], "same math");
+        assert_ne!(g.fingerprint(), diamond().fingerprint(), "different layout");
+        assert_eq!(g.fingerprint(), 0xc00a_2edc_1bbe_9cfc, "golden (swapped)");
+        // a changed input value or opcode changes the fingerprint
+        let mut h = DataflowGraph::new();
+        let a = h.add_input(3.0);
+        let b = h.add_input(4.5);
+        let s = h.op(Op::Add, &[a, b]);
+        let p = h.op(Op::Mul, &[a, b]);
+        h.op(Op::Sub, &[s, p]);
+        assert_ne!(h.fingerprint(), diamond().fingerprint());
     }
 
     #[test]

@@ -28,6 +28,18 @@
 //! let fifo = program.session().with_scheduler(SchedulerKind::InOrder).run()?;
 //! # let _ = (ooo, fifo); Ok(()) }
 //! ```
+//!
+//! Service API (DESIGN.md §9) — jobs in, results out, compiles cached:
+//! ```no_run
+//! use tdp::service::{Engine, JobSpec};
+//! # fn demo() -> Result<(), tdp::Error> {
+//! let engine = Engine::new();                         // long-lived; owns the Program cache
+//! let job = JobSpec::new("chain:4096:seed=7");        // workload spec string + variant
+//! let cold = engine.submit(&job)?;                    // compiles once...
+//! let warm = engine.submit(&job)?;                    // ...then every duplicate is a cache hit
+//! assert!(warm.cache_hit && warm.stats == cold.stats);
+//! # Ok(()) }
+//! ```
 
 pub mod config;
 pub mod coordinator;
@@ -43,6 +55,7 @@ pub mod program;
 pub mod resource;
 pub mod runtime;
 pub mod sched;
+pub mod service;
 pub mod sim;
 pub mod util;
 pub mod workload;
@@ -51,6 +64,7 @@ pub use config::{ConfigError, Overlay, OverlayBuilder, OverlayConfig};
 pub use engine::{BackendKind, SimBackend};
 pub use error::Error;
 pub use graph::{DataflowGraph, NodeId, Op};
-pub use program::{run_batch, CompileError, Program, RunVariant, Session};
+pub use program::{run_batch, CompileError, Program, RunVariant, Session, SharedProgram};
 pub use sched::SchedulerKind;
+pub use service::{Engine, JobResult, JobSpec};
 pub use sim::{SimError, SimStats, Simulator};

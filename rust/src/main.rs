@@ -9,18 +9,20 @@ use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
 use tdp::config::{Overlay, OverlayConfig, WorkloadSpec};
 use tdp::coordinator::{
-    self, capacity_experiment, fig1_sweep, render_csv, render_markdown, scheduler_comparison,
-    Table,
+    self, capacity_experiment, fig1_sweep, render_csv, render_json, render_markdown, Table,
 };
 use tdp::engine::BackendKind;
 use tdp::graph::{graph_from_json, graph_to_json, DataflowGraph};
 use tdp::noc::{Network, Packet};
 use tdp::pe::BramConfig;
-use tdp::program::Program;
+use tdp::program::{self, Program};
 use tdp::resource;
 use tdp::runtime::XlaRuntime;
 use tdp::sched::SchedulerKind;
+use tdp::service::{Engine, JobSpec};
+use tdp::sim::SimStats;
 use tdp::util::cli::Args;
+use tdp::util::json::{self, Json};
 use tdp::util::rng::Rng;
 use tdp::workload;
 
@@ -32,11 +34,18 @@ USAGE: tdp <command> [flags]
 COMMANDS
   run         simulate one workload          --workload <toml> | --graph <json>
               [--cols 16 --rows 16 --scheduler both|in_order|out_of_order
-              --backend lockstep|skip-ahead --max-cycles N --seed 0]
+              --backend lockstep|skip-ahead --max-cycles N --seed 0
+              --format text|json]
+  batch       serve a job stream             <jobs.jsonl> [--workers N (0 = all cores)
+              --cache 64]
+              one JSON job per line in ({\"workload\": \"chain:4096:seed=7\", ...}),
+              one JSON result per line out, same order; repeated workloads
+              compile once (content-addressed Program cache); non-zero exit
+              if any job failed
   sweep       regenerate Figure 1            [--cols 16 --rows 16 --seed 42
               --backend lockstep|skip-ahead
               --jobs N (0 = all cores; --threads is a legacy alias)
-              --format markdown|csv --out file]
+              --format markdown|csv|json --out file]
   gen         write a workload graph JSON    --workload <toml> --out <file> [--seed 0]
   validate    check sim numerics vs native + PJRT oracle
               --workload <toml> | --graph <json> [--cols 4 --rows 4
@@ -86,7 +95,8 @@ fn emit(t: &Table, format: &str, out: Option<String>) -> Result<()> {
     let text = match format {
         "markdown" | "md" => render_markdown(t),
         "csv" => render_csv(t),
-        other => bail!("unknown format '{other}' (markdown | csv)"),
+        "json" => render_json(t),
+        other => bail!("unknown format '{other}' (markdown | csv | json)"),
     };
     print!("{text}");
     if let Some(path) = out {
@@ -105,42 +115,136 @@ fn cmd_run(mut a: Args) -> Result<()> {
     let backend = backend_flag(&mut a)?;
     let max_cycles = a.u64_or("max-cycles", 0)?; // 0 = config default
     let seed = a.u64_or("seed", 0)?;
+    let format = a.str_or("format", "text")?;
+    let json_out = match format.as_str() {
+        "text" => false,
+        "json" => true,
+        other => bail!("unknown format '{other}' (text | json)"),
+    };
     a.finish()?;
     let g = load_graph(workload, graph, seed)?;
     let s = g.stats();
-    println!(
-        "graph: {} nodes, {} edges, depth {}, max fanout {} (backend: {})",
-        s.nodes,
-        s.edges,
-        s.depth,
-        s.max_fanout,
-        backend.name()
-    );
+    if !json_out {
+        println!(
+            "graph: {} nodes, {} edges, depth {}, max fanout {} (backend: {})",
+            s.nodes,
+            s.edges,
+            s.depth,
+            s.max_fanout,
+            backend.name()
+        );
+    }
     let mut cfg = OverlayConfig::default().with_dims(cols, rows).with_backend(backend);
     if max_cycles > 0 {
         cfg.max_cycles = max_cycles;
     }
+    // compile once; every scheduler variant is a cheap session over it
+    let overlay = Overlay::from_config(cfg)?;
+    let program = Program::compile(&g, &overlay)?;
+    let run_kind = |kind: SchedulerKind| -> Result<SimStats> {
+        Ok(program.session().with_scheduler(kind).run()?)
+    };
     if sched == "both" {
-        let outs = scheduler_comparison(&g, cfg, "run")?;
-        for o in &outs {
-            println!(
-                "{:>12}: {} cycles, util {:.1}%, {} deflections",
-                o.scheduler.name(),
-                o.cycles,
-                100.0 * o.utilization,
-                o.deflections
-            );
+        let stats_in = run_kind(SchedulerKind::InOrder)?;
+        let stats_ooo = run_kind(SchedulerKind::OutOfOrder)?;
+        let speedup = stats_in.cycles as f64 / stats_ooo.cycles as f64;
+        if json_out {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("in_order".to_string(), stats_in.to_json_value());
+            m.insert("out_of_order".to_string(), stats_ooo.to_json_value());
+            m.insert("speedup".to_string(), Json::Num(speedup));
+            println!("{}", json::write(&Json::Obj(m)));
+        } else {
+            for stats in [&stats_in, &stats_ooo] {
+                println!(
+                    "{:>12}: {} cycles, util {:.1}%, {} deflections",
+                    stats.scheduler.name(),
+                    stats.cycles,
+                    100.0 * stats.avg_pe_utilization,
+                    stats.net.deflections
+                );
+            }
+            println!("speedup (in-order / out-of-order): {speedup:.3}");
         }
-        println!(
-            "speedup (in-order / out-of-order): {:.3}",
-            outs[0].cycles as f64 / outs[1].cycles as f64
-        );
     } else {
         let kind: SchedulerKind = sched.parse().map_err(|e: String| anyhow!(e))?;
-        let overlay = Overlay::from_config(cfg.with_scheduler(kind))?;
-        let program = Program::compile(&g, &overlay)?;
-        let stats = program.session().run()?;
-        println!("{}", stats.one_line());
+        let stats = run_kind(kind)?;
+        if json_out {
+            println!("{}", stats.to_json());
+        } else {
+            println!("{}", stats.one_line());
+        }
+    }
+    Ok(())
+}
+
+/// `tdp batch <jobs.jsonl>` — the service entry point: one JSON job per
+/// input line, one JSON result per output line (same order), all jobs
+/// executed over one [`Engine`] so repeated workloads compile exactly
+/// once. A malformed line or failed job becomes a `{"line": N,
+/// "error": ...}` output line and a non-zero exit at the end; the other
+/// jobs still run. Cache counters go to stderr.
+fn cmd_batch(mut argv: Vec<String>) -> Result<()> {
+    let positional = if argv.first().is_some_and(|s| !s.starts_with("--")) {
+        Some(argv.remove(0))
+    } else {
+        None
+    };
+    let mut a = Args::parse(argv).map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+    let path = match positional {
+        Some(p) => p,
+        None => a.str_req("file")?,
+    };
+    let mut workers = a.usize_or("workers", 0)?;
+    let cache = a.usize_or("cache", tdp::service::DEFAULT_CACHE_CAPACITY)?;
+    a.finish()?;
+    if workers == 0 {
+        workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    }
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow!("cannot read job file '{path}': {e}"))?;
+    // parse every line up front: line numbers are part of the protocol
+    let parsed: Vec<(usize, Result<JobSpec, String>)> = text
+        .lines()
+        .enumerate()
+        .filter(|(_, line)| !line.trim().is_empty())
+        .map(|(i, line)| (i + 1, JobSpec::from_json(line)))
+        .collect();
+    let engine = Engine::with_capacity(cache);
+    let jobs: Vec<JobSpec> = parsed
+        .iter()
+        .filter_map(|(_, j)| j.as_ref().ok())
+        .cloned()
+        .collect();
+    let mut outcomes = engine.submit_batch(&jobs, workers).into_iter();
+    let mut failed = 0usize;
+    for (line_no, job) in &parsed {
+        let outcome = match job {
+            Ok(_) => outcomes.next().expect("one outcome per parsed job"),
+            Err(msg) => Err(tdp::Error::Spec(msg.clone())),
+        };
+        match outcome {
+            Ok(result) => println!("{}", result.to_json()),
+            Err(e) => {
+                failed += 1;
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("line".to_string(), Json::Num(*line_no as f64));
+                m.insert("error".to_string(), Json::Str(e.to_string()));
+                println!("{}", json::write(&Json::Obj(m)));
+            }
+        }
+    }
+    let s = engine.cache_stats();
+    eprintln!(
+        "batch: jobs={} ok={} failed={failed} cache_hits={} cache_misses={} compiles={}",
+        parsed.len(),
+        parsed.len() - failed,
+        s.hits,
+        s.misses,
+        program::compile_count()
+    );
+    if failed > 0 {
+        bail!("{failed} of {} jobs failed", parsed.len());
     }
     Ok(())
 }
@@ -163,11 +267,10 @@ fn cmd_sweep(mut a: Args) -> Result<()> {
     }
     let cfg = coordinator::fig1_config().with_dims(cols, rows).with_backend(backend);
     Overlay::from_config(cfg)?; // fail fast, before generating workloads
-    eprintln!("generating Fig.1 workload ladder (seed {seed})...");
-    let ws = workload::fig1_workloads(seed);
+    let ws = workload::fig1_specs(seed);
     eprintln!(
         "running {} workloads x 2 schedulers on {jobs} jobs ({} backend, \
-         each workload compiled once)...",
+         each workload compiled once via the service cache)...",
         ws.len(),
         backend.name()
     );
@@ -435,7 +538,11 @@ fn cmd_analyze(mut a: Args) -> Result<()> {
         let est = (g.num_edges() as u64 / (cols * rows) as u64 + prof.depth as u64 * 12).max(400);
         sim.enable_trace(if stride == 0 { est / 400 } else { stride });
         let stats = sim.run().map_err(|e| anyhow!("{e}"))?;
-        let trace = sim.trace().unwrap();
+        // propagate instead of panicking: a missing trace is a typed
+        // failure exit, like every other error on this path
+        let trace = sim
+            .trace()
+            .ok_or_else(|| anyhow!("trace buffer missing after enable_trace"))?;
         println!("=== {} === ({} cycles)", kind.name(), stats.cycles);
         println!("  ready queue : {}  (peak {})", trace.sparkline(|s| s.ready_total, 48), trace.peak_ready());
         println!("  busy PEs    : {}  (mean {:.1}%)", trace.sparkline(|s| s.busy_pes, 48), 100.0 * trace.mean_busy(cols * rows));
@@ -480,6 +587,11 @@ fn main() -> Result<()> {
         return Ok(());
     };
     let rest: Vec<String> = argv.collect();
+    // batch takes a positional job-file path; everything else is
+    // flags-only
+    if cmd == "batch" {
+        return cmd_batch(rest);
+    }
     let args = Args::parse(rest).map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
     match cmd.as_str() {
         "run" => cmd_run(args),

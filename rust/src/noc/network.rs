@@ -34,6 +34,44 @@ pub struct NetworkStats {
     pub max_latency: u64,
 }
 
+impl NetworkStats {
+    /// JSON object with every counter (the service response format —
+    /// [`crate::sim::SimStats::to_json_value`] nests this under `net`).
+    pub fn to_json_value(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("injected".to_string(), Json::Num(self.injected as f64));
+        m.insert("delivered".to_string(), Json::Num(self.delivered as f64));
+        m.insert("deflections".to_string(), Json::Num(self.deflections as f64));
+        m.insert("inject_stalls".to_string(), Json::Num(self.inject_stalls as f64));
+        m.insert("total_latency".to_string(), Json::Num(self.total_latency as f64));
+        m.insert("max_latency".to_string(), Json::Num(self.max_latency as f64));
+        Json::Obj(m)
+    }
+
+    /// Strict inverse of [`NetworkStats::to_json_value`]: every key
+    /// required to be a counter we know, unknown keys rejected.
+    pub fn from_json_value(j: &crate::util::json::Json) -> Result<Self, String> {
+        let obj = j.as_obj().ok_or("net: expected object")?;
+        let mut s = NetworkStats::default();
+        for (key, v) in obj {
+            let n = v
+                .as_u64()
+                .ok_or_else(|| format!("net.{key}: expected non-negative integer"))?;
+            match key.as_str() {
+                "injected" => s.injected = n,
+                "delivered" => s.delivered = n,
+                "deflections" => s.deflections = n,
+                "inject_stalls" => s.inject_stalls = n,
+                "total_latency" => s.total_latency = n,
+                "max_latency" => s.max_latency = n,
+                other => return Err(format!("unknown net counter '{other}'")),
+            }
+        }
+        Ok(s)
+    }
+}
+
 /// Result of one network cycle (buffers owned by [`Network`], reused).
 #[derive(Debug, Clone, Default)]
 pub struct StepResult {
@@ -489,5 +527,27 @@ mod tests {
         }
         assert_eq!(dense.stats, sparse.stats);
         assert_eq!(dense.in_flight(), sparse.in_flight());
+    }
+
+    #[test]
+    fn network_stats_json_roundtrip() {
+        let s = NetworkStats {
+            injected: 100,
+            delivered: 98,
+            deflections: 7,
+            inject_stalls: 3,
+            total_latency: 412,
+            max_latency: 19,
+        };
+        let j = s.to_json_value();
+        let text = crate::util::json::write(&j);
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let back = NetworkStats::from_json_value(&parsed).unwrap();
+        assert_eq!(back, s);
+        // strictness: unknown counters and non-integers are rejected
+        let bad = crate::util::json::parse("{\"bogus\": 1}").unwrap();
+        assert!(NetworkStats::from_json_value(&bad).is_err());
+        let bad = crate::util::json::parse("{\"injected\": -1}").unwrap();
+        assert!(NetworkStats::from_json_value(&bad).is_err());
     }
 }

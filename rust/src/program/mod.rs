@@ -121,18 +121,72 @@ impl FlagLayout {
     }
 }
 
-/// The one-time compile artifact: a graph placed and labeled for one
-/// overlay shape. Immutable once built; any number of [`Session`]s can
-/// borrow it (concurrently — it is `Sync`) and run scheduler/backend
-/// variants without re-placing or re-labeling.
-#[derive(Clone)]
-pub struct Program<'g> {
-    g: &'g DataflowGraph,
-    overlay: Overlay,
+/// The shared compile outputs — placement, criticality labels, per-PE
+/// BRAM images and the flag layout — in one `Arc`-shared allocation, so
+/// both the borrowing [`Program`] view and the owned [`SharedProgram`]
+/// cache entry hand out the same artifact without copying.
+#[derive(Debug)]
+struct Artifact {
     place: Arc<Placement>,
     criticality: Vec<u32>,
     pe_images: Vec<PeImage>,
     flags: FlagLayout,
+}
+
+/// The one compile implementation behind [`Program::compile`] and
+/// [`SharedProgram::compile`] (and the only place [`compile_count`]
+/// increments).
+fn compile_artifact(g: &DataflowGraph, overlay: &Overlay) -> Result<Artifact, CompileError> {
+    COMPILES.fetch_add(1, Ordering::Relaxed);
+    let cfg = *overlay.config();
+    let crit = criticality::criticality(g);
+    let place = Placement::build_with(
+        g,
+        cfg.num_pes(),
+        cfg.placement,
+        cfg.local_order,
+        cfg.seed,
+        &crit,
+    );
+    let pe_images: Vec<PeImage> = place
+        .nodes_of
+        .iter()
+        .map(|locals| {
+            let nodes = locals.len();
+            let edges: usize = locals.iter().map(|&n| g.node(n).fanout.len()).sum();
+            PeImage {
+                nodes,
+                edges,
+                graph_words: BramConfig::words_used(nodes, edges),
+            }
+        })
+        .collect();
+    // the same check (one implementation) guards direct Simulator
+    // construction, so compile-time and runtime verdicts agree
+    if let Err(SimError::CapacityExceeded { pe, words_needed, words_available }) =
+        crate::sim::check_capacity(g, &place, &cfg)
+    {
+        return Err(CompileError::CapacityExceeded { pe, words_needed, words_available });
+    }
+    Ok(Artifact {
+        place: Arc::new(place),
+        criticality: crit,
+        pe_images,
+        flags: FlagLayout::of(&cfg.bram),
+    })
+}
+
+/// The one-time compile artifact: a graph placed and labeled for one
+/// overlay shape. Immutable once built; any number of [`Session`]s can
+/// borrow it (concurrently — it is `Sync`) and run scheduler/backend
+/// variants without re-placing or re-labeling. Cloning is cheap (the
+/// artifact is `Arc`-shared). For an owned, lifetime-free handle (cache
+/// entries, service workers) see [`SharedProgram`].
+#[derive(Clone)]
+pub struct Program<'g> {
+    g: &'g DataflowGraph,
+    overlay: Overlay,
+    art: Arc<Artifact>,
 }
 
 impl<'g> Program<'g> {
@@ -141,44 +195,10 @@ impl<'g> Program<'g> {
     /// summarize per-PE BRAM images. This is the entire one-time cost —
     /// every [`Session`] run afterwards starts from here for free.
     pub fn compile(g: &'g DataflowGraph, overlay: &Overlay) -> Result<Self, CompileError> {
-        COMPILES.fetch_add(1, Ordering::Relaxed);
-        let cfg = *overlay.config();
-        let crit = criticality::criticality(g);
-        let place = Placement::build_with(
-            g,
-            cfg.num_pes(),
-            cfg.placement,
-            cfg.local_order,
-            cfg.seed,
-            &crit,
-        );
-        let pe_images: Vec<PeImage> = place
-            .nodes_of
-            .iter()
-            .map(|locals| {
-                let nodes = locals.len();
-                let edges: usize = locals.iter().map(|&n| g.node(n).fanout.len()).sum();
-                PeImage {
-                    nodes,
-                    edges,
-                    graph_words: BramConfig::words_used(nodes, edges),
-                }
-            })
-            .collect();
-        // the same check (one implementation) guards direct Simulator
-        // construction, so compile-time and runtime verdicts agree
-        if let Err(SimError::CapacityExceeded { pe, words_needed, words_available }) =
-            crate::sim::check_capacity(g, &place, &cfg)
-        {
-            return Err(CompileError::CapacityExceeded { pe, words_needed, words_available });
-        }
         Ok(Self {
             g,
             overlay: *overlay,
-            place: Arc::new(place),
-            criticality: crit,
-            pe_images,
-            flags: FlagLayout::of(&cfg.bram),
+            art: Arc::new(compile_artifact(g, overlay)?),
         })
     }
 
@@ -194,33 +214,33 @@ impl<'g> Program<'g> {
 
     /// The node→PE placement and per-PE memory layouts.
     pub fn placement(&self) -> &Placement {
-        &self.place
+        &self.art.place
     }
 
     /// The shared placement handle ([`Session`]s and custom engine
     /// drivers pass this to [`engine::backend_for`]).
     pub fn shared_placement(&self) -> Arc<Placement> {
-        Arc::clone(&self.place)
+        Arc::clone(&self.art.place)
     }
 
     /// Per-node criticality labels (§II-B: height to the farthest sink).
     pub fn criticality(&self) -> &[u32] {
-        &self.criticality
+        &self.art.criticality
     }
 
     /// Per-PE BRAM image summaries.
     pub fn pe_images(&self) -> &[PeImage] {
-        &self.pe_images
+        &self.art.pe_images
     }
 
     /// The out-of-order scheduler's flag-word layout.
     pub fn flag_layout(&self) -> FlagLayout {
-        self.flags
+        self.art.flags
     }
 
     /// Largest per-PE graph-memory footprint (words).
     pub fn max_graph_words(&self) -> usize {
-        self.pe_images.iter().map(|i| i.graph_words).max().unwrap_or(0)
+        self.art.pe_images.iter().map(|i| i.graph_words).max().unwrap_or(0)
     }
 
     /// Does every PE's image fit `kind`'s BRAM budget? The capacity-scan
@@ -233,6 +253,49 @@ impl<'g> Program<'g> {
     /// Open a session at the overlay's default scheduler/backend.
     pub fn session(&self) -> Session<'_, 'g> {
         Session::new(self)
+    }
+}
+
+/// An owned, lifetime-free compiled program: the graph is held by `Arc`,
+/// so the artifact can live in long-lived caches and cross thread
+/// boundaries — the entry type of the service layer's content-addressed
+/// Program cache ([`crate::service::Engine`]). [`SharedProgram::program`]
+/// reborrows it as a [`Program`] view for the [`Session`] API; both
+/// handles share one artifact allocation.
+#[derive(Clone)]
+pub struct SharedProgram {
+    graph: Arc<DataflowGraph>,
+    overlay: Overlay,
+    art: Arc<Artifact>,
+}
+
+impl SharedProgram {
+    /// Compile `graph` for `overlay` — identical cost and result to
+    /// [`Program::compile`] (same implementation, same
+    /// [`compile_count`] accounting), but the result owns its graph.
+    pub fn compile(graph: Arc<DataflowGraph>, overlay: &Overlay) -> Result<Self, CompileError> {
+        let art = Arc::new(compile_artifact(&graph, overlay)?);
+        Ok(Self { graph, overlay: *overlay, art })
+    }
+
+    /// The compiled graph.
+    pub fn graph(&self) -> &Arc<DataflowGraph> {
+        &self.graph
+    }
+
+    /// The overlay this program was compiled for.
+    pub fn overlay(&self) -> &Overlay {
+        &self.overlay
+    }
+
+    /// Borrow as a [`Program`] view (cheap: two `Arc` clones), from
+    /// which sessions run: `shared.program().session().run()`.
+    pub fn program(&self) -> Program<'_> {
+        Program {
+            g: &self.graph,
+            overlay: self.overlay,
+            art: Arc::clone(&self.art),
+        }
     }
 }
 
@@ -415,6 +478,26 @@ mod tests {
             Ok(_) => panic!("expected capacity error"),
         }
         assert!(!Program::compile(&g, &overlay_2x2()).unwrap().fits(SchedulerKind::InOrder));
+    }
+
+    #[test]
+    fn shared_program_matches_borrowed_program() {
+        let g = layered_random(10, 5, 16, 2, 2);
+        let overlay = overlay_2x2();
+        let borrowed = Program::compile(&g, &overlay).unwrap().session().run().unwrap();
+        let shared = SharedProgram::compile(Arc::new(g), &overlay).unwrap();
+        let owned = shared.program().session().run().unwrap();
+        assert_eq!(owned, borrowed, "owned and borrowed compiles are bit-identical");
+        // the view exposes the same artifact
+        let view = shared.program();
+        assert_eq!(view.criticality().len(), shared.graph().len());
+        assert_eq!(view.pe_images().len(), 4);
+        // clones share, not recompile: same placement allocation
+        let clone = shared.clone();
+        assert!(Arc::ptr_eq(
+            &view.shared_placement(),
+            &clone.program().shared_placement()
+        ));
     }
 
     #[test]

@@ -1,0 +1,208 @@
+//! The content-addressed Program cache.
+//!
+//! Key = canonical workload spec × graph fingerprint × normalized
+//! overlay shape (see [`CacheKey`]); value = an `Arc<SharedProgram>` —
+//! the one-time
+//! compile artifact any number of sessions fan out from. Both engine
+//! caches (programs here, workload graphs upstream) are the same
+//! bounded [`Lru`] map, so the engine serves unbounded request streams
+//! with bounded memory and exposes hit/miss/eviction counters for
+//! observability.
+
+use crate::config::OverlayConfig;
+use crate::engine::BackendKind;
+use crate::program::SharedProgram;
+use crate::sched::SchedulerKind;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// The content address of a compiled program.
+///
+/// `workload` (the canonical spec string) rides along with the graph
+/// fingerprint so a 64-bit FNV collision between two *different* specs
+/// can never silently serve the wrong artifact — the fingerprint's job
+/// is to keep two spellings of the same content together, the spec
+/// string's job is to keep different content apart.
+///
+/// `overlay` is the JSON of the overlay config with the *session-level*
+/// knobs normalized away: `backend` and `max_cycles` never affect the
+/// compile artifact, and `scheduler` only affects it when
+/// `enforce_capacity` is set (the capacity verdict depends on the
+/// scheduler's BRAM budget) — so without enforcement one artifact
+/// serves every scheduler × backend variant, which is exactly the
+/// amortization the paper's static one-time labeling promises.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CacheKey {
+    /// [`crate::graph::DataflowGraph::fingerprint`] of the built graph
+    pub fingerprint: u64,
+    /// canonical workload spec ([`crate::workload::Spec::canonical`])
+    pub workload: String,
+    /// normalized overlay config, JSON-encoded (stable key order)
+    pub overlay: String,
+}
+
+impl CacheKey {
+    /// Build the key for running the graph of `workload` (canonical
+    /// spec, fingerprinting to `fingerprint`) on `cfg`.
+    pub fn new(fingerprint: u64, workload: &str, cfg: &OverlayConfig) -> Self {
+        let mut norm = *cfg;
+        norm.backend = BackendKind::Lockstep;
+        norm.max_cycles = OverlayConfig::default().max_cycles;
+        if !norm.enforce_capacity {
+            norm.scheduler = SchedulerKind::OutOfOrder;
+        }
+        Self {
+            fingerprint,
+            workload: workload.to_string(),
+            overlay: norm.to_json(),
+        }
+    }
+}
+
+struct Slot<V> {
+    value: V,
+    /// logical timestamp of the last get/insert (LRU order)
+    last_used: u64,
+}
+
+/// Bounded least-recently-used map. Not internally synchronized — the
+/// engine wraps it in a `Mutex` and layers single-flight on top.
+pub struct Lru<K: Ord, V> {
+    entries: BTreeMap<K, Slot<V>>,
+    capacity: usize,
+    tick: u64,
+    evictions: u64,
+}
+
+/// The engine's Program cache: compiled artifacts by content address.
+pub type ProgramCache = Lru<CacheKey, Arc<SharedProgram>>;
+
+impl<K: Ord + Clone, V: Clone> Lru<K, V> {
+    /// A cache holding at most `capacity` values (min 1).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            entries: BTreeMap::new(),
+            capacity: capacity.max(1),
+            tick: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Look up `key`, refreshing its LRU position on a hit.
+    pub fn get(&mut self, key: &K) -> Option<V> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.entries.get_mut(key).map(|slot| {
+            slot.last_used = tick;
+            slot.value.clone()
+        })
+    }
+
+    /// Insert `value` under `key`, evicting the least-recently-used
+    /// entry if the cache is full.
+    pub fn insert(&mut self, key: K, value: V) {
+        self.tick += 1;
+        if !self.entries.contains_key(&key) && self.entries.len() >= self.capacity {
+            if let Some(victim) = self
+                .entries
+                .iter()
+                .min_by_key(|(_, slot)| slot.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                self.entries.remove(&victim);
+                self.evictions += 1;
+            }
+        }
+        self.entries.insert(
+            key,
+            Slot {
+                value,
+                last_used: self.tick,
+            },
+        );
+    }
+
+    /// Number of resident values.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no values are resident.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total evictions since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(fp: u64) -> CacheKey {
+        CacheKey::new(fp, "chain:8", &OverlayConfig::default())
+    }
+
+    #[test]
+    fn session_level_knobs_normalize_out_of_the_key() {
+        let base = OverlayConfig::default();
+        let a = CacheKey::new(7, "chain:8", &base);
+        let b = CacheKey::new(7, "chain:8", &base.with_backend(BackendKind::SkipAhead));
+        let c = CacheKey::new(7, "chain:8", &base.with_scheduler(SchedulerKind::InOrder));
+        let mut d_cfg = base;
+        d_cfg.max_cycles = 123;
+        let d = CacheKey::new(7, "chain:8", &d_cfg);
+        assert_eq!(a, b, "backend is a session knob");
+        assert_eq!(a, c, "scheduler is a session knob without capacity enforcement");
+        assert_eq!(a, d, "max_cycles is a session knob");
+        // compile-relevant knobs stay in the key
+        assert_ne!(a, CacheKey::new(8, "chain:8", &base), "fingerprint");
+        assert_ne!(a, CacheKey::new(7, "chain:8", &base.with_dims(4, 4)), "overlay shape");
+        let mut seeded = base;
+        seeded.seed = 9;
+        assert_ne!(a, CacheKey::new(7, "chain:8", &seeded), "placement seed");
+        // a different spec never shares a slot, even on an (engineered)
+        // fingerprint collision
+        assert_ne!(a, CacheKey::new(7, "chain:9", &base), "workload spec");
+        // with enforcement, the capacity verdict is per-scheduler
+        let mut enf = base;
+        enf.enforce_capacity = true;
+        assert_ne!(
+            CacheKey::new(7, "chain:8", &enf),
+            CacheKey::new(7, "chain:8", &enf.with_scheduler(SchedulerKind::InOrder))
+        );
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut cache: Lru<CacheKey, u32> = Lru::new(2);
+        cache.insert(key(1), 10);
+        cache.insert(key(2), 20);
+        assert_eq!(cache.get(&key(1)), Some(10)); // refresh 1 → 2 is now LRU
+        cache.insert(key(3), 30);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        assert_eq!(cache.get(&key(2)), None, "2 was evicted");
+        assert_eq!(cache.get(&key(1)), Some(10));
+        assert_eq!(cache.get(&key(3)), Some(30));
+        // re-inserting an existing key does not evict
+        cache.insert(key(1), 11);
+        assert_eq!(cache.evictions(), 1);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.get(&key(1)), Some(11));
+    }
+
+    #[test]
+    fn capacity_floor_is_one() {
+        let mut cache: Lru<String, u8> = Lru::new(0);
+        cache.insert("a".into(), 1);
+        assert_eq!(cache.len(), 1);
+        assert!(!cache.is_empty());
+        cache.insert("b".into(), 2);
+        assert_eq!(cache.len(), 1, "bounded at the floor");
+        assert_eq!(cache.get(&"b".to_string()), Some(2));
+    }
+}

@@ -1,0 +1,380 @@
+//! The long-lived execution engine: jobs in, results out, compiles
+//! amortized through the content-addressed Program cache.
+
+use super::cache::{CacheKey, Lru, ProgramCache};
+use super::job::{JobResult, JobSpec};
+use crate::config::Overlay;
+use crate::error::Error;
+use crate::graph::{DataflowGraph, GraphStats};
+use crate::program::SharedProgram;
+use crate::util::par::run_parallel;
+use crate::workload::Spec;
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Default bound of both engine caches (compiled programs / built
+/// workload graphs resident at once).
+pub const DEFAULT_CACHE_CAPACITY: usize = 64;
+
+/// Counters the engine exposes for observability (`tdp batch` prints
+/// them to stderr after a run).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    /// jobs served from an already-compiled program
+    pub hits: u64,
+    /// jobs that compiled and cached a new program
+    pub misses: u64,
+    /// programs dropped by the LRU bound
+    pub evictions: u64,
+    /// programs currently resident
+    pub entries: usize,
+    /// workload graphs currently resident in the graph cache
+    pub graphs: usize,
+    /// graphs dropped by the LRU bound
+    pub graph_evictions: u64,
+}
+
+/// Per-key single-flight latch: at most one thread builds a given key
+/// at a time — a racing duplicate waits for the winner instead of
+/// paying the build again — while *distinct* keys build fully in
+/// parallel (no lock is held across a build).
+///
+/// Protocol: [`Flight::acquire`] either returns a cached value or
+/// grants the exclusive build right for `key`; the winner builds with
+/// no locks held, publishes into the cache, then [`Flight::release`]s
+/// (success *and* failure — a failed build wakes the waiters, who
+/// re-race and surface their own error). Lock order is always
+/// `pending` → cache; the build path takes them one at a time, so the
+/// two mutexes can never deadlock.
+struct Flight<K: Ord + Clone> {
+    pending: Mutex<BTreeSet<K>>,
+    cv: Condvar,
+}
+
+impl<K: Ord + Clone> Flight<K> {
+    fn new() -> Self {
+        Self {
+            pending: Mutex::new(BTreeSet::new()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// `Some(value)` on a cache hit (possibly after waiting for an
+    /// in-flight build of `key`), `None` when the caller now owns the
+    /// build right and must call [`Flight::release`] when done.
+    /// `lookup` takes the cache's own lock internally and is re-run
+    /// after every wakeup.
+    fn acquire<V>(&self, key: &K, mut lookup: impl FnMut() -> Option<V>) -> Option<V> {
+        let mut pending = self.pending.lock().expect("flight lock");
+        loop {
+            if let Some(v) = lookup() {
+                return Some(v);
+            }
+            if !pending.contains(key) {
+                pending.insert(key.clone());
+                return None;
+            }
+            pending = self.cv.wait(pending).expect("flight lock");
+        }
+    }
+
+    /// Give up the build right for `key` and wake every waiter.
+    fn release(&self, key: &K) {
+        self.pending.lock().expect("flight lock").remove(key);
+        self.cv.notify_all();
+    }
+}
+
+/// A built graph plus the derived identity the service needs per job.
+struct GraphEntry {
+    graph: Arc<DataflowGraph>,
+    fingerprint: u64,
+    stats: GraphStats,
+}
+
+/// A long-lived, thread-safe job executor.
+///
+/// `Engine` owns two bounded LRU caches: workload graphs keyed by
+/// canonical spec string (so repeated requests skip generation), and
+/// compiled [`SharedProgram`]s keyed by [`CacheKey`] — graph
+/// fingerprint × normalized overlay shape (so repeated *and concurrent*
+/// requests for the same workload compile exactly once, then fan out as
+/// cheap sessions). Builds run with no lock held — distinct workloads
+/// generate and compile in parallel — and a per-key [`Flight`] latch
+/// keeps racing duplicates single-flight. Simulations, the dominant
+/// cost, never touch either lock.
+pub struct Engine {
+    graphs: Mutex<Lru<String, Arc<GraphEntry>>>,
+    graph_flight: Flight<String>,
+    programs: Mutex<ProgramCache>,
+    program_flight: Flight<CacheKey>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine {
+    /// An engine with the default cache bound.
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_CACHE_CAPACITY)
+    }
+
+    /// An engine whose caches hold at most `capacity` programs and
+    /// `capacity` graphs.
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            graphs: Mutex::new(Lru::new(capacity)),
+            graph_flight: Flight::new(),
+            programs: Mutex::new(ProgramCache::new(capacity)),
+            program_flight: Flight::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Execute one job to completion. Thread-safe: any number of threads
+    /// may submit concurrently, and duplicate (workload, overlay) keys
+    /// still compile exactly once. Results are deterministic — a cache
+    /// hit replays the identical placement, so its [`JobResult::stats`]
+    /// are bit-identical to a cold compile of the same job.
+    pub fn submit(&self, job: &JobSpec) -> Result<JobResult, Error> {
+        let spec: Spec = job.workload.parse().map_err(Error::Spec)?;
+        let canon = spec.canonical();
+        let cfg = job.effective_config();
+        let overlay = Overlay::from_config(cfg)?;
+        let entry = self.graph_entry(&spec, &canon)?;
+        let key = CacheKey::new(entry.fingerprint, &canon, &cfg);
+
+        let lookup = || self.programs.lock().expect("program cache lock").get(&key);
+        let (program, cache_hit, compile_micros) =
+            match self.program_flight.acquire(&key, lookup) {
+                Some(program) => (program, true, 0),
+                None => {
+                    // we own the build right: compile with no locks held
+                    let t0 = Instant::now();
+                    let compiled = SharedProgram::compile(Arc::clone(&entry.graph), &overlay);
+                    let out = match compiled {
+                        Ok(program) => {
+                            let program = Arc::new(program);
+                            self.programs
+                                .lock()
+                                .expect("program cache lock")
+                                .insert(key.clone(), Arc::clone(&program));
+                            Ok((program, false, t0.elapsed().as_micros() as u64))
+                        }
+                        Err(e) => Err(Error::Compile(e)),
+                    };
+                    self.program_flight.release(&key);
+                    out?
+                }
+            };
+        if cache_hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+
+        let view = program.program();
+        let t0 = Instant::now();
+        let stats = view
+            .session()
+            .with_scheduler(job.scheduler)
+            .with_backend(job.backend)
+            .with_max_cycles(cfg.max_cycles)
+            .run()
+            .map_err(Error::Sim)?;
+        let run_micros = t0.elapsed().as_micros() as u64;
+
+        Ok(JobResult {
+            workload: canon,
+            scheduler: job.scheduler,
+            backend: job.backend,
+            fingerprint: entry.fingerprint,
+            cache_hit,
+            compile_micros,
+            run_micros,
+            nodes: entry.stats.nodes,
+            edges: entry.stats.edges,
+            depth: entry.stats.depth,
+            stats,
+        })
+    }
+
+    /// Fan `jobs` across `workers` OS threads ([`run_parallel`]).
+    /// Results come back in job order regardless of completion order,
+    /// so batch output is deterministic for every worker count.
+    pub fn submit_batch(
+        &self,
+        jobs: &[JobSpec],
+        workers: usize,
+    ) -> Vec<Result<JobResult, Error>> {
+        run_parallel(jobs.to_vec(), workers, |job: JobSpec| self.submit(&job))
+    }
+
+    /// Current cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        let programs = self.programs.lock().expect("program cache lock");
+        let graphs = self.graphs.lock().expect("graph cache lock");
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: programs.evictions(),
+            entries: programs.len(),
+            graphs: graphs.len(),
+            graph_evictions: graphs.evictions(),
+        }
+    }
+
+    /// Build (or fetch) the graph for `spec` (whose canonical string is
+    /// `canon`) — single-flight per canonical spec, generation itself
+    /// outside every lock.
+    fn graph_entry(&self, spec: &Spec, canon: &str) -> Result<Arc<GraphEntry>, Error> {
+        let canon = canon.to_string();
+        let lookup = || self.graphs.lock().expect("graph cache lock").get(&canon);
+        if let Some(entry) = self.graph_flight.acquire(&canon, lookup) {
+            return Ok(entry);
+        }
+        let result = match spec.build() {
+            Ok(graph) => {
+                let graph = Arc::new(graph);
+                let entry = Arc::new(GraphEntry {
+                    fingerprint: graph.fingerprint(),
+                    stats: graph.stats(),
+                    graph,
+                });
+                self.graphs
+                    .lock()
+                    .expect("graph cache lock")
+                    .insert(canon.clone(), Arc::clone(&entry));
+                Ok(entry)
+            }
+            Err(msg) => Err(Error::Spec(msg)),
+        };
+        self.graph_flight.release(&canon);
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::BackendKind;
+    use crate::sched::SchedulerKind;
+    use crate::sim::SimError;
+
+    fn job(workload: &str, cols: usize, rows: usize) -> JobSpec {
+        let mut j = JobSpec::new(workload);
+        j.overlay = j.overlay.with_dims(cols, rows);
+        j
+    }
+
+    #[test]
+    fn duplicate_jobs_hit_the_cache_with_identical_stats() {
+        let engine = Engine::new();
+        let j = job("reduction:64", 2, 2);
+        let cold = engine.submit(&j).unwrap();
+        let warm = engine.submit(&j).unwrap();
+        assert!(!cold.cache_hit);
+        assert!(warm.cache_hit);
+        assert_eq!(warm.compile_micros, 0);
+        assert_eq!(warm.stats, cold.stats, "hits replay bit-identical stats");
+        assert_eq!(warm.fingerprint, cold.fingerprint);
+        let s = engine.cache_stats();
+        assert_eq!((s.hits, s.misses, s.entries, s.graphs), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn scheduler_and_backend_variants_share_one_program() {
+        let engine = Engine::new();
+        let mut variants = Vec::new();
+        for sched in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
+            for backend in [BackendKind::Lockstep, BackendKind::SkipAhead] {
+                let mut j = job("layered:8:4:16:2:seed=3", 2, 2);
+                j.scheduler = sched;
+                j.backend = backend;
+                variants.push(j);
+            }
+        }
+        let results: Vec<JobResult> = variants
+            .iter()
+            .map(|j| engine.submit(j).unwrap())
+            .collect();
+        let s = engine.cache_stats();
+        assert_eq!(s.misses, 1, "one compile serves all four variants");
+        assert_eq!(s.hits, 3);
+        // backends bit-exact per scheduler; schedulers genuinely differ
+        assert_eq!(results[0].stats, results[1].stats);
+        assert_eq!(results[2].stats, results[3].stats);
+        assert_eq!(results[0].stats.scheduler, SchedulerKind::InOrder);
+        assert_eq!(results[2].stats.scheduler, SchedulerKind::OutOfOrder);
+    }
+
+    #[test]
+    fn submit_batch_preserves_job_order() {
+        let engine = Engine::new();
+        let jobs: Vec<JobSpec> = ["reduction:32", "chain:16", "reduction:32", "butterfly:16"]
+            .iter()
+            .map(|w| job(w, 2, 2))
+            .collect();
+        let results = engine.submit_batch(&jobs, 4);
+        assert_eq!(results.len(), 4);
+        for (j, r) in jobs.iter().zip(&results) {
+            assert_eq!(r.as_ref().unwrap().workload, j.workload);
+        }
+        assert_eq!(
+            results[0].as_ref().unwrap().stats,
+            results[2].as_ref().unwrap().stats,
+            "duplicate jobs agree"
+        );
+    }
+
+    #[test]
+    fn errors_map_to_typed_arms() {
+        let engine = Engine::new();
+        // bad spec string
+        match engine.submit(&JobSpec::new("bogus:1")) {
+            Err(Error::Spec(msg)) => assert!(msg.contains("bogus"), "{msg}"),
+            other => panic!("expected Spec error, got {other:?}"),
+        }
+        // invalid overlay
+        let bad = job("reduction:16", 0, 4);
+        assert!(matches!(engine.submit(&bad), Err(Error::Config(_))));
+        // cycle-limited run
+        let mut limited = job("reduction:64", 2, 2);
+        limited.max_cycles = Some(3);
+        match engine.submit(&limited) {
+            Err(Error::Sim(SimError::CycleLimitExceeded { cycle, .. })) => assert_eq!(cycle, 3),
+            other => panic!("expected cycle limit, got {other:?}"),
+        }
+        // failed jobs poison nothing: the same engine keeps serving, and
+        // a compile failure releases the flight latch for retries
+        let mut too_big = job("layered:64:32:128:2", 1, 1);
+        too_big.overlay.enforce_capacity = true;
+        assert!(matches!(engine.submit(&too_big), Err(Error::Compile(_))));
+        assert!(matches!(engine.submit(&too_big), Err(Error::Compile(_))));
+        assert!(engine.submit(&job("reduction:64", 2, 2)).is_ok());
+    }
+
+    #[test]
+    fn lru_bound_applies_to_both_caches() {
+        let engine = Engine::with_capacity(2);
+        for w in ["reduction:8", "reduction:12", "reduction:16"] {
+            engine.submit(&job(w, 2, 2)).unwrap();
+        }
+        let s = engine.cache_stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.graphs, 2, "graph cache is bounded too");
+        assert_eq!(s.graph_evictions, 1);
+        // the evicted workload recompiles (miss), the resident ones hit
+        engine.submit(&job("reduction:8", 2, 2)).unwrap();
+        assert_eq!(engine.cache_stats().misses, 4);
+    }
+}

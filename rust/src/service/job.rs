@@ -1,0 +1,313 @@
+//! The request/response types of the service layer.
+//!
+//! A [`JobSpec`] names *what* to run (a workload spec string, see
+//! [`crate::workload::Spec`]) and *how* (scheduler, engine backend,
+//! overlay knobs, cycle budget); a [`JobResult`] carries the full
+//! [`SimStats`] plus compile/run timing and cache provenance. Both are
+//! JSON documents (`util::json`), one per line in `tdp batch` streams.
+
+use crate::config::OverlayConfig;
+use crate::engine::BackendKind;
+use crate::sched::SchedulerKind;
+use crate::sim::SimStats;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// One execution request: a workload spec string plus the run variant
+/// and overlay overrides.
+///
+/// JSON form (only `workload` is required):
+///
+/// ```json
+/// {"workload": "chain:4096:seed=7", "scheduler": "out_of_order",
+///  "backend": "skip_ahead", "cols": 16, "rows": 16,
+///  "max_cycles": 1000000, "overlay": { ...full OverlayConfig... }}
+/// ```
+///
+/// `overlay` (when present) is a full [`OverlayConfig`] object; the
+/// flat `cols` / `rows` / `seed` keys are shorthand applied on top of
+/// it, and `scheduler` / `backend` / `max_cycles` always win over the
+/// values inside `overlay` — they are session-level knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// workload spec string (`crate::workload::Spec` grammar)
+    pub workload: String,
+    pub scheduler: SchedulerKind,
+    pub backend: BackendKind,
+    /// base overlay knobs (scheduler/backend/max_cycles inside are
+    /// superseded by the fields above)
+    pub overlay: OverlayConfig,
+    /// cycle-budget override; `None` keeps the overlay's limit
+    pub max_cycles: Option<u64>,
+}
+
+impl JobSpec {
+    /// A job at the default overlay (paper 16×16, lockstep, OoO).
+    pub fn new(workload: &str) -> Self {
+        let overlay = OverlayConfig::default();
+        Self {
+            workload: workload.to_string(),
+            scheduler: overlay.scheduler,
+            backend: overlay.backend,
+            overlay,
+            max_cycles: None,
+        }
+    }
+
+    /// The fully-resolved overlay config this job runs under.
+    pub fn effective_config(&self) -> OverlayConfig {
+        let mut cfg = self.overlay;
+        cfg.scheduler = self.scheduler;
+        cfg.backend = self.backend;
+        if let Some(mc) = self.max_cycles {
+            cfg.max_cycles = mc;
+        }
+        cfg
+    }
+
+    /// Parse a job from a JSON document (one `tdp batch` input line).
+    /// Strict: unknown keys are rejected.
+    pub fn from_json(text: &str) -> Result<Self, String> {
+        Self::from_json_value(&json::parse(text).map_err(|e| e.to_string())?)
+    }
+
+    /// Parse from an already-parsed [`Json`] value.
+    pub fn from_json_value(j: &Json) -> Result<Self, String> {
+        let obj = j.as_obj().ok_or("job spec must be a JSON object")?;
+        // base overlay first, so the flat shorthand keys override it
+        // regardless of key order in the document
+        let mut overlay = match obj.get("overlay") {
+            Some(v) => OverlayConfig::from_json_value(v)?,
+            None => OverlayConfig::default(),
+        };
+        let mut workload = None;
+        let mut scheduler = None;
+        let mut backend = None;
+        let mut max_cycles = None;
+        for (key, v) in obj {
+            match key.as_str() {
+                "overlay" => {} // consumed above
+                "workload" => {
+                    workload =
+                        Some(v.as_str().ok_or("workload: expected string")?.to_string())
+                }
+                "scheduler" => {
+                    scheduler = Some(
+                        v.as_str()
+                            .ok_or("scheduler: expected string")?
+                            .parse::<SchedulerKind>()?,
+                    )
+                }
+                "backend" => {
+                    backend = Some(
+                        v.as_str()
+                            .ok_or("backend: expected string")?
+                            .parse::<BackendKind>()?,
+                    )
+                }
+                "cols" => {
+                    overlay.cols = v
+                        .as_u64()
+                        .ok_or("cols: expected non-negative integer")?
+                        as usize
+                }
+                "rows" => {
+                    overlay.rows = v
+                        .as_u64()
+                        .ok_or("rows: expected non-negative integer")?
+                        as usize
+                }
+                "seed" => {
+                    overlay.seed = v.as_u64().ok_or("seed: expected non-negative integer")?
+                }
+                "max_cycles" => {
+                    max_cycles =
+                        Some(v.as_u64().ok_or("max_cycles: expected non-negative integer")?)
+                }
+                other => return Err(format!("unknown job key '{other}'")),
+            }
+        }
+        let workload = workload.ok_or("job spec needs \"workload\"")?;
+        Ok(Self {
+            workload,
+            scheduler: scheduler.unwrap_or(overlay.scheduler),
+            backend: backend.unwrap_or(overlay.backend),
+            overlay,
+            max_cycles,
+        })
+    }
+
+    /// JSON form: workload + variant + the full base overlay (so a spec
+    /// written by `to_json` is self-contained and round-trips exactly).
+    pub fn to_json_value(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("workload".to_string(), Json::Str(self.workload.clone()));
+        m.insert(
+            "scheduler".to_string(),
+            Json::Str(self.scheduler.toml_name().to_string()),
+        );
+        m.insert(
+            "backend".to_string(),
+            Json::Str(self.backend.toml_name().to_string()),
+        );
+        if let Some(mc) = self.max_cycles {
+            m.insert("max_cycles".to_string(), Json::Num(mc as f64));
+        }
+        m.insert("overlay".to_string(), self.overlay.to_json_value());
+        Json::Obj(m)
+    }
+
+    /// Compact JSON text of [`JobSpec::to_json_value`].
+    pub fn to_json(&self) -> String {
+        json::write(&self.to_json_value())
+    }
+}
+
+/// One execution response: the workload's canonical spec, the variant it
+/// ran under, graph shape, cache provenance, timing and the full
+/// simulation counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobResult {
+    /// canonical workload spec ([`crate::workload::Spec::canonical`])
+    pub workload: String,
+    pub scheduler: SchedulerKind,
+    pub backend: BackendKind,
+    /// content fingerprint of the built graph
+    /// ([`crate::graph::DataflowGraph::fingerprint`])
+    pub fingerprint: u64,
+    /// did the Program come out of the engine's cache?
+    pub cache_hit: bool,
+    /// one-time compile cost actually paid by this job (0 on a hit)
+    pub compile_micros: u64,
+    /// simulation wall time
+    pub run_micros: u64,
+    pub nodes: usize,
+    pub edges: usize,
+    pub depth: usize,
+    /// the full counter set of the run
+    pub stats: SimStats,
+}
+
+impl JobResult {
+    /// JSON form (one `tdp batch` output line). The fingerprint is a
+    /// 16-digit hex *string*: u64 values do not survive f64 JSON
+    /// numbers above 2^53.
+    pub fn to_json_value(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("workload".to_string(), Json::Str(self.workload.clone()));
+        m.insert(
+            "scheduler".to_string(),
+            Json::Str(self.scheduler.toml_name().to_string()),
+        );
+        m.insert(
+            "backend".to_string(),
+            Json::Str(self.backend.toml_name().to_string()),
+        );
+        m.insert(
+            "fingerprint".to_string(),
+            Json::Str(format!("{:016x}", self.fingerprint)),
+        );
+        m.insert("cache_hit".to_string(), Json::Bool(self.cache_hit));
+        m.insert("compile_micros".to_string(), Json::Num(self.compile_micros as f64));
+        m.insert("run_micros".to_string(), Json::Num(self.run_micros as f64));
+        m.insert("nodes".to_string(), Json::Num(self.nodes as f64));
+        m.insert("edges".to_string(), Json::Num(self.edges as f64));
+        m.insert("depth".to_string(), Json::Num(self.depth as f64));
+        m.insert("stats".to_string(), self.stats.to_json_value());
+        Json::Obj(m)
+    }
+
+    /// Compact JSON text of [`JobResult::to_json_value`].
+    pub fn to_json(&self) -> String {
+        json::write(&self.to_json_value())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_spec_json_roundtrip() {
+        let mut job = JobSpec::new("chain:64:seed=3");
+        job.scheduler = SchedulerKind::InOrder;
+        job.backend = BackendKind::SkipAhead;
+        job.overlay = job.overlay.with_dims(4, 4);
+        job.max_cycles = Some(9000);
+        let back = JobSpec::from_json(&job.to_json()).unwrap();
+        assert_eq!(back, job);
+        assert_eq!(back.effective_config().cols, 4);
+        assert_eq!(back.effective_config().max_cycles, 9000);
+        assert_eq!(back.effective_config().backend, BackendKind::SkipAhead);
+    }
+
+    #[test]
+    fn minimal_job_uses_defaults() {
+        let job = JobSpec::from_json("{\"workload\": \"reduction:64\"}").unwrap();
+        assert_eq!(job.workload, "reduction:64");
+        assert_eq!(job.scheduler, SchedulerKind::OutOfOrder);
+        assert_eq!(job.backend, BackendKind::Lockstep);
+        assert_eq!(job.effective_config(), OverlayConfig::default());
+    }
+
+    #[test]
+    fn shorthand_overrides_embedded_overlay() {
+        // cols/rows/seed win over the overlay object, whatever the key order
+        let text = format!(
+            "{{\"cols\": 2, \"overlay\": {}, \"rows\": 3, \"workload\": \"chain:8\", \"seed\": 11}}",
+            OverlayConfig::default().with_dims(8, 8).to_json()
+        );
+        let job = JobSpec::from_json(&text).unwrap();
+        assert_eq!((job.overlay.cols, job.overlay.rows), (2, 3));
+        assert_eq!(job.overlay.seed, 11);
+        // session-level keys win over the overlay object too
+        let text = format!(
+            "{{\"workload\": \"chain:8\", \"scheduler\": \"in_order\", \"overlay\": {}}}",
+            OverlayConfig::default().to_json() // overlay says out_of_order
+        );
+        let job = JobSpec::from_json(&text).unwrap();
+        assert_eq!(job.scheduler, SchedulerKind::InOrder);
+        assert_eq!(job.effective_config().scheduler, SchedulerKind::InOrder);
+    }
+
+    #[test]
+    fn malformed_jobs_rejected() {
+        assert!(JobSpec::from_json("{}").is_err(), "workload is required");
+        assert!(JobSpec::from_json("[]").is_err());
+        assert!(JobSpec::from_json("{\"workload\": \"x\", \"bogus\": 1}").is_err());
+        assert!(JobSpec::from_json("{\"workload\": \"x\", \"scheduler\": \"nope\"}").is_err());
+        assert!(JobSpec::from_json("{\"workload\": \"x\", \"max_cycles\": -1}").is_err());
+        assert!(JobSpec::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn job_result_json_shape() {
+        use crate::noc::NetworkStats;
+        let stats = SimStats::collect(
+            10,
+            3,
+            3,
+            SchedulerKind::OutOfOrder,
+            NetworkStats::default(),
+            vec![Default::default(); 2],
+        );
+        let r = JobResult {
+            workload: "chain:8".into(),
+            scheduler: SchedulerKind::OutOfOrder,
+            backend: BackendKind::Lockstep,
+            fingerprint: 0xda70_7bbb_d2f6_ebdc,
+            cache_hit: true,
+            compile_micros: 0,
+            run_micros: 42,
+            nodes: 3,
+            edges: 2,
+            depth: 2,
+            stats: stats.clone(),
+        };
+        let j = json::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("fingerprint").unwrap().as_str(), Some("da707bbbd2f6ebdc"));
+        assert_eq!(j.get("cache_hit"), Some(&Json::Bool(true)));
+        let back = SimStats::from_json_value(j.get("stats").unwrap()).unwrap();
+        assert_eq!(back, stats, "stats nest losslessly inside the result");
+    }
+}

@@ -1,0 +1,36 @@
+//! The service layer (DESIGN.md §9): job-oriented execution over a
+//! content-addressed Program cache.
+//!
+//! The paper's economics — node labeling and placement are a *static
+//! one-time* cost amortized over execution — only pay off if the system
+//! is shaped like a request server: many independent jobs multiplexed
+//! over compiled fabrics, the framing HBM-era graph accelerators
+//! (ReGraph, streaming task-graph schedulers) use. This module is that
+//! shape:
+//!
+//! * [`JobSpec`] — one request: a workload spec string
+//!   ([`crate::workload::Spec`] grammar, e.g. `chain:4096:seed=7`),
+//!   scheduler, engine backend, overlay overrides, cycle budget; JSON
+//!   in, one object per `tdp batch` line.
+//! * [`Engine`] — a long-lived executor owning the caches: workload
+//!   graphs by canonical spec, compiled [`crate::program::SharedProgram`]s
+//!   by [`cache::CacheKey`] (canonical spec × graph fingerprint ×
+//!   normalized overlay shape, LRU-bounded, hit/miss counters exposed).
+//!   Duplicate and
+//!   concurrent requests compile exactly once and fan out as cheap
+//!   sessions; `submit_batch` shards across `util::par` workers with
+//!   deterministic result order.
+//! * [`JobResult`] — one response: canonical workload, variant, graph
+//!   shape, cache provenance, compile/run timing and the full
+//!   [`crate::sim::SimStats`]; JSON out.
+//!
+//! `coordinator::fig1_sweep` and `tdp batch` / `tdp run --format json`
+//! are thin clients of this module.
+
+pub mod cache;
+
+mod engine;
+mod job;
+
+pub use engine::{CacheStats, Engine, DEFAULT_CACHE_CAPACITY};
+pub use job::{JobResult, JobSpec};

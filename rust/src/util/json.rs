@@ -30,6 +30,15 @@ impl Json {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Exact u64 view: a non-negative integral number ≤ 2^53 (beyond
+    /// that an f64 silently rounds, so we refuse rather than guess).
+    pub fn as_u64(&self) -> Option<u64> {
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        self.as_f64()
+            .filter(|n| *n >= 0.0 && *n <= MAX_EXACT && n.fract() == 0.0)
+            .map(|n| n as u64)
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -393,6 +402,17 @@ mod tests {
         let v = Json::Num(0.1 + 0.2);
         let t = write(&v);
         assert_eq!(parse(&t).unwrap(), v);
+    }
+
+    #[test]
+    fn as_u64_is_exact() {
+        assert_eq!(parse("42").unwrap().as_u64(), Some(42));
+        assert_eq!(parse("0").unwrap().as_u64(), Some(0));
+        assert_eq!(parse("9007199254740992").unwrap().as_u64(), Some(1 << 53));
+        assert_eq!(parse("-1").unwrap().as_u64(), None);
+        assert_eq!(parse("2.5").unwrap().as_u64(), None);
+        assert_eq!(parse("9007199254740994").unwrap().as_u64(), None, "beyond 2^53");
+        assert_eq!(parse("\"7\"").unwrap().as_u64(), None, "strings are not numbers");
     }
 
     #[test]

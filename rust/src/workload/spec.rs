@@ -1,0 +1,284 @@
+//! The workload registry: compact, round-trippable spec strings.
+//!
+//! Every workload the generators can produce has a one-line name —
+//! `chain:4096:seed=7`, `lu_pl:330:3`, `mix:100:60:2`, `mtx:path.mtx` —
+//! which is the unit of request addressing in the service layer
+//! ([`crate::service::JobSpec`] carries one) and the graph-cache key.
+//! [`Spec`] parses the grammar, builds the graph, and `Display`s back
+//! the canonical form, so specs survive CLI → JSON → engine round trips.
+//!
+//! Grammar: `kind[:arg]*[:key=value]*` — positional args are
+//! kind-specific (see the table below), trailing `key=value` segments
+//! are options (`seed=N` is the only one). `mtx:` is special: everything
+//! after the first colon is the file path, verbatim.
+//!
+//! | kind        | args                          | generator |
+//! |-------------|-------------------------------|-----------|
+//! | `lu_banded` | n, half_bw, fill              | sparse-LU of a banded matrix |
+//! | `lu_random` | n, density                    | sparse-LU, uniform random |
+//! | `lu_pl`     | n, avg_degree                 | sparse-LU, power-law (Fig. 1 ladder) |
+//! | `chain`     | n                             | sequential pivot chain (tridiagonal LU) |
+//! | `mix`       | chain_n, bulk_n, bulk_deg     | chain ∪ power-law bulk updates |
+//! | `layered`   | inputs, levels, width, lookback | random layered DAG |
+//! | `reduction` | width                         | binary reduction tree |
+//! | `stencil`   | width, steps                  | 1-D 3-point stencil |
+//! | `butterfly` | width                         | FFT butterfly |
+//! | `mtx`       | path (rest of string)         | Matrix Market file |
+
+use crate::config::WorkloadSpec;
+use crate::graph::DataflowGraph;
+use std::fmt;
+use std::str::FromStr;
+
+/// A parsed workload spec string: the generator parameters plus the
+/// generation seed. `FromStr` and `Display` round-trip; [`Spec::canonical`]
+/// is the normalized form used as a cache key (aliases and a redundant
+/// `seed=0` normalize away).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Spec {
+    /// which generator, with its parameters
+    pub workload: WorkloadSpec,
+    /// generation seed (`seed=N` option; 0 when absent)
+    pub seed: u64,
+}
+
+impl Spec {
+    /// Wrap a parsed [`WorkloadSpec`] with a seed.
+    pub fn new(workload: WorkloadSpec, seed: u64) -> Self {
+        Self { workload, seed }
+    }
+
+    /// The normalized spec string (what `Display` prints) — equal specs
+    /// canonicalize equal, so this is a sound graph-cache key.
+    pub fn canonical(&self) -> String {
+        self.to_string()
+    }
+
+    /// Materialize the dataflow graph.
+    pub fn build(&self) -> Result<DataflowGraph, String> {
+        self.workload.build(self.seed)
+    }
+}
+
+impl fmt::Display for Spec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.workload {
+            WorkloadSpec::LuBanded { n, half_bw, fill } => {
+                write!(f, "lu_banded:{n}:{half_bw}:{fill}")?
+            }
+            WorkloadSpec::LuRandom { n, density } => write!(f, "lu_random:{n}:{density}")?,
+            WorkloadSpec::LuPowerLaw { n, avg_degree } => write!(f, "lu_pl:{n}:{avg_degree}")?,
+            WorkloadSpec::Layered { inputs, levels, width, lookback } => {
+                write!(f, "layered:{inputs}:{levels}:{width}:{lookback}")?
+            }
+            WorkloadSpec::Reduction { width } => write!(f, "reduction:{width}")?,
+            WorkloadSpec::Stencil { width, steps } => write!(f, "stencil:{width}:{steps}")?,
+            WorkloadSpec::Butterfly { width } => write!(f, "butterfly:{width}")?,
+            WorkloadSpec::Chain { n } => write!(f, "chain:{n}")?,
+            WorkloadSpec::Mix { chain_n, bulk_n, bulk_deg } => {
+                write!(f, "mix:{chain_n}:{bulk_n}:{bulk_deg}")?
+            }
+            // mtx consumes the rest of the string: no seed suffix
+            WorkloadSpec::MatrixMarket { path } => return write!(f, "mtx:{path}"),
+        }
+        if self.seed != 0 {
+            write!(f, ":seed={}", self.seed)?;
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for Spec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err("empty workload spec".to_string());
+        }
+        let (kind, rest) = match s.split_once(':') {
+            Some((k, r)) => (k, r),
+            None => (s, ""),
+        };
+        // mtx: the remainder is the path, verbatim (paths may contain ':')
+        if kind == "mtx" || kind == "matrix_market" {
+            if rest.is_empty() {
+                return Err("mtx needs a path: mtx:<file.mtx>".to_string());
+            }
+            return Ok(Spec::new(WorkloadSpec::MatrixMarket { path: rest.to_string() }, 0));
+        }
+        let mut parts: Vec<&str> = if rest.is_empty() {
+            Vec::new()
+        } else {
+            rest.split(':').collect()
+        };
+        // peel trailing key=value options (each at most once — silently
+        // letting a duplicate win would run a different graph than the
+        // one the user appended)
+        let mut seed: Option<u64> = None;
+        while let Some(last) = parts.last() {
+            let Some((key, value)) = last.split_once('=') else { break };
+            match key {
+                "seed" => {
+                    if seed.is_some() {
+                        return Err("duplicate spec option 'seed='".to_string());
+                    }
+                    seed = Some(
+                        value
+                            .parse()
+                            .map_err(|_| format!("seed: cannot parse '{value}'"))?,
+                    );
+                }
+                other => return Err(format!("unknown spec option '{other}='")),
+            }
+            parts.pop();
+        }
+        let seed = seed.unwrap_or(0);
+        let arity = |want: usize| -> Result<(), String> {
+            if parts.len() == want {
+                Ok(())
+            } else {
+                Err(format!(
+                    "workload '{kind}' takes {want} argument(s), got {}",
+                    parts.len()
+                ))
+            }
+        };
+        let usz = |i: usize| -> Result<usize, String> {
+            parts[i]
+                .parse()
+                .map_err(|_| format!("{kind}: cannot parse '{}' as integer", parts[i]))
+        };
+        let flt = |i: usize| -> Result<f64, String> {
+            parts[i]
+                .parse()
+                .map_err(|_| format!("{kind}: cannot parse '{}' as number", parts[i]))
+        };
+        let workload = match kind {
+            "lu_banded" => {
+                arity(3)?;
+                WorkloadSpec::LuBanded { n: usz(0)?, half_bw: usz(1)?, fill: flt(2)? }
+            }
+            "lu_random" => {
+                arity(2)?;
+                WorkloadSpec::LuRandom { n: usz(0)?, density: flt(1)? }
+            }
+            "lu_pl" | "lu_power_law" => {
+                arity(2)?;
+                WorkloadSpec::LuPowerLaw { n: usz(0)?, avg_degree: usz(1)? }
+            }
+            "layered" => {
+                arity(4)?;
+                WorkloadSpec::Layered {
+                    inputs: usz(0)?,
+                    levels: usz(1)?,
+                    width: usz(2)?,
+                    lookback: usz(3)?,
+                }
+            }
+            "reduction" => {
+                arity(1)?;
+                WorkloadSpec::Reduction { width: usz(0)? }
+            }
+            "stencil" => {
+                arity(2)?;
+                WorkloadSpec::Stencil { width: usz(0)?, steps: usz(1)? }
+            }
+            "butterfly" => {
+                arity(1)?;
+                WorkloadSpec::Butterfly { width: usz(0)? }
+            }
+            "chain" => {
+                arity(1)?;
+                WorkloadSpec::Chain { n: usz(0)? }
+            }
+            "mix" => {
+                arity(3)?;
+                WorkloadSpec::Mix { chain_n: usz(0)?, bulk_n: usz(1)?, bulk_deg: usz(2)? }
+            }
+            other => {
+                return Err(format!(
+                    "unknown workload kind '{other}' (lu_banded | lu_random | lu_pl | chain \
+                     | mix | layered | reduction | stencil | butterfly | mtx)"
+                ))
+            }
+        };
+        Ok(Spec::new(workload, seed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for s in [
+            "chain:4096:seed=7",
+            "lu_banded:100:4:0.8",
+            "lu_random:64:0.1:seed=3",
+            "lu_pl:330:3:seed=42",
+            "mix:100:60:2:seed=1",
+            "layered:8:4:16:2",
+            "reduction:256",
+            "stencil:32:4:seed=9",
+            "butterfly:64",
+            "mtx:/data/west0479.mtx",
+        ] {
+            let spec: Spec = s.parse().unwrap();
+            assert_eq!(spec.to_string(), s, "canonical form is stable");
+            let again: Spec = spec.to_string().parse().unwrap();
+            assert_eq!(again, spec, "round trip");
+        }
+    }
+
+    #[test]
+    fn aliases_and_defaults_normalize() {
+        let a: Spec = "lu_power_law:40:2".parse().unwrap();
+        assert_eq!(a.canonical(), "lu_pl:40:2");
+        // seed=0 is the default and normalizes away
+        let b: Spec = "reduction:64:seed=0".parse().unwrap();
+        assert_eq!(b.canonical(), "reduction:64");
+        assert_eq!(b.seed, 0);
+    }
+
+    #[test]
+    fn specs_build_real_graphs() {
+        for s in ["chain:24", "mix:20:30:2:seed=1", "reduction:32", "lu_pl:40:2:seed=5"] {
+            let spec: Spec = s.parse().unwrap();
+            let g = spec.build().unwrap();
+            assert!(g.len() > 0, "{s}");
+            g.validate().unwrap();
+        }
+        // chain is depth-dominated: the pivot recurrence serializes
+        let chain: Spec = "chain:24".parse().unwrap();
+        let stats = chain.build().unwrap().stats();
+        assert!(stats.depth >= 24, "chain depth {}", stats.depth);
+    }
+
+    #[test]
+    fn same_spec_same_fingerprint_different_seed_differs() {
+        let a: Spec = "layered:8:4:16:2:seed=5".parse().unwrap();
+        let b: Spec = "layered:8:4:16:2:seed=5".parse().unwrap();
+        let c: Spec = "layered:8:4:16:2:seed=6".parse().unwrap();
+        assert_eq!(a.build().unwrap().fingerprint(), b.build().unwrap().fingerprint());
+        assert_ne!(a.build().unwrap().fingerprint(), c.build().unwrap().fingerprint());
+    }
+
+    #[test]
+    fn malformed_specs_rejected() {
+        for s in [
+            "",
+            "bogus:4",
+            "chain",            // missing arg
+            "chain:x",          // non-numeric
+            "chain:4:5",        // too many args
+            "chain:4:speed=7",  // unknown option
+            "chain:4:seed=1:seed=2", // duplicate option
+            "mtx:",             // missing path
+            "reduction:64:seed=abc",
+        ] {
+            assert!(s.parse::<Spec>().is_err(), "'{s}' must not parse");
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! `tdp batch` end-to-end (ISSUE acceptance): a 3-workload ×
+//! 4-scheduler-spelling × 2-backend job file compiles each workload
+//! exactly once (asserted via the `compiles=` counter the binary
+//! reports — `program::compile_count()` inside the batch process), and
+//! cache-hit jobs return bit-identical `SimStats` to the cold-compile
+//! runs of the same variant.
+
+use std::process::Command;
+use tdp::util::json::{self, Json};
+
+fn tdp() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_tdp"))
+}
+
+fn temp_file(name: &str, content: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("tdp_batch_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    std::fs::write(&path, content).unwrap();
+    path
+}
+
+/// Pull `key=value` integers out of the stderr summary line.
+fn summary_field(stderr: &str, key: &str) -> u64 {
+    let line = stderr
+        .lines()
+        .find(|l| l.starts_with("batch:"))
+        .unwrap_or_else(|| panic!("no batch summary in stderr: {stderr}"));
+    line.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(&format!("{key}=")))
+        .unwrap_or_else(|| panic!("no {key}= in summary: {line}"))
+        .parse()
+        .unwrap()
+}
+
+#[test]
+fn batch_compiles_each_workload_once_with_bit_identical_hits() {
+    // 3 workloads × 4 scheduler spellings (2 per kind — aliases must
+    // normalize onto the same cache key) × 2 backends = 24 jobs
+    let workloads = ["reduction:48", "chain:24:seed=1", "layered:6:4:12:1:seed=2"];
+    let schedulers = ["in_order", "fifo", "out_of_order", "ooo"];
+    let backends = ["lockstep", "skip_ahead"];
+    let mut lines = Vec::new();
+    for w in &workloads {
+        for s in &schedulers {
+            for b in &backends {
+                lines.push(format!(
+                    "{{\"workload\": \"{w}\", \"scheduler\": \"{s}\", \
+                     \"backend\": \"{b}\", \"cols\": 2, \"rows\": 2}}"
+                ));
+            }
+        }
+    }
+    let path = temp_file("grid.jsonl", &(lines.join("\n") + "\n"));
+    let out = tdp().arg("batch").arg(&path).output().expect("binary runs");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "batch failed:\n{stdout}\n{stderr}");
+
+    // one JSON result line per job, in input order
+    let results: Vec<Json> = stdout
+        .lines()
+        .map(|l| json::parse(l).unwrap_or_else(|e| panic!("bad output line '{l}': {e}")))
+        .collect();
+    assert_eq!(results.len(), 24, "one output line per job");
+
+    // each workload compiled exactly once, in the batch process
+    assert_eq!(summary_field(&stderr, "compiles"), 3, "{stderr}");
+    assert_eq!(summary_field(&stderr, "cache_misses"), 3);
+    assert_eq!(summary_field(&stderr, "cache_hits"), 21);
+    assert_eq!(summary_field(&stderr, "failed"), 0);
+
+    // cache-hit jobs return bit-identical stats to the cold-compile run
+    // of the same (workload, scheduler, backend) variant: group by the
+    // *normalized* variant echo and demand a single stats value, with
+    // both hits and at least one cold compile observed overall
+    let mut by_variant: std::collections::BTreeMap<(String, String, String), Vec<&Json>> =
+        Default::default();
+    let mut hits = 0u64;
+    for r in &results {
+        let get = |k: &str| r.get(k).unwrap().as_str().unwrap().to_string();
+        if r.get("cache_hit") == Some(&Json::Bool(true)) {
+            hits += 1;
+        }
+        by_variant
+            .entry((get("workload"), get("scheduler"), get("backend")))
+            .or_default()
+            .push(r.get("stats").unwrap());
+    }
+    assert_eq!(hits, 21);
+    assert_eq!(by_variant.len(), 12, "4 spellings normalize to 2 schedulers");
+    for ((w, s, b), stats) in &by_variant {
+        assert_eq!(stats.len(), 2, "{w}/{s}/{b}: two spellings per variant");
+        assert_eq!(stats[0], stats[1], "{w}/{s}/{b}: hit must equal cold compile");
+    }
+}
+
+#[test]
+fn batch_smoke_file_runs_clean() {
+    // the checked-in CI smoke file must stay green
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("data")
+        .join("smoke_jobs.jsonl");
+    let out = tdp().arg("batch").arg(&path).output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let results: Vec<Json> = stdout.lines().map(|l| json::parse(l).unwrap()).collect();
+    assert_eq!(results.len(), 4);
+    for r in &results {
+        assert!(r.get("error").is_none(), "{r:?}");
+        assert!(r.get("stats").unwrap().get("cycles").unwrap().as_u64().unwrap() > 0);
+    }
+}
+
+#[test]
+fn batch_failed_jobs_exit_nonzero_but_run_the_rest() {
+    let content = "\
+{\"workload\": \"reduction:32\", \"cols\": 2, \"rows\": 2}\n\
+{\"workload\": \"nope:1\"}\n\
+not json at all\n\
+{\"workload\": \"reduction:32\", \"cols\": 2, \"rows\": 2, \"max_cycles\": 2}\n\
+{\"workload\": \"reduction:32\", \"cols\": 2, \"rows\": 2}\n";
+    let path = temp_file("mixed.jsonl", content);
+    let out = tdp().arg("batch").arg(&path).output().unwrap();
+    assert!(!out.status.success(), "failed jobs must fail the batch");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let results: Vec<Json> = stdout.lines().map(|l| json::parse(l).unwrap()).collect();
+    assert_eq!(results.len(), 5, "every line gets an answer");
+    // line-addressed errors for the bad spec, the parse failure and the
+    // cycle-limited run; healthy jobs still succeed around them
+    for (idx, want_err) in [(0, false), (1, true), (2, true), (3, true), (4, false)] {
+        let r = &results[idx];
+        assert_eq!(r.get("error").is_some(), want_err, "line {}: {r:?}", idx + 1);
+        if want_err {
+            assert_eq!(r.get("line").unwrap().as_u64().unwrap() as usize, idx + 1);
+        }
+    }
+    // the two healthy duplicates are one compile + one bit-identical hit
+    assert_eq!(results[0].get("stats"), results[4].get("stats"));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(summary_field(&stderr, "failed"), 3);
+}
+
+#[test]
+fn batch_without_file_fails() {
+    let out = tdp().arg("batch").output().unwrap();
+    assert!(!out.status.success());
+}

@@ -163,6 +163,89 @@ fn analyze_traces_both_schedulers() {
     assert!(text.contains("=== out-of-order ==="));
 }
 
+/// `run --format json` emits a machine-readable result whose counters
+/// round-trip through the crate's own JSON parser.
+#[test]
+fn run_format_json_single_scheduler() {
+    let text = run_ok(&[
+        "run",
+        "--workload",
+        "kind = \"reduction\"\\nwidth = 64",
+        "--cols",
+        "2",
+        "--rows",
+        "2",
+        "--scheduler",
+        "out_of_order",
+        "--format",
+        "json",
+    ]);
+    let stats = tdp::SimStats::from_json(text.trim()).expect("stdout is one stats object");
+    assert!(stats.cycles > 0);
+    assert_eq!(stats.scheduler, tdp::SchedulerKind::OutOfOrder);
+    assert_eq!(stats.completed, stats.total_nodes);
+}
+
+#[test]
+fn run_format_json_both_schedulers() {
+    let text = run_ok(&[
+        "run",
+        "--workload",
+        "kind = \"reduction\"\\nwidth = 64",
+        "--cols",
+        "2",
+        "--rows",
+        "2",
+        "--format",
+        "json",
+    ]);
+    let j = tdp::util::json::parse(text.trim()).unwrap();
+    let speedup = j.get("speedup").unwrap().as_f64().unwrap();
+    assert!(speedup > 0.0);
+    for kind in ["in_order", "out_of_order"] {
+        let stats = tdp::SimStats::from_json_value(j.get(kind).unwrap()).unwrap();
+        assert!(stats.cycles > 0, "{kind}");
+    }
+}
+
+#[test]
+fn resources_format_json() {
+    let text = run_ok(&["resources", "--points", "16", "--format", "json"]);
+    let j = tdp::util::json::parse(text.trim()).unwrap();
+    assert!(j.get("title").unwrap().as_str().unwrap().contains("Table I"));
+    assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+}
+
+#[test]
+fn run_rejects_unknown_format() {
+    let out = tdp()
+        .args([
+            "run",
+            "--workload",
+            "kind = \"reduction\"\\nwidth = 8",
+            "--format",
+            "yaml",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+/// Bugfix coverage: the analyze path must propagate failures as typed
+/// errors (non-zero exit), never panic — `sim.trace().unwrap()` used to
+/// sit on this path.
+#[test]
+fn analyze_failure_is_a_clean_error_not_a_panic() {
+    let out = tdp()
+        .args(["analyze", "--graph", "/nonexistent/tdp_graph.json"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(!err.contains("panicked"), "must fail as an error: {err}");
+    assert!(err.contains("Error") || err.contains("error"), "{err}");
+}
+
 /// A failing simulation must exit non-zero with the typed error on
 /// stderr (the `Error` → exit-code propagation of the compile-once API).
 #[test]

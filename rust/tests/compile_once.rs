@@ -16,19 +16,21 @@ use tdp::graph::DataflowGraph;
 use tdp::place;
 use tdp::program::{compile_count, run_batch, Program, RunVariant};
 use tdp::sched::SchedulerKind;
-use tdp::workload::layered_random;
+use tdp::workload::Spec;
 
 #[test]
 fn sweeps_and_scans_compile_each_workload_exactly_once() {
-    let ws: Vec<(String, DataflowGraph)> = vec![
-        ("a".into(), layered_random(12, 6, 24, 2, 1)),
-        ("b".into(), layered_random(16, 8, 32, 2, 2)),
-        ("c".into(), layered_random(8, 4, 16, 1, 3)),
+    let ws: Vec<(String, Spec)> = vec![
+        ("a".into(), "layered:12:6:24:2:seed=1".parse().unwrap()),
+        ("b".into(), "layered:16:8:32:2:seed=2".parse().unwrap()),
+        ("c".into(), "layered:8:4:16:1:seed=3".parse().unwrap()),
     ];
     let cfg = fig1_config().with_dims(4, 4);
     let overlay = Overlay::from_config(cfg).unwrap();
 
-    // --- Fig.1 sweep: N workloads x 2 schedulers, N compiles ---
+    // --- Fig.1 sweep (service-layer path): N workloads x 2 schedulers,
+    // N compiles — the Engine's content-addressed cache dedups the
+    // scheduler variants onto one artifact per workload ---
     let places0 = place::build_count();
     let labels0 = criticality::labeling_count();
     let compiles0 = compile_count();
@@ -51,8 +53,10 @@ fn sweeps_and_scans_compile_each_workload_exactly_once() {
     );
 
     // --- capacity scan: one compile answers both schedulers ---
+    let graphs: Vec<DataflowGraph> =
+        ws.iter().map(|(_, spec)| spec.build().unwrap()).collect();
     let places1 = place::build_count();
-    for (_, g) in &ws {
+    for g in &graphs {
         let program = Program::compile(g, &overlay).unwrap();
         let in_order = program.fits(SchedulerKind::InOrder);
         let ooo = program.fits(SchedulerKind::OutOfOrder);
@@ -63,7 +67,7 @@ fn sweeps_and_scans_compile_each_workload_exactly_once() {
     // --- run_batch: 4 variants, still a single placement ---
     let places2 = place::build_count();
     let labels2 = criticality::labeling_count();
-    let program = Program::compile(&ws[0].1, &overlay).unwrap();
+    let program = Program::compile(&graphs[0], &overlay).unwrap();
     let results = run_batch(&program, &RunVariant::all(), 2);
     assert_eq!(results.len(), 4);
     assert!(results.iter().all(|r| r.is_ok()));

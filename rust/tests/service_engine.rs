@@ -1,0 +1,119 @@
+//! Service-engine acceptance (ISSUE): N threads submit a shuffled mix
+//! of duplicate jobs against one [`Engine`]; results must be
+//! bit-identical to sequential runs, and `program::compile_count()`
+//! must equal the number of *distinct* (fingerprint, overlay) cache
+//! keys — concurrency never double-compiles (the cache is
+//! single-flight) and never changes an answer.
+//!
+//! NOTE: `compile_count` is process-global and `cargo test` runs tests
+//! of one binary concurrently, so this file holds exactly ONE `#[test]`
+//! (its own process) and measures strictly sequential deltas.
+
+use std::collections::BTreeMap;
+use tdp::engine::BackendKind;
+use tdp::program::compile_count;
+use tdp::sched::SchedulerKind;
+use tdp::service::{Engine, JobSpec};
+use tdp::util::rng::Rng;
+
+type Key = (String, &'static str, &'static str);
+
+fn key_of(job: &JobSpec) -> Key {
+    (
+        job.workload.clone(),
+        job.scheduler.toml_name(),
+        job.backend.toml_name(),
+    )
+}
+
+#[test]
+fn concurrent_duplicate_jobs_compile_once_and_match_sequential() {
+    // 3 workloads × 2 schedulers × 2 backends = 12 distinct jobs, but
+    // only 3 distinct cache keys: scheduler and backend are session
+    // knobs, normalized out of the content address.
+    let workloads = ["reduction:48", "chain:24:seed=1", "layered:8:4:16:2:seed=5"];
+    let mut jobs: Vec<JobSpec> = Vec::new();
+    for w in workloads {
+        for sched in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
+            for backend in [BackendKind::Lockstep, BackendKind::SkipAhead] {
+                let mut job = JobSpec::new(w);
+                job.overlay = job.overlay.with_dims(2, 2);
+                job.scheduler = sched;
+                job.backend = backend;
+                jobs.push(job);
+            }
+        }
+    }
+
+    // sequential baseline on its own engine (cold compiles)
+    let baseline = Engine::new();
+    let mut expect: BTreeMap<Key, tdp::SimStats> = BTreeMap::new();
+    for job in &jobs {
+        let r = baseline.submit(job).unwrap();
+        assert_eq!(r.stats.completed, r.stats.total_nodes, "run completed");
+        expect.insert(key_of(job), r.stats);
+    }
+    assert_eq!(expect.len(), jobs.len(), "12 distinct variants");
+
+    // concurrent phase: 4 threads, each submitting its own shuffled
+    // double copy of the job list (duplicates within and across threads)
+    const THREADS: u64 = 4;
+    let engine = Engine::new();
+    let compiles0 = compile_count();
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let engine = &engine;
+            let jobs = &jobs;
+            let expect = &expect;
+            s.spawn(move || {
+                let mut order: Vec<usize> =
+                    (0..jobs.len()).chain(0..jobs.len()).collect();
+                let mut rng = Rng::seed_from_u64(0xBEEF + t);
+                for i in (1..order.len()).rev() {
+                    order.swap(i, rng.gen_range(i + 1));
+                }
+                for idx in order {
+                    let job = &jobs[idx];
+                    let r = engine.submit(job).unwrap();
+                    assert_eq!(
+                        &r.stats,
+                        expect.get(&key_of(job)).unwrap(),
+                        "concurrent stats must be bit-identical to the \
+                         sequential cold-compile run ({:?})",
+                        key_of(job)
+                    );
+                }
+            });
+        }
+    });
+
+    // exactly one compile per distinct (fingerprint, overlay) key —
+    // across every thread, duplicate, scheduler and backend
+    let distinct_keys = workloads.len() as u64;
+    assert_eq!(
+        compile_count() - compiles0,
+        distinct_keys,
+        "compile count must equal the number of distinct cache keys"
+    );
+    let stats = engine.cache_stats();
+    assert_eq!(stats.misses, distinct_keys);
+    assert_eq!(
+        stats.hits,
+        THREADS * 2 * jobs.len() as u64 - distinct_keys,
+        "every other submission is a cache hit"
+    );
+    assert_eq!(stats.entries, workloads.len());
+    assert_eq!(stats.graphs, workloads.len(), "graphs built once per spec");
+    assert_eq!(stats.evictions, 0);
+
+    // and a parallel batch over the same engine returns results in job
+    // order, all cache hits, still bit-identical
+    let batch = engine.submit_batch(&jobs, 3);
+    for (job, r) in jobs.iter().zip(&batch) {
+        let r = r.as_ref().unwrap();
+        assert!(r.cache_hit);
+        assert_eq!(r.workload, job.workload, "batch preserves job order");
+        assert_eq!(&r.stats, expect.get(&key_of(job)).unwrap());
+    }
+    assert_eq!(compile_count() - compiles0, distinct_keys, "batch added no compiles");
+}

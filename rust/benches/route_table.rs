@@ -1,0 +1,89 @@
+//! Baked route-table microbenchmark: what packet construction costs
+//! when every header is a pre-formed CSR entry (one indexed load +
+//! payload write) versus the seed derivation the simulator used to do
+//! per packet — `graph.node(global).fanout[edge]` → `place.pe_of[dst]`
+//! → `place.local_of[dst]` → torus div/mod. Also reports the one-time
+//! cost of baking the tables, which the compile-once Program amortizes
+//! over every run. (`cargo bench --bench route_table`)
+
+#[path = "harness.rs"]
+mod harness;
+
+use tdp::config::OverlayConfig;
+use tdp::noc::Packet;
+use tdp::place::Placement;
+use tdp::program::RuntimeTables;
+use tdp::workload::Spec;
+
+fn main() {
+    harness::section("route table — packet construction paths");
+    // the Fig. 1 power-law LU rung on the paper's 16x16 overlay
+    let spec: Spec = "lu_pl:330:3:seed=42".parse().unwrap();
+    let g = spec.build().unwrap();
+    let (cols, rows) = (16usize, 16usize);
+    let cfg = OverlayConfig::default().with_dims(cols, rows);
+    let place = Placement::build(&g, cols * rows, cfg.placement, cfg.local_order, cfg.seed);
+    println!(
+        "workload: {} -> {} nodes, {} edges on {cols}x{rows}",
+        spec.canonical(),
+        g.len(),
+        g.num_edges()
+    );
+
+    let t_build = harness::time_it(1, 5, || RuntimeTables::build(&g, &place, cols, rows));
+    harness::report("bake tables (one-time compile cost)", &t_build, "");
+    let tables = RuntimeTables::build(&g, &place, cols, rows);
+
+    // every (node, edge) pair once per rep; checksum defeats dead-code
+    // elimination and proves both paths form identical headers
+    let sweeps = 200u32;
+    let checksum =
+        |p: Packet| p.dest_x as u64 + p.dest_y as u64 + p.local_idx as u64 + p.slot as u64;
+
+    let t_graph = harness::time_it(1, 5, || {
+        let mut acc = 0u64;
+        for _ in 0..sweeps {
+            for global in 0..g.len() as u32 {
+                let node = g.node(global);
+                // the seed hot path, verbatim
+                for &(dst, slot) in &node.fanout {
+                    let dpe = place.pe_of[dst as usize] as usize;
+                    acc += checksum(Packet {
+                        dest_x: (dpe % cols) as u8,
+                        dest_y: (dpe / cols) as u8,
+                        local_idx: place.local_of[dst as usize] as u16,
+                        slot,
+                        payload: 0.5,
+                    });
+                }
+            }
+        }
+        acc
+    });
+
+    let t_baked = harness::time_it(1, 5, || {
+        let mut acc = 0u64;
+        for _ in 0..sweeps {
+            for dense in 0..tables.len() {
+                for edge in 0..tables.route_len(dense) {
+                    acc += checksum(tables.packet(dense, edge, 0.5));
+                }
+            }
+        }
+        acc
+    });
+
+    let packets = sweeps as u64 * g.num_edges() as u64;
+    harness::report(
+        "graph-chase (seed derivation)",
+        &t_graph,
+        &format!("{:?}/packet", t_graph.per_iter(packets)),
+    );
+    harness::report(
+        "baked CSR load",
+        &t_baked,
+        &format!("{:?}/packet", t_baked.per_iter(packets)),
+    );
+    let speedup = t_graph.median.as_secs_f64() / t_baked.median.as_secs_f64();
+    println!("baked-route speedup: {speedup:.2}x over {packets} packets");
+}

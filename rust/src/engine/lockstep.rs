@@ -5,6 +5,7 @@ use super::{BackendKind, SimBackend};
 use crate::config::OverlayConfig;
 use crate::graph::DataflowGraph;
 use crate::place::Placement;
+use crate::program::RuntimeTables;
 use crate::sim::{SimError, SimStats, Simulator};
 use std::sync::Arc;
 
@@ -32,6 +33,26 @@ impl<'g> LockstepBackend<'g> {
         Ok(Self {
             sim: Simulator::with_shared_placement(g, place, cfg)?,
         })
+    }
+
+    /// Build over a compiled artifact's baked runtime tables (the
+    /// [`crate::program::Session`] path — no placement, labeling or
+    /// flattening work here).
+    pub fn with_tables(
+        g: &'g DataflowGraph,
+        tables: Arc<RuntimeTables>,
+        cfg: OverlayConfig,
+    ) -> Result<Self, SimError> {
+        Ok(Self {
+            sim: Simulator::with_tables(g, tables, cfg)?,
+        })
+    }
+
+    /// Wrap an already-constructed simulator — the composition hook for
+    /// ablations that pair a custom scheduler factory with either
+    /// engine (e.g. `tests/artifact_tables.rs`).
+    pub fn from_simulator(sim: Simulator<'g>) -> Self {
+        Self { sim }
     }
 
     /// The wrapped reference simulator — for tracing and ablation hooks

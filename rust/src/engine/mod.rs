@@ -34,6 +34,7 @@ pub use skipahead::SkipAheadBackend;
 use crate::config::OverlayConfig;
 use crate::graph::DataflowGraph;
 use crate::place::Placement;
+use crate::program::RuntimeTables;
 use crate::sim::{SimError, SimStats};
 use std::sync::Arc;
 
@@ -79,7 +80,8 @@ pub trait SimBackend {
 /// Construct the backend selected by `cfg.backend`. Places the graph as
 /// part of construction; for repeated runs of the same workload prefer
 /// compiling a [`crate::program::Program`] once and opening
-/// [`crate::program::Session`]s (which route through [`backend_for`]).
+/// [`crate::program::Session`]s (which route through
+/// [`backend_with_tables`]).
 pub fn make_backend<'g>(
     g: &'g DataflowGraph,
     cfg: OverlayConfig,
@@ -91,8 +93,9 @@ pub fn make_backend<'g>(
 }
 
 /// Construct the backend selected by `cfg.backend` over an
-/// already-compiled, shared placement — the [`crate::program::Session`]
-/// execution path. No placement or labeling happens here.
+/// already-compiled, shared placement. Bakes the runtime tables from
+/// the placement; the artifact path ([`backend_with_tables`]) skips
+/// even that.
 pub fn backend_for<'g>(
     g: &'g DataflowGraph,
     place: Arc<Placement>,
@@ -103,6 +106,20 @@ pub fn backend_for<'g>(
         BackendKind::SkipAhead => {
             Box::new(SkipAheadBackend::with_shared_placement(g, place, cfg)?)
         }
+    })
+}
+
+/// Construct the backend selected by `cfg.backend` over a compiled
+/// artifact's baked [`RuntimeTables`] — the [`crate::program::Session`]
+/// execution path: no placement, labeling or flattening work at all.
+pub fn backend_with_tables<'g>(
+    g: &'g DataflowGraph,
+    tables: Arc<RuntimeTables>,
+    cfg: OverlayConfig,
+) -> Result<Box<dyn SimBackend + 'g>, SimError> {
+    Ok(match cfg.backend {
+        BackendKind::Lockstep => Box::new(LockstepBackend::with_tables(g, tables, cfg)?),
+        BackendKind::SkipAhead => Box::new(SkipAheadBackend::with_tables(g, tables, cfg)?),
     })
 }
 

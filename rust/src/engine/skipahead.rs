@@ -29,6 +29,7 @@ use super::{BackendKind, SimBackend};
 use crate::config::OverlayConfig;
 use crate::graph::DataflowGraph;
 use crate::place::Placement;
+use crate::program::RuntimeTables;
 use crate::sim::{SimError, SimStats, Simulator};
 use std::sync::Arc;
 
@@ -60,6 +61,32 @@ impl<'g> SkipAheadBackend<'g> {
             jumps: 0,
             cycles_skipped: 0,
         })
+    }
+
+    /// Build over a compiled artifact's baked runtime tables (the
+    /// [`crate::program::Session`] path — no placement, labeling or
+    /// flattening work here).
+    pub fn with_tables(
+        g: &'g DataflowGraph,
+        tables: Arc<RuntimeTables>,
+        cfg: OverlayConfig,
+    ) -> Result<Self, SimError> {
+        Ok(Self {
+            sim: Simulator::with_tables(g, tables, cfg)?,
+            jumps: 0,
+            cycles_skipped: 0,
+        })
+    }
+
+    /// Wrap an already-constructed simulator — the composition hook for
+    /// ablations that pair a custom scheduler factory with either
+    /// engine (e.g. `tests/artifact_tables.rs`).
+    pub fn from_simulator(sim: Simulator<'g>) -> Self {
+        Self {
+            sim,
+            jumps: 0,
+            cycles_skipped: 0,
+        }
     }
 
     /// Clock jumps taken so far.

@@ -43,6 +43,26 @@ impl Op {
         Op::ALL.get(code as usize).copied()
     }
 
+    /// Sentinel byte marking a graph input (no ALU op) in the compiled
+    /// runtime tables' dense opcode array
+    /// ([`crate::program::RuntimeTables::op`]). Never a valid [`Op::code8`].
+    pub const INPUT_CODE8: u8 = u8::MAX;
+
+    /// Single-byte opcode for the dense runtime tables — same encoding
+    /// as [`Op::code`], narrowed to the byte the BRAM image would hold.
+    #[inline]
+    pub const fn code8(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`Op::code8`] ([`Op::INPUT_CODE8`] and any other
+    /// non-opcode byte decode to `None`). Delegates to [`Op::from_code`]
+    /// so there is exactly one decode table.
+    #[inline]
+    pub fn from_code8(code: u8) -> Option<Op> {
+        Op::from_code(code as u32)
+    }
+
     /// Number of operands the node must receive before it can fire.
     #[inline]
     pub fn arity(self) -> usize {
@@ -93,6 +113,17 @@ mod tests {
         }
         assert_eq!(Op::from_code(8), None);
         assert_eq!(Op::from_code(u32::MAX), None);
+    }
+
+    #[test]
+    fn code8_roundtrip_and_input_sentinel() {
+        for op in Op::ALL {
+            assert_eq!(op.code8() as u32, op.code(), "same encoding, one byte");
+            assert_eq!(Op::from_code8(op.code8()), Some(op));
+            assert_ne!(op.code8(), Op::INPUT_CODE8);
+        }
+        assert_eq!(Op::from_code8(Op::INPUT_CODE8), None);
+        assert_eq!(Op::from_code8(8), None);
     }
 
     #[test]

@@ -64,7 +64,9 @@ pub use config::{ConfigError, Overlay, OverlayBuilder, OverlayConfig};
 pub use engine::{BackendKind, SimBackend};
 pub use error::Error;
 pub use graph::{DataflowGraph, NodeId, Op};
-pub use program::{run_batch, CompileError, Program, RunVariant, Session, SharedProgram};
+pub use program::{
+    run_batch, CompileError, Program, RunVariant, RuntimeTables, Session, SharedProgram,
+};
 pub use sched::SchedulerKind;
 pub use service::{Engine, JobResult, JobSpec};
 pub use sim::{SimError, SimStats, Simulator};

@@ -56,6 +56,13 @@ COMMANDS
               --backend lockstep|skip-ahead]
   noc-stress  synthetic NoC traffic          [--cols 16 --rows 16 --packets 100000
               --inject-rate 0.5 --seed 0]
+  perf        host-throughput harness        [--quick --reps 5 --budget-ms 0
+              --format json|text --out file]
+              runs the pinned workload set (compile once, time repeated runs)
+              and emits sim cycles/sec + wall ms per run; the JSON is the
+              BENCH_*.json perf-trajectory format (perf/README.md).
+              --budget-ms N fails (non-zero exit) if total run wall-clock
+              exceeds N — CI uses a generous budget as a >2x-regression trap
   analyze     trace a run (queue occupancy / busyness / completion)
               --workload <toml> | --graph <json> [--cols 16 --rows 16
               --stride 0 --csv file --seed 0]
@@ -516,6 +523,155 @@ fn cmd_noc_stress(mut a: Args) -> Result<()> {
     Ok(())
 }
 
+/// One pinned `tdp perf` case: name, workload spec, overlay dims,
+/// scheduler, backend. The set is fixed on purpose — BENCH_*.json
+/// snapshots are only comparable if every run measures the same thing.
+struct PerfCase {
+    name: &'static str,
+    spec: &'static str,
+    cols: usize,
+    rows: usize,
+    scheduler: SchedulerKind,
+    backend: BackendKind,
+}
+
+const fn perf_case(
+    name: &'static str,
+    spec: &'static str,
+    cols: usize,
+    rows: usize,
+    scheduler: SchedulerKind,
+    backend: BackendKind,
+) -> PerfCase {
+    PerfCase { name, spec, cols, rows, scheduler, backend }
+}
+
+/// The pinned workload set. `quick` is the CI smoke variant (seconds,
+/// not minutes); the full set is the perf-trajectory unit.
+fn perf_cases(quick: bool) -> Vec<PerfCase> {
+    use BackendKind::{Lockstep, SkipAhead};
+    use SchedulerKind::{InOrder, OutOfOrder};
+    let chain = if quick { "chain:2000:seed=1" } else { "chain:8000:seed=1" };
+    let lu_pl = if quick { "lu_pl:120:3:seed=42" } else { "lu_pl:330:3:seed=42" };
+    let mut set = vec![
+        perf_case("sparse_chain_16x16", chain, 16, 16, OutOfOrder, Lockstep),
+        perf_case("sparse_chain_16x16_skip", chain, 16, 16, OutOfOrder, SkipAhead),
+        perf_case("lu_pl_fig1_16x16_ooo", lu_pl, 16, 16, OutOfOrder, Lockstep),
+    ];
+    if !quick {
+        set.push(perf_case("lu_pl_fig1_16x16_inorder", lu_pl, 16, 16, InOrder, Lockstep));
+        set.push(perf_case(
+            "lu_banded_8x8_ooo",
+            "lu_banded:200:8:0.9:seed=3",
+            8,
+            8,
+            OutOfOrder,
+            Lockstep,
+        ));
+    }
+    set
+}
+
+/// `tdp perf` — the host-side throughput harness behind the repo's
+/// BENCH_*.json perf trajectory (perf/README.md). Each case compiles
+/// its Program once, then times `reps` full Session runs (warmup 1);
+/// the headline metric is simulated fabric cycles per wall-clock second
+/// over the median run.
+fn cmd_perf(mut a: Args) -> Result<()> {
+    use std::time::Instant;
+    let quick = a.switch("quick");
+    let reps = a.usize_or("reps", 5)?.max(1);
+    let budget_ms = a.u64_or("budget-ms", 0)?;
+    let format = a.str_or("format", "json")?;
+    let out = a.str_opt("out")?;
+    a.finish()?;
+    if format != "json" && format != "text" {
+        bail!("unknown format '{format}' (json | text)");
+    }
+    let mut cases_json = Vec::new();
+    let mut total_wall_ms = 0f64;
+    for case in perf_cases(quick) {
+        let spec: workload::Spec = case.spec.parse().map_err(|e: String| anyhow!(e))?;
+        let g = spec.build().map_err(|e| anyhow!("workload build: {e}"))?;
+        let cfg = OverlayConfig::default()
+            .with_dims(case.cols, case.rows)
+            .with_scheduler(case.scheduler)
+            .with_backend(case.backend);
+        let overlay = Overlay::from_config(cfg)?;
+        let t0 = Instant::now();
+        let program = Program::compile(&g, &overlay)?;
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut cycles = program.session().run()?.cycles; // warmup
+        let mut samples = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t = Instant::now();
+            cycles = program.session().run()?.cycles;
+            samples.push(t.elapsed());
+        }
+        samples.sort_unstable();
+        let median_ms = samples[reps / 2].as_secs_f64() * 1e3;
+        let min_ms = samples[0].as_secs_f64() * 1e3;
+        let wall_ms: f64 = samples.iter().map(|d| d.as_secs_f64() * 1e3).sum();
+        total_wall_ms += wall_ms;
+        let rate = cycles as f64 / (median_ms / 1e3);
+        if format == "text" {
+            println!(
+                "{:<28} {} {}x{} {:<12} {:>10} cyc  median {:>9.3} ms (min {:.3})  {:>9.3} M cyc/s",
+                case.name,
+                case.spec,
+                case.cols,
+                case.rows,
+                case.scheduler.name(),
+                cycles,
+                median_ms,
+                min_ms,
+                rate / 1e6
+            );
+        }
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(case.name.to_string()));
+        m.insert("workload".to_string(), Json::Str(spec.canonical()));
+        m.insert("cols".to_string(), Json::Num(case.cols as f64));
+        m.insert("rows".to_string(), Json::Num(case.rows as f64));
+        m.insert(
+            "scheduler".to_string(),
+            Json::Str(case.scheduler.toml_name().to_string()),
+        );
+        m.insert("backend".to_string(), Json::Str(case.backend.toml_name().to_string()));
+        m.insert("nodes".to_string(), Json::Num(g.len() as f64));
+        m.insert("edges".to_string(), Json::Num(g.num_edges() as f64));
+        m.insert("sim_cycles".to_string(), Json::Num(cycles as f64));
+        m.insert("compile_ms".to_string(), Json::Num(compile_ms));
+        m.insert("wall_ms_median".to_string(), Json::Num(median_ms));
+        m.insert("wall_ms_min".to_string(), Json::Num(min_ms));
+        m.insert("runs".to_string(), Json::Num(reps as f64));
+        m.insert("sim_cycles_per_sec".to_string(), Json::Num(rate));
+        cases_json.push(Json::Obj(m));
+    }
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("tdp perf".to_string()));
+    root.insert("version".to_string(), Json::Num(1.0));
+    root.insert("quick".to_string(), Json::Bool(quick));
+    root.insert("reps".to_string(), Json::Num(reps as f64));
+    root.insert("cases".to_string(), Json::Arr(cases_json));
+    root.insert("total_wall_ms".to_string(), Json::Num(total_wall_ms));
+    let text = json::write(&Json::Obj(root));
+    if format == "json" {
+        println!("{text}");
+    }
+    if let Some(path) = &out {
+        std::fs::write(path, &text)?;
+        eprintln!("wrote {path}");
+    }
+    if format == "text" {
+        println!("total timed wall: {total_wall_ms:.1} ms");
+    }
+    if budget_ms > 0 && total_wall_ms > budget_ms as f64 {
+        bail!("perf budget exceeded: {total_wall_ms:.1} ms > {budget_ms} ms (>2x regression trap)");
+    }
+    Ok(())
+}
+
 fn cmd_analyze(mut a: Args) -> Result<()> {
     use tdp::place::PlacementPolicy;
     use tdp::sim::Simulator;
@@ -601,6 +757,7 @@ fn main() -> Result<()> {
         "resources" => cmd_resources(args),
         "capacity" => cmd_capacity(args),
         "noc-stress" => cmd_noc_stress(args),
+        "perf" => cmd_perf(args),
         "analyze" => cmd_analyze(args),
         "workload-stats" => cmd_workload_stats(args),
         "help" | "--help" | "-h" => {

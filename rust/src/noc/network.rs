@@ -102,6 +102,18 @@ pub struct Network {
     /// routers visited this cycle (rebuilt each step; `mark` dedupes)
     active: Vec<u32>,
     mark: Vec<bool>,
+    // Precomputed torus topology (built once in `new`): the step loop
+    // performs zero div/mod per packet per cycle.
+    /// router fed by `x_link[s]` (the E neighbor of router `s`)
+    east_of: Vec<u32>,
+    /// router fed by `y_link[s]` (the S neighbor of router `s`)
+    south_of: Vec<u32>,
+    /// link register feeding router `me`'s W input
+    west_src: Vec<u32>,
+    /// link register feeding router `me`'s N input
+    north_src: Vec<u32>,
+    /// router `me`'s torus coordinates
+    xy: Vec<(u8, u8)>,
     /// `out.inject_ok` slots set last cycle (lazy clearing)
     granted: Vec<u32>,
     /// scratch injector list for the dense-inject [`Network::step`]
@@ -116,6 +128,20 @@ impl Network {
     pub fn new(w: usize, h: usize) -> Self {
         assert!(w >= 1 && h >= 1 && w <= 32 && h <= 32);
         let n = w * h;
+        let mut east_of = Vec::with_capacity(n);
+        let mut south_of = Vec::with_capacity(n);
+        let mut west_src = Vec::with_capacity(n);
+        let mut north_src = Vec::with_capacity(n);
+        let mut xy = Vec::with_capacity(n);
+        for me in 0..n {
+            let x = me % w;
+            let y = me / w;
+            east_of.push((y * w + (x + 1) % w) as u32);
+            south_of.push((((y + 1) % h) * w + x) as u32);
+            west_src.push((y * w + (x + w - 1) % w) as u32);
+            north_src.push((((y + h - 1) % h) * w + x) as u32);
+            xy.push((x as u8, y as u8));
+        }
         Self {
             w,
             h,
@@ -129,6 +155,11 @@ impl Network {
             y_occ_next: Vec::new(),
             active: Vec::new(),
             mark: vec![false; n],
+            east_of,
+            south_of,
+            west_src,
+            north_src,
+            xy,
             granted: Vec::new(),
             scan_buf: Vec::new(),
             out: StepResult {
@@ -203,19 +234,19 @@ impl Network {
         self.granted.clear();
 
         // active routers: the ones fed by an occupied link register,
-        // plus the injectors. Everyone else switches nothing.
+        // plus the injectors. Everyone else switches nothing. Neighbor
+        // indices come from the precomputed topology tables — no
+        // div/mod per packet.
         debug_assert!(self.active.is_empty());
         for &s in &self.x_occ {
-            let (x, y) = (s as usize % self.w, s as usize / self.w);
-            let me = y * self.w + (x + 1) % self.w;
+            let me = self.east_of[s as usize] as usize;
             if !self.mark[me] {
                 self.mark[me] = true;
                 self.active.push(me as u32);
             }
         }
         for &s in &self.y_occ {
-            let (x, y) = (s as usize % self.w, s as usize / self.w);
-            let me = ((y + 1) % self.h) * self.w + x;
+            let me = self.south_of[s as usize] as usize;
             if !self.mark[me] {
                 self.mark[me] = true;
                 self.active.push(me as u32);
@@ -231,17 +262,13 @@ impl Network {
 
         for &r in &self.active {
             let me = r as usize;
-            let x = me % self.w;
-            let y = me / self.w;
-            // W input of (x,y) = x_link register of the router west of us.
-            let west_src = y * self.w + (x + self.w - 1) % self.w;
-            let north_src = ((y + self.h - 1) % self.h) * self.w + x;
+            let (x, y) = self.xy[me];
             let io = RouterIn {
-                west: self.x_link[west_src],
-                north: self.y_link[north_src],
+                west: self.x_link[self.west_src[me] as usize],
+                north: self.y_link[self.north_src[me] as usize],
                 inject: inject[me].map(|p| (p, self.cycle)),
             };
-            let o = route(x as u8, y as u8, io);
+            let o = route(x, y, io);
 
             if let Some(t) = o.east {
                 self.x_next[me] = Some(t);
@@ -527,6 +554,21 @@ mod tests {
         }
         assert_eq!(dense.stats, sparse.stats);
         assert_eq!(dense.in_flight(), sparse.in_flight());
+    }
+
+    /// The precomputed topology tables are exactly the div/mod
+    /// derivations they replaced.
+    #[test]
+    fn topology_tables_match_divmod() {
+        let net = Network::new(5, 3);
+        for me in 0..15usize {
+            let (x, y) = (me % 5, me / 5);
+            assert_eq!(net.xy[me], (x as u8, y as u8));
+            assert_eq!(net.east_of[me] as usize, y * 5 + (x + 1) % 5);
+            assert_eq!(net.south_of[me] as usize, ((y + 1) % 3) * 5 + x);
+            assert_eq!(net.west_src[me] as usize, y * 5 + (x + 4) % 5);
+            assert_eq!(net.north_src[me] as usize, ((y + 2) % 3) * 5 + x);
+        }
     }
 
     #[test]

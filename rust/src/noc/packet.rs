@@ -32,6 +32,17 @@ pub struct Packet {
 impl Packet {
     pub const WIDTH_BITS: u32 = 32 + 5 + 5 + 13 + 1;
 
+    /// This header with `payload` filled in — the baked route-table
+    /// inject path ([`crate::program::RuntimeTables`]): the compiled
+    /// entry is the complete header, only the token value is written at
+    /// inject time.
+    #[inline]
+    #[must_use]
+    pub fn with_payload(mut self, payload: f32) -> Self {
+        self.payload = payload;
+        self
+    }
+
     /// Pack to the 56 b wire format (in the low bits of a u64).
     pub fn pack56(&self) -> u64 {
         debug_assert!((self.dest_x as usize) < MAX_DIM);

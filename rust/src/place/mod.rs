@@ -56,6 +56,20 @@ pub enum LocalOrder {
     ByNodeId,
 }
 
+/// The PE-major dense node numbering of a [`Placement`]
+/// ([`Placement::dense_layout`]): a bijection between graph node ids
+/// ("global") and contiguous `(pe, local)` addresses ("dense").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DenseLayout {
+    /// CSR over PEs: PE `p`'s nodes are dense ids `pe_base[p]..pe_base[p+1]`
+    /// (length `num_pes + 1`).
+    pub pe_base: Vec<u32>,
+    /// dense id → graph node id (the concatenated local memory layouts)
+    pub global_of: Vec<u32>,
+    /// graph node id → dense id (inverse permutation)
+    pub dense_of: Vec<u32>,
+}
+
 /// The complete placement of a graph onto `num_pes` PEs.
 #[derive(Debug, Clone)]
 pub struct Placement {
@@ -186,6 +200,30 @@ impl Placement {
         }
     }
 
+    /// The PE-major dense re-indexing of this placement: dense id
+    /// `pe_base[pe] + local` enumerates nodes grouped by PE in
+    /// local-memory order — under [`LocalOrder::ByCriticality`] that is
+    /// the paper's criticality-sorted BRAM image order, so consecutive
+    /// dense ids are exactly the addresses a PE's scheduler and
+    /// packet-gen unit walk. The compiled runtime tables
+    /// ([`crate::program::RuntimeTables`]) lay all per-node metadata and
+    /// dynamic state out in this order.
+    pub fn dense_layout(&self) -> DenseLayout {
+        let n = self.pe_of.len();
+        let mut pe_base = Vec::with_capacity(self.num_pes + 1);
+        let mut global_of = Vec::with_capacity(n);
+        pe_base.push(0u32);
+        for locals in &self.nodes_of {
+            global_of.extend_from_slice(locals);
+            pe_base.push(global_of.len() as u32);
+        }
+        let mut dense_of = vec![0u32; n];
+        for (dense, &global) in global_of.iter().enumerate() {
+            dense_of[global as usize] = dense as u32;
+        }
+        DenseLayout { pe_base, global_of, dense_of }
+    }
+
     /// Largest local node count across PEs (capacity check input).
     pub fn max_local_nodes(&self) -> usize {
         self.nodes_of.iter().map(|v| v.len()).max().unwrap_or(0)
@@ -303,6 +341,39 @@ mod tests {
                 assert_eq!(a.pe_of, b.pe_of, "{policy:?}/{order:?}");
                 assert_eq!(a.local_of, b.local_of, "{policy:?}/{order:?}");
                 assert_eq!(a.nodes_of, b.nodes_of, "{policy:?}/{order:?}");
+            }
+        }
+    }
+
+    /// `dense_layout` is a bijection consistent with `pe_of`/`local_of`:
+    /// dense id = pe_base[pe] + local, and the two permutations invert
+    /// each other.
+    #[test]
+    fn dense_layout_is_consistent_bijection() {
+        let g = sample();
+        for policy in [
+            PlacementPolicy::RoundRobin,
+            PlacementPolicy::Random,
+            PlacementPolicy::Chunked,
+        ] {
+            let p = Placement::build(&g, 5, policy, LocalOrder::ByCriticality, 3);
+            let d = p.dense_layout();
+            assert_eq!(d.pe_base.len(), 6);
+            assert_eq!(d.pe_base[0], 0);
+            assert_eq!(d.pe_base[5] as usize, g.len());
+            assert_eq!(d.global_of.len(), g.len());
+            for global in 0..g.len() {
+                let dense = d.dense_of[global] as usize;
+                assert_eq!(d.global_of[dense] as usize, global, "{policy:?}");
+                let pe = p.pe_of[global] as usize;
+                let local = p.local_of[global];
+                assert_eq!(dense as u32, d.pe_base[pe] + local, "{policy:?}");
+            }
+            for pe in 0..5 {
+                assert_eq!(
+                    (d.pe_base[pe + 1] - d.pe_base[pe]) as usize,
+                    p.nodes_of[pe].len()
+                );
             }
         }
     }

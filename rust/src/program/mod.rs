@@ -22,6 +22,10 @@
 //! [`crate::place::build_count`] / [`crate::criticality::labeling_count`],
 //! and `benches/compile_amortization.rs` measures what the sharing buys.
 
+mod tables;
+
+pub use tables::{RuntimeTables, SeedEntry};
+
 use crate::config::{Overlay, OverlayConfig};
 use crate::criticality;
 use crate::engine::{self, BackendKind, SimBackend};
@@ -122,15 +126,19 @@ impl FlagLayout {
 }
 
 /// The shared compile outputs — placement, criticality labels, per-PE
-/// BRAM images and the flag layout — in one `Arc`-shared allocation, so
-/// both the borrowing [`Program`] view and the owned [`SharedProgram`]
-/// cache entry hand out the same artifact without copying.
+/// BRAM images, the flag layout and the baked runtime tables — in one
+/// `Arc`-shared allocation, so both the borrowing [`Program`] view and
+/// the owned [`SharedProgram`] cache entry hand out the same artifact
+/// without copying.
 #[derive(Debug)]
 struct Artifact {
     place: Arc<Placement>,
     criticality: Vec<u32>,
     pe_images: Vec<PeImage>,
     flags: FlagLayout,
+    /// the flattened hot-path image every session's simulator consumes
+    /// (DESIGN.md §10) — baked here, once, never at run time
+    tables: Arc<RuntimeTables>,
 }
 
 /// The one compile implementation behind [`Program::compile`] and
@@ -168,11 +176,13 @@ fn compile_artifact(g: &DataflowGraph, overlay: &Overlay) -> Result<Artifact, Co
     {
         return Err(CompileError::CapacityExceeded { pe, words_needed, words_available });
     }
+    let tables = RuntimeTables::build_shared(g, &place, cfg.cols, cfg.rows);
     Ok(Artifact {
         place: Arc::new(place),
         criticality: crit,
         pe_images,
         flags: FlagLayout::of(&cfg.bram),
+        tables,
     })
 }
 
@@ -217,10 +227,21 @@ impl<'g> Program<'g> {
         &self.art.place
     }
 
-    /// The shared placement handle ([`Session`]s and custom engine
-    /// drivers pass this to [`engine::backend_for`]).
+    /// The shared placement handle — for custom engine drivers and
+    /// ablation hooks (e.g. `Simulator::with_scheduler_factory_shared`).
+    /// Note that paths taking a placement re-bake the runtime tables;
+    /// [`Session`]s run off [`Program::runtime_tables`] directly and
+    /// skip even that.
     pub fn shared_placement(&self) -> Arc<Placement> {
         Arc::clone(&self.art.place)
+    }
+
+    /// The baked runtime tables (DESIGN.md §10): the flattened,
+    /// PE-major hot-path image — CSR route table of pre-formed packet
+    /// headers, dense node metadata, global↔dense permutation — that
+    /// every [`Session`]'s simulator consumes directly.
+    pub fn runtime_tables(&self) -> Arc<RuntimeTables> {
+        Arc::clone(&self.art.tables)
     }
 
     /// Per-node criticality labels (§II-B: height to the farthest sink).
@@ -350,8 +371,10 @@ impl<'p, 'g> Session<'p, 'g> {
 
     /// Construct (without running) the configured engine backend — for
     /// callers that need `values()` or incremental control afterwards.
+    /// Runs straight off the compiled artifact's baked tables: no
+    /// placement, labeling or flattening work happens here.
     pub fn backend(&self) -> Result<Box<dyn SimBackend + 'g>, SimError> {
-        engine::backend_for(self.program.graph(), self.program.shared_placement(), self.cfg)
+        engine::backend_with_tables(self.program.graph(), self.program.runtime_tables(), self.cfg)
     }
 
     /// Run the compiled program to completion on this session's variant.
@@ -439,6 +462,30 @@ mod tests {
         assert_eq!(flags.bits_per_word, 32);
         assert_eq!(flags.words_per_bram, 32);
         assert_eq!(flags.words_per_pe, 256);
+    }
+
+    /// The compiled artifact's baked tables agree with its placement —
+    /// and sessions share one image allocation instead of re-flattening.
+    #[test]
+    fn artifact_bakes_runtime_tables_once() {
+        let g = layered_random(8, 4, 12, 2, 1);
+        let overlay = overlay_2x2();
+        let program = Program::compile(&g, &overlay).unwrap();
+        let t = program.runtime_tables();
+        assert_eq!(t.len(), g.len());
+        assert_eq!(t.routes.len(), g.num_edges());
+        assert_eq!(t.num_pes, 4);
+        assert_eq!((t.cols, t.rows), (2, 2));
+        let place = program.placement();
+        for global in 0..g.len() {
+            let pe = place.pe_of[global] as usize;
+            let local = place.local_of[global];
+            assert_eq!(t.dense_of[global], t.pe_base[pe] + local);
+            assert_eq!(t.global_of[t.dense_of[global] as usize] as usize, global);
+        }
+        assert_eq!(t.seeds.len(), g.num_inputs());
+        // clones and repeated accessors share, not rebuild
+        assert!(Arc::ptr_eq(&t, &program.clone().runtime_tables()));
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! Baked runtime tables — the compiled hot-path image of a placed graph
+//! (DESIGN.md §10).
+//!
+//! The paper buys its cheap runtime with a one-time static pass: nodes
+//! are labeled, sorted by criticality, and burned into per-PE BRAM
+//! images the hardware then walks with plain address arithmetic. The
+//! simulator exploits compile time the same way. [`RuntimeTables::build`]
+//! flattens everything the per-cycle loop used to re-derive from the
+//! object graph (`DataflowGraph` → `Node` → fanout → `Placement` lookups
+//! → torus div/mod) into dense PE-major arrays:
+//!
+//! * a CSR **route table** whose entries are fully pre-formed [`Packet`]
+//!   headers (dest x/y, destination local index, operand slot) — only
+//!   the f32 payload is written at inject time, so building a fanout
+//!   packet is a single indexed load;
+//! * **node metadata** (opcode byte, arity, route CSR offsets, global
+//!   id) indexed by *dense id* = `pe_base[pe] + local`, i.e. laid out in
+//!   each PE's local-memory order (decreasing criticality under the
+//!   paper's layout) so a PE's scheduler/packet-gen walk touches
+//!   contiguous memory;
+//! * the **global↔dense permutation**, kept so `values()` and trace
+//!   output stay in graph node-id order while the inner loop never
+//!   translates through `Placement` again;
+//! * the **seed list** of graph inputs in node-id order — exactly the
+//!   order the simulator has always marked inputs ready in, which
+//!   in-order FIFOs observe.
+//!
+//! The tables are immutable once built and shared by `Arc`: a compiled
+//! [`crate::program::Program`] bakes them once and every
+//! [`crate::program::Session`] (or service job) reuses them;
+//! constructing a [`crate::sim::Simulator`] directly builds a private
+//! copy from its placement, bit-identically — `tests/artifact_tables.rs`
+//! holds the two paths to stats-and-values equality.
+
+use crate::config::OverlayConfig;
+use crate::graph::{DataflowGraph, NodeKind, Op};
+use crate::noc::{Packet, MAX_DIM, MAX_LOCAL_NODES};
+use crate::place::Placement;
+use crate::sim::SimError;
+use std::sync::Arc;
+
+/// One graph input's seeding record: where its initial token lives and
+/// what to write there. Kept in graph node-id order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SeedEntry {
+    pub pe: u32,
+    pub local: u32,
+    pub dense: u32,
+    pub global: u32,
+    pub value: f32,
+}
+
+/// The flattened, PE-major runtime image of one (graph, placement,
+/// overlay shape) — everything the simulator hot loop reads per cycle,
+/// and nothing it doesn't. All fields are read-only after
+/// [`RuntimeTables::build`]; consumers index them directly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RuntimeTables {
+    pub num_pes: usize,
+    /// torus width the route-table coordinates were baked for
+    pub cols: usize,
+    pub rows: usize,
+    /// CSR over PEs: PE `p` owns dense ids `pe_base[p]..pe_base[p+1]`
+    pub pe_base: Vec<u32>,
+    /// per-PE torus coordinates `(x, y)` — precomputed once, replacing
+    /// the per-packet `pe % cols` / `pe / cols` div-mod
+    pub pe_xy: Vec<(u8, u8)>,
+    /// dense-indexed opcode byte ([`Op::code8`]; [`Op::INPUT_CODE8`] for
+    /// graph inputs)
+    pub op: Vec<u8>,
+    /// dense-indexed operand count (0 for inputs)
+    pub arity: Vec<u8>,
+    /// CSR over dense nodes: node `d`'s fanout packets are
+    /// `routes[route_base[d]..route_base[d+1]]` (length `n + 1`)
+    pub route_base: Vec<u32>,
+    /// pre-formed packet headers in fanout-edge order; `payload` is 0.0
+    /// until inject time
+    pub routes: Vec<Packet>,
+    /// dense id → graph node id (for `values()` mirroring / debug)
+    pub global_of: Vec<u32>,
+    /// graph node id → dense id (inverse permutation)
+    pub dense_of: Vec<u32>,
+    /// graph inputs in node-id order (the seed marking order)
+    pub seeds: Vec<SeedEntry>,
+}
+
+impl RuntimeTables {
+    /// Flatten `(g, place)` for a `cols`×`rows` torus. Pure and
+    /// deterministic: the same inputs always bake identical tables, so
+    /// a compile-time artifact and a constructor-built copy agree
+    /// bit-for-bit.
+    pub fn build(g: &DataflowGraph, place: &Placement, cols: usize, rows: usize) -> Self {
+        assert_eq!(place.num_pes, cols * rows, "placement/torus shape mismatch");
+        assert_eq!(place.pe_of.len(), g.len(), "placement covers the graph");
+        let n = g.len();
+        let layout = place.dense_layout();
+        let pe_xy: Vec<(u8, u8)> = (0..place.num_pes)
+            .map(|pe| ((pe % cols) as u8, (pe / cols) as u8))
+            .collect();
+        let mut op = Vec::with_capacity(n);
+        let mut arity = Vec::with_capacity(n);
+        let mut route_base = Vec::with_capacity(n + 1);
+        let mut routes = Vec::with_capacity(g.num_edges());
+        route_base.push(0u32);
+        for &global in &layout.global_of {
+            let node = g.node(global);
+            op.push(match node.kind {
+                NodeKind::Input { .. } => Op::INPUT_CODE8,
+                NodeKind::Operation { op, .. } => op.code8(),
+            });
+            arity.push(node.arity() as u8);
+            for &(dst, slot) in &node.fanout {
+                let dpe = place.pe_of[dst as usize] as usize;
+                let local = place.local_of[dst as usize];
+                debug_assert!((local as usize) < MAX_LOCAL_NODES, "13 b local index");
+                debug_assert!(dpe < MAX_DIM * MAX_DIM);
+                routes.push(Packet {
+                    dest_x: pe_xy[dpe].0,
+                    dest_y: pe_xy[dpe].1,
+                    local_idx: local as u16,
+                    slot,
+                    payload: 0.0,
+                });
+            }
+            route_base.push(routes.len() as u32);
+        }
+        let seeds = g
+            .nodes()
+            .iter()
+            .enumerate()
+            .filter_map(|(global, node)| match node.kind {
+                NodeKind::Input { value } => {
+                    let dense = layout.dense_of[global];
+                    Some(SeedEntry {
+                        pe: place.pe_of[global],
+                        local: place.local_of[global],
+                        dense,
+                        global: global as u32,
+                        value,
+                    })
+                }
+                NodeKind::Operation { .. } => None,
+            })
+            .collect();
+        Self {
+            num_pes: place.num_pes,
+            cols,
+            rows,
+            pe_base: layout.pe_base,
+            pe_xy,
+            op,
+            arity,
+            route_base,
+            routes,
+            global_of: layout.global_of,
+            dense_of: layout.dense_of,
+            seeds,
+        }
+    }
+
+    /// [`RuntimeTables::build`] behind an `Arc` (the shape every
+    /// consumer holds).
+    pub fn build_shared(
+        g: &DataflowGraph,
+        place: &Placement,
+        cols: usize,
+        rows: usize,
+    ) -> Arc<Self> {
+        Arc::new(Self::build(g, place, cols, rows))
+    }
+
+    /// Total nodes in the image.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.op.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.op.is_empty()
+    }
+
+    /// Nodes resident in `pe`'s local memory.
+    #[inline]
+    pub fn local_count(&self, pe: usize) -> usize {
+        (self.pe_base[pe + 1] - self.pe_base[pe]) as usize
+    }
+
+    /// Dense id of `(pe, local)` — the one address computation of the
+    /// hot loop.
+    #[inline]
+    pub fn dense(&self, pe: usize, local: u32) -> usize {
+        (self.pe_base[pe] + local) as usize
+    }
+
+    /// Fanout edge count of dense node `d` (CSR span length).
+    #[inline]
+    pub fn route_len(&self, dense: usize) -> u32 {
+        self.route_base[dense + 1] - self.route_base[dense]
+    }
+
+    /// The pre-formed packet for fanout `edge` of dense node `d`, with
+    /// `payload` filled in: one indexed load plus a field write.
+    #[inline]
+    pub fn packet(&self, dense: usize, edge: u32, payload: f32) -> Packet {
+        self.routes[(self.route_base[dense] + edge) as usize].with_payload(payload)
+    }
+
+    /// Per-PE `(nodes, fanout edges)` counts — the capacity-model view
+    /// of the image (each PE's CSR spans, no graph access).
+    pub fn pe_counts(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        (0..self.num_pes).map(|pe| {
+            let lo = self.pe_base[pe] as usize;
+            let hi = self.pe_base[pe + 1] as usize;
+            let edges = (self.route_base[hi] - self.route_base[lo]) as usize;
+            (hi - lo, edges)
+        })
+    }
+
+    /// The per-PE BRAM budget check over the baked image — the same
+    /// verdict (and error fields) as [`crate::sim::check_capacity`] on
+    /// the placement it was built from, via the shared counts core.
+    pub(crate) fn check_capacity(&self, cfg: &OverlayConfig) -> Result<(), SimError> {
+        crate::sim::check_capacity_counts(self.pe_counts(), cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Op;
+    use crate::place::{LocalOrder, PlacementPolicy};
+    use crate::workload::layered_random;
+
+    fn diamond() -> DataflowGraph {
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(3.0);
+        let b = g.add_input(4.0);
+        let s = g.op(Op::Add, &[a, b]);
+        let p = g.op(Op::Mul, &[a, b]);
+        g.op(Op::Sub, &[s, p]);
+        g
+    }
+
+    /// Hand-checked image of the diamond on a 2×2 round-robin placement
+    /// with arrival-order local memory: every route entry, opcode and
+    /// permutation slot pinned.
+    #[test]
+    fn diamond_tables_golden() {
+        let g = diamond();
+        // pe_of = [0, 1, 2, 3, 0]; coords: pe0=(0,0) pe1=(1,0) pe2=(0,1) pe3=(1,1)
+        let place = Placement::build(&g, 4, PlacementPolicy::RoundRobin, LocalOrder::ByNodeId, 0);
+        let t = RuntimeTables::build(&g, &place, 2, 2);
+        assert_eq!(t.pe_base, vec![0, 2, 3, 4, 5]);
+        assert_eq!(t.pe_xy, vec![(0, 0), (1, 0), (0, 1), (1, 1)]);
+        // dense order: [n0, n4, n1, n2, n3]
+        assert_eq!(t.global_of, vec![0, 4, 1, 2, 3]);
+        assert_eq!(t.dense_of, vec![0, 2, 3, 4, 1]);
+        let inp = Op::INPUT_CODE8;
+        assert_eq!(t.op, vec![inp, Op::Sub.code8(), inp, Op::Add.code8(), Op::Mul.code8()]);
+        assert_eq!(t.arity, vec![0, 2, 0, 2, 2]);
+        // fanouts: n0→(2,0)(3,0), n4→(), n1→(2,1)(3,1), n2→(4,0), n3→(4,1)
+        assert_eq!(t.route_base, vec![0, 2, 2, 4, 5, 6]);
+        let hdr = |x: u8, y: u8, local: u16, slot: u8| Packet {
+            dest_x: x,
+            dest_y: y,
+            local_idx: local,
+            slot,
+            payload: 0.0,
+        };
+        assert_eq!(
+            t.routes,
+            vec![
+                hdr(0, 1, 0, 0), // n0 → n2 (pe2, local 0), slot 0
+                hdr(1, 1, 0, 0), // n0 → n3 (pe3, local 0), slot 0
+                hdr(0, 1, 0, 1), // n1 → n2, slot 1
+                hdr(1, 1, 0, 1), // n1 → n3, slot 1
+                hdr(0, 0, 1, 0), // n2 → n4 (pe0, local 1), slot 0
+                hdr(0, 0, 1, 1), // n3 → n4, slot 1
+            ]
+        );
+        // seeds in node-id order
+        assert_eq!(t.seeds.len(), 2);
+        assert_eq!((t.seeds[0].global, t.seeds[0].pe, t.seeds[0].local), (0, 0, 0));
+        assert_eq!(t.seeds[0].value, 3.0);
+        assert_eq!((t.seeds[1].global, t.seeds[1].pe, t.seeds[1].local), (1, 1, 0));
+        assert_eq!(t.seeds[1].value, 4.0);
+        // accessors agree with the raw arrays
+        assert_eq!(t.local_count(0), 2);
+        assert_eq!(t.route_len(t.dense(0, 0)), 2);
+        assert_eq!(t.route_len(t.dense(0, 1)), 0, "n4 is a sink");
+        let p = t.packet(t.dense(2, 0), 0, 7.5);
+        assert_eq!(p, hdr(0, 0, 1, 0).with_payload(7.5));
+    }
+
+    /// Every route entry must agree with what the seed hot path derived
+    /// per packet: fanout target → pe_of → local_of → div/mod coords.
+    #[test]
+    fn routes_match_graph_derivation() {
+        let g = layered_random(12, 5, 20, 2, 11);
+        let (cols, rows) = (3, 2);
+        let order = LocalOrder::ByCriticality;
+        let place = Placement::build(&g, cols * rows, PlacementPolicy::Chunked, order, 4);
+        let t = RuntimeTables::build(&g, &place, cols, rows);
+        assert_eq!(t.routes.len(), g.num_edges());
+        for dense in 0..t.len() {
+            let global = t.global_of[dense];
+            let node = g.node(global);
+            assert_eq!(t.route_len(dense) as usize, node.fanout.len());
+            assert_eq!(t.arity[dense] as usize, node.arity());
+            match node.op() {
+                Some(op) => assert_eq!(t.op[dense], op.code8()),
+                None => assert_eq!(t.op[dense], Op::INPUT_CODE8),
+            }
+            for (edge, &(dst, slot)) in node.fanout.iter().enumerate() {
+                let p = t.packet(dense, edge as u32, 0.0);
+                let dpe = place.pe_of[dst as usize] as usize;
+                assert_eq!(p.dest_x as usize, dpe % cols);
+                assert_eq!(p.dest_y as usize, dpe / cols);
+                assert_eq!(p.local_idx as u32, place.local_of[dst as usize]);
+                assert_eq!(p.slot, slot);
+            }
+        }
+        // pe_counts is the capacity view of the same image
+        let (nodes, edges): (Vec<_>, Vec<_>) = t.pe_counts().unzip();
+        assert_eq!(nodes.iter().sum::<usize>(), g.len());
+        assert_eq!(edges.iter().sum::<usize>(), g.num_edges());
+        for (pe, locals) in place.nodes_of.iter().enumerate() {
+            assert_eq!(nodes[pe], locals.len());
+        }
+    }
+}

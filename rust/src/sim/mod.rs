@@ -18,6 +18,14 @@
 //! sweeping the whole fabric, so host cost tracks *activity*, not
 //! `num_pes` (DESIGN.md §7) — bit-exactly, as `tests/engine_parity.rs`
 //! enforces.
+//!
+//! The per-cycle loop reads only the baked
+//! [`RuntimeTables`](crate::program::RuntimeTables) (DESIGN.md §10):
+//! per-node dynamic state is indexed by *dense id* (`pe_base[pe] +
+//! local`, the PE's local-memory order), fanout packets are single
+//! indexed loads from the pre-formed CSR route table, and no
+//! `graph::Node` is dereferenced — the graph object model is a
+//! compile-time input only.
 
 mod stats;
 mod trace;
@@ -26,10 +34,11 @@ pub use stats::{PeStats, SimStats};
 pub use trace::{Sample, Trace};
 
 use crate::config::OverlayConfig;
-use crate::graph::{DataflowGraph, NodeKind};
+use crate::graph::{DataflowGraph, Op};
 use crate::noc::{Network, Packet};
 use crate::pe::{AluPipeline, BramConfig, PacketGen, PgState, PortArbiter, Unit};
 use crate::place::Placement;
+use crate::program::RuntimeTables;
 use crate::sched::{ReadyScheduler, Scheduler, SchedulerKind};
 use std::sync::Arc;
 
@@ -70,13 +79,28 @@ pub(crate) fn check_capacity(
     place: &Placement,
     cfg: &OverlayConfig,
 ) -> Result<(), SimError> {
+    check_capacity_counts(
+        place.nodes_of.iter().map(|locals| {
+            let nodes = locals.len();
+            let edges: usize = locals.iter().map(|&n| g.node(n).fanout.len()).sum();
+            (nodes, edges)
+        }),
+        cfg,
+    )
+}
+
+/// The counts core of [`check_capacity`], shared with the baked-table
+/// view ([`RuntimeTables::pe_counts`]) — one budget comparison, whatever
+/// the source of the per-PE `(nodes, edges)` counts.
+pub(crate) fn check_capacity_counts(
+    counts: impl IntoIterator<Item = (usize, usize)>,
+    cfg: &OverlayConfig,
+) -> Result<(), SimError> {
     if !cfg.enforce_capacity {
         return Ok(());
     }
     let budget = cfg.bram.graph_words(cfg.scheduler);
-    for (pe, locals) in place.nodes_of.iter().enumerate() {
-        let nodes = locals.len();
-        let edges: usize = locals.iter().map(|&n| g.node(n).fanout.len()).sum();
+    for (pe, (nodes, edges)) in counts.into_iter().enumerate() {
         let need = BramConfig::words_used(nodes, edges);
         if need > budget {
             return Err(SimError::CapacityExceeded {
@@ -104,22 +128,26 @@ struct PeUnit {
 
 /// The overlay simulator for one (graph, placement, config) instance.
 ///
-/// The placement is held behind an [`Arc`] so a compiled
-/// [`crate::program::Program`] can hand the same placement to any number
-/// of concurrent sessions without re-placing (or even cloning) the
-/// graph; the one-shot constructors wrap their freshly built placement
-/// in a private `Arc`.
+/// All hot-loop inputs live in the baked [`RuntimeTables`], held behind
+/// an [`Arc`] so a compiled [`crate::program::Program`] can hand the
+/// same image to any number of concurrent sessions without re-placing
+/// (or even re-flattening) the graph; the one-shot constructors bake a
+/// private copy from their freshly built placement.
 pub struct Simulator<'g> {
     g: &'g DataflowGraph,
-    place: Arc<Placement>,
+    tables: Arc<RuntimeTables>,
     cfg: OverlayConfig,
     net: Network,
     pes: Vec<PeUnit>,
-    // flat per-node state
+    // flat per-node state, indexed by *dense id* (pe-major local order)
     value: Vec<f32>,
     operand: Vec<[f32; 2]>,
     arrived: Vec<u8>,
     computed: Vec<bool>,
+    /// graph-node-id mirror of `value`, written once per node at seed /
+    /// fire time — keeps [`Simulator::values`] (and the engine parity
+    /// contract) in node-id order without permuting on the hot path
+    value_global: Vec<f32>,
     completed: usize,
     cycle: u64,
     inject_req: Vec<Option<Packet>>,
@@ -191,6 +219,9 @@ impl<'g> Simulator<'g> {
     }
 
     /// [`Simulator::with_scheduler_factory`] over a shared placement.
+    /// Bakes a private [`RuntimeTables`] image from the placement; the
+    /// compile-once path ([`Simulator::with_tables_and_factory`]) hands
+    /// the image in instead and skips the flattening.
     pub fn with_scheduler_factory_shared<F>(
         g: &'g DataflowGraph,
         place: Arc<Placement>,
@@ -201,14 +232,43 @@ impl<'g> Simulator<'g> {
         F: Fn(SchedulerKind, usize) -> Scheduler,
     {
         assert_eq!(place.num_pes, cfg.num_pes());
-        check_capacity(g, &place, &cfg)?;
-        let n = g.len();
+        let tables = RuntimeTables::build_shared(g, &place, cfg.cols, cfg.rows);
+        Self::with_tables_and_factory(g, tables, cfg, factory)
+    }
+
+    /// Build over a baked runtime image (the
+    /// [`crate::program::Session`] execution path — no placement,
+    /// labeling or flattening work here) at the default scheduler.
+    pub fn with_tables(
+        g: &'g DataflowGraph,
+        tables: Arc<RuntimeTables>,
+        cfg: OverlayConfig,
+    ) -> Result<Self, SimError> {
+        Self::with_tables_and_factory(g, tables, cfg, |kind, num_local| {
+            Scheduler::new(kind, num_local, None)
+        })
+    }
+
+    /// [`Simulator::with_tables`] with a custom scheduler constructor
+    /// (ablations over a compiled artifact).
+    pub fn with_tables_and_factory<F>(
+        g: &'g DataflowGraph,
+        tables: Arc<RuntimeTables>,
+        cfg: OverlayConfig,
+        factory: F,
+    ) -> Result<Self, SimError>
+    where
+        F: Fn(SchedulerKind, usize) -> Scheduler,
+    {
+        assert_eq!(tables.num_pes, cfg.num_pes());
+        assert_eq!(tables.cols, cfg.cols, "tables baked for another torus shape");
+        assert_eq!(tables.len(), g.len(), "tables baked for another graph");
+        tables.check_capacity(&cfg)?;
+        let n = tables.len();
         let num_pes = cfg.num_pes();
-        let pes = place
-            .nodes_of
-            .iter()
-            .map(|locals| PeUnit {
-                sched: factory(cfg.scheduler, locals.len()),
+        let pes = (0..num_pes)
+            .map(|pe| PeUnit {
+                sched: factory(cfg.scheduler, tables.local_count(pe)),
                 alu: AluPipeline::new(cfg.alu_latency),
                 pg: PacketGen::new(),
                 ports: PortArbiter::new(cfg.bram.ports_per_cycle() as u32),
@@ -219,7 +279,7 @@ impl<'g> Simulator<'g> {
             .collect();
         let mut sim = Self {
             g,
-            place,
+            tables,
             cfg,
             net: Network::new(cfg.cols, cfg.rows),
             pes,
@@ -227,6 +287,7 @@ impl<'g> Simulator<'g> {
             operand: vec![[0f32; 2]; n],
             arrived: vec![0u8; n],
             computed: vec![false; n],
+            value_global: vec![0f32; n],
             completed: 0,
             cycle: 0,
             inject_req: vec![None; num_pes],
@@ -244,38 +305,28 @@ impl<'g> Simulator<'g> {
 
     /// Inputs hold their token at cycle 0: value set, flagged ready for
     /// fanout processing (which puts their PEs on the active worklist).
+    /// The baked seed list is in graph node-id order — the order inputs
+    /// have always been marked ready in, which in-order FIFOs observe.
     fn seed_inputs(&mut self) {
-        for (i, node) in self.g.nodes().iter().enumerate() {
-            if let NodeKind::Input { value } = node.kind {
-                self.value[i] = value;
-                self.computed[i] = true;
-                let pe = self.place.pe_of[i] as usize;
-                let local = self.place.local_of[i];
-                self.pes[pe].sched.mark_ready(local);
-                if !self.is_active[pe] {
-                    self.is_active[pe] = true;
-                    self.active.push(pe as u32);
-                }
+        let tables = Arc::clone(&self.tables);
+        for s in &tables.seeds {
+            self.value[s.dense as usize] = s.value;
+            self.value_global[s.global as usize] = s.value;
+            self.computed[s.dense as usize] = true;
+            let pe = s.pe as usize;
+            self.pes[pe].sched.mark_ready(s.local);
+            if !self.is_active[pe] {
+                self.is_active[pe] = true;
+                self.active.push(pe as u32);
             }
         }
     }
 
+    /// Packet for fanout `edge` of dense node `dense`: one indexed load
+    /// from the baked route table plus the payload write.
     #[inline]
-    fn global_of(&self, pe: usize, local: u32) -> u32 {
-        self.place.nodes_of[pe][local as usize]
-    }
-
-    /// Packet for fanout `edge` of node `global`.
-    fn packet_for(&self, global: u32, edge: u32) -> Packet {
-        let (dst, slot) = self.g.node(global).fanout[edge as usize];
-        let dpe = self.place.pe_of[dst as usize] as usize;
-        Packet {
-            dest_x: (dpe % self.cfg.cols) as u8,
-            dest_y: (dpe / self.cfg.cols) as u8,
-            local_idx: self.place.local_of[dst as usize] as u16,
-            slot,
-            payload: self.value[global as usize],
-        }
+    fn packet_for(&self, dense: usize, edge: u32) -> Packet {
+        self.tables.packet(dense, edge, self.value[dense])
     }
 
     /// Record a [`Trace`] of overlay state every `stride` cycles.
@@ -288,12 +339,17 @@ impl<'g> Simulator<'g> {
         self.trace.as_ref()
     }
 
-    /// Sample current overlay state (tracing).
+    /// Sample current overlay state (tracing). Walks only the active
+    /// worklist — a PE off the list is fully idle by the eviction
+    /// invariant (empty ready set, idle packet-gen, empty ALU), so it
+    /// contributes zero to every series and skipping it is exact; the
+    /// traced hot loop never pays a full-fabric scan.
     fn sample(&self) -> Sample {
         let mut ready_total = 0;
         let mut ready_max = 0;
         let mut busy = 0;
-        for pe in &self.pes {
+        for &pe in &self.active {
+            let pe = &self.pes[pe as usize];
             let r = pe.sched.len();
             ready_total += r;
             ready_max = ready_max.max(r);
@@ -358,11 +414,13 @@ impl<'g> Simulator<'g> {
             }
         }
 
-        if let Some(trace) = &self.trace {
+        // take/restore the trace so sampling can borrow `self` freely —
+        // no aliasing dance, no unwrap
+        if let Some(mut trace) = self.trace.take() {
             if trace.due(self.cycle) {
-                let s = self.sample();
-                self.trace.as_mut().unwrap().push(s);
+                trace.push(self.sample());
             }
+            self.trace = Some(trace);
         }
         self.cycle += 1;
         self.is_complete()
@@ -370,23 +428,27 @@ impl<'g> Simulator<'g> {
 
     /// One cycle of one PE: stages (3) eject consume, (4) ALU retire,
     /// (5) packet-gen — identical semantics to the former per-stage
-    /// all-PE sweeps.
+    /// all-PE sweeps. Every per-node read is an indexed load off the
+    /// baked tables at `base + local`; no `graph::Node` is touched and
+    /// no address is derived by div/mod.
     fn step_pe(&mut self, pe: usize) {
+        let base = self.tables.pe_base[pe];
         // (3) consume the ejected packet: operand store -> firing -> issue
         self.pes[pe].ports.reset();
         if let Some(pkt) = self.eject_buf[pe].take() {
             // receive has top priority; budget >= 2 always grants it
             let granted = self.pes[pe].ports.request(Unit::Receive);
             debug_assert!(granted);
-            let global = self.global_of(pe, pkt.local_idx as u32) as usize;
-            debug_assert!(!self.computed[global], "operand for computed node");
-            self.operand[global][pkt.slot as usize] = pkt.payload;
-            self.arrived[global] += 1;
-            let node = self.g.node(global as u32);
-            if (self.arrived[global] as usize) == node.arity() {
+            let dense = (base + pkt.local_idx as u32) as usize;
+            debug_assert!(!self.computed[dense], "operand for computed node");
+            self.operand[dense][pkt.slot as usize] = pkt.payload;
+            self.arrived[dense] += 1;
+            if self.arrived[dense] == self.tables.arity[dense] {
                 // dataflow firing rule satisfied: evaluate + issue
-                let op = node.op().expect("interior node");
-                self.value[global] = op.eval(self.operand[global][0], self.operand[global][1]);
+                let op = Op::from_code8(self.tables.op[dense]).expect("interior node");
+                let v = op.eval(self.operand[dense][0], self.operand[dense][1]);
+                self.value[dense] = v;
+                self.value_global[self.tables.global_of[dense] as usize] = v;
                 self.pes[pe].alu.issue(self.cycle, pkt.local_idx as u32);
             }
         }
@@ -402,8 +464,7 @@ impl<'g> Simulator<'g> {
                 }
                 let local = unit.alu.pop_due(self.cycle).unwrap();
                 unit.sched.mark_ready(local);
-                let global = self.place.nodes_of[pe][local as usize] as usize;
-                self.computed[global] = true;
+                self.computed[(base + local) as usize] = true;
             }
         }
 
@@ -413,10 +474,9 @@ impl<'g> Simulator<'g> {
         if let PgState::Draining { local_idx, edge } = self.pes[pe].pg.state {
             if self.inject_req[pe].is_some() {
                 if granted {
-                    let global = self.global_of(pe, local_idx);
                     let next = edge + 1;
                     self.pes[pe].pg.busy_cycles += 1;
-                    if (next as usize) == self.g.node(global).fanout.len() {
+                    if next == self.tables.route_len((base + local_idx) as usize) {
                         self.pes[pe].sched.fanout_done(local_idx);
                         self.completed += 1;
                         self.pes[pe].pg.state = PgState::Idle;
@@ -460,8 +520,7 @@ impl<'g> Simulator<'g> {
         // Packet-gen unit: when idle, adopt the claimed node.
         if self.pes[pe].pg.state == PgState::Idle {
             if let Some(local) = self.pes[pe].next_node.take() {
-                let global = self.global_of(pe, local);
-                if self.g.node(global).fanout.is_empty() {
+                if self.tables.route_len((base + local) as usize) == 0 {
                     // sink: nothing to send
                     self.pes[pe].sched.fanout_done(local);
                     self.completed += 1;
@@ -479,8 +538,7 @@ impl<'g> Simulator<'g> {
         // read port; stalls without multipumping when receive is hot)
         if let PgState::Draining { local_idx, edge } = self.pes[pe].pg.state {
             if self.pes[pe].ports.request(Unit::PacketGen) {
-                let global = self.global_of(pe, local_idx);
-                self.inject_req[pe] = Some(self.packet_for(global, edge));
+                self.inject_req[pe] = Some(self.packet_for((base + local_idx) as usize, edge));
                 self.injectors.push(pe as u32);
             } else {
                 self.pes[pe].pg.stall_cycles += 1;
@@ -586,10 +644,12 @@ impl<'g> Simulator<'g> {
         Ok(self.stats())
     }
 
-    /// Final (or current) node values — validated against the PJRT
-    /// `graph_eval` artifact and `DataflowGraph::evaluate`.
+    /// Final (or current) node values in graph node-id order — validated
+    /// against the PJRT `graph_eval` artifact and
+    /// `DataflowGraph::evaluate`. (Internally state is dense-indexed;
+    /// this is the node-id mirror maintained at seed / fire time.)
     pub fn values(&self) -> &[f32] {
-        &self.value
+        &self.value_global
     }
 
     pub fn all_computed(&self) -> bool {
@@ -816,6 +876,42 @@ mod tests {
         // ready node is claimed by exactly one completed pass
         let picks: u64 = stats.pe.iter().map(|p| p.picks).sum();
         assert_eq!(picks as usize, g.len());
+    }
+
+    /// `sample()` walks only the active worklist; this pins its claim
+    /// of exactness by recomputing every sampled series with a
+    /// full-fabric scan after each step — if the eviction invariant
+    /// ever weakens (a PE leaving the worklist with a non-empty ready
+    /// set, busy packet-gen or occupied ALU), the two diverge here.
+    #[test]
+    fn sample_active_only_matches_full_fabric_scan() {
+        let g = layered_random(12, 5, 16, 2, 4);
+        let cfg = OverlayConfig::default().with_dims(4, 4);
+        let mut sim = Simulator::new(&g, cfg).unwrap();
+        let mut steps = 0u64;
+        loop {
+            let done = sim.step();
+            let s = sim.sample();
+            let mut ready_total = 0;
+            let mut ready_max = 0;
+            let mut busy = 0;
+            for pe in &sim.pes {
+                let r = pe.sched.len();
+                ready_total += r;
+                ready_max = ready_max.max(r);
+                if !pe.pg.is_idle() || !pe.alu.is_empty() {
+                    busy += 1;
+                }
+            }
+            assert_eq!(s.ready_total, ready_total, "cycle {}", sim.cycle);
+            assert_eq!(s.ready_max, ready_max, "cycle {}", sim.cycle);
+            assert_eq!(s.busy_pes, busy, "cycle {}", sim.cycle);
+            steps += 1;
+            if done || steps > 100_000 {
+                break;
+            }
+        }
+        assert!(sim.is_complete(), "run must finish within the step budget");
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! The baked-runtime-tables contract (DESIGN.md §10): the compiled
+//! artifact's route table and dense metadata are exactly what the seed
+//! hot path derived per packet, the dense↔global permutation is a
+//! bijection, and running over baked tables is bit-identical — stats
+//! and values — to constructing a simulator directly, across all four
+//! schedulers and both engine backends.
+
+use tdp::config::{Overlay, OverlayConfig};
+use tdp::engine::{self, BackendKind, LockstepBackend, SimBackend, SkipAheadBackend};
+use tdp::graph::{DataflowGraph, Op};
+use tdp::place::Placement;
+use tdp::program::Program;
+use tdp::sched::{LifoSched, RandomSched, Scheduler, SchedulerKind};
+use tdp::sim::{SimStats, Simulator};
+use tdp::workload::layered_random;
+
+fn diamond() -> DataflowGraph {
+    let mut g = DataflowGraph::new();
+    let a = g.add_input(3.0);
+    let b = g.add_input(4.0);
+    let s = g.op(Op::Add, &[a, b]);
+    let p = g.op(Op::Mul, &[a, b]);
+    g.op(Op::Sub, &[s, p]);
+    g
+}
+
+/// Golden route-table entries for the diamond compiled on a 2×2 overlay
+/// (round-robin placement, criticality-sorted local memory — which for
+/// this graph coincides with arrival order): every pre-formed header
+/// pinned by hand.
+#[test]
+fn golden_route_table_on_hand_built_diamond() {
+    let g = diamond();
+    let overlay = Overlay::builder().dims(2, 2).build().unwrap();
+    let program = Program::compile(&g, &overlay).unwrap();
+    let t = program.runtime_tables();
+    // round-robin: pe_of = [0,1,2,3,0]; criticality [2,2,1,1,0] keeps
+    // PE0's layout [n0, n4]
+    assert_eq!(t.pe_base, vec![0, 2, 3, 4, 5]);
+    assert_eq!(t.global_of, vec![0, 4, 1, 2, 3]);
+    assert_eq!(t.pe_xy, vec![(0, 0), (1, 0), (0, 1), (1, 1)]);
+    assert_eq!(t.route_base, vec![0, 2, 2, 4, 5, 6]);
+    let expect: Vec<(u8, u8, u16, u8)> = vec![
+        (0, 1, 0, 0), // n0 → n2 on pe2=(0,1), slot 0
+        (1, 1, 0, 0), // n0 → n3 on pe3=(1,1), slot 0
+        (0, 1, 0, 1), // n1 → n2, slot 1
+        (1, 1, 0, 1), // n1 → n3, slot 1
+        (0, 0, 1, 0), // n2 → n4 on pe0 local 1, slot 0
+        (0, 0, 1, 1), // n3 → n4, slot 1
+    ];
+    let got: Vec<(u8, u8, u16, u8)> = t
+        .routes
+        .iter()
+        .map(|p| (p.dest_x, p.dest_y, p.local_idx, p.slot))
+        .collect();
+    assert_eq!(got, expect);
+    assert!(t.routes.iter().all(|p| p.payload == 0.0), "headers carry no payload");
+}
+
+/// The dense↔global permutation round-trips and is consistent with the
+/// placement, for every placement policy the overlay supports.
+#[test]
+fn dense_global_permutation_round_trip() {
+    use tdp::place::PlacementPolicy;
+    let g = layered_random(16, 6, 24, 2, 5);
+    for policy in [
+        PlacementPolicy::RoundRobin,
+        PlacementPolicy::Random,
+        PlacementPolicy::BlockContiguous,
+        PlacementPolicy::Chunked,
+    ] {
+        let overlay = Overlay::builder().dims(3, 2).placement(policy).build().unwrap();
+        let program = Program::compile(&g, &overlay).unwrap();
+        let t = program.runtime_tables();
+        let place = program.placement();
+        assert_eq!(t.global_of.len(), g.len());
+        assert_eq!(t.dense_of.len(), g.len());
+        for global in 0..g.len() {
+            let dense = t.dense_of[global] as usize;
+            assert_eq!(t.global_of[dense] as usize, global, "{policy:?}");
+            let pe = place.pe_of[global] as usize;
+            assert_eq!(dense as u32, t.pe_base[pe] + place.local_of[global], "{policy:?}");
+        }
+        // CSR covers all edges exactly once
+        assert_eq!(*t.route_base.last().unwrap() as usize, g.num_edges());
+    }
+}
+
+fn run_backend(mut be: Box<dyn SimBackend + '_>) -> (SimStats, Vec<f32>) {
+    let stats = be.run().unwrap();
+    let values = be.values().to_vec();
+    (stats, values)
+}
+
+fn assert_bit_identical(a: &(SimStats, Vec<f32>), b: &(SimStats, Vec<f32>), tag: &str) {
+    assert_eq!(a.0, b.0, "{tag}: stats diverge");
+    assert_eq!(a.1.len(), b.1.len(), "{tag}");
+    for (i, (x, y)) in a.1.iter().zip(&b.1).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan()),
+            "{tag}: node {i} value diverges: {x} vs {y}"
+        );
+    }
+}
+
+/// `Session::run` over the compiled artifact's baked tables must be
+/// bit-identical (stats + values) to the direct `Simulator::new` /
+/// `make_backend` construction path, for the two paper schedulers on
+/// both engine backends.
+#[test]
+fn baked_tables_match_direct_path_paper_schedulers() {
+    let g = layered_random(14, 6, 22, 2, 9);
+    for scheduler in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
+        for backend in BackendKind::ALL {
+            let cfg = OverlayConfig::default()
+                .with_dims(3, 3)
+                .with_scheduler(scheduler)
+                .with_backend(backend);
+            let overlay = Overlay::from_config(cfg).unwrap();
+            let program = Program::compile(&g, &overlay).unwrap();
+            let baked = run_backend(program.session().backend().unwrap());
+            let direct = run_backend(engine::make_backend(&g, cfg).unwrap());
+            assert_bit_identical(&baked, &direct, &format!("{scheduler:?}/{backend:?}"));
+            assert_eq!(baked.0.completed, g.len());
+            // and Session::run returns the same stats object
+            assert_eq!(program.session().run().unwrap(), baked.0);
+        }
+    }
+}
+
+/// Same contract for the ablation schedulers (LIFO / seeded random):
+/// a simulator over the artifact's tables vs one over a freshly built
+/// placement, wrapped in each engine backend.
+#[test]
+fn baked_tables_match_direct_path_ablation_schedulers() {
+    let g = layered_random(12, 5, 18, 2, 3);
+    let cfg = OverlayConfig::default().with_dims(2, 2);
+    let overlay = Overlay::from_config(cfg).unwrap();
+    let program = Program::compile(&g, &overlay).unwrap();
+    for which in ["lifo", "random"] {
+        let factory = move |_: SchedulerKind, n: usize| match which {
+            "lifo" => Scheduler::Lifo(LifoSched::new(n)),
+            _ => Scheduler::Random(RandomSched::new(n, 42)),
+        };
+        for backend in BackendKind::ALL {
+            let baked_sim =
+                Simulator::with_tables_and_factory(&g, program.runtime_tables(), cfg, factory)
+                    .unwrap();
+            let place = Placement::build(&g, 4, cfg.placement, cfg.local_order, cfg.seed);
+            let direct_sim = Simulator::with_scheduler_factory(&g, place, cfg, factory).unwrap();
+            let (baked, direct) = match backend {
+                BackendKind::Lockstep => (
+                    run_backend(Box::new(LockstepBackend::from_simulator(baked_sim))),
+                    run_backend(Box::new(LockstepBackend::from_simulator(direct_sim))),
+                ),
+                BackendKind::SkipAhead => (
+                    run_backend(Box::new(SkipAheadBackend::from_simulator(baked_sim))),
+                    run_backend(Box::new(SkipAheadBackend::from_simulator(direct_sim))),
+                ),
+            };
+            assert_bit_identical(&baked, &direct, &format!("{which}/{backend:?}"));
+            assert_eq!(baked.0.completed, g.len());
+            // ablation orders still compute the reference numerics
+            let want = g.evaluate();
+            for (i, (a, b)) in baked.1.iter().zip(&want).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()),
+                    "{which}: node {i}: sim={a}, ref={b}"
+                );
+            }
+        }
+    }
+}
+
+/// Tracing over baked tables must not perturb the simulation, and the
+/// sampled series must stay sane. (Exactness of the active-only
+/// `sample()` against a full-fabric scan is pinned cycle-by-cycle by
+/// `sim::tests::sample_active_only_matches_full_fabric_scan`, which has
+/// access to the per-PE internals.)
+#[test]
+fn traced_run_over_tables_matches_untraced_stats() {
+    let g = layered_random(10, 4, 16, 2, 7);
+    let cfg = OverlayConfig::default().with_dims(4, 4);
+    let overlay = Overlay::from_config(cfg).unwrap();
+    let program = Program::compile(&g, &overlay).unwrap();
+    let plain = program.session().run().unwrap();
+    let mut sim = Simulator::with_tables(&g, program.runtime_tables(), cfg).unwrap();
+    sim.enable_trace(1);
+    let traced = sim.run().unwrap();
+    assert_eq!(traced, plain, "tracing must not perturb the simulation");
+    let trace = sim.trace().unwrap();
+    assert!(!trace.samples.is_empty());
+    let final_completed = trace.samples.last().unwrap().completed;
+    assert!(final_completed <= g.len());
+    // busy_pes can never exceed the fabric, and the first sample (cycle
+    // 0, inputs just seeded) sees the seeded ready queues
+    assert!(trace.samples.iter().all(|s| s.busy_pes <= 16));
+    assert!(trace.samples[0].ready_total > 0);
+}

@@ -293,6 +293,39 @@ fn invalid_overlay_exits_nonzero() {
     assert!(err.contains("invalid overlay config"), "{err}");
 }
 
+/// `tdp perf --quick` emits the BENCH perf-trajectory JSON
+/// (perf/README.md, schema version 1): every pinned case reports a
+/// positive cycle count and throughput, and `--out` mirrors stdout to
+/// disk.
+#[test]
+fn perf_quick_emits_bench_json() {
+    let dir = std::env::temp_dir().join(format!("tdp_perf_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.json");
+    let text = run_ok(&["perf", "--quick", "--reps", "1", "--out", path.to_str().unwrap()]);
+    let j = tdp::util::json::parse(text.trim()).unwrap();
+    assert_eq!(j.get("version").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(j.get("quick"), Some(&tdp::util::json::Json::Bool(true)));
+    let cases = j.get("cases").unwrap().as_arr().unwrap();
+    assert_eq!(cases.len(), 3, "the quick set is pinned");
+    for c in cases {
+        let name = c.get("name").unwrap().as_str().unwrap();
+        assert!(c.get("sim_cycles").unwrap().as_f64().unwrap() > 0.0, "{name}");
+        assert!(c.get("sim_cycles_per_sec").unwrap().as_f64().unwrap() > 0.0, "{name}");
+        assert!(c.get("compile_ms").unwrap().as_f64().unwrap() >= 0.0, "{name}");
+    }
+    assert!(j.get("total_wall_ms").unwrap().as_f64().unwrap() >= 0.0);
+    let disk = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(disk.trim(), text.trim(), "--out mirrors stdout");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn perf_rejects_unknown_format() {
+    let out = tdp().args(["perf", "--quick", "--format", "yaml"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
 #[test]
 fn unknown_command_fails() {
     let out = tdp().arg("frobnicate").output().unwrap();

@@ -87,8 +87,19 @@ pub fn fig1_sweep(
     cfg: OverlayConfig,
     jobs: usize,
 ) -> Result<Vec<Fig1Row>, Error> {
+    fig1_sweep_on(&Engine::new(), workloads, cfg, jobs)
+}
+
+/// [`fig1_sweep`] over a caller-owned [`Engine`] — lets the CLI reuse a
+/// warm Program cache across sweeps and read
+/// [`Engine::metrics_snapshot`] afterwards (`tdp sweep --metrics-out`).
+pub fn fig1_sweep_on(
+    engine: &Engine,
+    workloads: &[(String, Spec)],
+    cfg: OverlayConfig,
+    jobs: usize,
+) -> Result<Vec<Fig1Row>, Error> {
     Overlay::from_config(cfg)?; // fail fast, before any generation
-    let engine = Engine::new();
     let n = workloads.len();
     let grid: Vec<JobSpec> = [SchedulerKind::InOrder, SchedulerKind::OutOfOrder]
         .into_iter()
@@ -262,6 +273,30 @@ mod tests {
         for jobs in [2, 4, 16] {
             assert_eq!(fig1_sweep(&ws, cfg, jobs).unwrap(), serial, "jobs = {jobs}");
         }
+    }
+
+    /// A caller-owned engine keeps its Program cache warm across sweeps:
+    /// the second identical sweep is all hits, and the engine's metrics
+    /// snapshot reflects every submitted job.
+    #[test]
+    fn fig1_sweep_on_reuses_engine_cache_across_sweeps() {
+        let ws = specs(&[
+            ("a", "layered:12:6:24:2:seed=7"),
+            ("b", "layered:8:4:16:1:seed=8"),
+        ]);
+        let cfg = OverlayConfig::default().with_dims(4, 4);
+        let engine = Engine::new();
+        let first = fig1_sweep_on(&engine, &ws, cfg, 2).unwrap();
+        let cold = engine.cache_stats();
+        assert_eq!(cold.misses, 2, "one compile per workload");
+        let second = fig1_sweep_on(&engine, &ws, cfg, 2).unwrap();
+        assert_eq!(first, second, "warm sweep must be bit-identical");
+        let warm = engine.cache_stats();
+        assert_eq!(warm.misses, cold.misses, "second sweep compiles nothing");
+        assert_eq!(warm.hits, cold.hits + 4, "2 workloads x 2 schedulers, all hits");
+        let snap = engine.metrics_snapshot();
+        let jobs = snap.get("jobs").unwrap().get("submitted").unwrap();
+        assert_eq!(jobs.as_u64().unwrap(), 8, "2 sweeps x 4 grid cells");
     }
 
     #[test]

@@ -11,8 +11,8 @@ mod report;
 #[allow(deprecated)]
 pub use experiments::{graph_fits, run_one};
 pub use experiments::{
-    capacity_experiment, fig1_config, fig1_sweep, scheduler_comparison, CapacityRow, Fig1Row,
-    RunOutcome,
+    capacity_experiment, fig1_config, fig1_sweep, fig1_sweep_on, scheduler_comparison,
+    CapacityRow, Fig1Row, RunOutcome,
 };
 pub use report::{render_csv, render_json, render_markdown, Table};
 

@@ -6,7 +6,7 @@ use crate::config::OverlayConfig;
 use crate::graph::DataflowGraph;
 use crate::place::Placement;
 use crate::program::RuntimeTables;
-use crate::sim::{SimError, SimStats, Simulator};
+use crate::sim::{ActivityReport, SimError, SimStats, Simulator, Trace};
 use std::sync::Arc;
 
 /// Cycle-by-cycle reference engine. This is the seed simulator moved
@@ -81,5 +81,17 @@ impl<'g> SimBackend for LockstepBackend<'g> {
 
     fn cycle(&self) -> u64 {
         self.sim.cycle()
+    }
+
+    fn activity(&self) -> ActivityReport {
+        self.sim.activity()
+    }
+
+    fn enable_trace(&mut self, stride: u64) {
+        self.sim.enable_trace(stride);
+    }
+
+    fn trace(&self) -> Option<&Trace> {
+        self.sim.trace()
     }
 }

@@ -35,7 +35,7 @@ use crate::config::OverlayConfig;
 use crate::graph::DataflowGraph;
 use crate::place::Placement;
 use crate::program::RuntimeTables;
-use crate::sim::{SimError, SimStats};
+use crate::sim::{ActivityReport, SimError, SimStats, Trace};
 use std::sync::Arc;
 
 /// Which stepping engine a run uses.
@@ -75,6 +75,20 @@ pub trait SimBackend {
 
     /// Current fabric cycle.
     fn cycle(&self) -> u64;
+
+    /// Per-PE / per-router activity counters (telemetry heatmaps,
+    /// DESIGN.md §11) — a pure read-out, valid at any point of a run.
+    fn activity(&self) -> ActivityReport;
+
+    /// Record a per-cycle [`Trace`] (one sample every `stride` cycles,
+    /// plus the final cycle). On the skip-ahead backend tracing pins the
+    /// run to cycle-accurate stepping — samples are per-cycle
+    /// observations, so quiescent regions cannot be jumped — while
+    /// results stay bit-exact.
+    fn enable_trace(&mut self, stride: u64);
+
+    /// The recorded trace, if tracing was enabled.
+    fn trace(&self) -> Option<&Trace>;
 }
 
 /// Construct the backend selected by `cfg.backend`. Places the graph as

@@ -30,7 +30,7 @@ use crate::config::OverlayConfig;
 use crate::graph::DataflowGraph;
 use crate::place::Placement;
 use crate::program::RuntimeTables;
-use crate::sim::{SimError, SimStats, Simulator};
+use crate::sim::{ActivityReport, SimError, SimStats, Simulator, Trace};
 use std::sync::Arc;
 
 /// Event-horizon engine over the reference simulator.
@@ -156,6 +156,23 @@ impl<'g> SimBackend for SkipAheadBackend<'g> {
     fn cycle(&self) -> u64 {
         self.sim.cycle()
     }
+
+    fn activity(&self) -> ActivityReport {
+        self.sim.activity()
+    }
+
+    /// Tracing demotes this backend to cycle-accurate stepping for the
+    /// whole run: `Simulator::quiescent` reports false while a trace is
+    /// attached, so the jump gate in [`SkipAheadBackend::run`] never
+    /// opens — per-cycle samples stay exact and results stay bit-equal
+    /// to lockstep.
+    fn enable_trace(&mut self, stride: u64) {
+        self.sim.enable_trace(stride);
+    }
+
+    fn trace(&self) -> Option<&Trace> {
+        self.sim.trace()
+    }
 }
 
 #[cfg(test)]
@@ -186,6 +203,30 @@ mod tests {
             stats.cycles
         );
         assert_eq!(be.values()[100], 1.5 * (-1f32).powi(100));
+    }
+
+    /// Tracing is per-cycle observation: the jump gate must stay closed
+    /// (zero jumps) while stats remain bit-equal to the untraced run,
+    /// and the trace must end on the final cycle.
+    #[test]
+    fn tracing_disables_jumps_but_stays_bit_exact() {
+        let mut g = DataflowGraph::new();
+        let mut prev = g.add_input(1.5);
+        for _ in 0..50 {
+            prev = g.op(Op::Neg, &[prev]);
+        }
+        let cfg = OverlayConfig::paper_1x1().with_scheduler(SchedulerKind::OutOfOrder);
+        let mut plain = SkipAheadBackend::new(&g, cfg).unwrap();
+        let want = plain.run().unwrap();
+        assert!(plain.jumps() > 0, "chain workload must jump when untraced");
+
+        let mut traced = SkipAheadBackend::new(&g, cfg).unwrap();
+        traced.enable_trace(64);
+        let got = traced.run().unwrap();
+        assert_eq!(got, want, "tracing must not perturb results");
+        assert_eq!(traced.jumps(), 0, "tracing pins cycle-accurate stepping");
+        let trace = traced.trace().unwrap();
+        assert_eq!(trace.last_cycle(), Some(want.cycles - 1));
     }
 
     #[test]

@@ -57,6 +57,7 @@ pub mod runtime;
 pub mod sched;
 pub mod service;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 pub mod workload;
 
@@ -70,3 +71,4 @@ pub use program::{
 pub use sched::SchedulerKind;
 pub use service::{Engine, JobResult, JobSpec};
 pub use sim::{SimError, SimStats, Simulator};
+pub use telemetry::{Registry, Telemetry};

@@ -9,7 +9,7 @@ use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
 use tdp::config::{Overlay, OverlayConfig, WorkloadSpec};
 use tdp::coordinator::{
-    self, capacity_experiment, fig1_sweep, render_csv, render_json, render_markdown, Table,
+    self, capacity_experiment, fig1_sweep_on, render_csv, render_json, render_markdown, Table,
 };
 use tdp::engine::BackendKind;
 use tdp::graph::{graph_from_json, graph_to_json, DataflowGraph};
@@ -21,6 +21,7 @@ use tdp::runtime::XlaRuntime;
 use tdp::sched::SchedulerKind;
 use tdp::service::{Engine, JobSpec};
 use tdp::sim::SimStats;
+use tdp::telemetry::{self, Registry};
 use tdp::util::cli::Args;
 use tdp::util::json::{self, Json};
 use tdp::util::rng::Rng;
@@ -35,17 +36,22 @@ COMMANDS
   run         simulate one workload          --workload <toml> | --graph <json>
               [--cols 16 --rows 16 --scheduler both|in_order|out_of_order
               --backend lockstep|skip-ahead --max-cycles N --seed 0
-              --format text|json]
+              --format text|json --trace-out trace.json --trace-stride 1]
+              --trace-out writes a Chrome/Perfetto trace-event file:
+              compile-stage spans, per-scheduler run spans, and per-cycle
+              fabric counters (ready/busy/in-flight/completed) sampled
+              every --trace-stride cycles
   batch       serve a job stream             <jobs.jsonl> [--workers N (0 = all cores)
-              --cache 64]
+              --cache 64 --metrics-out file]
               one JSON job per line in ({\"workload\": \"chain:4096:seed=7\", ...}),
               one JSON result per line out, same order; repeated workloads
               compile once (content-addressed Program cache); non-zero exit
-              if any job failed
+              if any job failed; --metrics-out dumps the engine metrics
+              snapshot (cache hits/misses, latency percentiles) as JSON
   sweep       regenerate Figure 1            [--cols 16 --rows 16 --seed 42
               --backend lockstep|skip-ahead
               --jobs N (0 = all cores; --threads is a legacy alias)
-              --format markdown|csv|json --out file]
+              --format markdown|csv|json --out file --metrics-out file]
   gen         write a workload graph JSON    --workload <toml> --out <file> [--seed 0]
   validate    check sim numerics vs native + PJRT oracle
               --workload <toml> | --graph <json> [--cols 4 --rows 4
@@ -57,15 +63,19 @@ COMMANDS
   noc-stress  synthetic NoC traffic          [--cols 16 --rows 16 --packets 100000
               --inject-rate 0.5 --seed 0]
   perf        host-throughput harness        [--quick --reps 5 --budget-ms 0
-              --format json|text --out file]
+              --format json|text --out file --trace-out file]
               runs the pinned workload set (compile once, time repeated runs)
               and emits sim cycles/sec + wall ms per run; the JSON is the
               BENCH_*.json perf-trajectory format (perf/README.md).
               --budget-ms N fails (non-zero exit) if total run wall-clock
-              exceeds N — CI uses a generous budget as a >2x-regression trap
-  analyze     trace a run (queue occupancy / busyness / completion)
+              exceeds N — CI uses a generous budget as a >2x-regression trap.
+              --trace-out writes compile/run spans as a Perfetto trace
+              (span-only: per-cycle sampling stays off so skip-ahead
+              jumps — the thing being measured — are preserved)
+  analyze     trace a run (queue occupancy / busyness / completion,
+              per-PE / per-router activity heatmaps)
               --workload <toml> | --graph <json> [--cols 16 --rows 16
-              --stride 0 --csv file --seed 0]
+              --stride 0 --csv file --json-out file --seed 0]
   workload-stats  characterize a workload's shape (parallelism, fanout)
               --workload <toml> | --graph <json> [--pes 256 --seed 0]
 
@@ -123,6 +133,8 @@ fn cmd_run(mut a: Args) -> Result<()> {
     let max_cycles = a.u64_or("max-cycles", 0)?; // 0 = config default
     let seed = a.u64_or("seed", 0)?;
     let format = a.str_or("format", "text")?;
+    let trace_out = a.str_opt("trace-out")?;
+    let trace_stride = a.u64_or("trace-stride", 1)?.max(1);
     let json_out = match format.as_str() {
         "text" => false,
         "json" => true,
@@ -145,11 +157,36 @@ fn cmd_run(mut a: Args) -> Result<()> {
     if max_cycles > 0 {
         cfg.max_cycles = max_cycles;
     }
-    // compile once; every scheduler variant is a cheap session over it
+    // compile once; every scheduler variant is a cheap session over it.
+    // With --trace-out a Registry observes the compile stages and each
+    // run executes over a per-cycle Trace; everything lands in one
+    // Chrome/Perfetto trace-event file.
+    let registry = trace_out.as_ref().map(|_| Registry::new());
     let overlay = Overlay::from_config(cfg)?;
-    let program = Program::compile(&g, &overlay)?;
-    let run_kind = |kind: SchedulerKind| -> Result<SimStats> {
-        Ok(program.session().with_scheduler(kind).run()?)
+    let program = match &registry {
+        Some(reg) => Program::compile_with(&g, &overlay, Some(reg))?,
+        None => Program::compile(&g, &overlay)?,
+    };
+    let mut counter_series: Vec<telemetry::CounterSeries> = Vec::new();
+    let mut run_kind = |kind: SchedulerKind| -> Result<SimStats> {
+        let session = program.session().with_scheduler(kind);
+        let Some(reg) = &registry else {
+            return Ok(session.run()?);
+        };
+        let mut backend = {
+            let _setup = reg.span("run", "setup");
+            session.backend()?
+        };
+        backend.enable_trace(trace_stride);
+        let stats = {
+            let _run = reg.span("run", kind.name());
+            backend.run()?
+        };
+        let trace = backend
+            .trace()
+            .ok_or_else(|| anyhow!("trace buffer missing after enable_trace"))?;
+        counter_series.extend(telemetry::trace_counter_series(kind.toml_name(), trace));
+        Ok(stats)
     };
     if sched == "both" {
         let stats_in = run_kind(SchedulerKind::InOrder)?;
@@ -182,6 +219,10 @@ fn cmd_run(mut a: Args) -> Result<()> {
             println!("{}", stats.one_line());
         }
     }
+    if let (Some(reg), Some(path)) = (&registry, &trace_out) {
+        std::fs::write(path, telemetry::perfetto_json(reg, &counter_series))?;
+        eprintln!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -204,6 +245,7 @@ fn cmd_batch(mut argv: Vec<String>) -> Result<()> {
     };
     let mut workers = a.usize_or("workers", 0)?;
     let cache = a.usize_or("cache", tdp::service::DEFAULT_CACHE_CAPACITY)?;
+    let metrics_out = a.str_opt("metrics-out")?;
     a.finish()?;
     if workers == 0 {
         workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
@@ -250,6 +292,12 @@ fn cmd_batch(mut argv: Vec<String>) -> Result<()> {
         s.misses,
         program::compile_count()
     );
+    // metrics land on disk even when the batch had failures: the
+    // snapshot (which counts those failures) is most useful exactly then
+    if let Some(path) = &metrics_out {
+        std::fs::write(path, engine.metrics_snapshot_json())?;
+        eprintln!("wrote {path}");
+    }
     if failed > 0 {
         bail!("{failed} of {} jobs failed", parsed.len());
     }
@@ -265,6 +313,7 @@ fn cmd_sweep(mut a: Args) -> Result<()> {
     let threads_legacy = a.usize_or("threads", 0)?; // pre---jobs spelling
     let format = a.str_or("format", "markdown")?;
     let out = a.str_opt("out")?;
+    let metrics_out = a.str_opt("metrics-out")?;
     a.finish()?;
     if jobs == 0 {
         jobs = threads_legacy;
@@ -281,7 +330,12 @@ fn cmd_sweep(mut a: Args) -> Result<()> {
         ws.len(),
         backend.name()
     );
-    let rows_out = fig1_sweep(&ws, cfg, jobs)?;
+    let engine = Engine::new();
+    let rows_out = fig1_sweep_on(&engine, &ws, cfg, jobs)?;
+    if let Some(path) = &metrics_out {
+        std::fs::write(path, engine.metrics_snapshot_json())?;
+        eprintln!("wrote {path}");
+    }
     let mut t = Table::new(
         &format!("Figure 1 — OoO speedup vs graph size ({cols}x{rows} overlay)"),
         &["workload", "nodes+edges", "depth", "in-order cyc", "ooo cyc", "speedup"],
@@ -584,10 +638,16 @@ fn cmd_perf(mut a: Args) -> Result<()> {
     let budget_ms = a.u64_or("budget-ms", 0)?;
     let format = a.str_or("format", "json")?;
     let out = a.str_opt("out")?;
+    let trace_out = a.str_opt("trace-out")?;
     a.finish()?;
     if format != "json" && format != "text" {
         bail!("unknown format '{format}' (json | text)");
     }
+    // Span-only telemetry: compile stages and run phases land in the
+    // Perfetto export, but no per-cycle Trace is attached — that would
+    // pin the skip-ahead backend to cycle-accurate stepping and distort
+    // the very numbers this harness exists to track.
+    let registry = trace_out.as_ref().map(|_| Registry::new());
     let mut cases_json = Vec::new();
     let mut total_wall_ms = 0f64;
     for case in perf_cases(quick) {
@@ -599,13 +659,20 @@ fn cmd_perf(mut a: Args) -> Result<()> {
             .with_backend(case.backend);
         let overlay = Overlay::from_config(cfg)?;
         let t0 = Instant::now();
-        let program = Program::compile(&g, &overlay)?;
+        let program = match &registry {
+            Some(reg) => Program::compile_with(&g, &overlay, Some(reg))?,
+            None => Program::compile(&g, &overlay)?,
+        };
         let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let mut cycles = program.session().run()?.cycles; // warmup
+        let session = match &registry {
+            Some(reg) => program.session().with_telemetry(reg),
+            None => program.session(),
+        };
+        let mut cycles = session.run()?.cycles; // warmup
         let mut samples = Vec::with_capacity(reps);
         for _ in 0..reps {
             let t = Instant::now();
-            cycles = program.session().run()?.cycles;
+            cycles = session.run()?.cycles;
             samples.push(t.elapsed());
         }
         samples.sort_unstable();
@@ -663,6 +730,10 @@ fn cmd_perf(mut a: Args) -> Result<()> {
         std::fs::write(path, &text)?;
         eprintln!("wrote {path}");
     }
+    if let (Some(reg), Some(path)) = (&registry, &trace_out) {
+        std::fs::write(path, telemetry::perfetto_json(reg, &[]))?;
+        eprintln!("wrote {path}");
+    }
     if format == "text" {
         println!("total timed wall: {total_wall_ms:.1} ms");
     }
@@ -681,11 +752,13 @@ fn cmd_analyze(mut a: Args) -> Result<()> {
     let rows = a.usize_or("rows", 16)?;
     let stride = a.u64_or("stride", 0)?;
     let csv = a.str_opt("csv")?;
+    let json_path = a.str_opt("json-out")?;
     let seed = a.u64_or("seed", 0)?;
     a.finish()?;
     let g = load_graph(workload, graph, seed)?;
     let prof = workload::profile(&g);
     println!("{}\n", prof.report());
+    let mut doc = std::collections::BTreeMap::new();
     for kind in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
         let mut cfg = OverlayConfig::default().with_dims(cols, rows).with_scheduler(kind);
         cfg.placement = PlacementPolicy::Chunked;
@@ -704,11 +777,23 @@ fn cmd_analyze(mut a: Args) -> Result<()> {
         println!("  busy PEs    : {}  (mean {:.1}%)", trace.sparkline(|s| s.busy_pes, 48), 100.0 * trace.mean_busy(cols * rows));
         println!("  in-flight   : {}", trace.sparkline(|s| s.in_flight, 48));
         println!("  completion  : {}", trace.sparkline(|s| s.completed, 48));
+        let activity = sim.activity();
+        println!("{}", activity.render());
+        if json_path.is_some() {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("stats".to_string(), stats.to_json_value());
+            m.insert("activity".to_string(), activity.to_json_value());
+            doc.insert(kind.toml_name().to_string(), Json::Obj(m));
+        }
         if let Some(path) = &csv {
             let file = format!("{path}.{}.csv", kind.toml_name());
             std::fs::write(&file, trace.to_csv())?;
             eprintln!("wrote {file}");
         }
+    }
+    if let Some(path) = &json_path {
+        std::fs::write(path, json::write(&Json::Obj(doc)))?;
+        eprintln!("wrote {path}");
     }
     Ok(())
 }

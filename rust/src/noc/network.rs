@@ -122,6 +122,12 @@ pub struct Network {
     in_flight: usize,
     cycle: u64,
     pub stats: NetworkStats,
+    /// per-router packets switched (link arrivals + accepted injections),
+    /// index = y*w + x; folded into the active-router walk, so idle
+    /// routers cost nothing (telemetry heatmaps, DESIGN.md §11)
+    router_traffic: Vec<u64>,
+    /// per-router deflection count, same indexing
+    router_deflections: Vec<u64>,
 }
 
 impl Network {
@@ -170,7 +176,20 @@ impl Network {
             in_flight: 0,
             cycle: 0,
             stats: NetworkStats::default(),
+            router_traffic: vec![0; n],
+            router_deflections: vec![0; n],
         }
+    }
+
+    /// Per-router switched-packet counts (index = y*w + x).
+    pub fn router_traffic(&self) -> &[u64] {
+        &self.router_traffic
+    }
+
+    /// Per-router deflection counts (index = y*w + x); sums to
+    /// `stats.deflections`.
+    pub fn router_deflections(&self) -> &[u64] {
+        &self.router_deflections
     }
 
     /// Packets currently on links. Deflection routing makes in-flight
@@ -269,6 +288,7 @@ impl Network {
                 inject: inject[me].map(|p| (p, self.cycle)),
             };
             let o = route(x, y, io);
+            let mut switched = io.west.is_some() as u64 + io.north.is_some() as u64;
 
             if let Some(t) = o.east {
                 self.x_next[me] = Some(t);
@@ -288,16 +308,19 @@ impl Network {
             }
             if o.deflected {
                 self.stats.deflections += 1;
+                self.router_deflections[me] += 1;
             }
             if io.inject.is_some() {
                 if o.inject_ok {
                     self.stats.injected += 1;
                     self.out.inject_ok[me] = true;
                     self.granted.push(me as u32);
+                    switched += 1;
                 } else {
                     self.stats.inject_stalls += 1;
                 }
             }
+            self.router_traffic[me] += switched;
         }
 
         // reset the dedupe marks and consume the routed link registers
@@ -569,6 +592,40 @@ mod tests {
             assert_eq!(net.west_src[me] as usize, y * 5 + (x + 4) % 5);
             assert_eq!(net.north_src[me] as usize, ((y + 2) % 3) * 5 + x);
         }
+    }
+
+    /// Per-router activity counters: a single DOR-routed packet from
+    /// (0,0) to (2,3) on a 4×4 torus switches through exactly six
+    /// routers — the injection at (0,0) plus one link arrival at each of
+    /// (1,0), (2,0), (2,1), (2,2) and (2,3) — with no deflections.
+    #[test]
+    fn router_activity_counts_hops_and_deflections() {
+        let mut net = Network::new(4, 4);
+        let p = pkt(2, 3, 7);
+        let delivered = drain(&mut net, vec![(0, p)], 1);
+        assert_eq!(delivered.len(), 1);
+        let traffic = net.router_traffic();
+        assert_eq!(traffic.iter().sum::<u64>(), 6);
+        for (me, want) in [(0, 1), (1, 1), (2, 1), (6, 1), (10, 1), (14, 1)] {
+            assert_eq!(traffic[me], want, "router {me}");
+        }
+        assert_eq!(net.router_deflections().iter().sum::<u64>(), 0);
+
+        // contested eject: deflection counters land on the routers that
+        // deflected and sum to the global stat
+        let mut net = Network::new(3, 3);
+        let mut pending = Vec::new();
+        for pe in 0..9 {
+            if pe != 4 {
+                pending.push((pe, pkt(1, 1, pe as u16)));
+            }
+        }
+        let delivered = drain(&mut net, pending, 8);
+        assert_eq!(delivered.len(), 8);
+        assert_eq!(
+            net.router_deflections().iter().sum::<u64>(),
+            net.stats.deflections
+        );
     }
 
     #[test]

@@ -34,6 +34,7 @@ use crate::pe::BramConfig;
 use crate::place::Placement;
 use crate::sched::SchedulerKind;
 use crate::sim::{SimError, SimStats};
+use crate::telemetry::{self, Registry, Telemetry};
 use crate::util::par::run_parallel;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -143,32 +144,43 @@ struct Artifact {
 
 /// The one compile implementation behind [`Program::compile`] and
 /// [`SharedProgram::compile`] (and the only place [`compile_count`]
-/// increments).
-fn compile_artifact(g: &DataflowGraph, overlay: &Overlay) -> Result<Artifact, CompileError> {
+/// increments). With a telemetry registry attached, each compile stage
+/// runs inside a timed span on the `"compile"` track (DESIGN.md §11);
+/// with `None` the instrumentation is a no-op closure call.
+fn compile_artifact(
+    g: &DataflowGraph,
+    overlay: &Overlay,
+    tel: Telemetry<'_>,
+) -> Result<Artifact, CompileError> {
     COMPILES.fetch_add(1, Ordering::Relaxed);
+    telemetry::count(tel, "compile.programs", 1);
     let cfg = *overlay.config();
-    let crit = criticality::criticality(g);
-    let place = Placement::build_with(
-        g,
-        cfg.num_pes(),
-        cfg.placement,
-        cfg.local_order,
-        cfg.seed,
-        &crit,
-    );
-    let pe_images: Vec<PeImage> = place
-        .nodes_of
-        .iter()
-        .map(|locals| {
-            let nodes = locals.len();
-            let edges: usize = locals.iter().map(|&n| g.node(n).fanout.len()).sum();
-            PeImage {
-                nodes,
-                edges,
-                graph_words: BramConfig::words_used(nodes, edges),
-            }
-        })
-        .collect();
+    let crit = telemetry::timed(tel, "compile", "criticality", || criticality::criticality(g));
+    let place = telemetry::timed(tel, "compile", "place", || {
+        Placement::build_with(
+            g,
+            cfg.num_pes(),
+            cfg.placement,
+            cfg.local_order,
+            cfg.seed,
+            &crit,
+        )
+    });
+    let pe_images: Vec<PeImage> = telemetry::timed(tel, "compile", "bram_images", || {
+        place
+            .nodes_of
+            .iter()
+            .map(|locals| {
+                let nodes = locals.len();
+                let edges: usize = locals.iter().map(|&n| g.node(n).fanout.len()).sum();
+                PeImage {
+                    nodes,
+                    edges,
+                    graph_words: BramConfig::words_used(nodes, edges),
+                }
+            })
+            .collect()
+    });
     // the same check (one implementation) guards direct Simulator
     // construction, so compile-time and runtime verdicts agree
     if let Err(SimError::CapacityExceeded { pe, words_needed, words_available }) =
@@ -176,7 +188,9 @@ fn compile_artifact(g: &DataflowGraph, overlay: &Overlay) -> Result<Artifact, Co
     {
         return Err(CompileError::CapacityExceeded { pe, words_needed, words_available });
     }
-    let tables = RuntimeTables::build_shared(g, &place, cfg.cols, cfg.rows);
+    let tables = telemetry::timed(tel, "compile", "bake_tables", || {
+        RuntimeTables::build_shared(g, &place, cfg.cols, cfg.rows)
+    });
     Ok(Artifact {
         place: Arc::new(place),
         criticality: crit,
@@ -205,10 +219,21 @@ impl<'g> Program<'g> {
     /// summarize per-PE BRAM images. This is the entire one-time cost —
     /// every [`Session`] run afterwards starts from here for free.
     pub fn compile(g: &'g DataflowGraph, overlay: &Overlay) -> Result<Self, CompileError> {
+        Self::compile_with(g, overlay, None)
+    }
+
+    /// [`Program::compile`] with a telemetry registry attached: each
+    /// compile stage (criticality, place, BRAM images, table bake) runs
+    /// inside a timed span on the `"compile"` track.
+    pub fn compile_with(
+        g: &'g DataflowGraph,
+        overlay: &Overlay,
+        tel: Telemetry<'_>,
+    ) -> Result<Self, CompileError> {
         Ok(Self {
             g,
             overlay: *overlay,
-            art: Arc::new(compile_artifact(g, overlay)?),
+            art: Arc::new(compile_artifact(g, overlay, tel)?),
         })
     }
 
@@ -295,7 +320,17 @@ impl SharedProgram {
     /// [`Program::compile`] (same implementation, same
     /// [`compile_count`] accounting), but the result owns its graph.
     pub fn compile(graph: Arc<DataflowGraph>, overlay: &Overlay) -> Result<Self, CompileError> {
-        let art = Arc::new(compile_artifact(&graph, overlay)?);
+        Self::compile_with(graph, overlay, None)
+    }
+
+    /// [`SharedProgram::compile`] with a telemetry registry attached
+    /// (see [`Program::compile_with`]).
+    pub fn compile_with(
+        graph: Arc<DataflowGraph>,
+        overlay: &Overlay,
+        tel: Telemetry<'_>,
+    ) -> Result<Self, CompileError> {
+        let art = Arc::new(compile_artifact(&graph, overlay, tel)?);
         Ok(Self { graph, overlay: *overlay, art })
     }
 
@@ -330,6 +365,7 @@ impl SharedProgram {
 pub struct Session<'p, 'g> {
     program: &'p Program<'g>,
     cfg: OverlayConfig,
+    telemetry: Telemetry<'p>,
 }
 
 impl<'p, 'g> Session<'p, 'g> {
@@ -338,7 +374,17 @@ impl<'p, 'g> Session<'p, 'g> {
         Self {
             program,
             cfg: *program.overlay().config(),
+            telemetry: None,
         }
+    }
+
+    /// Attach a telemetry registry: [`Session::run`] wraps backend
+    /// construction and the run itself in timed spans on the `"run"`
+    /// track and records the completion-cycle histogram. Without this
+    /// the session carries `None` and pays nothing (DESIGN.md §11).
+    pub fn with_telemetry(mut self, reg: &'p Registry) -> Self {
+        self.telemetry = Some(reg);
+        self
     }
 
     /// Run under `kind` instead of the overlay's default scheduler.
@@ -379,8 +425,24 @@ impl<'p, 'g> Session<'p, 'g> {
 
     /// Run the compiled program to completion on this session's variant.
     pub fn run(&self) -> Result<SimStats, SimError> {
-        let mut backend = self.backend()?;
-        backend.run()
+        let Some(reg) = self.telemetry else {
+            // the disabled path is exactly the pre-telemetry code
+            let mut backend = self.backend()?;
+            return backend.run();
+        };
+        telemetry::count(self.telemetry, "run.sessions", 1);
+        let mut backend = {
+            let _setup = reg.span("run", "setup");
+            self.backend()?
+        };
+        let result = {
+            let _run = reg.span("run", self.cfg.scheduler.name());
+            backend.run()
+        };
+        if let Ok(stats) = &result {
+            telemetry::observe(self.telemetry, "run.cycles", stats.cycles);
+        }
+        result
     }
 }
 
@@ -545,6 +607,43 @@ mod tests {
             &view.shared_placement(),
             &clone.program().shared_placement()
         ));
+    }
+
+    /// Telemetry contract (DESIGN.md §11): compiling with a registry
+    /// records one span per compile stage, telemetered sessions wrap
+    /// setup + run in spans — and none of it perturbs results.
+    #[test]
+    fn telemetry_records_compile_stages_and_run_spans() {
+        let g = layered_random(8, 4, 12, 2, 1);
+        let overlay = overlay_2x2();
+        let reg = Registry::new();
+        let program = Program::compile_with(&g, &overlay, Some(&reg)).unwrap();
+        let stages: Vec<&str> = reg
+            .spans()
+            .iter()
+            .filter(|s| s.track == "compile")
+            .map(|s| s.name)
+            .collect();
+        assert_eq!(stages, ["criticality", "place", "bram_images", "bake_tables"]);
+        assert_eq!(reg.counter("compile.programs"), 1);
+
+        let plain = program.session().run().unwrap();
+        let traced = program.session().with_telemetry(&reg).run().unwrap();
+        assert_eq!(traced, plain, "telemetry must not perturb results");
+        let runs: Vec<&str> = reg
+            .spans()
+            .iter()
+            .filter(|s| s.track == "run")
+            .map(|s| s.name)
+            .collect();
+        assert_eq!(runs, ["setup", plain.scheduler.name()]);
+        assert_eq!(reg.counter("run.sessions"), 1);
+        assert_eq!(reg.histogram("run.cycles").unwrap().count, 1);
+
+        // the owned compile path threads telemetry identically
+        let reg2 = Registry::new();
+        SharedProgram::compile_with(Arc::new(g), &overlay, Some(&reg2)).unwrap();
+        assert_eq!(reg2.spans().len(), 4);
     }
 
     #[test]

@@ -7,9 +7,11 @@ use crate::config::Overlay;
 use crate::error::Error;
 use crate::graph::{DataflowGraph, GraphStats};
 use crate::program::SharedProgram;
+use crate::telemetry::Histogram;
+use crate::util::json::{self, Json};
 use crate::util::par::run_parallel;
 use crate::workload::Spec;
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
@@ -51,6 +53,10 @@ pub struct CacheStats {
 struct Flight<K: Ord + Clone> {
     pending: Mutex<BTreeSet<K>>,
     cv: Condvar,
+    /// acquires that had to block on another thread's in-flight build
+    /// (counted once per acquire, not per spurious wakeup) — the
+    /// single-flight contention signal of [`Engine::metrics_snapshot`]
+    waits: AtomicU64,
 }
 
 impl<K: Ord + Clone> Flight<K> {
@@ -58,6 +64,7 @@ impl<K: Ord + Clone> Flight<K> {
         Self {
             pending: Mutex::new(BTreeSet::new()),
             cv: Condvar::new(),
+            waits: AtomicU64::new(0),
         }
     }
 
@@ -68,6 +75,7 @@ impl<K: Ord + Clone> Flight<K> {
     /// after every wakeup.
     fn acquire<V>(&self, key: &K, mut lookup: impl FnMut() -> Option<V>) -> Option<V> {
         let mut pending = self.pending.lock().expect("flight lock");
+        let mut waited = false;
         loop {
             if let Some(v) = lookup() {
                 return Some(v);
@@ -76,8 +84,16 @@ impl<K: Ord + Clone> Flight<K> {
                 pending.insert(key.clone());
                 return None;
             }
+            if !waited {
+                waited = true;
+                self.waits.fetch_add(1, Ordering::Relaxed);
+            }
             pending = self.cv.wait(pending).expect("flight lock");
         }
+    }
+
+    fn waits(&self) -> u64 {
+        self.waits.load(Ordering::Relaxed)
     }
 
     /// Give up the build right for `key` and wake every waiter.
@@ -92,6 +108,54 @@ struct GraphEntry {
     graph: Arc<DataflowGraph>,
     fingerprint: u64,
     stats: GraphStats,
+}
+
+/// Per-key latency cap of [`Engine::metrics_snapshot`]: beyond this many
+/// distinct canonical workloads, further keys fold into `"__other__"` so
+/// the snapshot (and the engine's memory) stays bounded under adversarial
+/// key cardinality.
+const METRICS_KEY_CAP: usize = 64;
+
+/// Compile/run latency histograms of one canonical workload key.
+#[derive(Default, Clone, Copy)]
+struct LatencyPair {
+    jobs: u64,
+    compile: Histogram,
+    run: Histogram,
+}
+
+/// The mutable half of the engine's metrics (everything not already an
+/// atomic or derivable from the caches).
+#[derive(Default)]
+struct EngineMetrics {
+    jobs: u64,
+    failures: u64,
+    compile: Histogram,
+    run: Histogram,
+    per_key: BTreeMap<String, LatencyPair>,
+}
+
+impl EngineMetrics {
+    fn record(&mut self, result: &JobResult) {
+        self.jobs += 1;
+        if !result.cache_hit {
+            self.compile.observe(result.compile_micros);
+        }
+        self.run.observe(result.run_micros);
+        let key = if self.per_key.len() >= METRICS_KEY_CAP
+            && !self.per_key.contains_key(&result.workload)
+        {
+            "__other__".to_string()
+        } else {
+            result.workload.clone()
+        };
+        let pair = self.per_key.entry(key).or_default();
+        pair.jobs += 1;
+        if !result.cache_hit {
+            pair.compile.observe(result.compile_micros);
+        }
+        pair.run.observe(result.run_micros);
+    }
 }
 
 /// A long-lived, thread-safe job executor.
@@ -112,6 +176,7 @@ pub struct Engine {
     program_flight: Flight<CacheKey>,
     hits: AtomicU64,
     misses: AtomicU64,
+    metrics: Mutex<EngineMetrics>,
 }
 
 impl Default for Engine {
@@ -136,6 +201,7 @@ impl Engine {
             program_flight: Flight::new(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            metrics: Mutex::new(EngineMetrics::default()),
         }
     }
 
@@ -145,6 +211,20 @@ impl Engine {
     /// hit replays the identical placement, so its [`JobResult::stats`]
     /// are bit-identical to a cold compile of the same job.
     pub fn submit(&self, job: &JobSpec) -> Result<JobResult, Error> {
+        let result = self.submit_inner(job);
+        let mut metrics = self.metrics.lock().expect("metrics lock");
+        match &result {
+            Ok(r) => metrics.record(r),
+            Err(_) => {
+                metrics.jobs += 1;
+                metrics.failures += 1;
+            }
+        }
+        drop(metrics);
+        result
+    }
+
+    fn submit_inner(&self, job: &JobSpec) -> Result<JobResult, Error> {
         let spec: Spec = job.workload.parse().map_err(Error::Spec)?;
         let canon = spec.canonical();
         let cfg = job.effective_config();
@@ -230,6 +310,64 @@ impl Engine {
             graphs: graphs.len(),
             graph_evictions: graphs.evictions(),
         }
+    }
+
+    /// A stable JSON document of every engine metric — cache hit/miss/
+    /// eviction counts, single-flight waits, job totals and compile/run
+    /// latency histograms (global and per canonical workload key, with
+    /// p50/p90/p99). This is the payload the future `tdp serve` stats
+    /// endpoint returns; `tdp batch --metrics-out` dumps it today. The
+    /// layout is versioned (`version: 1`): keys are only ever added.
+    pub fn metrics_snapshot(&self) -> Json {
+        let cache = self.cache_stats();
+        let metrics = self.metrics.lock().expect("metrics lock");
+        let num = |v: u64| Json::Num(v as f64);
+
+        let mut cache_obj = BTreeMap::new();
+        cache_obj.insert("hits".to_string(), num(cache.hits));
+        cache_obj.insert("misses".to_string(), num(cache.misses));
+        cache_obj.insert("evictions".to_string(), num(cache.evictions));
+        cache_obj.insert("entries".to_string(), num(cache.entries as u64));
+        cache_obj.insert("graphs".to_string(), num(cache.graphs as u64));
+        cache_obj.insert("graph_evictions".to_string(), num(cache.graph_evictions));
+
+        let mut flight = BTreeMap::new();
+        flight.insert("program_waits".to_string(), num(self.program_flight.waits()));
+        flight.insert("graph_waits".to_string(), num(self.graph_flight.waits()));
+
+        let mut jobs = BTreeMap::new();
+        jobs.insert("submitted".to_string(), num(metrics.jobs));
+        jobs.insert("failed".to_string(), num(metrics.failures));
+
+        let mut latency = BTreeMap::new();
+        latency.insert("compile_micros".to_string(), metrics.compile.to_json_value());
+        latency.insert("run_micros".to_string(), metrics.run.to_json_value());
+
+        let workloads: BTreeMap<String, Json> = metrics
+            .per_key
+            .iter()
+            .map(|(k, pair)| {
+                let mut m = BTreeMap::new();
+                m.insert("jobs".to_string(), num(pair.jobs));
+                m.insert("compile_micros".to_string(), pair.compile.to_json_value());
+                m.insert("run_micros".to_string(), pair.run.to_json_value());
+                (k.clone(), Json::Obj(m))
+            })
+            .collect();
+
+        let mut root = BTreeMap::new();
+        root.insert("version".to_string(), Json::Num(1.0));
+        root.insert("cache".to_string(), Json::Obj(cache_obj));
+        root.insert("flight".to_string(), Json::Obj(flight));
+        root.insert("jobs".to_string(), Json::Obj(jobs));
+        root.insert("latency".to_string(), Json::Obj(latency));
+        root.insert("workloads".to_string(), Json::Obj(workloads));
+        Json::Obj(root)
+    }
+
+    /// Compact JSON text of [`Engine::metrics_snapshot`].
+    pub fn metrics_snapshot_json(&self) -> String {
+        json::write(&self.metrics_snapshot())
     }
 
     /// Build (or fetch) the graph for `spec` (whose canonical string is
@@ -360,6 +498,86 @@ mod tests {
         assert!(matches!(engine.submit(&too_big), Err(Error::Compile(_))));
         assert!(matches!(engine.submit(&too_big), Err(Error::Compile(_))));
         assert!(engine.submit(&job("reduction:64", 2, 2)).is_ok());
+    }
+
+    /// `metrics_snapshot()` must agree with `cache_stats()` and count
+    /// jobs, failures and latency observations exactly — the stable
+    /// document the future `tdp serve` stats endpoint returns.
+    #[test]
+    fn metrics_snapshot_counts_jobs_failures_and_latency() {
+        let engine = Engine::new();
+        let j = job("reduction:64", 2, 2);
+        engine.submit(&j).unwrap(); // miss
+        engine.submit(&j).unwrap(); // hit
+        assert!(engine.submit(&JobSpec::new("bogus:1")).is_err());
+
+        let snap = engine.metrics_snapshot();
+        assert_eq!(snap.get("version").unwrap().as_u64(), Some(1));
+        let cache = snap.get("cache").unwrap();
+        let s = engine.cache_stats();
+        assert_eq!(cache.get("hits").unwrap().as_u64(), Some(s.hits));
+        assert_eq!(cache.get("misses").unwrap().as_u64(), Some(s.misses));
+        assert_eq!(cache.get("evictions").unwrap().as_u64(), Some(s.evictions));
+        assert_eq!(cache.get("entries").unwrap().as_usize(), Some(s.entries));
+        let jobs = snap.get("jobs").unwrap();
+        assert_eq!(jobs.get("submitted").unwrap().as_u64(), Some(3));
+        assert_eq!(jobs.get("failed").unwrap().as_u64(), Some(1));
+        // one compile observation (the miss), two run observations
+        let latency = snap.get("latency").unwrap();
+        let compile = latency.get("compile_micros").unwrap();
+        assert_eq!(compile.get("count").unwrap().as_u64(), Some(1));
+        assert!(compile.get("p99").is_some());
+        let run = latency.get("run_micros").unwrap();
+        assert_eq!(run.get("count").unwrap().as_u64(), Some(2));
+        // per-workload breakdown keyed by canonical spec
+        let per = snap
+            .get("workloads")
+            .unwrap()
+            .get("reduction:64")
+            .unwrap();
+        assert_eq!(per.get("jobs").unwrap().as_u64(), Some(2));
+        assert_eq!(
+            per.get("compile_micros").unwrap().get("count").unwrap().as_u64(),
+            Some(1)
+        );
+        // the text form is valid JSON parsing back to the same document
+        let text = engine.metrics_snapshot_json();
+        let parsed = json::parse(&text).unwrap();
+        assert_eq!(json::write(&parsed), text);
+    }
+
+    /// Racing duplicates of one key must register single-flight waits in
+    /// the snapshot (the winner builds, everyone else blocks).
+    #[test]
+    fn metrics_snapshot_surfaces_flight_waits() {
+        let engine = Engine::new();
+        let j = job("lu_banded:48:4:0.9", 2, 2);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let engine = &engine;
+                let j = &j;
+                s.spawn(move || engine.submit(j).unwrap());
+            }
+        });
+        let snap = engine.metrics_snapshot();
+        let waits = snap
+            .get("flight")
+            .unwrap()
+            .get("program_waits")
+            .unwrap()
+            .as_u64()
+            .unwrap()
+            + snap
+                .get("flight")
+                .unwrap()
+                .get("graph_waits")
+                .unwrap()
+                .as_u64()
+                .unwrap();
+        // timing-dependent: most runs see all 3 losers wait, but any
+        // loser arriving after publication hits the cache directly
+        assert!(waits <= 6, "at most 3 losers per flight, got {waits}");
+        assert_eq!(engine.cache_stats().misses, 1, "still exactly one compile");
     }
 
     #[test]

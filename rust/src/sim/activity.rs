@@ -1,0 +1,214 @@
+//! Per-PE / per-router activity heatmaps (DESIGN.md §11).
+//!
+//! All counters here are folded into walks the simulator already does —
+//! the active-PE worklist and the active-router set — so accounting
+//! costs nothing on idle fabric and the report is a pure read-out at the
+//! end of a run: `tdp analyze` renders the glyph grids, `--json-out`
+//! emits [`ActivityReport::to_json_value`].
+
+use super::Simulator;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// End-of-run spatial activity counters, every series indexed
+/// `y * cols + x` (the torus/PE layout).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ActivityReport {
+    pub cols: usize,
+    pub rows: usize,
+    pub cycles: u64,
+    /// ALU issues per PE (interior-node firings)
+    pub pe_firings: Vec<u64>,
+    /// packets consumed off the network per PE
+    pub pe_ejects: Vec<u64>,
+    /// cycles with a non-idle packet-gen or occupied ALU, per PE
+    pub pe_busy: Vec<u64>,
+    /// packet-gen + BRAM-port stall cycles per PE
+    pub pe_stalls: Vec<u64>,
+    /// ready-queue occupancy high-water mark per PE
+    pub pe_max_ready: Vec<u64>,
+    /// packets switched per router (arrivals + accepted injections)
+    pub router_traffic: Vec<u64>,
+    /// deflections per router
+    pub router_deflections: Vec<u64>,
+}
+
+const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+impl ActivityReport {
+    fn series(&self) -> [(&'static str, &[u64]); 7] {
+        [
+            ("pe.firings", &self.pe_firings),
+            ("pe.ejects", &self.pe_ejects),
+            ("pe.busy_cycles", &self.pe_busy),
+            ("pe.stalls", &self.pe_stalls),
+            ("pe.max_ready", &self.pe_max_ready),
+            ("router.traffic", &self.router_traffic),
+            ("router.deflections", &self.router_deflections),
+        ]
+    }
+
+    /// One series as a `rows × cols` glyph grid: `·` for zero, eight
+    /// shade levels scaled to the series maximum otherwise.
+    pub fn heatmap(&self, title: &str, series: &[u64]) -> String {
+        debug_assert_eq!(series.len(), self.cols * self.rows);
+        let max = series.iter().copied().max().unwrap_or(0);
+        let total: u64 = series.iter().sum();
+        let mut out = String::new();
+        let _ = writeln!(out, "{title}  (max {max}, total {total})");
+        for y in 0..self.rows {
+            out.push_str("  ");
+            for x in 0..self.cols {
+                let v = series[y * self.cols + x];
+                out.push(if v == 0 {
+                    '·'
+                } else {
+                    GLYPHS[((v as u128 * (GLYPHS.len() as u128 - 1)) / max as u128) as usize]
+                });
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// All heatmaps, one block per series.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, series) in self.series() {
+            out.push_str(&self.heatmap(name, series));
+        }
+        out
+    }
+
+    /// Stable JSON document mirroring the heatmaps (flat arrays in
+    /// `y * cols + x` order).
+    pub fn to_json_value(&self) -> Json {
+        fn arr(v: &[u64]) -> Json {
+            Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+        }
+        let mut pe = BTreeMap::new();
+        pe.insert("firings".to_string(), arr(&self.pe_firings));
+        pe.insert("ejects".to_string(), arr(&self.pe_ejects));
+        pe.insert("busy_cycles".to_string(), arr(&self.pe_busy));
+        pe.insert("stalls".to_string(), arr(&self.pe_stalls));
+        pe.insert("max_ready".to_string(), arr(&self.pe_max_ready));
+        let mut router = BTreeMap::new();
+        router.insert("traffic".to_string(), arr(&self.router_traffic));
+        router.insert("deflections".to_string(), arr(&self.router_deflections));
+        let mut m = BTreeMap::new();
+        m.insert("cols".to_string(), Json::Num(self.cols as f64));
+        m.insert("rows".to_string(), Json::Num(self.rows as f64));
+        m.insert("cycles".to_string(), Json::Num(self.cycles as f64));
+        m.insert("pe".to_string(), Json::Obj(pe));
+        m.insert("router".to_string(), Json::Obj(router));
+        Json::Obj(m)
+    }
+}
+
+impl<'g> Simulator<'g> {
+    /// Snapshot the spatial activity counters (any time; typically after
+    /// [`Simulator::run`]).
+    pub fn activity(&self) -> ActivityReport {
+        ActivityReport {
+            cols: self.cfg.cols,
+            rows: self.cfg.rows,
+            cycles: self.cycle,
+            pe_firings: self.pes.iter().map(|p| p.alu.issued).collect(),
+            pe_ejects: self.pes.iter().map(|p| p.ejects).collect(),
+            pe_busy: self.pes.iter().map(|p| p.busy_cycles).collect(),
+            pe_stalls: self
+                .pes
+                .iter()
+                .map(|p| p.pg.stall_cycles + p.ports.stalls.iter().sum::<u64>())
+                .collect(),
+            pe_max_ready: self
+                .pes
+                .iter()
+                .map(|p| p.sched.max_occupancy() as u64)
+                .collect(),
+            router_traffic: self.net.router_traffic().to_vec(),
+            router_deflections: self.net.router_deflections().to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OverlayConfig;
+    use crate::workload::layered_random;
+
+    fn report() -> ActivityReport {
+        let g = layered_random(12, 5, 16, 2, 4);
+        let cfg = OverlayConfig::default().with_dims(4, 4);
+        let mut sim = Simulator::new(&g, cfg).unwrap();
+        let stats = sim.run().unwrap();
+        let act = sim.activity();
+        // the heatmap series are the same counters SimStats aggregates
+        assert_eq!(
+            act.pe_firings.iter().sum::<u64>(),
+            stats.pe.iter().map(|p| p.alu_ops).sum::<u64>()
+        );
+        assert_eq!(act.pe_ejects.iter().sum::<u64>(), stats.net.delivered);
+        assert_eq!(
+            act.router_deflections.iter().sum::<u64>(),
+            stats.net.deflections
+        );
+        assert_eq!(act.cycles, stats.cycles);
+        act
+    }
+
+    #[test]
+    fn activity_matches_stats_and_renders() {
+        let act = report();
+        assert_eq!(act.pe_firings.len(), 16);
+        let txt = act.render();
+        // 7 series, each a header + 4 grid rows of 4 glyphs
+        assert_eq!(txt.lines().count(), 7 * (1 + act.rows));
+        assert!(txt.contains("pe.firings"));
+        assert!(txt.contains("router.traffic"));
+        for line in txt.lines().filter(|l| l.starts_with("  ")) {
+            assert_eq!(line.chars().count(), 2 + act.cols, "grid row: {line:?}");
+        }
+    }
+
+    #[test]
+    fn activity_json_is_flat_and_parseable() {
+        let act = report();
+        let text = crate::util::json::write(&act.to_json_value());
+        let j = crate::util::json::parse(&text).unwrap();
+        assert_eq!(j.get("cols").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("rows").unwrap().as_usize(), Some(4));
+        let firings = j
+            .get("pe")
+            .unwrap()
+            .get("firings")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(firings.len(), 16);
+        let sum: u64 = firings.iter().map(|v| v.as_u64().unwrap()).sum();
+        assert_eq!(sum, act.pe_firings.iter().sum::<u64>());
+        assert!(j.get("router").unwrap().get("deflections").is_some());
+    }
+
+    #[test]
+    fn heatmap_zero_series_all_dots() {
+        let act = ActivityReport {
+            cols: 2,
+            rows: 2,
+            cycles: 0,
+            pe_firings: vec![0; 4],
+            pe_ejects: vec![0; 4],
+            pe_busy: vec![0; 4],
+            pe_stalls: vec![0; 4],
+            pe_max_ready: vec![0; 4],
+            router_traffic: vec![0; 4],
+            router_deflections: vec![0; 4],
+        };
+        let grid = act.heatmap("x", &act.pe_firings);
+        assert!(grid.contains("(max 0, total 0)"));
+        assert_eq!(grid.matches('·').count(), 4);
+    }
+}

@@ -27,9 +27,11 @@
 //! `graph::Node` is dereferenced — the graph object model is a
 //! compile-time input only.
 
+mod activity;
 mod stats;
 mod trace;
 
+pub use activity::ActivityReport;
 pub use stats::{PeStats, SimStats};
 pub use trace::{Sample, Trace};
 
@@ -124,6 +126,8 @@ struct PeUnit {
     /// in-flight scheduling pass completes at this cycle
     pick_done_at: Option<u64>,
     busy_cycles: u64,
+    /// packets this PE consumed off the network (operand deliveries)
+    ejects: u64,
 }
 
 /// The overlay simulator for one (graph, placement, config) instance.
@@ -275,6 +279,7 @@ impl<'g> Simulator<'g> {
                 next_node: None,
                 pick_done_at: None,
                 busy_cycles: 0,
+                ejects: 0,
             })
             .collect();
         let mut sim = Self {
@@ -415,15 +420,18 @@ impl<'g> Simulator<'g> {
         }
 
         // take/restore the trace so sampling can borrow `self` freely —
-        // no aliasing dance, no unwrap
+        // no aliasing dance, no unwrap. The final cycle is always
+        // sampled (guarded against a stride-aligned duplicate) so a run
+        // shorter than the stride still records its end state.
+        let done = self.is_complete();
         if let Some(mut trace) = self.trace.take() {
-            if trace.due(self.cycle) {
+            if trace.due(self.cycle) || (done && trace.last_cycle() != Some(self.cycle)) {
                 trace.push(self.sample());
             }
             self.trace = Some(trace);
         }
         self.cycle += 1;
-        self.is_complete()
+        done
     }
 
     /// One cycle of one PE: stages (3) eject consume, (4) ALU retire,
@@ -436,6 +444,7 @@ impl<'g> Simulator<'g> {
         // (3) consume the ejected packet: operand store -> firing -> issue
         self.pes[pe].ports.reset();
         if let Some(pkt) = self.eject_buf[pe].take() {
+            self.pes[pe].ejects += 1;
             // receive has top priority; budget >= 2 always grants it
             let granted = self.pes[pe].ports.request(Unit::Receive);
             debug_assert!(granted);
@@ -668,6 +677,7 @@ impl<'g> Simulator<'g> {
             .map(|p| PeStats {
                 busy_cycles: p.busy_cycles,
                 alu_ops: p.alu.issued,
+                ejects: p.ejects,
                 picks: p.pg.picks,
                 pg_busy: p.pg.busy_cycles,
                 pg_stalls: p.pg.stall_cycles,
@@ -876,6 +886,38 @@ mod tests {
         // ready node is claimed by exactly one completed pass
         let picks: u64 = stats.pe.iter().map(|p| p.picks).sum();
         assert_eq!(picks as usize, g.len());
+        // every delivered packet is consumed by exactly one PE
+        let ejects: u64 = stats.pe.iter().map(|p| p.ejects).sum();
+        assert_eq!(ejects, stats.net.delivered);
+    }
+
+    /// Regression (satellite): a run shorter than the sampling stride
+    /// used to record nothing — the final cycle must always be sampled,
+    /// without duplicating a stride-aligned last sample.
+    #[test]
+    fn trace_samples_final_cycle_even_when_stride_exceeds_run() {
+        let g = layered_random(8, 4, 12, 2, 3);
+        let cfg = OverlayConfig::default().with_dims(2, 2);
+
+        // stride far beyond the run length: exactly cycle 0 + final cycle
+        let mut sim = Simulator::new(&g, cfg).unwrap();
+        sim.enable_trace(1_000_000);
+        let stats = sim.run().unwrap();
+        let trace = sim.trace().unwrap();
+        assert_eq!(trace.samples.len(), 2, "cycle 0 and the final cycle");
+        assert_eq!(trace.last_cycle(), Some(stats.cycles - 1));
+        assert_eq!(trace.samples.last().unwrap().completed, g.len());
+
+        // stride 1 samples every cycle with no duplicate at the end
+        let mut sim = Simulator::new(&g, cfg).unwrap();
+        sim.enable_trace(1);
+        let stats = sim.run().unwrap();
+        let trace = sim.trace().unwrap();
+        assert_eq!(trace.samples.len() as u64, stats.cycles);
+        let cycles: Vec<u64> = trace.samples.iter().map(|s| s.cycle).collect();
+        for w in cycles.windows(2) {
+            assert!(w[0] < w[1], "strictly increasing sample cycles");
+        }
     }
 
     /// `sample()` walks only the active worklist; this pins its claim

@@ -13,6 +13,9 @@ use std::collections::BTreeMap;
 pub struct PeStats {
     pub busy_cycles: u64,
     pub alu_ops: u64,
+    /// packets consumed off the network (operand deliveries); sums to
+    /// `net.delivered` across the fabric
+    pub ejects: u64,
     pub picks: u64,
     pub pg_busy: u64,
     pub pg_stalls: u64,
@@ -28,6 +31,7 @@ impl PeStats {
         let mut m = BTreeMap::new();
         m.insert("busy_cycles".to_string(), Json::Num(self.busy_cycles as f64));
         m.insert("alu_ops".to_string(), Json::Num(self.alu_ops as f64));
+        m.insert("ejects".to_string(), Json::Num(self.ejects as f64));
         m.insert("picks".to_string(), Json::Num(self.picks as f64));
         m.insert("pg_busy".to_string(), Json::Num(self.pg_busy as f64));
         m.insert("pg_stalls".to_string(), Json::Num(self.pg_stalls as f64));
@@ -48,6 +52,7 @@ impl PeStats {
             match key.as_str() {
                 "busy_cycles" => s.busy_cycles = n,
                 "alu_ops" => s.alu_ops = n,
+                "ejects" => s.ejects = n,
                 "picks" => s.picks = n,
                 "pg_busy" => s.pg_busy = n,
                 "pg_stalls" => s.pg_stalls = n,
@@ -278,10 +283,19 @@ mod tests {
         let text = stats.to_json();
         let back = SimStats::from_json(&text).unwrap();
         assert_eq!(back, stats, "every counter must round-trip bit-identically");
+        // the new per-PE activity counter survives the trip with a
+        // non-trivial value (every delivered packet was ejected somewhere)
+        assert_eq!(
+            back.pe.iter().map(|p| p.ejects).sum::<u64>(),
+            stats.net.delivered
+        );
+        assert!(back.pe.iter().any(|p| p.ejects > 0));
         // and the emitted object is plain JSON util::json can re-emit
         let reparsed = json::parse(&text).unwrap();
         assert_eq!(json::write(&reparsed), text);
         assert_eq!(reparsed.get("pe").unwrap().as_arr().unwrap().len(), 4);
+        let pe0 = &reparsed.get("pe").unwrap().as_arr().unwrap()[0];
+        assert!(pe0.get("ejects").is_some(), "activity field serialized");
     }
 
     #[test]
@@ -290,6 +304,11 @@ mod tests {
         assert!(SimStats::from_json("{\"cycles\": -4}").is_err());
         assert!(SimStats::from_json("{\"scheduler\": \"nope\"}").is_err());
         assert!(SimStats::from_json("[1]").is_err());
+        // per-PE objects are just as strict: unknown or malformed
+        // activity counters are rejected, not ignored
+        assert!(SimStats::from_json("{\"pe\": [{\"bogus\": 1}]}").is_err());
+        assert!(SimStats::from_json("{\"pe\": [{\"ejects\": -1}]}").is_err());
+        assert!(SimStats::from_json("{\"pe\": [{\"ejects\": 2}]}").is_ok());
     }
 
     #[test]

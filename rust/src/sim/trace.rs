@@ -44,6 +44,13 @@ impl Trace {
         self.samples.push(s);
     }
 
+    /// Cycle of the most recent sample, if any. Used by the simulator's
+    /// termination path to avoid double-sampling the final cycle when it
+    /// happens to be stride-aligned.
+    pub fn last_cycle(&self) -> Option<u64> {
+        self.samples.last().map(|s| s.cycle)
+    }
+
     /// Peak total ready occupancy over the run.
     pub fn peak_ready(&self) -> usize {
         self.samples.iter().map(|s| s.ready_total).max().unwrap_or(0)
@@ -155,5 +162,15 @@ mod tests {
         assert_eq!(t.peak_ready(), 0);
         assert_eq!(t.mean_busy(8), 0.0);
         assert_eq!(t.sparkline(|s| s.ready_total, 10), "");
+        assert_eq!(t.last_cycle(), None);
+    }
+
+    #[test]
+    fn last_cycle_tracks_most_recent_sample() {
+        let mut t = Trace::new(10);
+        t.push(sample(0, 1, 1));
+        assert_eq!(t.last_cycle(), Some(0));
+        t.push(sample(20, 1, 1));
+        assert_eq!(t.last_cycle(), Some(20));
     }
 }

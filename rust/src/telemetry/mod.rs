@@ -1,0 +1,421 @@
+//! Lightweight instrumentation (DESIGN.md §11): a [`Registry`] of named
+//! counters, gauges and log2-bucketed histograms, plus timed [`Span`]s,
+//! exported as a Chrome/Perfetto trace ([`perfetto_json`]).
+//!
+//! The registry is **passed in, never global**: instrumented code takes
+//! a [`Telemetry`] (`Option<&Registry>`) and the disabled path is a
+//! literal no-op — no clock read, no lock, no allocation (the
+//! overhead-when-disabled contract the CI telemetry smoke measures).
+//! Recording is coarse-grained by design (compile stages, run phases,
+//! service jobs); the per-cycle hot loop keeps its own plain counters
+//! (`SimStats`, [`crate::sim::ActivityReport`]) and never touches the
+//! registry lock.
+
+mod perfetto;
+
+pub use perfetto::{perfetto_json, trace_counter_series, CounterSeries};
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// The instrumentation handle threaded through instrumented code paths:
+/// `None` disables telemetry at zero cost.
+pub type Telemetry<'a> = Option<&'a Registry>;
+
+/// One recorded timed span (relative to the registry's epoch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// grouping track ("compile", "run", ...) — the Perfetto thread
+    pub track: &'static str,
+    pub name: &'static str,
+    pub start_micros: u64,
+    pub dur_micros: u64,
+}
+
+/// A log2-bucketed histogram of non-negative integer observations
+/// (latencies in µs, cycle counts): bucket `b` holds values whose bit
+/// length is `b`, i.e. `[2^(b-1), 2^b)` for `b > 0` and exactly `0` for
+/// `b = 0`. Fixed 65-slot storage, `Copy`, no allocation.
+#[derive(Debug, Clone, Copy)]
+pub struct Histogram {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    buckets: [u64; 65],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+            buckets: [0; 65],
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&mut self, v: u64) {
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.buckets[(64 - v.leading_zeros()) as usize] += 1;
+    }
+
+    /// Approximate percentile (`p` in [0, 1]): the upper bound of the
+    /// bucket holding the rank-`ceil(p·count)` observation, clamped to
+    /// the observed [min, max]. Exact to within one power of two.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let hi = if b >= 64 { u64::MAX } else { (1u64 << b) - 1 };
+                return hi.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Summary object: `{count, sum, min, max, p50, p90, p99}` (the
+    /// latency format of [`crate::service::Engine::metrics_snapshot`]).
+    pub fn to_json_value(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(self.count as f64));
+        m.insert("sum".to_string(), Json::Num(self.sum as f64));
+        let min = if self.count == 0 { 0 } else { self.min };
+        m.insert("min".to_string(), Json::Num(min as f64));
+        m.insert("max".to_string(), Json::Num(self.max as f64));
+        m.insert("p50".to_string(), Json::Num(self.percentile(0.50) as f64));
+        m.insert("p90".to_string(), Json::Num(self.percentile(0.90) as f64));
+        m.insert("p99".to_string(), Json::Num(self.percentile(0.99) as f64));
+        Json::Obj(m)
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    hists: BTreeMap<&'static str, Histogram>,
+    spans: Vec<Span>,
+}
+
+/// A registry of named metrics and spans. Thread-safe (one mutex over
+/// all state — recording is coarse-grained, never per fabric cycle);
+/// keys are `&'static str` so recording never allocates.
+pub struct Registry {
+    epoch: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self {
+            epoch: Instant::now(),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().expect("telemetry registry lock")
+    }
+
+    /// Add `delta` to counter `key` (created at zero).
+    pub fn count(&self, key: &'static str, delta: u64) {
+        *self.lock().counters.entry(key).or_insert(0) += delta;
+    }
+
+    /// Set gauge `key` to `value` (last write wins).
+    pub fn gauge(&self, key: &'static str, value: f64) {
+        self.lock().gauges.insert(key, value);
+    }
+
+    /// Record `v` into histogram `key`.
+    pub fn observe(&self, key: &'static str, v: u64) {
+        self.lock().hists.entry(key).or_default().observe(v);
+    }
+
+    /// Current value of counter `key` (0 if never touched).
+    pub fn counter(&self, key: &str) -> u64 {
+        self.lock().counters.get(key).copied().unwrap_or(0)
+    }
+
+    /// Current value of gauge `key`.
+    pub fn gauge_value(&self, key: &str) -> Option<f64> {
+        self.lock().gauges.get(key).copied()
+    }
+
+    /// Snapshot of histogram `key`.
+    pub fn histogram(&self, key: &str) -> Option<Histogram> {
+        self.lock().hists.get(key).copied()
+    }
+
+    /// Snapshot of every recorded span, in completion order.
+    pub fn spans(&self) -> Vec<Span> {
+        self.lock().spans.clone()
+    }
+
+    /// Start a timed span; it records itself on drop (RAII).
+    pub fn span(&self, track: &'static str, name: &'static str) -> SpanGuard<'_> {
+        SpanGuard {
+            reg: self,
+            track,
+            name,
+            t0: Instant::now(),
+        }
+    }
+
+    /// Record a span that ran from `start` for `dur`.
+    pub fn record_span(
+        &self,
+        track: &'static str,
+        name: &'static str,
+        start: Instant,
+        dur: Duration,
+    ) {
+        let start_micros = start.saturating_duration_since(self.epoch).as_micros() as u64;
+        self.lock().spans.push(Span {
+            track,
+            name,
+            start_micros,
+            dur_micros: dur.as_micros() as u64,
+        });
+    }
+
+    /// Everything in one JSON object: `{counters, gauges, histograms,
+    /// spans}` (histograms as summaries, spans with track/name/µs).
+    pub fn to_json_value(&self) -> Json {
+        let inner = self.lock();
+        let mut root = BTreeMap::new();
+        root.insert(
+            "counters".to_string(),
+            Json::Obj(
+                inner
+                    .counters
+                    .iter()
+                    .map(|(k, &v)| (k.to_string(), Json::Num(v as f64)))
+                    .collect(),
+            ),
+        );
+        root.insert(
+            "gauges".to_string(),
+            Json::Obj(
+                inner
+                    .gauges
+                    .iter()
+                    .map(|(k, &v)| (k.to_string(), Json::Num(v)))
+                    .collect(),
+            ),
+        );
+        root.insert(
+            "histograms".to_string(),
+            Json::Obj(
+                inner
+                    .hists
+                    .iter()
+                    .map(|(k, v)| (k.to_string(), v.to_json_value()))
+                    .collect(),
+            ),
+        );
+        root.insert(
+            "spans".to_string(),
+            Json::Arr(
+                inner
+                    .spans
+                    .iter()
+                    .map(|s| {
+                        let mut m = BTreeMap::new();
+                        m.insert("track".to_string(), Json::Str(s.track.to_string()));
+                        m.insert("name".to_string(), Json::Str(s.name.to_string()));
+                        m.insert("start_micros".to_string(), Json::Num(s.start_micros as f64));
+                        m.insert("dur_micros".to_string(), Json::Num(s.dur_micros as f64));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(root)
+    }
+
+    /// Compact JSON text of [`Registry::to_json_value`].
+    pub fn to_json(&self) -> String {
+        json::write(&self.to_json_value())
+    }
+}
+
+/// RAII guard of an in-flight span (see [`Registry::span`]).
+pub struct SpanGuard<'r> {
+    reg: &'r Registry,
+    track: &'static str,
+    name: &'static str,
+    t0: Instant,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        self.reg.record_span(self.track, self.name, self.t0, self.t0.elapsed());
+    }
+}
+
+/// Counter increment through an optional registry — a no-op on `None`.
+#[inline]
+pub fn count(t: Telemetry<'_>, key: &'static str, delta: u64) {
+    if let Some(reg) = t {
+        reg.count(key, delta);
+    }
+}
+
+/// Histogram observation through an optional registry — a no-op on
+/// `None`.
+#[inline]
+pub fn observe(t: Telemetry<'_>, key: &'static str, v: u64) {
+    if let Some(reg) = t {
+        reg.observe(key, v);
+    }
+}
+
+/// Run `f` inside a timed span when telemetry is enabled; with `None`
+/// this is exactly `f()` — no clock read, no lock (the zero-cost
+/// contract instrumented call sites rely on).
+#[inline]
+pub fn timed<T>(
+    t: Telemetry<'_>,
+    track: &'static str,
+    name: &'static str,
+    f: impl FnOnce() -> T,
+) -> T {
+    match t {
+        None => f(),
+        Some(reg) => {
+            let _span = reg.span(track, name);
+            f()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_accumulate() {
+        let reg = Registry::new();
+        reg.count("jobs", 1);
+        reg.count("jobs", 2);
+        reg.gauge("occupancy", 0.5);
+        reg.gauge("occupancy", 0.75);
+        assert_eq!(reg.counter("jobs"), 3);
+        assert_eq!(reg.counter("untouched"), 0);
+        assert_eq!(reg.gauge_value("occupancy"), Some(0.75));
+    }
+
+    #[test]
+    fn histogram_buckets_and_percentiles() {
+        let mut h = Histogram::default();
+        for v in 1..=100u64 {
+            h.observe(v);
+        }
+        assert_eq!(h.count, 100);
+        assert_eq!(h.sum, 5050);
+        assert_eq!((h.min, h.max), (1, 100));
+        // log2 buckets: percentiles land within one power of two
+        let p50 = h.percentile(0.50);
+        assert!((32..=63).contains(&p50), "p50 of 1..=100 in [32,63], got {p50}");
+        assert_eq!(h.percentile(0.99), 100, "p99 bucket clamps to observed max");
+        assert_eq!(h.percentile(0.0), 1);
+        // zero values land in bucket 0
+        let mut z = Histogram::default();
+        z.observe(0);
+        assert_eq!(z.percentile(0.5), 0);
+        assert_eq!(Histogram::default().percentile(0.9), 0, "empty is safe");
+        // no overflow at the top bucket
+        let mut big = Histogram::default();
+        big.observe(u64::MAX);
+        assert_eq!(big.percentile(1.0), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_summary_json_shape() {
+        let mut h = Histogram::default();
+        h.observe(10);
+        h.observe(20);
+        let j = h.to_json_value();
+        for key in ["count", "sum", "min", "max", "p50", "p90", "p99"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.get("count").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("sum").unwrap().as_u64(), Some(30));
+        // empty histograms report min 0, not u64::MAX
+        let empty = Histogram::default().to_json_value();
+        assert_eq!(empty.get("min").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn spans_record_track_name_duration() {
+        let reg = Registry::new();
+        {
+            let _s = reg.span("compile", "place");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        timed(Some(&reg), "run", "in-order", || ());
+        let spans = reg.spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!((spans[0].track, spans[0].name), ("compile", "place"));
+        assert!(spans[0].dur_micros >= 1_000, "slept ~2ms: {spans:?}");
+        assert_eq!((spans[1].track, spans[1].name), ("run", "in-order"));
+        // spans start at/after the registry epoch and nest sanely
+        assert!(spans[1].start_micros >= spans[0].start_micros);
+    }
+
+    #[test]
+    fn disabled_helpers_are_passthrough() {
+        // the None path must not require a registry at all
+        count(None, "x", 1);
+        observe(None, "y", 2);
+        let mut ran = false;
+        let out = timed(None, "t", "n", || {
+            ran = true;
+            42
+        });
+        assert!(ran);
+        assert_eq!(out, 42);
+    }
+
+    #[test]
+    fn registry_json_is_parseable_and_complete() {
+        let reg = Registry::new();
+        reg.count("compile.programs", 1);
+        reg.gauge("g", 1.5);
+        reg.observe("run.cycles", 1234);
+        timed(Some(&reg), "compile", "criticality", || ());
+        let text = reg.to_json();
+        let j = json::parse(&text).unwrap();
+        assert_eq!(
+            j.get("counters").unwrap().get("compile.programs").unwrap().as_u64(),
+            Some(1)
+        );
+        assert!(j.get("gauges").unwrap().get("g").is_some());
+        assert_eq!(
+            j.get("histograms").unwrap().get("run.cycles").unwrap().get("count").unwrap().as_u64(),
+            Some(1)
+        );
+        assert_eq!(j.get("spans").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,181 @@
+//! Chrome/Perfetto trace-event export (DESIGN.md §11).
+//!
+//! The output is the JSON object form of the trace-event format —
+//! `{"traceEvents": [...], "displayTimeUnit": "ms"}` — loadable in
+//! `chrome://tracing` and [ui.perfetto.dev](https://ui.perfetto.dev).
+//! Two processes are emitted:
+//!
+//! * `pid 1` — **host**: every registry [`Span`](super::Span) as a
+//!   complete (`"ph": "X"`) event, one Perfetto thread per span track
+//!   ("compile", "run", ...), timestamps in wall-clock µs since the
+//!   registry epoch;
+//! * `pid 2` — **fabric**: per-cycle counter (`"ph": "C"`) series from
+//!   a run's [`crate::sim::Trace`] samples, timestamps in *simulated*
+//!   cycles (rendered as µs: 1 cycle = 1 µs).
+
+use super::Registry;
+use crate::sim::Trace;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+const HOST_PID: f64 = 1.0;
+const FABRIC_PID: f64 = 2.0;
+
+/// One named counter track: `(timestamp µs, value)` points.
+#[derive(Debug, Clone)]
+pub struct CounterSeries {
+    pub name: String,
+    pub points: Vec<(u64, f64)>,
+}
+
+/// The per-cycle run-phase counters of one traced run, prefixed so
+/// several runs (e.g. both schedulers) can share one trace file.
+pub fn trace_counter_series(prefix: &str, trace: &Trace) -> Vec<CounterSeries> {
+    let series: [(&str, fn(&crate::sim::Sample) -> f64); 4] = [
+        ("ready_total", |s| s.ready_total as f64),
+        ("busy_pes", |s| s.busy_pes as f64),
+        ("in_flight", |s| s.in_flight as f64),
+        ("completed", |s| s.completed as f64),
+    ];
+    series
+        .iter()
+        .map(|(name, f)| CounterSeries {
+            name: format!("{prefix}/{name}"),
+            points: trace.samples.iter().map(|s| (s.cycle, f(s))).collect(),
+        })
+        .collect()
+}
+
+fn meta_event(name: &str, pid: f64, tid: f64, value: &str) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("ph".to_string(), Json::Str("M".to_string()));
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("pid".to_string(), Json::Num(pid));
+    m.insert("tid".to_string(), Json::Num(tid));
+    let mut args = BTreeMap::new();
+    args.insert("name".to_string(), Json::Str(value.to_string()));
+    m.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(m)
+}
+
+/// Render the registry's spans plus optional fabric counter series as
+/// one Chrome trace-event JSON document.
+pub fn perfetto_json(reg: &Registry, counters: &[CounterSeries]) -> String {
+    let mut events = Vec::new();
+    events.push(meta_event("process_name", HOST_PID, 0.0, "tdp host"));
+
+    // one Perfetto thread per span track, in order of first appearance
+    let spans = reg.spans();
+    let mut track_tid: BTreeMap<&'static str, f64> = BTreeMap::new();
+    for s in &spans {
+        let next = track_tid.len() as f64 + 1.0;
+        let tid = *track_tid.entry(s.track).or_insert(next);
+        if tid == next {
+            events.push(meta_event("thread_name", HOST_PID, tid, s.track));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("ph".to_string(), Json::Str("X".to_string()));
+        m.insert("name".to_string(), Json::Str(s.name.to_string()));
+        m.insert("cat".to_string(), Json::Str(s.track.to_string()));
+        m.insert("ts".to_string(), Json::Num(s.start_micros as f64));
+        m.insert("dur".to_string(), Json::Num(s.dur_micros as f64));
+        m.insert("pid".to_string(), Json::Num(HOST_PID));
+        m.insert("tid".to_string(), Json::Num(tid));
+        events.push(Json::Obj(m));
+    }
+
+    if !counters.is_empty() {
+        events.push(meta_event(
+            "process_name",
+            FABRIC_PID,
+            0.0,
+            "simulated fabric (1 cycle = 1us)",
+        ));
+        for series in counters {
+            for &(ts, v) in &series.points {
+                let mut m = BTreeMap::new();
+                m.insert("ph".to_string(), Json::Str("C".to_string()));
+                m.insert("name".to_string(), Json::Str(series.name.clone()));
+                m.insert("ts".to_string(), Json::Num(ts as f64));
+                m.insert("pid".to_string(), Json::Num(FABRIC_PID));
+                m.insert("tid".to_string(), Json::Num(0.0));
+                let mut args = BTreeMap::new();
+                args.insert("value".to_string(), Json::Num(v));
+                m.insert("args".to_string(), Json::Obj(args));
+                events.push(Json::Obj(m));
+            }
+        }
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".to_string(), Json::Arr(events));
+    root.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    json::write(&Json::Obj(root))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Sample;
+
+    fn count_ph(events: &[Json], ph: &str) -> usize {
+        events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some(ph))
+            .count()
+    }
+
+    #[test]
+    fn export_is_valid_trace_event_json() {
+        let reg = Registry::new();
+        super::super::timed(Some(&reg), "compile", "criticality", || ());
+        super::super::timed(Some(&reg), "compile", "place", || ());
+        super::super::timed(Some(&reg), "run", "out-of-order", || ());
+
+        let mut trace = Trace::new(1);
+        for c in 0..3u64 {
+            trace.push(Sample {
+                cycle: c,
+                ready_total: c as usize,
+                ready_max: 1,
+                busy_pes: 2,
+                in_flight: 1,
+                completed: c as usize,
+            });
+        }
+        let counters = trace_counter_series("ooo", &trace);
+        assert_eq!(counters.len(), 4);
+        assert_eq!(counters[0].name, "ooo/ready_total");
+        assert_eq!(counters[0].points.len(), 3);
+
+        let text = perfetto_json(&reg, &counters);
+        let j = json::parse(&text).unwrap();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(count_ph(events, "X"), 3, "one complete event per span");
+        assert_eq!(count_ph(events, "C"), 12, "4 series x 3 samples");
+        // spans carry cat/ts/dur and land on the host process; the two
+        // tracks get distinct Perfetto threads
+        let span = events
+            .iter()
+            .find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .unwrap();
+        for key in ["name", "cat", "ts", "dur", "pid", "tid"] {
+            assert!(span.get(key).is_some(), "span missing {key}");
+        }
+        let tids: std::collections::BTreeSet<u64> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .map(|e| e.get("tid").unwrap().as_u64().unwrap())
+            .collect();
+        assert_eq!(tids.len(), 2, "compile and run are separate threads");
+        assert_eq!(j.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    }
+
+    #[test]
+    fn spanless_counterless_export_still_valid() {
+        let reg = Registry::new();
+        let j = json::parse(&perfetto_json(&reg, &[])).unwrap();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1, "just the host process_name record");
+    }
+}

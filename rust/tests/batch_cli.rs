@@ -142,6 +142,48 @@ not json at all\n\
     assert_eq!(summary_field(&stderr, "failed"), 3);
 }
 
+/// `--metrics-out` dumps the engine's metrics snapshot: job counts,
+/// cache counters and latency histograms that match the batch exactly.
+#[test]
+fn batch_metrics_out_writes_snapshot() {
+    let jobs = "\
+{\"workload\": \"reduction:32\", \"cols\": 2, \"rows\": 2}\n\
+{\"workload\": \"reduction:32\", \"cols\": 2, \"rows\": 2, \"scheduler\": \"ooo\"}\n\
+{\"workload\": \"chain:16:seed=1\", \"cols\": 2, \"rows\": 2}\n\
+{\"workload\": \"reduction:32\", \"cols\": 2, \"rows\": 2}\n";
+    let path = temp_file("metered.jsonl", jobs);
+    let metrics_path = temp_file("metrics.json", "");
+    let out = tdp()
+        .arg("batch")
+        .arg(&path)
+        .arg("--metrics-out")
+        .arg(&metrics_path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let snap = json::parse(&std::fs::read_to_string(&metrics_path).unwrap()).unwrap();
+    let get = |path: &[&str]| -> u64 {
+        let mut v = &snap;
+        for k in path {
+            v = v.get(k).unwrap_or_else(|| panic!("snapshot missing {path:?}"));
+        }
+        v.as_u64().unwrap()
+    };
+    assert_eq!(get(&["version"]), 1);
+    assert_eq!(get(&["jobs", "submitted"]), 4);
+    assert_eq!(get(&["jobs", "failed"]), 0);
+    assert_eq!(get(&["cache", "misses"]), 2, "two distinct workloads");
+    assert_eq!(get(&["cache", "hits"]), 2);
+    assert_eq!(get(&["latency", "compile_micros", "count"]), 2);
+    assert_eq!(get(&["latency", "run_micros", "count"]), 4);
+    let per = snap.get("workloads").unwrap().as_obj().unwrap();
+    assert_eq!(per.len(), 2);
+    assert_eq!(
+        per.get("reduction:32").unwrap().get("jobs").unwrap().as_u64(),
+        Some(3)
+    );
+}
+
 #[test]
 fn batch_without_file_fails() {
     let out = tdp().arg("batch").output().unwrap();

@@ -320,6 +320,151 @@ fn perf_quick_emits_bench_json() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// ISSUE acceptance: `tdp run --trace-out` on the Fig. 1 `lu_pl`
+/// workload produces a valid Chrome trace-event file with compile-stage
+/// spans, run-phase spans and per-cycle fabric counters.
+#[test]
+fn run_trace_out_writes_chrome_trace() {
+    use tdp::util::json::{self, Json};
+    let dir = std::env::temp_dir().join(format!("tdp_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    run_ok(&[
+        "run",
+        "--workload",
+        "kind = \"lu_power_law\"\\nn = 60\\navg_degree = 3",
+        "--cols",
+        "4",
+        "--rows",
+        "4",
+        "--seed",
+        "42",
+        "--trace-out",
+        path.to_str().unwrap(),
+        "--trace-stride",
+        "4",
+    ]);
+    let j = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert!(j.get("displayTimeUnit").is_some());
+    let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let named = |ph: &str, cat: Option<&str>| -> Vec<&str> {
+        events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some(ph))
+            .filter(|e| cat.is_none() || e.get("cat").and_then(Json::as_str) == cat)
+            .filter_map(|e| e.get("name").and_then(Json::as_str))
+            .collect()
+    };
+    let compile = named("X", Some("compile"));
+    for stage in ["criticality", "place", "bram_images", "bake_tables"] {
+        assert!(compile.contains(&stage), "missing compile span {stage}: {compile:?}");
+    }
+    let run = named("X", Some("run"));
+    for phase in ["setup", "in-order", "out-of-order"] {
+        assert!(run.contains(&phase), "missing run span {phase}: {run:?}");
+    }
+    let counters = named("C", None);
+    for series in ["in_order/busy_pes", "out_of_order/ready_total"] {
+        assert!(counters.contains(&series), "missing counter {series}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Telemetry is observation only: a traced run must report bit-identical
+/// stats to the plain run of the same job.
+#[test]
+fn run_trace_out_does_not_perturb_results() {
+    let dir = std::env::temp_dir().join(format!("tdp_trace_eq_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let args = [
+        "run",
+        "--workload",
+        "kind = \"reduction\"\\nwidth = 64",
+        "--cols",
+        "2",
+        "--rows",
+        "2",
+        "--scheduler",
+        "out_of_order",
+        "--backend",
+        "skip-ahead",
+        "--format",
+        "json",
+    ];
+    let plain = run_ok(&args);
+    let mut traced_args: Vec<&str> = args.to_vec();
+    let path = dir.join("t.json");
+    traced_args.extend(["--trace-out", path.to_str().unwrap()]);
+    let traced = run_ok(&traced_args);
+    assert_eq!(plain, traced, "tracing must not change reported stats");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `tdp analyze` renders per-PE / per-router activity heatmaps and, with
+/// `--json-out`, a machine-readable {stats, activity} document per
+/// scheduler.
+#[test]
+fn analyze_emits_activity_heatmaps_and_json() {
+    let dir = std::env::temp_dir().join(format!("tdp_analyze_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("analysis.json");
+    let text = run_ok(&[
+        "analyze",
+        "--workload",
+        "kind = \"reduction\"\\nwidth = 128",
+        "--cols",
+        "2",
+        "--rows",
+        "2",
+        "--stride",
+        "4",
+        "--json-out",
+        path.to_str().unwrap(),
+    ]);
+    for series in ["pe.firings", "pe.ejects", "router.traffic", "router.deflections"] {
+        assert!(text.contains(series), "missing heatmap {series}");
+    }
+    let j = tdp::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    for kind in ["in_order", "out_of_order"] {
+        let entry = j.get(kind).unwrap_or_else(|| panic!("missing {kind}"));
+        let stats = tdp::SimStats::from_json_value(entry.get("stats").unwrap()).unwrap();
+        assert!(stats.cycles > 0, "{kind}");
+        let act = entry.get("activity").unwrap();
+        assert_eq!(act.get("cols").unwrap().as_u64(), Some(2));
+        let firings = act.get("pe").unwrap().get("firings").unwrap().as_arr().unwrap();
+        assert_eq!(firings.len(), 4, "{kind}: one cell per PE");
+        let fired: u64 = firings.iter().map(|v| v.as_u64().unwrap()).sum();
+        let ops: u64 = stats.pe.iter().map(|p| p.alu_ops).sum();
+        assert_eq!(fired, ops, "{kind}: heatmap agrees with stats");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `tdp perf --trace-out` records compile/run spans but no per-cycle
+/// counters — per-cycle tracing would pin the skip-ahead backend to
+/// cycle-accurate stepping and distort the measurement.
+#[test]
+fn perf_trace_out_is_span_only() {
+    use tdp::util::json::{self, Json};
+    let dir = std::env::temp_dir().join(format!("tdp_perf_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("perf_trace.json");
+    run_ok(&["perf", "--quick", "--reps", "1", "--trace-out", path.to_str().unwrap()]);
+    let j = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+    let ph = |p: &str| {
+        events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some(p))
+            .count()
+    };
+    // 3 quick cases x 4 compile stages, plus run spans for every session
+    assert!(ph("X") >= 12, "expected compile+run spans, got {} X events", ph("X"));
+    assert_eq!(ph("C"), 0, "perf tracing must not record per-cycle counters");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn perf_rejects_unknown_format() {
     let out = tdp().args(["perf", "--quick", "--format", "yaml"]).output().unwrap();

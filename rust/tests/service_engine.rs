@@ -116,4 +116,46 @@ fn concurrent_duplicate_jobs_compile_once_and_match_sequential() {
         assert_eq!(&r.stats, expect.get(&key_of(job)).unwrap());
     }
     assert_eq!(compile_count() - compiles0, distinct_keys, "batch added no compiles");
+
+    // the metrics snapshot must agree exactly with what this scenario
+    // pinned down: 4 threads x 2 copies x 12 jobs + the 12-job batch all
+    // went through this engine, with one compile per distinct cache key
+    let snap = engine.metrics_snapshot();
+    let get = |path: &[&str]| -> u64 {
+        let mut v = &snap;
+        for k in path {
+            v = v.get(k).unwrap_or_else(|| panic!("snapshot missing {path:?}"));
+        }
+        v.as_u64().unwrap_or_else(|| panic!("{path:?} not a u64"))
+    };
+    let submitted = THREADS * 2 * jobs.len() as u64 + jobs.len() as u64;
+    assert_eq!(get(&["version"]), 1);
+    assert_eq!(get(&["jobs", "submitted"]), submitted);
+    assert_eq!(get(&["jobs", "failed"]), 0);
+    assert_eq!(get(&["cache", "misses"]), stats.misses);
+    assert_eq!(get(&["cache", "hits"]), submitted - distinct_keys);
+    assert_eq!(get(&["cache", "evictions"]), 0);
+    assert_eq!(get(&["cache", "entries"]), workloads.len() as u64);
+    assert_eq!(get(&["cache", "graphs"]), workloads.len() as u64);
+    assert_eq!(
+        get(&["latency", "compile_micros", "count"]),
+        distinct_keys,
+        "compile latency observed once per miss, never on hits"
+    );
+    assert_eq!(get(&["latency", "run_micros", "count"]), submitted);
+    let per = snap.get("workloads").unwrap().as_obj().unwrap();
+    assert_eq!(per.len(), workloads.len(), "one latency entry per canonical spec");
+    for w in workloads {
+        let entry = per.get(w).unwrap_or_else(|| panic!("missing workload key {w}"));
+        let jobs_for_key = entry.get("jobs").unwrap().as_u64().unwrap();
+        assert_eq!(jobs_for_key, submitted / workloads.len() as u64, "{w}");
+        let compiles = entry.get("compile_micros").unwrap().get("count").unwrap();
+        assert_eq!(compiles.as_u64(), Some(1), "{w} compiled exactly once");
+    }
+    // and the textual form round-trips through the strict parser
+    let reparsed = tdp::util::json::parse(&engine.metrics_snapshot_json()).unwrap();
+    assert_eq!(
+        reparsed.get("jobs").unwrap().get("submitted").unwrap().as_u64(),
+        Some(submitted)
+    );
 }

@@ -136,6 +136,13 @@ impl OverlayBuilder {
         self
     }
 
+    /// Enable the optimizing transform passes (dead-node elimination +
+    /// constant replication) in the compile pipeline.
+    pub fn opt(mut self, on: bool) -> Self {
+        self.cfg.opt = on;
+        self
+    }
+
     pub fn bram(mut self, bram: BramConfig) -> Self {
         self.cfg.bram = bram;
         self
@@ -195,8 +202,10 @@ impl FromStr for PlacementPolicy {
             "random" => Ok(PlacementPolicy::Random),
             "block_contiguous" | "block" => Ok(PlacementPolicy::BlockContiguous),
             "chunked" => Ok(PlacementPolicy::Chunked),
+            "traffic_aware" | "traffic" => Ok(PlacementPolicy::TrafficAware),
             _ => Err(format!(
-                "unknown placement '{s}' (round_robin | random | block_contiguous | chunked)"
+                "unknown placement '{s}' (round_robin | random | block_contiguous | chunked | \
+                 traffic_aware)"
             )),
         }
     }
@@ -209,6 +218,7 @@ impl PlacementPolicy {
             PlacementPolicy::Random => "random",
             PlacementPolicy::BlockContiguous => "block_contiguous",
             PlacementPolicy::Chunked => "chunked",
+            PlacementPolicy::TrafficAware => "traffic_aware",
         }
     }
 }
@@ -253,6 +263,10 @@ pub struct OverlayConfig {
     /// enforce BRAM capacity at placement time (capacity experiments
     /// disable this to measure where designs *would* stop fitting)
     pub enforce_capacity: bool,
+    /// run the optimizing transform passes (dead-node elimination +
+    /// constant replication) in the compile pipeline. Off by default:
+    /// the unoptimized artifact is the paper-faithful baseline
+    pub opt: bool,
     /// simulation engine ([`crate::engine`]): the cycle-by-cycle
     /// reference or the bit-exact skip-ahead event backend
     pub backend: BackendKind,
@@ -271,6 +285,7 @@ impl Default for OverlayConfig {
             seed: 0,
             max_cycles: 200_000_000,
             enforce_capacity: false,
+            opt: false,
             backend: BackendKind::Lockstep,
         }
     }
@@ -347,7 +362,7 @@ impl OverlayConfig {
     /// Recognized keys of the root table and the `[bram]` section —
     /// anything else is rejected by the strict loaders, so a typo'd knob
     /// fails loudly instead of silently keeping its default.
-    const ROOT_KEYS: [&'static str; 10] = [
+    const ROOT_KEYS: [&'static str; 11] = [
         "cols",
         "rows",
         "scheduler",
@@ -357,6 +372,7 @@ impl OverlayConfig {
         "seed",
         "max_cycles",
         "enforce_capacity",
+        "opt",
         "backend",
     ];
     const BRAM_KEYS: [&'static str; 6] = [
@@ -433,6 +449,9 @@ impl OverlayConfig {
         if let Some(v) = doc.get("", "enforce_capacity") {
             cfg.enforce_capacity = v.as_bool().ok_or("enforce_capacity: expected bool")?;
         }
+        if let Some(v) = doc.get("", "opt") {
+            cfg.opt = v.as_bool().ok_or("opt: expected bool")?;
+        }
         if let Some(v) = doc.get("", "backend") {
             cfg.backend = v.as_str().ok_or("backend: expected string")?.parse()?;
         }
@@ -476,6 +495,7 @@ impl OverlayConfig {
         doc.set("", "seed", Self::toml_u64(self.seed));
         doc.set("", "max_cycles", Self::toml_u64(self.max_cycles));
         doc.set("", "enforce_capacity", Value::Bool(self.enforce_capacity));
+        doc.set("", "opt", Value::Bool(self.opt));
         doc.set("", "backend", Value::Str(self.backend.toml_name().into()));
         doc.set("bram", "brams_per_pe", Value::Int(self.bram.brams_per_pe as i64));
         doc.set("bram", "words_per_bram", Value::Int(self.bram.words_per_bram as i64));
@@ -524,6 +544,7 @@ impl OverlayConfig {
         root.insert("seed".to_string(), Self::json_u64(self.seed));
         root.insert("max_cycles".to_string(), Self::json_u64(self.max_cycles));
         root.insert("enforce_capacity".to_string(), Json::Bool(self.enforce_capacity));
+        root.insert("opt".to_string(), Json::Bool(self.opt));
         root.insert("backend".to_string(), Json::Str(self.backend.toml_name().into()));
         root.insert("bram".to_string(), Json::Obj(bram));
         Json::Obj(root)
@@ -586,6 +607,12 @@ impl OverlayConfig {
                     cfg.enforce_capacity = match v {
                         Json::Bool(b) => *b,
                         _ => return Err("enforce_capacity: expected bool".into()),
+                    }
+                }
+                "opt" => {
+                    cfg.opt = match v {
+                        Json::Bool(b) => *b,
+                        _ => return Err("opt: expected bool".into()),
                     }
                 }
                 "backend" => cfg.backend = strv(key, v)?.parse()?,
@@ -809,6 +836,31 @@ mod tests {
             assert_eq!(s.parse::<BackendKind>().unwrap(), k);
         }
         assert!("bogus".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn placement_aliases_parse() {
+        for (s, k) in [
+            ("rr", PlacementPolicy::RoundRobin),
+            ("block", PlacementPolicy::BlockContiguous),
+            ("traffic_aware", PlacementPolicy::TrafficAware),
+            ("traffic", PlacementPolicy::TrafficAware),
+        ] {
+            assert_eq!(s.parse::<PlacementPolicy>().unwrap(), k);
+        }
+        let e = "bogus".parse::<PlacementPolicy>().unwrap_err();
+        assert!(e.contains("traffic_aware"), "error lists every policy: {e}");
+    }
+
+    #[test]
+    fn opt_knob_roundtrips_and_defaults_off() {
+        assert!(!OverlayConfig::default().opt);
+        let c = OverlayConfig::from_toml("opt = true\n").unwrap();
+        assert!(c.opt);
+        assert_eq!(OverlayConfig::from_toml(&c.to_toml()).unwrap(), c);
+        let j = OverlayConfig::from_json("{\"opt\": true}").unwrap();
+        assert!(j.opt);
+        assert!(OverlayConfig::from_json("{\"opt\": 1}").is_err());
     }
 
     #[test]

@@ -96,6 +96,21 @@ impl DataflowGraph {
         }
     }
 
+    /// Construct directly from raw nodes, checking **nothing**: no
+    /// topological-order, arity, or fanout-consistency invariants are
+    /// enforced (the checked builder path is [`DataflowGraph::add_input`]
+    /// / [`DataflowGraph::add_op`]). This exists for two callers that
+    /// need to represent graphs the builder cannot: the `tdp check`
+    /// loader, which must *load* malformed inputs so the verifier pass
+    /// ([`crate::passes::verify`]) can diagnose them, and the transform
+    /// passes, which rebuild already-verified node vectors wholesale
+    /// with remapped ids. A raw graph must pass
+    /// [`crate::passes::verify::graph_diagnostics`] clean before it is
+    /// simulated.
+    pub fn from_raw_nodes(nodes: Vec<Node>) -> Self {
+        Self { nodes }
+    }
+
     /// Add a graph input carrying `value`; returns its id.
     pub fn add_input(&mut self, value: f32) -> NodeId {
         self.nodes.push(Node {

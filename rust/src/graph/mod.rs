@@ -12,4 +12,4 @@ mod ser;
 
 pub use dataflow::{DataflowGraph, GraphError, GraphStats, Node, NodeId, NodeKind};
 pub use op::Op;
-pub use ser::{graph_from_json, graph_to_json};
+pub use ser::{graph_from_json, graph_from_json_raw, graph_to_json};

@@ -11,7 +11,7 @@
 //! Used by `tdp gen --out g.json` / `tdp run --graph g.json` so workloads
 //! can be generated once and replayed across experiments.
 
-use super::{DataflowGraph, NodeKind, Op};
+use super::{DataflowGraph, Node, NodeKind, Op};
 use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
 
@@ -90,6 +90,77 @@ pub fn graph_from_json(s: &str) -> Result<DataflowGraph, String> {
     Ok(g)
 }
 
+/// Parse a graph from JSON *without* structural validation — same
+/// format and parse-level checks (op names, arity, value types) as
+/// [`graph_from_json`], but forward references, cycles and dangling
+/// node ids are loaded as-is instead of rejected. This is the `tdp
+/// check` loader: a malformed graph must be *representable* so the
+/// verifier pass ([`crate::passes::verify::graph_diagnostics`]) can
+/// report every defect with a structured diagnostic, rather than dying
+/// on the first one at parse time. Fanout lists are rebuilt for every
+/// in-range source id (including forward ones, so cycle edges are
+/// visible to the verifier); out-of-range sources simply get no fanout
+/// entry and surface as `dangling-operand`.
+pub fn graph_from_json_raw(s: &str) -> Result<DataflowGraph, String> {
+    let doc = json::parse(s).map_err(|e| e.to_string())?;
+    let node_docs = doc
+        .get("nodes")
+        .and_then(|n| n.as_arr())
+        .ok_or("missing 'nodes' array")?;
+    let n = node_docs.len();
+    let mut nodes: Vec<Node> = Vec::with_capacity(n);
+    for (i, nd) in node_docs.iter().enumerate() {
+        let obj = nd.as_obj().ok_or_else(|| format!("node {i}: not an object"))?;
+        if let Some(v) = obj.get("in") {
+            let value = v.as_f64().ok_or_else(|| format!("node {i}: bad input value"))? as f32;
+            nodes.push(Node {
+                kind: NodeKind::Input { value },
+                fanout: Vec::new(),
+            });
+        } else {
+            let name = obj
+                .get("op")
+                .and_then(|o| o.as_str())
+                .ok_or_else(|| format!("node {i}: missing op"))?;
+            let op = op_by_name(name).ok_or_else(|| format!("node {i}: unknown op {name}"))?;
+            let src_json = obj
+                .get("src")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| format!("node {i}: missing src"))?;
+            let srcs: Vec<u32> = src_json
+                .iter()
+                .map(|s| s.as_f64().map(|f| f as u32))
+                .collect::<Option<Vec<u32>>>()
+                .ok_or_else(|| format!("node {i}: bad src ids"))?;
+            if srcs.len() != op.arity() {
+                return Err(format!(
+                    "node {i}: {} expects {} operands, got {}",
+                    op.name(),
+                    op.arity(),
+                    srcs.len()
+                ));
+            }
+            let src = [srcs[0], *srcs.get(1).unwrap_or(&srcs[0])];
+            nodes.push(Node {
+                kind: NodeKind::Operation { op, src },
+                fanout: Vec::new(),
+            });
+        }
+    }
+    // rebuild fanout for every representable edge (second pass, so
+    // forward/cyclic sources get their edge too)
+    for i in 0..n {
+        if let NodeKind::Operation { op, src } = nodes[i].kind {
+            for (slot, &s) in src[..op.arity()].iter().enumerate() {
+                if (s as usize) < n {
+                    nodes[s as usize].fanout.push((i as u32, slot as u8));
+                }
+            }
+        }
+    }
+    Ok(DataflowGraph::from_raw_nodes(nodes))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,6 +187,34 @@ mod tests {
         g.add_input(f32::MIN_POSITIVE);
         let g2 = graph_from_json(&graph_to_json(&g)).unwrap();
         assert_eq!(g2.evaluate(), g.evaluate());
+    }
+
+    #[test]
+    fn raw_loader_represents_malformed_graphs() {
+        // forward reference (cycle): rejected by the checked loader,
+        // loaded as-is by the raw one — with the cycle edge visible
+        let bad = r#"{"nodes":[{"in":1.0},{"op":"ADD","src":[2,0]},{"op":"MUL","src":[1,0]}]}"#;
+        assert!(graph_from_json(bad).is_err());
+        let g = graph_from_json_raw(bad).unwrap();
+        assert_eq!(g.len(), 3);
+        assert!(g.node(2).fanout.contains(&(1, 0)), "cycle edge represented");
+        // out-of-range source: loaded, no fanout entry
+        let dangling = r#"{"nodes":[{"in":1.0},{"op":"NEG","src":[9]}]}"#;
+        let g = graph_from_json_raw(dangling).unwrap();
+        assert_eq!(g.len(), 2);
+        assert!(g.node(0).fanout.is_empty());
+        // parse-level defects are still rejected
+        assert!(graph_from_json_raw("{not json").is_err());
+        assert!(graph_from_json_raw(r#"{"nodes":[{"op":"XOR","src":[0,0]}]}"#).is_err());
+        // on a well-formed document the two loaders agree
+        let mut good = DataflowGraph::new();
+        let a = good.add_input(2.0);
+        good.op(Op::Neg, &[a]);
+        let json = graph_to_json(&good);
+        assert_eq!(
+            graph_from_json_raw(&json).unwrap().fingerprint(),
+            graph_from_json(&json).unwrap().fingerprint()
+        );
     }
 
     #[test]

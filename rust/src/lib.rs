@@ -49,6 +49,7 @@ pub mod error;
 pub mod graph;
 pub mod lod;
 pub mod noc;
+pub mod passes;
 pub mod pe;
 pub mod place;
 pub mod program;
@@ -65,6 +66,7 @@ pub use config::{ConfigError, Overlay, OverlayBuilder, OverlayConfig};
 pub use engine::{BackendKind, SimBackend};
 pub use error::Error;
 pub use graph::{DataflowGraph, NodeId, Op};
+pub use passes::{Diagnostic, PassManager, Severity};
 pub use program::{
     run_batch, CompileError, Program, RunVariant, RuntimeTables, Session, SharedProgram,
 };

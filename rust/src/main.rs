@@ -36,11 +36,20 @@ COMMANDS
   run         simulate one workload          --workload <toml> | --graph <json>
               [--cols 16 --rows 16 --scheduler both|in_order|out_of_order
               --backend lockstep|skip-ahead --max-cycles N --seed 0
-              --format text|json --trace-out trace.json --trace-stride 1]
+              --format text|json --trace-out trace.json --trace-stride 1
+              --dump-passes]
               --trace-out writes a Chrome/Perfetto trace-event file:
               compile-stage spans, per-scheduler run spans, and per-cycle
               fabric counters (ready/busy/in-flight/completed) sampled
-              every --trace-stride cycles
+              every --trace-stride cycles; --dump-passes prints the
+              per-pass compile timing/detail table on stderr
+  check       lint a workload graph          <spec> | --workload <toml> | --graph <json>
+              [--cols 16 --rows 16 --seed 0 --format text|json]
+              runs the compile-time verifier (structure lints) plus the
+              capacity lints against the chosen overlay geometry, without
+              executing anything; --graph uses the *raw* JSON loader so
+              broken graphs load far enough to be diagnosed; exit code 1
+              iff any error-severity diagnostic fires
   batch       serve a job stream             <jobs.jsonl> [--workers N (0 = all cores)
               --cache 64 --metrics-out file]
               one JSON job per line in ({\"workload\": \"chain:4096:seed=7\", ...}),
@@ -63,7 +72,7 @@ COMMANDS
   noc-stress  synthetic NoC traffic          [--cols 16 --rows 16 --packets 100000
               --inject-rate 0.5 --seed 0]
   perf        host-throughput harness        [--quick --reps 5 --budget-ms 0
-              --format json|text --out file --trace-out file]
+              --format json|text --out file --trace-out file --dump-passes]
               runs the pinned workload set (compile once, time repeated runs)
               and emits sim cycles/sec + wall ms per run; the JSON is the
               BENCH_*.json perf-trajectory format (perf/README.md).
@@ -71,7 +80,10 @@ COMMANDS
               exceeds N — CI uses a generous budget as a >2x-regression trap.
               --trace-out writes compile/run spans as a Perfetto trace
               (span-only: per-cycle sampling stays off so skip-ahead
-              jumps — the thing being measured — are preserved)
+              jumps — the thing being measured — are preserved); the
+              output also carries a placement_quality section (baseline
+              vs traffic-aware placement: cycles + weighted-hop cost),
+              kept out of cases/total_wall_ms so trajectories compare
   analyze     trace a run (queue occupancy / busyness / completion,
               per-PE / per-router activity heatmaps)
               --workload <toml> | --graph <json> [--cols 16 --rows 16
@@ -135,6 +147,7 @@ fn cmd_run(mut a: Args) -> Result<()> {
     let format = a.str_or("format", "text")?;
     let trace_out = a.str_opt("trace-out")?;
     let trace_stride = a.u64_or("trace-stride", 1)?.max(1);
+    let dump_passes = a.switch("dump-passes");
     let json_out = match format.as_str() {
         "text" => false,
         "json" => true,
@@ -167,6 +180,9 @@ fn cmd_run(mut a: Args) -> Result<()> {
         Some(reg) => Program::compile_with(&g, &overlay, Some(reg))?,
         None => Program::compile(&g, &overlay)?,
     };
+    if dump_passes {
+        print_pass_table(&program);
+    }
     let mut counter_series: Vec<telemetry::CounterSeries> = Vec::new();
     let mut run_kind = |kind: SchedulerKind| -> Result<SimStats> {
         let session = program.session().with_scheduler(kind);
@@ -222,6 +238,129 @@ fn cmd_run(mut a: Args) -> Result<()> {
     if let (Some(reg), Some(path)) = (&registry, &trace_out) {
         std::fs::write(path, telemetry::perfetto_json(reg, &counter_series))?;
         eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `--dump-passes` — the per-pass compile table, on stderr so it
+/// composes with `--format json` on stdout.
+fn print_pass_table(program: &Program) {
+    eprintln!("compile passes:");
+    for s in program.pass_stats() {
+        eprintln!("  {:<18} {:>8} us  {}", s.name, s.micros, s.detail);
+    }
+}
+
+/// `tdp check` — the compile front-end lints without executing
+/// anything: graph verification (structure), then — only when the graph
+/// is structurally sound — the capacity lints against the requested
+/// overlay geometry. Exit code 1 iff any error-severity diagnostic
+/// fires, so CI can gate a workload corpus on a clean report.
+fn cmd_check(mut argv: Vec<String>) -> Result<()> {
+    use tdp::passes::verify;
+    use tdp::place::Placement;
+    use tdp::Severity;
+    let positional = if argv.first().is_some_and(|s| !s.starts_with("--")) {
+        Some(argv.remove(0))
+    } else {
+        None
+    };
+    let mut a = Args::parse(argv).map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+    let workload = a.str_opt("workload")?;
+    let graph = a.str_opt("graph")?;
+    let cols = a.usize_or("cols", 16)?;
+    let rows = a.usize_or("rows", 16)?;
+    let seed = a.u64_or("seed", 0)?;
+    let format = a.str_or("format", "text")?;
+    let json_out = match format.as_str() {
+        "text" => false,
+        "json" => true,
+        other => bail!("unknown format '{other}' (text | json)"),
+    };
+    a.finish()?;
+    // Unlike every other subcommand, `--graph` goes through the *raw*
+    // JSON loader: the whole point of check is to report on broken
+    // graphs, which the strict loader would reject before we could.
+    let (label, g) = match (positional, workload, graph) {
+        (Some(spec), None, None) => {
+            let s: workload::Spec = spec.parse().map_err(|e: String| anyhow!(e))?;
+            let g = s.build().map_err(|e| anyhow!("workload build: {e}"))?;
+            (s.canonical(), g)
+        }
+        (None, Some(spec), None) => {
+            let parsed =
+                WorkloadSpec::from_toml(&spec.replace("\\n", "\n")).map_err(|e| anyhow!(e))?;
+            let g = parsed.build(seed).map_err(|e| anyhow!("workload build: {e}"))?;
+            (spec, g)
+        }
+        (None, None, Some(path)) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow!("cannot read graph '{path}': {e}"))?;
+            let g = tdp::graph::graph_from_json_raw(&text).map_err(|e| anyhow!("graph load: {e}"))?;
+            (path, g)
+        }
+        _ => bail!("provide exactly one of <spec> / --workload / --graph"),
+    };
+    let mut diags = verify::graph_diagnostics(&g);
+    let structurally_sound = diags.iter().all(|d| d.severity != Severity::Error);
+    if structurally_sound {
+        // capacity lints need a placement; build one under the default
+        // policy on the requested geometry (criticality only steers the
+        // traffic-aware policy, which check does not exercise)
+        let cfg = OverlayConfig::default().with_dims(cols, rows);
+        Overlay::from_config(cfg)?;
+        let place = Placement::build_for_torus(
+            &g,
+            cols,
+            rows,
+            cfg.placement,
+            cfg.local_order,
+            cfg.seed,
+            None,
+        );
+        diags.extend(verify::capacity_diagnostics(&g, &place, &cfg));
+    }
+    let errors = diags.iter().filter(|d| d.severity == Severity::Error).count();
+    let warnings = diags.len() - errors;
+    let s = g.stats();
+    if json_out {
+        let list: Vec<Json> = diags
+            .iter()
+            .map(|d| {
+                let mut dm = std::collections::BTreeMap::new();
+                dm.insert("severity".to_string(), Json::Str(d.severity.name().to_string()));
+                dm.insert("code".to_string(), Json::Str(d.code.to_string()));
+                dm.insert(
+                    "node".to_string(),
+                    match d.node {
+                        Some(n) => Json::Num(f64::from(n)),
+                        None => Json::Null,
+                    },
+                );
+                dm.insert("message".to_string(), Json::Str(d.message.clone()));
+                Json::Obj(dm)
+            })
+            .collect();
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("workload".to_string(), Json::Str(label));
+        m.insert("nodes".to_string(), Json::Num(s.nodes as f64));
+        m.insert("edges".to_string(), Json::Num(s.edges as f64));
+        m.insert("errors".to_string(), Json::Num(errors as f64));
+        m.insert("warnings".to_string(), Json::Num(warnings as f64));
+        m.insert("diagnostics".to_string(), Json::Arr(list));
+        println!("{}", json::write(&Json::Obj(m)));
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
+        println!(
+            "check: {label}: {} nodes, {} edges — {errors} error(s), {warnings} warning(s)",
+            s.nodes, s.edges
+        );
+    }
+    if errors > 0 {
+        // stdout is line-buffered; every line above ended in '\n'
+        std::process::exit(1);
     }
     Ok(())
 }
@@ -639,6 +778,7 @@ fn cmd_perf(mut a: Args) -> Result<()> {
     let format = a.str_or("format", "json")?;
     let out = a.str_opt("out")?;
     let trace_out = a.str_opt("trace-out")?;
+    let dump_passes = a.switch("dump-passes");
     a.finish()?;
     if format != "json" && format != "text" {
         bail!("unknown format '{format}' (json | text)");
@@ -664,6 +804,10 @@ fn cmd_perf(mut a: Args) -> Result<()> {
             None => Program::compile(&g, &overlay)?,
         };
         let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        if dump_passes {
+            eprintln!("[{}]", case.name);
+            print_pass_table(&program);
+        }
         let session = match &registry {
             Some(reg) => program.session().with_telemetry(reg),
             None => program.session(),
@@ -715,12 +859,77 @@ fn cmd_perf(mut a: Args) -> Result<()> {
         m.insert("sim_cycles_per_sec".to_string(), Json::Num(rate));
         cases_json.push(Json::Obj(m));
     }
+    // Placement-quality section: the same workloads compiled under the
+    // default policy and under traffic-aware placement, OoO cycles side
+    // by side plus the criticality-weighted hop cost each placement
+    // achieves. Deliberately OUTSIDE `cases` and `total_wall_ms`: the
+    // BENCH trajectory and the CI budget compare those across commits,
+    // and this section measures placement quality, not host throughput.
+    let pq_set: &[(&str, &str, usize, usize)] = if quick {
+        &[("lu_pl_fig1_16x16", "lu_pl:120:3:seed=42", 16, 16)]
+    } else {
+        &[
+            ("lu_pl_fig1_16x16", "lu_pl:330:3:seed=42", 16, 16),
+            ("lu_banded_8x8", "lu_banded:200:8:0.9:seed=3", 8, 8),
+        ]
+    };
+    let mut pq_json = Vec::new();
+    for &(name, spec_str, cols, rows) in pq_set {
+        use tdp::place::{placement_cost, PlacementPolicy};
+        let spec: workload::Spec = spec_str.parse().map_err(|e: String| anyhow!(e))?;
+        let g = spec.build().map_err(|e| anyhow!("workload build: {e}"))?;
+        let measure = |policy: PlacementPolicy| -> Result<(u64, u64)> {
+            let mut cfg = OverlayConfig::default()
+                .with_dims(cols, rows)
+                .with_scheduler(SchedulerKind::OutOfOrder);
+            cfg.placement = policy;
+            let overlay = Overlay::from_config(cfg)?;
+            let program = Program::compile(&g, &overlay)?;
+            let cost = placement_cost(
+                program.exec_graph(),
+                program.criticality(),
+                &program.placement().pe_of,
+                cols,
+                rows,
+            );
+            Ok((program.session().run()?.cycles, cost))
+        };
+        let (base_cycles, base_cost) = measure(OverlayConfig::default().placement)?;
+        let (ta_cycles, ta_cost) = measure(PlacementPolicy::TrafficAware)?;
+        if format == "text" {
+            println!(
+                "placement {:<20} baseline {:>9} cyc (cost {:>9})  traffic-aware {:>9} cyc \
+                 (cost {:>9})  cycle ratio {:.3}",
+                name,
+                base_cycles,
+                base_cost,
+                ta_cycles,
+                ta_cost,
+                base_cycles as f64 / ta_cycles as f64
+            );
+        }
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(name.to_string()));
+        m.insert("workload".to_string(), Json::Str(spec.canonical()));
+        m.insert("cols".to_string(), Json::Num(cols as f64));
+        m.insert("rows".to_string(), Json::Num(rows as f64));
+        m.insert("baseline_cycles".to_string(), Json::Num(base_cycles as f64));
+        m.insert("baseline_cost".to_string(), Json::Num(base_cost as f64));
+        m.insert("traffic_aware_cycles".to_string(), Json::Num(ta_cycles as f64));
+        m.insert("traffic_aware_cost".to_string(), Json::Num(ta_cost as f64));
+        m.insert(
+            "cycle_ratio".to_string(),
+            Json::Num(base_cycles as f64 / ta_cycles as f64),
+        );
+        pq_json.push(Json::Obj(m));
+    }
     let mut root = std::collections::BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("tdp perf".to_string()));
     root.insert("version".to_string(), Json::Num(1.0));
     root.insert("quick".to_string(), Json::Bool(quick));
     root.insert("reps".to_string(), Json::Num(reps as f64));
     root.insert("cases".to_string(), Json::Arr(cases_json));
+    root.insert("placement_quality".to_string(), Json::Arr(pq_json));
     root.insert("total_wall_ms".to_string(), Json::Num(total_wall_ms));
     let text = json::write(&Json::Obj(root));
     if format == "json" {
@@ -832,6 +1041,10 @@ fn main() -> Result<()> {
     // flags-only
     if cmd == "batch" {
         return cmd_batch(rest);
+    }
+    // check takes a positional workload spec, like batch's file path
+    if cmd == "check" {
+        return cmd_check(rest);
     }
     let args = Args::parse(rest).map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
     match cmd.as_str() {

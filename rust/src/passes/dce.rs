@@ -1,0 +1,121 @@
+//! Dead-node elimination (transform pass).
+//!
+//! In this IR dead code has exactly one shape: an *input with no
+//! consumers*. Operation nodes with empty fanout are the graph's
+//! outputs (their results are what the run produces), and an operation
+//! can never be unreferenced-yet-present in a builder-constructed
+//! graph without being an output. Dead inputs, however, occur
+//! naturally — sparse-matrix rows whose entries all got folded,
+//! generator over-allocation — and each one wastes two BRAM graph
+//! words plus a seed packet at init time on every PE it lands on.
+//!
+//! Runs only on verify-clean graphs (the standard pipeline orders it
+//! after the `verify` pass), so operand ids are known in-range.
+//! Returns `None` when nothing is dead — the pipeline then keeps the
+//! borrowed original graph and records no id remap.
+
+use super::NodeMap;
+use crate::graph::{DataflowGraph, NodeKind};
+
+/// Remove dead inputs from `g`. Returns the rewritten graph and the
+/// old→new [`NodeMap`] step, or `None` if nothing was removed.
+pub fn run(g: &DataflowGraph) -> Option<(DataflowGraph, NodeMap)> {
+    let n = g.len();
+    let dead: Vec<bool> = (0..n as u32)
+        .map(|i| {
+            matches!(g.node(i).kind, NodeKind::Input { .. }) && g.node(i).fanout.is_empty()
+        })
+        .collect();
+    if !dead.contains(&true) {
+        return None;
+    }
+    let mut compiled_of = vec![NodeMap::DEAD; n];
+    let mut orig_of = Vec::new();
+    let mut nodes = Vec::with_capacity(n);
+    for i in 0..n {
+        if dead[i] {
+            continue;
+        }
+        compiled_of[i] = nodes.len() as u32;
+        orig_of.push(i as u32);
+        nodes.push(g.node(i as u32).clone());
+    }
+    // remap operand and fanout ids; dead nodes are unreferenced by
+    // definition, so no remap target is ever DEAD
+    for node in &mut nodes {
+        if let NodeKind::Operation { src, .. } = &mut node.kind {
+            src[0] = compiled_of[src[0] as usize];
+            src[1] = compiled_of[src[1] as usize];
+        }
+        for (dst, _) in &mut node.fanout {
+            *dst = compiled_of[*dst as usize];
+        }
+    }
+    Some((
+        DataflowGraph::from_raw_nodes(nodes),
+        NodeMap { orig_len: n, compiled_of, orig_of },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Op;
+    use crate::passes::verify::graph_diagnostics;
+
+    #[test]
+    fn removes_exactly_the_dead_inputs() {
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(1.0);
+        let _dead1 = g.add_input(9.0);
+        let b = g.add_input(2.0);
+        let s = g.op(Op::Add, &[a, b]);
+        let _dead2 = g.add_input(-3.0);
+        g.op(Op::Neg, &[s]);
+        let before = g.evaluate();
+
+        let (g2, map) = run(&g).expect("two dead inputs");
+        assert_eq!(g2.len(), 4);
+        assert!(graph_diagnostics(&g2).is_empty(), "{:?}", graph_diagnostics(&g2));
+        assert_eq!(map.compiled_of, vec![0, NodeMap::DEAD, 1, 2, NodeMap::DEAD, 3]);
+        assert_eq!(map.orig_of, vec![0, 2, 3, 5]);
+        // live nodes compute the same values, addressed through the map
+        let after = g2.evaluate();
+        for orig in 0..g.len() {
+            if map.is_live(orig as u32) {
+                let c = map.compiled_of[orig] as usize;
+                assert_eq!(after[c], before[orig], "node {orig}");
+            }
+        }
+    }
+
+    #[test]
+    fn clean_graph_is_untouched() {
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(1.0);
+        g.op(Op::Neg, &[a]);
+        assert!(run(&g).is_none());
+    }
+
+    #[test]
+    fn fanout_order_survives_the_remap() {
+        // route tables are derived from fanout order; the rewrite must
+        // keep each surviving node's fanout list in its original order
+        let mut g = DataflowGraph::new();
+        let _dead = g.add_input(0.0);
+        let x = g.add_input(5.0);
+        let p = g.op(Op::Neg, &[x]);
+        let q = g.op(Op::Add, &[x, p]);
+        g.op(Op::Mul, &[x, q]);
+        let (g2, map) = run(&g).unwrap();
+        let fan: Vec<(u32, u8)> = g2.node(map.compiled_of[x as usize]).fanout.clone();
+        assert_eq!(
+            fan,
+            vec![
+                (map.compiled_of[p as usize], 0),
+                (map.compiled_of[q as usize], 0),
+                (map.compiled_of[4], 0)
+            ]
+        );
+    }
+}

@@ -1,0 +1,590 @@
+//! The compile pass pipeline (DESIGN.md §12).
+//!
+//! `Program::compile` used to be a fixed four-stage function; it is now
+//! a [`PassManager`] running an ordered list of named passes over a
+//! mutable [`PassCtx`] — the berkeley-emulation-engine compiler layout
+//! (one small file per pass over a shared graph). Passes come in two
+//! kinds:
+//!
+//! * **analysis passes** read the context and attach annotations
+//!   ([`verify`] emits [`Diagnostic`]s, `criticality` attaches labels,
+//!   `place` builds the [`crate::place::Placement`]);
+//! * **transform passes** rewrite the graph ([`dce`],
+//!   [`replicate_consts`]) and record a [`NodeMap`] so every id-indexed
+//!   consumer downstream — `values()`, stats, traces — keeps *original*
+//!   graph order.
+//!
+//! Contract highlights (full text in DESIGN.md §12):
+//!
+//! * the pipeline owns annotation flow: a pass reads what earlier
+//!   passes wrote and never recomputes it (the compile-once counters in
+//!   `tests/compile_once.rs` hold the standard pipeline to exactly one
+//!   criticality labeling and one placement build per compile);
+//! * every pass runs inside a timed telemetry span on the `"compile"`
+//!   track plus a wall-clock [`PassStat`] surfaced by
+//!   `tdp run/perf --dump-passes`;
+//! * transforms compose their id remaps ([`NodeMap::then`]); the final
+//!   map is threaded into the baked runtime tables
+//!   ([`crate::program::RuntimeTables`]) so the executable image speaks
+//!   compiled ids while its external surface speaks original ids.
+
+pub mod dce;
+pub mod replicate_consts;
+pub mod verify;
+
+use crate::config::OverlayConfig;
+use crate::criticality;
+use crate::graph::{DataflowGraph, NodeId};
+use crate::noc::MAX_LOCAL_NODES;
+use crate::pe::BramConfig;
+use crate::place::{placement_cost, Placement, PlacementPolicy};
+use crate::program::{CompileError, PeImage, RuntimeTables};
+use crate::telemetry::{self, Telemetry};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// How bad a [`Diagnostic`] is. `Error` fails compilation (and gives
+/// `tdp check` its non-zero exit); `Warning` is advisory and travels
+/// with the artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One structured finding about a graph — the unit `tdp check` prints
+/// (text or JSON) and [`CompileError::InvalidGraph`] carries. `code` is
+/// a stable machine-readable slug (`"cycle"`, `"dangling-edge"`,
+/// `"capacity"`, ...); `node` is the original-graph node it anchors to,
+/// when there is one.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    pub code: &'static str,
+    pub node: Option<NodeId>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, node: Option<NodeId>, message: String) -> Self {
+        Self { severity: Severity::Error, code, node, message }
+    }
+
+    pub fn warning(code: &'static str, node: Option<NodeId>, message: String) -> Self {
+        Self { severity: Severity::Warning, code, node, message }
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}[{}]", self.severity.name(), self.code)?;
+        if let Some(n) = self.node {
+            write!(f, " node {n}")?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// Wall-clock timing and a one-line result summary of one executed
+/// pass, kept on the compiled artifact for `--dump-passes`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PassStat {
+    pub name: &'static str,
+    pub micros: u64,
+    /// pass-specific one-liner ("removed 3 dead inputs", "cost 812→540")
+    pub detail: String,
+}
+
+/// A bijection-with-casualties between *original* graph node ids and
+/// *compiled* (post-transform) ids. Dead original nodes map to
+/// [`NodeMap::DEAD`]; replicated originals map to their first replica,
+/// and every replica maps back to its original — so `orig_of` is total
+/// over compiled ids while `compiled_of` is total over original ids.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeMap {
+    /// node count of the original graph (the `values()` domain)
+    pub orig_len: usize,
+    /// original id → compiled id ([`NodeMap::DEAD`] when eliminated)
+    pub compiled_of: Vec<u32>,
+    /// compiled id → original id (replicas map to their original)
+    pub orig_of: Vec<u32>,
+}
+
+impl NodeMap {
+    /// Sentinel for an eliminated original node.
+    pub const DEAD: u32 = u32::MAX;
+
+    /// Compose: `self` (applied first) followed by `next`.
+    pub fn then(&self, next: &NodeMap) -> NodeMap {
+        debug_assert_eq!(self.orig_of.len(), next.orig_len);
+        NodeMap {
+            orig_len: self.orig_len,
+            compiled_of: self
+                .compiled_of
+                .iter()
+                .map(|&mid| {
+                    if mid == Self::DEAD {
+                        Self::DEAD
+                    } else {
+                        next.compiled_of[mid as usize]
+                    }
+                })
+                .collect(),
+            orig_of: next
+                .orig_of
+                .iter()
+                .map(|&mid| self.orig_of[mid as usize])
+                .collect(),
+        }
+    }
+
+    /// Is original node `orig` still present in the compiled graph?
+    pub fn is_live(&self, orig: NodeId) -> bool {
+        self.compiled_of[orig as usize] != Self::DEAD
+    }
+}
+
+/// The shared mutable state a pipeline threads through its passes: the
+/// graph view (original, then transformed), node annotations, collected
+/// warning diagnostics, and per-pass stats. Fields are public so custom
+/// pipelines (and the `tdp check` driver) can pre-seed or harvest them;
+/// the graph itself goes through [`PassCtx::graph`] /
+/// [`PassCtx::commit_graph`] so the id remap can never silently detach
+/// from the graph it describes.
+pub struct PassCtx<'g> {
+    /// the overlay knobs compilation targets
+    pub cfg: OverlayConfig,
+    orig: &'g DataflowGraph,
+    owned: Option<Arc<DataflowGraph>>,
+    map: Option<NodeMap>,
+    /// criticality labels over the *current* graph (set by `criticality`)
+    pub crit: Option<Vec<u32>>,
+    /// node→PE placement (set by `place`)
+    pub place: Option<Placement>,
+    /// per-PE BRAM image summaries (set by `bram_images`)
+    pub pe_images: Option<Vec<PeImage>>,
+    /// the baked hot-path image (set by `bake_tables`)
+    pub tables: Option<Arc<RuntimeTables>>,
+    /// warning-severity findings accumulated across passes
+    pub diags: Vec<Diagnostic>,
+    /// one entry per executed pass, in pipeline order
+    pub stats: Vec<PassStat>,
+}
+
+impl<'g> PassCtx<'g> {
+    pub fn new(orig: &'g DataflowGraph, cfg: OverlayConfig) -> Self {
+        Self {
+            cfg,
+            orig,
+            owned: None,
+            map: None,
+            crit: None,
+            place: None,
+            pe_images: None,
+            tables: None,
+            diags: Vec::new(),
+            stats: Vec::new(),
+        }
+    }
+
+    /// The current graph: the latest committed transform result, or the
+    /// original when no transform has run.
+    pub fn graph(&self) -> &DataflowGraph {
+        self.owned.as_deref().unwrap_or(self.orig)
+    }
+
+    /// The original (pre-transform) graph.
+    pub fn original(&self) -> &'g DataflowGraph {
+        self.orig
+    }
+
+    /// Replace the current graph with a transform result, composing
+    /// `step` (current → new ids) onto the accumulated original→compiled
+    /// map. Annotations over the old graph (criticality, placement) are
+    /// *not* remapped — the standard pipeline orders transforms before
+    /// analyses, and a custom pipeline that violates that must re-run
+    /// its analyses itself.
+    pub fn commit_graph(&mut self, g: DataflowGraph, step: NodeMap) {
+        debug_assert_eq!(step.orig_len, self.graph().len(), "step maps the current graph");
+        debug_assert_eq!(step.orig_of.len(), g.len(), "step covers the new graph");
+        self.map = Some(match &self.map {
+            Some(prev) => prev.then(&step),
+            None => step,
+        });
+        self.owned = Some(Arc::new(g));
+    }
+
+    /// The accumulated original→compiled id map (`None` when no
+    /// transform changed the graph).
+    pub fn node_map(&self) -> Option<&NodeMap> {
+        self.map.as_ref()
+    }
+
+    /// Tear the context into the artifact parts the program layer
+    /// stores: (exec graph if rewritten, id map, placement, criticality,
+    /// pe images, tables, warnings, pass stats).
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn into_parts(
+        self,
+    ) -> (
+        Option<Arc<DataflowGraph>>,
+        Option<NodeMap>,
+        Option<Placement>,
+        Option<Vec<u32>>,
+        Option<Vec<PeImage>>,
+        Option<Arc<RuntimeTables>>,
+        Vec<Diagnostic>,
+        Vec<PassStat>,
+    ) {
+        (
+            self.owned, self.map, self.place, self.crit, self.pe_images, self.tables, self.diags,
+            self.stats,
+        )
+    }
+}
+
+/// One named unit of compilation work. `run` returns a one-line detail
+/// string for the pass report, or a [`CompileError`] that aborts the
+/// pipeline.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, cx: &mut PassCtx<'_>, tel: Telemetry<'_>) -> Result<String, CompileError>;
+}
+
+/// An ordered pass list. [`PassManager::run`] executes each pass inside
+/// a timed telemetry span on the `"compile"` track and records a
+/// [`PassStat`] per pass into the context.
+#[derive(Default)]
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl PassManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a pass (builder style).
+    pub fn with(mut self, pass: impl Pass + 'static) -> Self {
+        self.passes.push(Box::new(pass));
+        self
+    }
+
+    /// Pipeline order, for reports and tests.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.passes.iter().map(|p| p.name()).collect()
+    }
+
+    /// The standard compile pipeline for `cfg`:
+    /// `verify → [dce → replicate_consts]* → criticality → place →
+    /// bram_images → bake_tables` (`*` only when `cfg.opt` is set, so
+    /// the default artifact is bit-identical to the pre-pipeline
+    /// compiler).
+    pub fn standard(cfg: &OverlayConfig) -> Self {
+        let mut pm = Self::new().with(VerifyPass);
+        if cfg.opt {
+            pm = pm.with(DcePass).with(ReplicateConstsPass);
+        }
+        pm.with(CriticalityPass).with(PlacePass).with(BramImagesPass).with(BakeTablesPass)
+    }
+
+    /// Run every pass in order over `cx`. Stops at the first failing
+    /// pass; stats for completed passes are retained either way.
+    pub fn run(&self, cx: &mut PassCtx<'_>, tel: Telemetry<'_>) -> Result<(), CompileError> {
+        for pass in &self.passes {
+            let t0 = Instant::now();
+            let detail = telemetry::timed(tel, "compile", pass.name(), || pass.run(cx, tel))?;
+            cx.stats.push(PassStat {
+                name: pass.name(),
+                micros: t0.elapsed().as_micros() as u64,
+                detail,
+            });
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// the standard pipeline's passes
+// ---------------------------------------------------------------------
+
+/// Structural lint/verification over the *original* graph (analysis).
+/// Error-severity findings abort compilation as
+/// [`CompileError::InvalidGraph`]; warnings ride along on the artifact.
+pub struct VerifyPass;
+
+impl Pass for VerifyPass {
+    fn name(&self) -> &'static str {
+        "verify"
+    }
+
+    fn run(&self, cx: &mut PassCtx<'_>, _tel: Telemetry<'_>) -> Result<String, CompileError> {
+        let diags = verify::graph_diagnostics(cx.graph());
+        let errors: Vec<Diagnostic> =
+            diags.iter().filter(|d| d.severity == Severity::Error).cloned().collect();
+        if !errors.is_empty() {
+            return Err(CompileError::InvalidGraph { diagnostics: errors });
+        }
+        let warnings = diags.len();
+        cx.diags.extend(diags);
+        Ok(if warnings == 0 {
+            "clean".to_string()
+        } else {
+            format!("{warnings} warnings")
+        })
+    }
+}
+
+/// Dead-node elimination (transform; `cfg.opt` pipelines only).
+pub struct DcePass;
+
+impl Pass for DcePass {
+    fn name(&self) -> &'static str {
+        "dce"
+    }
+
+    fn run(&self, cx: &mut PassCtx<'_>, _tel: Telemetry<'_>) -> Result<String, CompileError> {
+        match dce::run(cx.graph()) {
+            Some((g, step)) => {
+                let removed = step.orig_len - g.len();
+                cx.commit_graph(g, step);
+                Ok(format!("removed {removed} dead inputs"))
+            }
+            None => Ok("no dead nodes".to_string()),
+        }
+    }
+}
+
+/// Constant (input) replication for high-fanout sources (transform;
+/// `cfg.opt` pipelines only).
+pub struct ReplicateConstsPass;
+
+impl Pass for ReplicateConstsPass {
+    fn name(&self) -> &'static str {
+        "replicate_consts"
+    }
+
+    fn run(&self, cx: &mut PassCtx<'_>, _tel: Telemetry<'_>) -> Result<String, CompileError> {
+        match replicate_consts::run(cx.graph()) {
+            Some((g, step, split)) => {
+                let added = g.len() - step.orig_len;
+                cx.commit_graph(g, step);
+                Ok(format!("split {split} inputs into {added} extra replicas"))
+            }
+            None => Ok("no fanout above threshold".to_string()),
+        }
+    }
+}
+
+/// The paper's one-time criticality labeling, re-homed as an analysis
+/// pass over the (possibly transformed) graph. The standard pipeline's
+/// *only* labeling — `place` reuses these labels.
+pub struct CriticalityPass;
+
+impl Pass for CriticalityPass {
+    fn name(&self) -> &'static str {
+        "criticality"
+    }
+
+    fn run(&self, cx: &mut PassCtx<'_>, _tel: Telemetry<'_>) -> Result<String, CompileError> {
+        let crit = criticality::criticality(cx.graph());
+        let max = crit.iter().copied().max().unwrap_or(0);
+        cx.crit = Some(crit);
+        Ok(format!("max height {max}"))
+    }
+}
+
+/// Node→PE placement (analysis over the current graph, using the
+/// `criticality` pass's labels). Fails hard on a per-PE local-index
+/// overflow — a placement the 13-bit packet header cannot address —
+/// and attaches capacity/flag-pressure warnings to the artifact.
+pub struct PlacePass;
+
+impl Pass for PlacePass {
+    fn name(&self) -> &'static str {
+        "place"
+    }
+
+    fn run(&self, cx: &mut PassCtx<'_>, tel: Telemetry<'_>) -> Result<String, CompileError> {
+        let cfg = cx.cfg;
+        let crit = cx.crit.as_deref().expect("criticality pass must run before place");
+        let place = Placement::build_for_torus(
+            cx.graph(),
+            cfg.cols,
+            cfg.rows,
+            cfg.placement,
+            cfg.local_order,
+            cfg.seed,
+            Some(crit),
+        );
+        for (pe, locals) in place.nodes_of.iter().enumerate() {
+            if locals.len() > MAX_LOCAL_NODES {
+                return Err(CompileError::LocalIndexOverflow {
+                    pe,
+                    nodes: locals.len(),
+                    max: MAX_LOCAL_NODES,
+                });
+            }
+        }
+        let lints = verify::capacity_diagnostics(cx.graph(), &place, &cfg);
+        cx.diags.extend(lints.into_iter().filter(|d| d.severity == Severity::Warning));
+        let detail = if cfg.placement == PlacementPolicy::TrafficAware {
+            let cost = placement_cost(cx.graph(), crit, &place.pe_of, cfg.cols, cfg.rows);
+            if let Some(reg) = tel {
+                reg.gauge("place.traffic.cost", cost as f64);
+            }
+            format!("{:?}, weighted-hop cost {cost}", cfg.placement)
+        } else {
+            format!("{:?}, max {} nodes/PE", cfg.placement, place.max_local_nodes())
+        };
+        cx.place = Some(place);
+        Ok(detail)
+    }
+}
+
+/// Per-PE BRAM image summaries (analysis over placement).
+pub struct BramImagesPass;
+
+impl Pass for BramImagesPass {
+    fn name(&self) -> &'static str {
+        "bram_images"
+    }
+
+    fn run(&self, cx: &mut PassCtx<'_>, _tel: Telemetry<'_>) -> Result<String, CompileError> {
+        let place = cx.place.as_ref().expect("place pass must run before bram_images");
+        let g = cx.graph();
+        let pe_images: Vec<PeImage> = place
+            .nodes_of
+            .iter()
+            .map(|locals| {
+                let nodes = locals.len();
+                let edges: usize = locals.iter().map(|&n| g.node(n).fanout.len()).sum();
+                PeImage {
+                    nodes,
+                    edges,
+                    graph_words: BramConfig::words_used(nodes, edges),
+                }
+            })
+            .collect();
+        let max = pe_images.iter().map(|i| i.graph_words).max().unwrap_or(0);
+        cx.pe_images = Some(pe_images);
+        Ok(format!("max {max} graph words/PE"))
+    }
+}
+
+/// Capacity enforcement + the runtime-table bake (DESIGN.md §10). When
+/// a transform rewrote the graph, the tables are baked *remapped*: the
+/// image executes compiled ids while `global_of`/`seeds`/`values()`
+/// speak original ids.
+pub struct BakeTablesPass;
+
+impl Pass for BakeTablesPass {
+    fn name(&self) -> &'static str {
+        "bake_tables"
+    }
+
+    fn run(&self, cx: &mut PassCtx<'_>, _tel: Telemetry<'_>) -> Result<String, CompileError> {
+        let cfg = cx.cfg;
+        let place = cx.place.as_ref().expect("place pass must run before bake_tables");
+        let g = cx.graph();
+        // the same check (one implementation) guards direct Simulator
+        // construction, so compile-time and runtime verdicts agree
+        if let Err(crate::sim::SimError::CapacityExceeded { pe, words_needed, words_available }) =
+            crate::sim::check_capacity(g, place, &cfg)
+        {
+            return Err(CompileError::CapacityExceeded { pe, words_needed, words_available });
+        }
+        let tables = match cx.node_map() {
+            Some(map) => RuntimeTables::build_remapped_shared(g, place, cfg.cols, cfg.rows, map),
+            None => RuntimeTables::build_shared(g, place, cfg.cols, cfg.rows),
+        };
+        let detail = format!("{} routes, {} seeds", tables.routes.len(), tables.seeds.len());
+        cx.tables = Some(tables);
+        Ok(detail)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Op;
+
+    #[test]
+    fn standard_pipeline_order_tracks_opt() {
+        let cfg = OverlayConfig::default();
+        assert_eq!(
+            PassManager::standard(&cfg).names(),
+            ["verify", "criticality", "place", "bram_images", "bake_tables"]
+        );
+        let mut opt = cfg;
+        opt.opt = true;
+        assert_eq!(
+            PassManager::standard(&opt).names(),
+            [
+                "verify",
+                "dce",
+                "replicate_consts",
+                "criticality",
+                "place",
+                "bram_images",
+                "bake_tables"
+            ]
+        );
+    }
+
+    #[test]
+    fn node_map_composition() {
+        // 4 originals; first map kills node 1, second splits (new) node 0
+        // into two replicas
+        let a = NodeMap {
+            orig_len: 4,
+            compiled_of: vec![0, NodeMap::DEAD, 1, 2],
+            orig_of: vec![0, 2, 3],
+        };
+        let b = NodeMap {
+            orig_len: 3,
+            compiled_of: vec![0, 2, 3],
+            orig_of: vec![0, 0, 1, 2],
+        };
+        let c = a.then(&b);
+        assert_eq!(c.orig_len, 4);
+        assert_eq!(c.compiled_of, vec![0, NodeMap::DEAD, 2, 3]);
+        assert_eq!(c.orig_of, vec![0, 0, 2, 3]);
+        assert!(c.is_live(0) && !c.is_live(1));
+    }
+
+    #[test]
+    fn pipeline_runs_and_records_stats() {
+        let mut g = DataflowGraph::new();
+        let x = g.add_input(2.0);
+        let y = g.add_input(3.0);
+        g.op(Op::Mul, &[x, y]);
+        let cfg = OverlayConfig::default().with_dims(2, 2);
+        let mut cx = PassCtx::new(&g, cfg);
+        PassManager::standard(&cfg).run(&mut cx, None).unwrap();
+        assert_eq!(
+            cx.stats.iter().map(|s| s.name).collect::<Vec<_>>(),
+            ["verify", "criticality", "place", "bram_images", "bake_tables"]
+        );
+        assert!(cx.place.is_some() && cx.tables.is_some());
+        assert!(cx.node_map().is_none(), "no transform ran");
+        assert_eq!(cx.graph().len(), 3);
+    }
+
+    #[test]
+    fn diagnostic_display_format() {
+        let d = Diagnostic::error("cycle", Some(3), "operand 5 does not precede node".into());
+        assert_eq!(d.to_string(), "error[cycle] node 3: operand 5 does not precede node");
+        let w = Diagnostic::warning("capacity", None, "PE 0 over budget".into());
+        assert_eq!(w.to_string(), "warning[capacity]: PE 0 over budget");
+    }
+}

@@ -1,0 +1,172 @@
+//! Constant (input) replication (transform pass).
+//!
+//! A result leaves its PE through a single Hoplite exit port, one
+//! packet per cycle — a node with fanout *f* serializes for *f* cycles
+//! (§II-C). For operation nodes that serialization is inherent, but an
+//! *input* is pure state: it can be cloned freely. This pass splits
+//! every input whose fanout exceeds [`FANOUT_THRESHOLD`] into
+//! `ceil(f / threshold)` replicas, each serving a contiguous chunk of
+//! the original fanout list, so the placer can spread the copies
+//! across PEs and the per-source serialization chain shortens by ~k×.
+//!
+//! Replicas sit at the original input's position in the node order
+//! (original id order is preserved, so topological indexing survives).
+//! The [`NodeMap`] step maps the original to its *first* replica and
+//! every replica back to the original — all replicas necessarily carry
+//! the same value, so `values()` in original-id space stays
+//! well-defined no matter which replica a reader resolves through.
+//!
+//! Like [`super::dce`], requires a verify-clean graph.
+
+use super::NodeMap;
+use crate::graph::{DataflowGraph, Node, NodeKind};
+use std::collections::HashMap;
+
+/// Inputs with fanout above this get replicated. Matches the point
+/// where exit-port serialization (one packet/cycle) starts to dominate
+/// a 256-PE overlay's typical critical path.
+pub const FANOUT_THRESHOLD: usize = 64;
+
+/// Split high-fanout inputs in `g`. Returns the rewritten graph, the
+/// old→new [`NodeMap`] step, and how many inputs were split — or
+/// `None` if no input crosses the threshold.
+pub fn run(g: &DataflowGraph) -> Option<(DataflowGraph, NodeMap, usize)> {
+    let n = g.len();
+    let mut split_count = 0usize;
+    let mut replicas = vec![1usize; n];
+    for i in 0..n {
+        let node = g.node(i as u32);
+        if matches!(node.kind, NodeKind::Input { .. }) && node.fanout.len() > FANOUT_THRESHOLD {
+            replicas[i] = node.fanout.len().div_ceil(FANOUT_THRESHOLD);
+            split_count += 1;
+        }
+    }
+    if split_count == 0 {
+        return None;
+    }
+
+    let mut compiled_of = vec![0u32; n];
+    let mut orig_of: Vec<u32> = Vec::new();
+    for (i, &k) in replicas.iter().enumerate() {
+        compiled_of[i] = orig_of.len() as u32;
+        orig_of.resize(orig_of.len() + k, i as u32);
+    }
+
+    // each fanout edge of a split input is served by one replica:
+    // contiguous chunks in original fanout-list order. HashMap is
+    // lookup-only below, so iteration order never matters.
+    let mut edge_src: HashMap<(u32, u8), u32> = HashMap::new();
+    for (i, &k) in replicas.iter().enumerate() {
+        if k == 1 {
+            continue;
+        }
+        let fan = &g.node(i as u32).fanout;
+        let chunk = fan.len().div_ceil(k);
+        for (e, &(dst, slot)) in fan.iter().enumerate() {
+            edge_src.insert((dst, slot), compiled_of[i] + (e / chunk) as u32);
+        }
+    }
+
+    // operation nodes are never replicated, so this emits each exactly
+    // once; replicas of an input appear k consecutive times
+    let m = orig_of.len();
+    let mut nodes: Vec<Node> = Vec::with_capacity(m);
+    for &orig in &orig_of {
+        match g.node(orig).kind {
+            NodeKind::Input { value } => {
+                nodes.push(Node { kind: NodeKind::Input { value }, fanout: Vec::new() });
+            }
+            NodeKind::Operation { op, src } => {
+                let mut new_src = [0u32; 2];
+                for (slot, s) in new_src.iter_mut().enumerate().take(op.arity()) {
+                    *s = *edge_src
+                        .get(&(orig, slot as u8))
+                        .unwrap_or(&compiled_of[src[slot] as usize]);
+                }
+                if op.arity() == 1 {
+                    new_src[1] = new_src[0];
+                }
+                nodes.push(Node { kind: NodeKind::Operation { op, src: new_src }, fanout: Vec::new() });
+            }
+        }
+    }
+
+    // rebuild fanout from the remapped operand edges (destination-order
+    // iteration keeps the derivation deterministic)
+    for i in 0..m {
+        if let NodeKind::Operation { op, src } = nodes[i].kind {
+            for (slot, &s) in src[..op.arity()].iter().enumerate() {
+                nodes[s as usize].fanout.push((i as u32, slot as u8));
+            }
+        }
+    }
+
+    Some((
+        DataflowGraph::from_raw_nodes(nodes),
+        NodeMap { orig_len: n, compiled_of, orig_of },
+        split_count,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Op;
+    use crate::passes::verify::graph_diagnostics;
+
+    fn wide_graph(fanout: usize) -> DataflowGraph {
+        let mut g = DataflowGraph::new();
+        let hot = g.add_input(3.0);
+        let other = g.add_input(4.0);
+        for _ in 0..fanout {
+            g.op(Op::Add, &[hot, other]);
+        }
+        g
+    }
+
+    #[test]
+    fn below_threshold_is_untouched() {
+        assert!(run(&wide_graph(FANOUT_THRESHOLD)).is_none());
+    }
+
+    #[test]
+    fn splits_into_bounded_replicas() {
+        let g = wide_graph(150);
+        let (g2, map, split) = run(&g).expect("150 > 64");
+        assert_eq!(split, 1);
+        // ceil(150/64) = 3 replicas of the hot input (2 extra nodes)
+        assert_eq!(g2.len(), g.len() + 2);
+        assert_eq!(map.orig_of[..4], [0, 0, 0, 1]);
+        assert_eq!(map.compiled_of[0], 0);
+        for i in 0..g2.len() {
+            assert!(
+                g2.node(i as u32).fanout.len() <= FANOUT_THRESHOLD,
+                "node {i}: fanout {}",
+                g2.node(i as u32).fanout.len()
+            );
+        }
+        // the rewrite is itself verify-clean and value-preserving
+        assert!(graph_diagnostics(&g2).is_empty(), "{:?}", graph_diagnostics(&g2));
+        let (before, after) = (g.evaluate(), g2.evaluate());
+        for orig in 0..g.len() {
+            assert_eq!(after[map.compiled_of[orig] as usize], before[orig], "node {orig}");
+        }
+    }
+
+    #[test]
+    fn operation_fanout_is_left_alone() {
+        // only *inputs* replicate: a hot interior node stays whole
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(1.0);
+        let hot = g.op(Op::Neg, &[a]);
+        let pad = g.add_input(2.0);
+        for _ in 0..150 {
+            g.op(Op::Mul, &[hot, pad]);
+        }
+        // `pad` crosses the threshold too, so the pass does run
+        let (g2, map, split) = run(&g).unwrap();
+        assert_eq!(split, 1);
+        let hot2 = map.compiled_of[hot as usize];
+        assert_eq!(g2.node(hot2).fanout.len(), 150);
+    }
+}

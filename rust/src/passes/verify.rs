@@ -1,0 +1,420 @@
+//! Static graph verification: the lint catalog behind the `verify`
+//! pass and `tdp check`.
+//!
+//! [`graph_diagnostics`] diagnoses a graph *structurally* — no overlay
+//! needed — and is total over malformed graphs (the `tdp check` loader,
+//! [`crate::graph::graph_from_json_raw`], deliberately loads cycles and
+//! dangling ids so they can be reported here instead of dying at parse
+//! time). [`capacity_diagnostics`] adds the overlay-dependent lints:
+//! per-PE graph-memory pressure and OoO flag-word coverage.
+//!
+//! Every finding carries a stable `code` slug; `tdp check --format
+//! json` consumers and the CI known-bad fixtures key off these:
+//!
+//! | code               | severity | meaning |
+//! |--------------------|----------|---------|
+//! | `empty`            | error    | graph has no nodes |
+//! | `dangling-operand` | error    | operand id ≥ node count |
+//! | `cycle`            | error    | operand id ≥ own id (forward/self reference — in this topologically-indexed IR, exactly a combinational cycle) |
+//! | `dangling-edge`    | error    | fanout edge to an id ≥ node count |
+//! | `edge-to-input`    | error    | fanout edge delivers into an Input node |
+//! | `slot-range`       | error    | fanout edge targets a slot ≥ destination arity |
+//! | `edge-mismatch`    | error    | fanout edge (u→v, slot) but v's operand in that slot is not u |
+//! | `missing-operand`  | error    | an operand slot no fanout edge ever fills — the node can never fire |
+//! | `dup-delivery`     | error    | one operand slot filled by multiple fanout edges |
+//! | `unreachable`      | error    | operands are locally well-formed but transitively depend on a broken node |
+//! | `dead-input`       | warning  | input with no consumers (DCE candidate) |
+//! | `high-fanout`      | warning  | fanout > 256 (serialization hotspot; replication candidate) |
+//! | `capacity`         | error/warning | PE graph memory over budget (error iff `enforce_capacity`) |
+//! | `local-overflow`   | error    | PE holds more nodes than a 13-bit local index addresses |
+//! | `flag-overflow`    | warning  | OoO flag vectors cannot cover every local node |
+//!
+//! Reporting is capped per code (first [`MAX_PER_CODE`] findings, then
+//! one summary diagnostic with the suppressed count) so a pathological
+//! graph produces a readable report, not a million-line one.
+
+use super::{Diagnostic, Severity};
+use crate::config::OverlayConfig;
+use crate::graph::{DataflowGraph, NodeKind};
+use crate::noc::MAX_LOCAL_NODES;
+use crate::pe::BramConfig;
+use crate::place::Placement;
+use crate::sched::SchedulerKind;
+
+/// Per-code reporting cap; further findings fold into a summary line.
+pub const MAX_PER_CODE: usize = 8;
+
+/// Fanout above this is flagged as a serialization hotspot (warning).
+pub const HIGH_FANOUT: usize = 256;
+
+/// Collects diagnostics with a per-code cap; suppressed counts fold
+/// into one trailing summary diagnostic per code.
+struct Emitter {
+    out: Vec<Diagnostic>,
+    // (code, severity, total) in first-seen order; linear scan is fine
+    // for a catalog of ~15 codes
+    counts: Vec<(&'static str, Severity, usize)>,
+}
+
+impl Emitter {
+    fn new() -> Self {
+        Self { out: Vec::new(), counts: Vec::new() }
+    }
+
+    fn emit(&mut self, d: Diagnostic) {
+        match self.counts.iter_mut().find(|(c, ..)| *c == d.code) {
+            Some((_, _, total)) => {
+                *total += 1;
+                if *total <= MAX_PER_CODE {
+                    self.out.push(d);
+                }
+            }
+            None => {
+                self.counts.push((d.code, d.severity, 1));
+                self.out.push(d);
+            }
+        }
+    }
+
+    fn finish(mut self) -> Vec<Diagnostic> {
+        for &(code, severity, total) in &self.counts {
+            if total > MAX_PER_CODE {
+                self.out.push(Diagnostic {
+                    severity,
+                    code,
+                    node: None,
+                    message: format!(
+                        "... and {} more `{code}` diagnostics (showing first {MAX_PER_CODE})",
+                        total - MAX_PER_CODE
+                    ),
+                });
+            }
+        }
+        self.out
+    }
+}
+
+/// Structurally diagnose `g`. Returns every finding (errors and
+/// warnings), capped per code; an empty vec means the graph is clean.
+pub fn graph_diagnostics(g: &DataflowGraph) -> Vec<Diagnostic> {
+    let n = g.len();
+    if n == 0 {
+        return vec![Diagnostic::error("empty", None, "graph has no nodes".to_string())];
+    }
+    let mut em = Emitter::new();
+    let nid = |i: usize| Some(i as u32);
+
+    // operand-side structural checks + per-slot delivery counts
+    // (delivered[i] holds counts for node i's operand slots)
+    let mut delivered: Vec<[u8; 2]> = vec![[0, 0]; n];
+    for i in 0..n {
+        for &(dst, slot) in &g.node(i as u32).fanout {
+            let (d, s) = (dst as usize, slot as usize);
+            if d >= n {
+                em.emit(Diagnostic::error(
+                    "dangling-edge",
+                    nid(i),
+                    format!("fanout edge to node {dst} but graph has {n} nodes"),
+                ));
+                continue;
+            }
+            match g.node(dst).kind {
+                NodeKind::Input { .. } => em.emit(Diagnostic::error(
+                    "edge-to-input",
+                    nid(i),
+                    format!("fanout edge delivers into input node {dst}"),
+                )),
+                NodeKind::Operation { op, src } => {
+                    if s >= op.arity() {
+                        em.emit(Diagnostic::error(
+                            "slot-range",
+                            nid(i),
+                            format!(
+                                "fanout edge targets slot {s} of node {dst} but {} has arity {}",
+                                op.name(),
+                                op.arity()
+                            ),
+                        ));
+                    } else if src[s] != i as u32 {
+                        em.emit(Diagnostic::error(
+                            "edge-mismatch",
+                            nid(i),
+                            format!(
+                                "fanout edge claims slot {s} of node {dst}, whose operand there is node {}",
+                                src[s]
+                            ),
+                        ));
+                    } else {
+                        delivered[d][s] = delivered[d][s].saturating_add(1);
+                    }
+                }
+            }
+        }
+    }
+
+    // computable[i]: node i can produce a value (transitive liveness DP)
+    let mut computable = vec![false; n];
+    for i in 0..n {
+        match g.node(i as u32).kind {
+            NodeKind::Input { .. } => {
+                computable[i] = true;
+                if g.node(i as u32).fanout.is_empty() {
+                    em.emit(Diagnostic::warning(
+                        "dead-input",
+                        nid(i),
+                        "input has no consumers (dead-code-elimination candidate)".to_string(),
+                    ));
+                }
+            }
+            NodeKind::Operation { op, src } => {
+                let mut locally_ok = true;
+                let mut feeds_ok = true;
+                for (slot, &s) in src[..op.arity()].iter().enumerate() {
+                    if (s as usize) >= n {
+                        em.emit(Diagnostic::error(
+                            "dangling-operand",
+                            nid(i),
+                            format!("operand {slot} is node {s} but graph has {n} nodes"),
+                        ));
+                        locally_ok = false;
+                        continue;
+                    }
+                    if (s as usize) >= i {
+                        em.emit(Diagnostic::error(
+                            "cycle",
+                            nid(i),
+                            format!(
+                                "operand {slot} is node {s}, which does not precede this node \
+                                 (combinational cycle in the topological index order)"
+                            ),
+                        ));
+                        locally_ok = false;
+                        continue;
+                    }
+                    feeds_ok &= computable[s as usize];
+                    match delivered[i][slot] {
+                        0 => {
+                            em.emit(Diagnostic::error(
+                                "missing-operand",
+                                nid(i),
+                                format!(
+                                    "no fanout edge of node {s} delivers operand {slot}; \
+                                     the node can never fire"
+                                ),
+                            ));
+                            locally_ok = false;
+                        }
+                        1 => {}
+                        k => {
+                            em.emit(Diagnostic::error(
+                                "dup-delivery",
+                                nid(i),
+                                format!("operand {slot} is delivered by {k} fanout edges"),
+                            ));
+                            locally_ok = false;
+                        }
+                    }
+                }
+                if locally_ok && !feeds_ok {
+                    em.emit(Diagnostic::error(
+                        "unreachable",
+                        nid(i),
+                        "operands are well-formed but transitively depend on a broken node; \
+                         this output can never be produced"
+                            .to_string(),
+                    ));
+                }
+                computable[i] = locally_ok && feeds_ok;
+            }
+        }
+        if g.node(i as u32).fanout.len() > HIGH_FANOUT {
+            em.emit(Diagnostic::warning(
+                "high-fanout",
+                nid(i),
+                format!(
+                    "fanout {} exceeds {HIGH_FANOUT}; result delivery serializes on the \
+                     Hoplite exit port (constant-replication candidate)",
+                    g.node(i as u32).fanout.len()
+                ),
+            ));
+        }
+    }
+    em.finish()
+}
+
+/// Overlay-dependent lints over a concrete placement: per-PE
+/// graph-memory pressure (`capacity`: error iff `cfg.enforce_capacity`,
+/// else warning), 13-bit local-index overflow (`local-overflow`, always
+/// an error) and — OoO only — flag-vector coverage (`flag-overflow`,
+/// warning). The capacity message names the PE and quantifies the
+/// overflow in words *and* approximate nodes, which is also how
+/// `Program::fit_violations` reports a failed fit.
+pub fn capacity_diagnostics(
+    g: &DataflowGraph,
+    place: &Placement,
+    cfg: &OverlayConfig,
+) -> Vec<Diagnostic> {
+    let mut em = Emitter::new();
+    let budget = cfg.bram.graph_words(cfg.scheduler);
+    // OoO flag vectors: 2 per node (RDY + fanout-pending), so coverage
+    // is half the flag bits
+    let flag_nodes = (cfg.bram.flag_words() / 2) * cfg.bram.flag_bits_used;
+    for (pe, locals) in place.nodes_of.iter().enumerate() {
+        let nodes = locals.len();
+        let edges: usize = locals.iter().map(|&id| g.node(id).fanout.len()).sum();
+        let words = BramConfig::words_used(nodes, edges);
+        if words > budget {
+            let over = words - budget;
+            let words_per_node = (words / nodes.max(1)).max(1);
+            let severity =
+                if cfg.enforce_capacity { Severity::Error } else { Severity::Warning };
+            em.emit(Diagnostic {
+                severity,
+                code: "capacity",
+                node: None,
+                message: format!(
+                    "PE {pe} needs {words} graph words but has {budget}: over by {over} words \
+                     (≈{} nodes at this PE's {} words/node average)",
+                    over.div_ceil(words_per_node),
+                    words_per_node
+                ),
+            });
+        }
+        if nodes > MAX_LOCAL_NODES {
+            em.emit(Diagnostic::error(
+                "local-overflow",
+                None,
+                format!(
+                    "PE {pe} holds {nodes} nodes but the 13-bit packet local index \
+                     addresses only {MAX_LOCAL_NODES}"
+                ),
+            ));
+        }
+        if cfg.scheduler == SchedulerKind::OutOfOrder && nodes > flag_nodes {
+            em.emit(Diagnostic::warning(
+                "flag-overflow",
+                None,
+                format!(
+                    "PE {pe} holds {nodes} nodes but the OoO flag vectors cover only \
+                     {flag_nodes}; RDY/pending state would spill out of the flag words"
+                ),
+            ));
+        }
+    }
+    em.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{graph_from_json_raw, Op};
+    use crate::place::{LocalOrder, PlacementPolicy};
+
+    fn codes(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn builder_graphs_are_clean() {
+        // hand-built diamond: fully clean (no errors, no warnings)
+        let mut g = DataflowGraph::new();
+        let x = g.add_input(2.0);
+        let a = g.op(Op::Neg, &[x]);
+        let b = g.op(Op::Add, &[x, a]);
+        g.op(Op::Mul, &[a, b]);
+        assert!(graph_diagnostics(&g).is_empty(), "{:?}", graph_diagnostics(&g));
+        // builder-constructed workloads can carry advisory warnings
+        // (dead inputs) but never errors
+        let g = crate::workload::layered_random(16, 4, 32, 2, 7);
+        assert!(
+            graph_diagnostics(&g).iter().all(|d| d.severity == Severity::Warning),
+            "{:?}",
+            graph_diagnostics(&g)
+        );
+    }
+
+    #[test]
+    fn empty_graph_is_an_error() {
+        let g = DataflowGraph::new();
+        assert_eq!(codes(&graph_diagnostics(&g)), ["empty"]);
+    }
+
+    #[test]
+    fn cycle_and_downstream_unreachability() {
+        // node 1 references node 2 (forward → cycle); node 2 is locally
+        // fine but feeds off the broken node 1 → unreachable
+        let bad = r#"{"nodes":[{"in":1.0},{"op":"ADD","src":[2,0]},{"op":"MUL","src":[1,0]}]}"#;
+        let g = graph_from_json_raw(bad).unwrap();
+        let diags = graph_diagnostics(&g);
+        assert!(codes(&diags).contains(&"cycle"), "{diags:?}");
+        assert!(codes(&diags).contains(&"unreachable"), "{diags:?}");
+        assert!(diags.iter().any(|d| d.code == "cycle" && d.node == Some(1)));
+    }
+
+    #[test]
+    fn dangling_operand_detected() {
+        let g = graph_from_json_raw(r#"{"nodes":[{"in":1.0},{"op":"NEG","src":[9]}]}"#).unwrap();
+        let diags = graph_diagnostics(&g);
+        assert!(codes(&diags).contains(&"dangling-operand"), "{diags:?}");
+        // the input feeds nobody → also a dead-input warning
+        assert!(codes(&diags).contains(&"dead-input"), "{diags:?}");
+    }
+
+    #[test]
+    fn hand_corrupted_fanout_is_caught() {
+        use crate::graph::{Node, NodeKind};
+        // node 1 = NEG(0), but node 0's fanout lies about the slot and
+        // never actually delivers operand 0
+        let nodes = vec![
+            Node { kind: NodeKind::Input { value: 1.0 }, fanout: vec![(1, 1)] },
+            Node { kind: NodeKind::Operation { op: Op::Neg, src: [0, 0] }, fanout: vec![] },
+        ];
+        let g = DataflowGraph::from_raw_nodes(nodes);
+        let diags = graph_diagnostics(&g);
+        assert!(codes(&diags).contains(&"slot-range"), "{diags:?}");
+        assert!(codes(&diags).contains(&"missing-operand"), "{diags:?}");
+    }
+
+    #[test]
+    fn per_code_cap_folds_into_summary() {
+        // 20 ops all referencing a dangling id → capped at MAX_PER_CODE
+        // plus one summary diagnostic
+        let mut nodes = vec![r#"{"in":1.0}"#.to_string()];
+        for _ in 0..20 {
+            nodes.push(r#"{"op":"NEG","src":[99]}"#.to_string());
+        }
+        let json = format!(r#"{{"nodes":[{}]}}"#, nodes.join(","));
+        let g = graph_from_json_raw(&json).unwrap();
+        let dangling: Vec<_> =
+            graph_diagnostics(&g).into_iter().filter(|d| d.code == "dangling-operand").collect();
+        assert_eq!(dangling.len(), MAX_PER_CODE + 1);
+        assert!(dangling.last().unwrap().message.contains("12 more"));
+    }
+
+    #[test]
+    fn capacity_lint_names_pe_and_overflow() {
+        // 1×1 overlay: everything lands on PE 0 and overflows the budget
+        let g = crate::workload::layered_random(800, 400, 1600, 2, 0);
+        let mut cfg = OverlayConfig::default().with_dims(1, 1);
+        cfg.enforce_capacity = true;
+        let place = Placement::build(
+            &g,
+            1,
+            PlacementPolicy::RoundRobin,
+            LocalOrder::ByIndex,
+            0,
+        );
+        let diags = capacity_diagnostics(&g, &place, &cfg);
+        let cap = diags.iter().find(|d| d.code == "capacity").expect("capacity diagnostic");
+        assert_eq!(cap.severity, Severity::Error);
+        assert!(cap.message.contains("PE 0"), "{}", cap.message);
+        assert!(cap.message.contains("over by"), "{}", cap.message);
+        // without enforcement the same finding is advisory
+        cfg.enforce_capacity = false;
+        let diags = capacity_diagnostics(&g, &place, &cfg);
+        assert_eq!(
+            diags.iter().find(|d| d.code == "capacity").unwrap().severity,
+            Severity::Warning
+        );
+    }
+}

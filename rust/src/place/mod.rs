@@ -6,6 +6,10 @@
 //! in decreasing criticality so the LOD's lowest-address pick is the most
 //! critical ready node. The in-order scheduler ignores layout order.
 
+mod traffic;
+
+pub use traffic::{placement_cost, TrafficReport};
+
 use crate::criticality;
 use crate::graph::{DataflowGraph, NodeId};
 use crate::util::rng::Rng;
@@ -41,6 +45,13 @@ pub enum PlacementPolicy {
     /// the practical middle ground a real toolflow uses — locality within
     /// a chunk, load balance across PEs. This is the Fig. 1 default.
     Chunked,
+    /// criticality-weighted traffic-aware assignment (the compile
+    /// pipeline's placement pass): greedy operand-locality clustering
+    /// seed plus bounded simulated-annealing refinement, minimizing
+    /// expected unidirectional Hoplite hop distance weighted by source
+    /// criticality. Deterministic for a given seed; [`placement_cost`]
+    /// is the objective it minimizes.
+    TrafficAware,
 }
 
 /// Chunk size for [`PlacementPolicy::Chunked`] (nodes per deal).
@@ -84,6 +95,12 @@ pub struct Placement {
 
 impl Placement {
     /// Build a placement with the given policy and local ordering.
+    ///
+    /// Policies that need torus geometry ([`PlacementPolicy::TrafficAware`])
+    /// use the squarest factorization of `num_pes`
+    /// ([`squarest_dims`]); paths that know the real overlay shape
+    /// (compile pipeline, direct simulator construction) call
+    /// [`Placement::build_for_torus`] instead.
     pub fn build(
         g: &DataflowGraph,
         num_pes: usize,
@@ -91,8 +108,8 @@ impl Placement {
         order: LocalOrder,
         seed: u64,
     ) -> Self {
-        let pe_of = Self::assign(g, num_pes, policy, seed);
-        Self::from_assignment_with(g, num_pes, pe_of, order, None)
+        let (cols, rows) = squarest_dims(num_pes);
+        Self::build_for_torus(g, cols, rows, policy, order, seed, None)
     }
 
     /// Build with a precomputed criticality labeling — the compile-once
@@ -108,15 +125,61 @@ impl Placement {
         seed: u64,
         crit: &[u32],
     ) -> Self {
-        let pe_of = Self::assign(g, num_pes, policy, seed);
-        Self::from_assignment_with(g, num_pes, pe_of, order, Some(crit))
+        let (cols, rows) = squarest_dims(num_pes);
+        Self::build_for_torus(g, cols, rows, policy, order, seed, Some(crit))
     }
 
-    /// The node→PE assignment of `policy` (shared by [`Placement::build`]
-    /// and [`Placement::build_with`]).
-    fn assign(g: &DataflowGraph, num_pes: usize, policy: PlacementPolicy, seed: u64) -> Vec<u32> {
+    /// Build for an explicit `cols`×`rows` torus — the geometry-aware
+    /// entry point the compile pipeline's placement pass and direct
+    /// simulator construction share, so both sides of a parity
+    /// comparison see identical assignments even on non-square tori.
+    /// `crit` is an optional precomputed labeling; when `None` and the
+    /// policy or local order needs one, it is computed exactly once
+    /// here and reused for both assignment and local-memory sorting.
+    pub fn build_for_torus(
+        g: &DataflowGraph,
+        cols: usize,
+        rows: usize,
+        policy: PlacementPolicy,
+        order: LocalOrder,
+        seed: u64,
+        crit: Option<&[u32]>,
+    ) -> Self {
+        let num_pes = cols * rows;
+        assert!(num_pes > 0);
+        let needs_crit =
+            order == LocalOrder::ByCriticality || policy == PlacementPolicy::TrafficAware;
+        let computed;
+        let crit: Option<&[u32]> = match crit {
+            Some(c) => Some(c),
+            None if needs_crit => {
+                computed = criticality::criticality(g);
+                Some(&computed)
+            }
+            None => None,
+        };
+        let pe_of = Self::assign(g, cols, rows, policy, seed, crit);
+        Self::from_assignment_with(g, num_pes, pe_of, order, crit)
+    }
+
+    /// The node→PE assignment of `policy` (shared by every `build*`
+    /// constructor). `crit` is `Some` whenever the policy needs labels
+    /// (the `build*` wrappers guarantee it).
+    fn assign(
+        g: &DataflowGraph,
+        cols: usize,
+        rows: usize,
+        policy: PlacementPolicy,
+        seed: u64,
+        crit: Option<&[u32]>,
+    ) -> Vec<u32> {
+        let num_pes = cols * rows;
         assert!(num_pes > 0);
         let n = g.len();
+        if policy == PlacementPolicy::TrafficAware {
+            let crit = crit.expect("traffic-aware placement needs criticality labels");
+            return traffic::traffic_assign(g, crit, cols, rows, seed).0;
+        }
         let mut pe_of = vec![0u32; n];
         match policy {
             PlacementPolicy::RoundRobin => {
@@ -141,6 +204,7 @@ impl Placement {
                     *pe = ((i / CHUNK_SIZE) % num_pes) as u32;
                 }
             }
+            PlacementPolicy::TrafficAware => unreachable!("dispatched above"),
         }
         pe_of
     }
@@ -245,6 +309,24 @@ impl Placement {
     }
 }
 
+/// The squarest `(cols, rows)` factorization of `num_pes` (`cols >= rows`,
+/// `cols * rows == num_pes`) — the torus shape assumed by geometry-aware
+/// placement when only a PE count is given (prime counts degrade to a
+/// 1-row ring). Paths that know the real overlay shape should pass it to
+/// [`Placement::build_for_torus`] instead.
+pub fn squarest_dims(num_pes: usize) -> (usize, usize) {
+    assert!(num_pes > 0);
+    let mut best = (num_pes, 1);
+    let mut d = 1;
+    while d * d <= num_pes {
+        if num_pes % d == 0 {
+            best = (num_pes / d, d);
+        }
+        d += 1;
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,6 +354,7 @@ mod tests {
             PlacementPolicy::RoundRobin,
             PlacementPolicy::Random,
             PlacementPolicy::BlockContiguous,
+            PlacementPolicy::TrafficAware,
         ] {
             let p = Placement::build(&g, 5, policy, LocalOrder::ByCriticality, 3);
             let mut seen = vec![false; g.len()];
@@ -334,6 +417,7 @@ mod tests {
             PlacementPolicy::Random,
             PlacementPolicy::BlockContiguous,
             PlacementPolicy::Chunked,
+            PlacementPolicy::TrafficAware,
         ] {
             for order in [LocalOrder::ByCriticality, LocalOrder::ByNodeId] {
                 let a = Placement::build(&g, 4, policy, order, 9);
@@ -376,6 +460,15 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn squarest_dims_factorizes() {
+        assert_eq!(squarest_dims(1), (1, 1));
+        assert_eq!(squarest_dims(4), (2, 2));
+        assert_eq!(squarest_dims(12), (4, 3));
+        assert_eq!(squarest_dims(7), (7, 1), "primes degrade to a ring");
+        assert_eq!(squarest_dims(256), (16, 16));
     }
 
     #[test]

@@ -1,0 +1,291 @@
+//! Criticality-weighted traffic-aware placement
+//! ([`PlacementPolicy::TrafficAware`]).
+//!
+//! The paper's Fig. 1 gains come from static analysis; this pass spends
+//! a little more compile time on the same idea. Every fanout edge
+//! `u → v` will cross the Hoplite torus from `u`'s PE to `v`'s PE, and
+//! on a unidirectional torus the expected latency of that crossing is
+//! the deterministic hop count (east then south, wrapping). Edges out
+//! of *critical* nodes gate the completion front, so the objective is
+//!
+//! ```text
+//! cost(assignment) = Σ_{u→v} (1 + criticality(u)) · hops(pe(u), pe(v))
+//! ```
+//!
+//! minimized in two phases, both deterministic for a given seed:
+//!
+//! 1. **greedy clustering seed** — nodes are visited in topological
+//!    order and placed on the candidate PE (an operand's PE or the
+//!    least-loaded PE) with the cheapest weighted distance to their
+//!    already-placed operands, under a strict per-PE node cap so load
+//!    balance (the other half of the paper's placement story) is never
+//!    sacrificed;
+//! 2. **bounded simulated-annealing refinement** — random *swaps* of
+//!    two nodes' PEs (swaps preserve the load profile exactly),
+//!    accepted when they lower the cost or with Boltzmann probability
+//!    under a geometric cooling schedule, for `min(200k, 16n)` moves.
+//!
+//! Randomness comes from [`crate::util::rng::Rng`] seeded from the
+//! overlay seed, so the placement is reproducible across runs and
+//! platforms; `tests/passes.rs` pins that.
+
+use crate::graph::{DataflowGraph, NodeKind};
+use crate::util::rng::Rng;
+
+/// What the traffic-aware pass did, for `--dump-passes` reporting and
+/// telemetry gauges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrafficReport {
+    /// weighted-hop cost after the greedy clustering seed
+    pub initial_cost: u64,
+    /// weighted-hop cost after annealing refinement
+    pub final_cost: u64,
+    /// swap moves attempted
+    pub moves_tried: u64,
+    /// swap moves accepted
+    pub moves_accepted: u64,
+}
+
+/// Deterministic Hoplite hop count from PE `from` to PE `to` on a
+/// unidirectional `cols`×`rows` torus (east then south, wrapping).
+#[inline]
+fn hops(from: usize, to: usize, cols: usize, rows: usize) -> u64 {
+    let (xs, ys) = (from % cols, from / cols);
+    let (xd, yd) = (to % cols, to / cols);
+    (((xd + cols - xs) % cols) + ((yd + rows - ys) % rows)) as u64
+}
+
+/// Edge weight: criticality of the producer plus one (so zero-slack
+/// and zero-criticality edges still count distance).
+#[inline]
+fn weight(crit: &[u32], src: usize) -> u64 {
+    1 + crit[src] as u64
+}
+
+/// The objective the pass minimizes: total criticality-weighted
+/// expected hop distance of `pe_of` on a `cols`×`rows` torus. Public so
+/// reports (`tdp perf`, `--dump-passes`) can score any placement,
+/// including the baseline policies.
+pub fn placement_cost(
+    g: &DataflowGraph,
+    crit: &[u32],
+    pe_of: &[u32],
+    cols: usize,
+    rows: usize,
+) -> u64 {
+    let mut cost = 0u64;
+    for (u, node) in g.nodes().iter().enumerate() {
+        let w = weight(crit, u);
+        for &(dst, _) in &node.fanout {
+            cost += w * hops(pe_of[u] as usize, pe_of[dst as usize] as usize, cols, rows);
+        }
+    }
+    cost
+}
+
+/// One incident edge of a node, prepared for O(degree) swap deltas:
+/// the node at the other end, the edge weight, and whether this node
+/// is the source (`out`) or the destination of the edge.
+#[derive(Clone, Copy)]
+struct Incident {
+    other: u32,
+    w: u64,
+    out: bool,
+}
+
+/// The node→PE assignment of [`PlacementPolicy::TrafficAware`]:
+/// greedy clustering seed + bounded annealing refinement, as described
+/// in the module docs. `crit` must be one label per node.
+pub(crate) fn traffic_assign(
+    g: &DataflowGraph,
+    crit: &[u32],
+    cols: usize,
+    rows: usize,
+    seed: u64,
+) -> (Vec<u32>, TrafficReport) {
+    let n = g.len();
+    let num_pes = cols * rows;
+    debug_assert_eq!(crit.len(), n, "criticality labeling size mismatch");
+    if num_pes <= 1 || n == 0 {
+        let report = TrafficReport {
+            initial_cost: 0,
+            final_cost: 0,
+            moves_tried: 0,
+            moves_accepted: 0,
+        };
+        return (vec![0u32; n], report);
+    }
+
+    // -------- phase 1: greedy clustering seed (topological order) ----
+    // strict per-PE cap: the most even split possible, so the seed can
+    // never starve the fabric of parallelism to chase locality
+    let cap = n.div_ceil(num_pes);
+    let mut load = vec![0usize; num_pes];
+    let mut pe_of = vec![0u32; n];
+    let mut candidates: Vec<usize> = Vec::with_capacity(4);
+    for (i, node) in g.nodes().iter().enumerate() {
+        candidates.clear();
+        if let NodeKind::Operation { op, src } = node.kind {
+            for &s in &src[..op.arity()] {
+                let pe = pe_of[s as usize] as usize;
+                if load[pe] < cap && !candidates.contains(&pe) {
+                    candidates.push(pe);
+                }
+            }
+        }
+        // the least-loaded PE (lowest index on ties) is always an
+        // option — it is what keeps inputs and cap-spill spread out
+        let spread = (0..num_pes).min_by_key(|&pe| (load[pe], pe)).unwrap_or(0);
+        if !candidates.contains(&spread) {
+            candidates.push(spread);
+        }
+        let best = candidates
+            .iter()
+            .copied()
+            .min_by_key(|&cand| {
+                let mut cost = 0u64;
+                if let NodeKind::Operation { op, src } = node.kind {
+                    for &s in &src[..op.arity()] {
+                        cost += weight(crit, s as usize)
+                            * hops(pe_of[s as usize] as usize, cand, cols, rows);
+                    }
+                }
+                (cost, load[cand], cand)
+            })
+            .unwrap_or(spread);
+        pe_of[i] = best as u32;
+        load[best] += 1;
+    }
+    let initial_cost = placement_cost(g, crit, &pe_of, cols, rows);
+
+    // -------- phase 2: bounded annealing over PE swaps ---------------
+    // incident-edge lists make a swap delta O(deg(a) + deg(b))
+    let mut adj: Vec<Vec<Incident>> = vec![Vec::new(); n];
+    for (u, node) in g.nodes().iter().enumerate() {
+        let w = weight(crit, u);
+        for &(dst, _) in &node.fanout {
+            adj[u].push(Incident { other: dst, w, out: true });
+            adj[dst as usize].push(Incident { other: u as u32, w, out: false });
+        }
+    }
+    let incident_cost = |m: usize, pe_of: &[u32]| -> i64 {
+        let mut c = 0i64;
+        for e in &adj[m] {
+            let (from, to) = if e.out {
+                (pe_of[m] as usize, pe_of[e.other as usize] as usize)
+            } else {
+                (pe_of[e.other as usize] as usize, pe_of[m] as usize)
+            };
+            c += (e.w * hops(from, to, cols, rows)) as i64;
+        }
+        c
+    };
+    // edges between a and b appear in both incident sums; subtract one
+    // copy so before/after deltas stay exact
+    let between = |a: usize, b: usize, pe_of: &[u32]| -> i64 {
+        let mut c = 0i64;
+        for e in &adj[a] {
+            if e.other as usize == b {
+                let (from, to) = if e.out { (a, b) } else { (b, a) };
+                c += (e.w * hops(pe_of[from] as usize, pe_of[to] as usize, cols, rows)) as i64;
+            }
+        }
+        c
+    };
+    let moves = 200_000u64.min(16 * n as u64);
+    let mut accepted = 0u64;
+    let mut tried = 0u64;
+    if n >= 2 && moves > 0 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x5452_4146_4649_43); // "TRAFFIC"
+        let mut temp = (initial_cost as f64 / g.num_edges().max(1) as f64).max(1.0);
+        let alpha = 0.01f64.powf(1.0 / moves as f64);
+        for _ in 0..moves {
+            let a = rng.gen_range(n);
+            let b = rng.gen_range(n);
+            temp *= alpha;
+            if a == b || pe_of[a] == pe_of[b] {
+                continue;
+            }
+            tried += 1;
+            let before = incident_cost(a, &pe_of) + incident_cost(b, &pe_of)
+                - between(a, b, &pe_of);
+            pe_of.swap(a, b);
+            let after = incident_cost(a, &pe_of) + incident_cost(b, &pe_of)
+                - between(a, b, &pe_of);
+            let delta = after - before;
+            if delta <= 0 || rng.gen_f64() < (-(delta as f64) / temp).exp() {
+                accepted += 1;
+            } else {
+                pe_of.swap(a, b); // revert
+            }
+        }
+    }
+    let final_cost = placement_cost(g, crit, &pe_of, cols, rows);
+    let report = TrafficReport {
+        initial_cost,
+        final_cost,
+        moves_tried: tried,
+        moves_accepted: accepted,
+    };
+    (pe_of, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::criticality;
+    use crate::workload::layered_random;
+
+    #[test]
+    fn assignment_is_seed_deterministic_and_balanced() {
+        let g = layered_random(10, 8, 30, 2, 7);
+        let crit = criticality::criticality(&g);
+        let (a, ra) = traffic_assign(&g, &crit, 4, 4, 5);
+        let (b, rb) = traffic_assign(&g, &crit, 4, 4, 5);
+        assert_eq!(a, b, "same seed, same assignment");
+        assert_eq!(ra, rb);
+        // per-PE load never exceeds the even-split cap (swaps preserve it)
+        let cap = g.len().div_ceil(16);
+        let mut load = vec![0usize; 16];
+        for &pe in &a {
+            load[pe as usize] += 1;
+            assert!((pe as usize) < 16);
+        }
+        assert!(load.iter().all(|&l| l <= cap), "load {load:?} exceeds cap {cap}");
+    }
+
+    #[test]
+    fn annealing_never_worsens_the_greedy_seed() {
+        let g = layered_random(12, 6, 24, 2, 3);
+        let crit = criticality::criticality(&g);
+        let (pe_of, report) = traffic_assign(&g, &crit, 3, 3, 11);
+        assert_eq!(report.final_cost, placement_cost(&g, &crit, &pe_of, 3, 3));
+        assert!(
+            report.final_cost <= report.initial_cost,
+            "refinement must not lose ground: {report:?}"
+        );
+    }
+
+    #[test]
+    fn beats_round_robin_on_weighted_hops() {
+        let g = layered_random(16, 8, 40, 2, 1);
+        let crit = criticality::criticality(&g);
+        let rr: Vec<u32> = (0..g.len()).map(|i| (i % 16) as u32).collect();
+        let rr_cost = placement_cost(&g, &crit, &rr, 4, 4);
+        let (_, report) = traffic_assign(&g, &crit, 4, 4, 0);
+        assert!(
+            report.final_cost < rr_cost,
+            "traffic-aware {} vs round-robin {rr_cost}",
+            report.final_cost
+        );
+    }
+
+    #[test]
+    fn single_pe_is_trivial() {
+        let g = layered_random(4, 3, 6, 2, 0);
+        let crit = criticality::criticality(&g);
+        let (pe_of, report) = traffic_assign(&g, &crit, 1, 1, 9);
+        assert!(pe_of.iter().all(|&p| p == 0));
+        assert_eq!(report.final_cost, 0);
+    }
+}

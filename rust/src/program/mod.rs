@@ -27,9 +27,9 @@ mod tables;
 pub use tables::{RuntimeTables, SeedEntry};
 
 use crate::config::{Overlay, OverlayConfig};
-use crate::criticality;
 use crate::engine::{self, BackendKind, SimBackend};
 use crate::graph::DataflowGraph;
+use crate::passes::{Diagnostic, NodeMap, PassCtx, PassManager, PassStat};
 use crate::pe::BramConfig;
 use crate::place::Placement;
 use crate::sched::SchedulerKind;
@@ -61,6 +61,17 @@ pub enum CompileError {
         words_needed: usize,
         words_available: usize,
     },
+    /// The `verify` pass found error-severity defects — the carried
+    /// diagnostics are exactly what `tdp check` would report. Never
+    /// produced for builder-constructed graphs (the builder rejects the
+    /// same defects at construction time); reachable through the raw
+    /// loader ([`crate::graph::graph_from_json_raw`]) and hand-built
+    /// node lists.
+    InvalidGraph { diagnostics: Vec<Diagnostic> },
+    /// A PE was assigned more nodes than the 13-bit packet local index
+    /// can address — a placement no route table can encode, failed hard
+    /// regardless of `enforce_capacity`.
+    LocalIndexOverflow { pe: usize, nodes: usize, max: usize },
 }
 
 impl std::fmt::Display for CompileError {
@@ -70,20 +81,43 @@ impl std::fmt::Display for CompileError {
                 f,
                 "PE {pe} needs {words_needed} BRAM words, has {words_available}"
             ),
+            CompileError::InvalidGraph { diagnostics } => {
+                write!(f, "graph failed verification with {} error(s)", diagnostics.len())?;
+                if let Some(first) = diagnostics.first() {
+                    write!(f, "; first: {first}")?;
+                }
+                Ok(())
+            }
+            CompileError::LocalIndexOverflow { pe, nodes, max } => write!(
+                f,
+                "PE {pe} holds {nodes} nodes but the 13-bit packet local index \
+                 addresses only {max}"
+            ),
         }
     }
 }
 
 impl std::error::Error for CompileError {}
 
-/// Compile-time capacity failures map onto the simulator's capacity
-/// error (identical fields) so the deprecated one-shot shims keep their
-/// exact pre-redesign error surface.
+/// Compile-time failures map onto the simulator's error surface so the
+/// deprecated one-shot shims keep their exact pre-redesign errors:
+/// capacity failures carry identical fields, a local-index overflow is
+/// a capacity failure denominated in nodes, and verification failures
+/// (unreachable through the shims, whose graphs are builder-validated)
+/// collapse to an error count.
 impl From<CompileError> for SimError {
     fn from(e: CompileError) -> Self {
         match e {
             CompileError::CapacityExceeded { pe, words_needed, words_available } => {
                 SimError::CapacityExceeded { pe, words_needed, words_available }
+            }
+            CompileError::LocalIndexOverflow { pe, nodes, max } => SimError::CapacityExceeded {
+                pe,
+                words_needed: nodes,
+                words_available: max,
+            },
+            CompileError::InvalidGraph { diagnostics } => {
+                SimError::InvalidProgram { errors: diagnostics.len() }
             }
         }
     }
@@ -100,6 +134,26 @@ pub struct PeImage {
     pub edges: usize,
     /// total graph-memory words ([`BramConfig::words_used`])
     pub graph_words: usize,
+}
+
+/// One PE's BRAM overflow, itemized: the answer to "*which* PE failed
+/// [`Program::fits`], and by how much" (see [`Program::fit_violations`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FitViolation {
+    pub pe: usize,
+    /// nodes resident on the PE
+    pub nodes: usize,
+    /// fanout edges stored alongside them
+    pub edges: usize,
+    /// words the image needs ([`BramConfig::words_used`])
+    pub graph_words: usize,
+    /// words the queried scheduler's budget provides
+    pub budget: usize,
+    /// `graph_words - budget`
+    pub words_over: usize,
+    /// the overflow in nodes, at this PE's average words/node — "move
+    /// about this many nodes elsewhere and it fits"
+    pub nodes_over: usize,
 }
 
 /// The flag-word layout of the out-of-order scheduler's RDY/PEND bit
@@ -140,13 +194,25 @@ struct Artifact {
     /// the flattened hot-path image every session's simulator consumes
     /// (DESIGN.md §10) — baked here, once, never at run time
     tables: Arc<RuntimeTables>,
+    /// the transform result when an optimizing pipeline rewrote the
+    /// graph (`None` for the default pipeline: sessions execute the
+    /// borrowed original)
+    exec: Option<Arc<DataflowGraph>>,
+    /// accumulated original→compiled id map (`None` when `exec` is)
+    map: Option<NodeMap>,
+    /// warning-severity findings the pass pipeline attached
+    diagnostics: Vec<Diagnostic>,
+    /// per-pass timing + detail, in pipeline order (`--dump-passes`)
+    pass_stats: Vec<PassStat>,
 }
 
 /// The one compile implementation behind [`Program::compile`] and
 /// [`SharedProgram::compile`] (and the only place [`compile_count`]
-/// increments). With a telemetry registry attached, each compile stage
-/// runs inside a timed span on the `"compile"` track (DESIGN.md §11);
-/// with `None` the instrumentation is a no-op closure call.
+/// increments): run the standard pass pipeline
+/// ([`PassManager::standard`]) over a fresh [`PassCtx`] and tear the
+/// context into the artifact. With a telemetry registry attached, each
+/// pass runs inside a timed span on the `"compile"` track (DESIGN.md
+/// §11); with `None` the instrumentation is a no-op closure call.
 fn compile_artifact(
     g: &DataflowGraph,
     overlay: &Overlay,
@@ -155,48 +221,19 @@ fn compile_artifact(
     COMPILES.fetch_add(1, Ordering::Relaxed);
     telemetry::count(tel, "compile.programs", 1);
     let cfg = *overlay.config();
-    let crit = telemetry::timed(tel, "compile", "criticality", || criticality::criticality(g));
-    let place = telemetry::timed(tel, "compile", "place", || {
-        Placement::build_with(
-            g,
-            cfg.num_pes(),
-            cfg.placement,
-            cfg.local_order,
-            cfg.seed,
-            &crit,
-        )
-    });
-    let pe_images: Vec<PeImage> = telemetry::timed(tel, "compile", "bram_images", || {
-        place
-            .nodes_of
-            .iter()
-            .map(|locals| {
-                let nodes = locals.len();
-                let edges: usize = locals.iter().map(|&n| g.node(n).fanout.len()).sum();
-                PeImage {
-                    nodes,
-                    edges,
-                    graph_words: BramConfig::words_used(nodes, edges),
-                }
-            })
-            .collect()
-    });
-    // the same check (one implementation) guards direct Simulator
-    // construction, so compile-time and runtime verdicts agree
-    if let Err(SimError::CapacityExceeded { pe, words_needed, words_available }) =
-        crate::sim::check_capacity(g, &place, &cfg)
-    {
-        return Err(CompileError::CapacityExceeded { pe, words_needed, words_available });
-    }
-    let tables = telemetry::timed(tel, "compile", "bake_tables", || {
-        RuntimeTables::build_shared(g, &place, cfg.cols, cfg.rows)
-    });
+    let mut cx = PassCtx::new(g, cfg);
+    PassManager::standard(&cfg).run(&mut cx, tel)?;
+    let (exec, map, place, crit, pe_images, tables, diagnostics, pass_stats) = cx.into_parts();
     Ok(Artifact {
-        place: Arc::new(place),
-        criticality: crit,
-        pe_images,
+        place: Arc::new(place.expect("standard pipeline places")),
+        criticality: crit.expect("standard pipeline labels criticality"),
+        pe_images: pe_images.expect("standard pipeline summarizes BRAM images"),
         flags: FlagLayout::of(&cfg.bram),
-        tables,
+        tables: tables.expect("standard pipeline bakes tables"),
+        exec,
+        map,
+        diagnostics,
+        pass_stats,
     })
 }
 
@@ -214,17 +251,21 @@ pub struct Program<'g> {
 }
 
 impl<'g> Program<'g> {
-    /// Compile `g` for `overlay`: label criticality (one reverse
-    /// topological sweep), place (criticality-sorted local layouts), and
-    /// summarize per-PE BRAM images. This is the entire one-time cost —
-    /// every [`Session`] run afterwards starts from here for free.
+    /// Compile `g` for `overlay` by running the standard pass pipeline
+    /// ([`PassManager::standard`]): verify, optional transforms (`opt`
+    /// overlays), criticality labeling (one reverse topological sweep),
+    /// placement (criticality-sorted local layouts), BRAM image
+    /// summaries and the runtime-table bake. This is the entire
+    /// one-time cost — every [`Session`] run afterwards starts from
+    /// here for free.
     pub fn compile(g: &'g DataflowGraph, overlay: &Overlay) -> Result<Self, CompileError> {
         Self::compile_with(g, overlay, None)
     }
 
     /// [`Program::compile`] with a telemetry registry attached: each
-    /// compile stage (criticality, place, BRAM images, table bake) runs
-    /// inside a timed span on the `"compile"` track.
+    /// pass (verify, criticality, place, bram_images, bake_tables, plus
+    /// the transforms on `opt` overlays) runs inside a timed span on
+    /// the `"compile"` track.
     pub fn compile_with(
         g: &'g DataflowGraph,
         overlay: &Overlay,
@@ -237,9 +278,39 @@ impl<'g> Program<'g> {
         })
     }
 
-    /// The compiled graph.
+    /// The compiled graph, as handed to [`Program::compile`] — the id
+    /// domain of `values()`, traces and stats.
     pub fn graph(&self) -> &'g DataflowGraph {
         self.g
+    }
+
+    /// The graph the artifact actually *executes*: the transform
+    /// pipeline's rewrite when one ran (`opt` overlays), else the
+    /// original. Placement, criticality and PE images are all in this
+    /// graph's id domain; the baked tables remap the external surface
+    /// back to [`Program::graph`] order.
+    pub fn exec_graph(&self) -> &DataflowGraph {
+        self.art.exec.as_deref().unwrap_or(self.g)
+    }
+
+    /// The original→compiled id map recorded by the transform passes
+    /// (`None` when no transform changed the graph).
+    pub fn node_map(&self) -> Option<&NodeMap> {
+        self.art.map.as_ref()
+    }
+
+    /// Warning-severity diagnostics the pass pipeline attached at
+    /// compile time (capacity pressure, dead inputs, fanout hotspots).
+    /// Error-severity findings never reach here — they fail the compile
+    /// as [`CompileError::InvalidGraph`].
+    pub fn diagnostics(&self) -> &[Diagnostic] {
+        &self.art.diagnostics
+    }
+
+    /// Per-pass wall-clock timing and detail lines, in pipeline order —
+    /// the data behind `tdp run/perf --dump-passes`.
+    pub fn pass_stats(&self) -> &[PassStat] {
+        &self.art.pass_stats
     }
 
     /// The overlay this program was compiled for.
@@ -247,7 +318,8 @@ impl<'g> Program<'g> {
         &self.overlay
     }
 
-    /// The node→PE placement and per-PE memory layouts.
+    /// The node→PE placement and per-PE memory layouts (in
+    /// [`Program::exec_graph`] id domain).
     pub fn placement(&self) -> &Placement {
         &self.art.place
     }
@@ -269,12 +341,13 @@ impl<'g> Program<'g> {
         Arc::clone(&self.art.tables)
     }
 
-    /// Per-node criticality labels (§II-B: height to the farthest sink).
+    /// Per-node criticality labels (§II-B: height to the farthest
+    /// sink), indexed by [`Program::exec_graph`] node id.
     pub fn criticality(&self) -> &[u32] {
         &self.art.criticality
     }
 
-    /// Per-PE BRAM image summaries.
+    /// Per-PE BRAM image summaries (of the executed graph).
     pub fn pe_images(&self) -> &[PeImage] {
         &self.art.pe_images
     }
@@ -290,10 +363,38 @@ impl<'g> Program<'g> {
     }
 
     /// Does every PE's image fit `kind`'s BRAM budget? The capacity-scan
-    /// query: one compile answers it for every scheduler.
+    /// query: one compile answers it for every scheduler. When this is
+    /// `false`, [`Program::fit_violations`] names the offending PEs and
+    /// quantifies each overflow.
     pub fn fits(&self, kind: SchedulerKind) -> bool {
         let budget = self.overlay.config().bram.graph_words(kind);
         self.max_graph_words() <= budget
+    }
+
+    /// Every PE whose image exceeds `kind`'s BRAM budget, with the
+    /// overflow in words and approximate nodes — the explanation behind
+    /// a `false` [`Program::fits`]. Empty exactly when the program fits.
+    pub fn fit_violations(&self, kind: SchedulerKind) -> Vec<FitViolation> {
+        let budget = self.overlay.config().bram.graph_words(kind);
+        self.art
+            .pe_images
+            .iter()
+            .enumerate()
+            .filter(|(_, img)| img.graph_words > budget)
+            .map(|(pe, img)| {
+                let words_over = img.graph_words - budget;
+                let words_per_node = (img.graph_words / img.nodes.max(1)).max(1);
+                FitViolation {
+                    pe,
+                    nodes: img.nodes,
+                    edges: img.edges,
+                    graph_words: img.graph_words,
+                    budget,
+                    words_over,
+                    nodes_over: words_over.div_ceil(words_per_node),
+                }
+            })
+            .collect()
     }
 
     /// Open a session at the overlay's default scheduler/backend.
@@ -417,10 +518,17 @@ impl<'p, 'g> Session<'p, 'g> {
 
     /// Construct (without running) the configured engine backend — for
     /// callers that need `values()` or incremental control afterwards.
-    /// Runs straight off the compiled artifact's baked tables: no
-    /// placement, labeling or flattening work happens here.
-    pub fn backend(&self) -> Result<Box<dyn SimBackend + 'g>, SimError> {
-        engine::backend_with_tables(self.program.graph(), self.program.runtime_tables(), self.cfg)
+    /// Runs straight off the compiled artifact's baked tables (over the
+    /// program's [`Program::exec_graph`]): no placement, labeling or
+    /// flattening work happens here. `values()` on the backend is in
+    /// *original* graph order regardless of transforms — the tables
+    /// carry the remap.
+    pub fn backend(&self) -> Result<Box<dyn SimBackend + 'p>, SimError> {
+        engine::backend_with_tables(
+            self.program.exec_graph(),
+            self.program.runtime_tables(),
+            self.cfg,
+        )
     }
 
     /// Run the compiled program to completion on this session's variant.
@@ -624,7 +732,7 @@ mod tests {
             .filter(|s| s.track == "compile")
             .map(|s| s.name)
             .collect();
-        assert_eq!(stages, ["criticality", "place", "bram_images", "bake_tables"]);
+        assert_eq!(stages, ["verify", "criticality", "place", "bram_images", "bake_tables"]);
         assert_eq!(reg.counter("compile.programs"), 1);
 
         let plain = program.session().run().unwrap();
@@ -643,7 +751,54 @@ mod tests {
         // the owned compile path threads telemetry identically
         let reg2 = Registry::new();
         SharedProgram::compile_with(Arc::new(g), &overlay, Some(&reg2)).unwrap();
-        assert_eq!(reg2.spans().len(), 4);
+        assert_eq!(reg2.spans().len(), 5);
+    }
+
+    #[test]
+    fn fit_violations_name_the_overflowing_pes() {
+        let g = layered_random(64, 32, 128, 2, 0);
+        let program = Program::compile(&g, &overlay_2x2()).unwrap();
+        assert!(!program.fits(SchedulerKind::InOrder));
+        let v = program.fit_violations(SchedulerKind::InOrder);
+        assert!(!v.is_empty(), "a failed fit is itemized");
+        for f in &v {
+            assert_eq!(f.words_over, f.graph_words - f.budget);
+            assert!(f.nodes_over >= 1, "overflow expressed in nodes");
+            assert_eq!(f.graph_words, BramConfig::words_used(f.nodes, f.edges));
+        }
+        // the larger OoO budget can only shrink the violation list
+        assert!(program.fit_violations(SchedulerKind::OutOfOrder).len() <= v.len());
+        let small = layered_random(8, 4, 12, 2, 1);
+        let p2 = Program::compile(&small, &overlay_2x2()).unwrap();
+        assert!(p2.fits(SchedulerKind::OutOfOrder));
+        assert!(p2.fit_violations(SchedulerKind::OutOfOrder).is_empty());
+    }
+
+    #[test]
+    fn invalid_graph_fails_compile_with_diagnostics() {
+        let bad = r#"{"nodes":[{"in":1.0},{"op":"ADD","src":[2,0]},{"op":"MUL","src":[1,0]}]}"#;
+        let g = crate::graph::graph_from_json_raw(bad).unwrap();
+        match Program::compile(&g, &overlay_2x2()) {
+            Err(CompileError::InvalidGraph { diagnostics }) => {
+                assert!(diagnostics.iter().any(|d| d.code == "cycle"), "{diagnostics:?}");
+                assert!(diagnostics
+                    .iter()
+                    .all(|d| d.severity == crate::passes::Severity::Error));
+            }
+            Err(other) => panic!("expected InvalidGraph, got {other:?}"),
+            Ok(_) => panic!("cyclic graph must not compile"),
+        }
+    }
+
+    #[test]
+    fn default_pipeline_leaves_the_graph_alone_and_reports_passes() {
+        let g = layered_random(8, 4, 12, 2, 1);
+        let program = Program::compile(&g, &overlay_2x2()).unwrap();
+        let names: Vec<_> = program.pass_stats().iter().map(|s| s.name).collect();
+        assert_eq!(names, ["verify", "criticality", "place", "bram_images", "bake_tables"]);
+        assert!(program.node_map().is_none(), "no transform on the default pipeline");
+        assert_eq!(program.exec_graph().fingerprint(), g.fingerprint());
+        assert_eq!(program.runtime_tables().values_len, g.len());
     }
 
     #[test]

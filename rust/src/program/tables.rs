@@ -78,10 +78,17 @@ pub struct RuntimeTables {
     pub routes: Vec<Packet>,
     /// dense id → graph node id (for `values()` mirroring / debug)
     pub global_of: Vec<u32>,
-    /// graph node id → dense id (inverse permutation)
+    /// graph node id → dense id (inverse permutation). In a remapped
+    /// image ([`RuntimeTables::build_remapped`]) this is indexed by
+    /// *original* ids: eliminated nodes hold `u32::MAX`, replicated
+    /// nodes their first replica's dense id.
     pub dense_of: Vec<u32>,
     /// graph inputs in node-id order (the seed marking order)
     pub seeds: Vec<SeedEntry>,
+    /// length of the external `values()` / trace domain — the original
+    /// graph's node count. Equals [`RuntimeTables::len`] unless the
+    /// tables were baked remapped over a transformed graph.
+    pub values_len: usize,
 }
 
 impl RuntimeTables {
@@ -155,7 +162,54 @@ impl RuntimeTables {
             global_of: layout.global_of,
             dense_of: layout.dense_of,
             seeds,
+            values_len: n,
         }
+    }
+
+    /// [`RuntimeTables::build`] over a *transformed* graph, with the
+    /// external id surface remapped back to the original graph through
+    /// `map` (the pass pipeline's accumulated original→compiled map).
+    /// The hot-path arrays (`op`/`arity`/`routes`/`pe_base`) stay in
+    /// the transformed graph's domain — that is what executes — but
+    /// `global_of`, `dense_of`, `seeds[].global` and `values_len` speak
+    /// original ids, so `values()` and traces keep original graph
+    /// order. Replicas of one original all mirror into the same slot
+    /// (they carry the same value by construction); eliminated
+    /// originals keep `dense_of == u32::MAX` and a 0.0 value.
+    pub fn build_remapped(
+        g: &DataflowGraph,
+        place: &Placement,
+        cols: usize,
+        rows: usize,
+        map: &crate::passes::NodeMap,
+    ) -> Self {
+        debug_assert_eq!(map.orig_of.len(), g.len(), "map covers the transformed graph");
+        let mut t = Self::build(g, place, cols, rows);
+        t.values_len = map.orig_len;
+        for s in &mut t.seeds {
+            s.global = map.orig_of[s.global as usize];
+        }
+        for slot in &mut t.global_of {
+            *slot = map.orig_of[*slot as usize];
+        }
+        let mut dense_of = vec![u32::MAX; map.orig_len];
+        for (dense, &orig) in t.global_of.iter().enumerate() {
+            let slot = &mut dense_of[orig as usize];
+            *slot = (*slot).min(dense as u32);
+        }
+        t.dense_of = dense_of;
+        t
+    }
+
+    /// [`RuntimeTables::build_remapped`] behind an `Arc`.
+    pub fn build_remapped_shared(
+        g: &DataflowGraph,
+        place: &Placement,
+        cols: usize,
+        rows: usize,
+        map: &crate::passes::NodeMap,
+    ) -> Arc<Self> {
+        Arc::new(Self::build_remapped(g, place, cols, rows, map))
     }
 
     /// [`RuntimeTables::build`] behind an `Arc` (the shape every
@@ -328,5 +382,35 @@ mod tests {
         for (pe, locals) in place.nodes_of.iter().enumerate() {
             assert_eq!(nodes[pe], locals.len());
         }
+    }
+
+    /// A remapped bake keeps the external id surface in *original*
+    /// graph order while the executable arrays stay compiled-domain.
+    #[test]
+    fn remapped_tables_speak_original_ids() {
+        // original: diamond + a dead input at id 2; DCE drops it
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(3.0);
+        let b = g.add_input(4.0);
+        let _dead = g.add_input(9.0);
+        let s = g.op(Op::Add, &[a, b]);
+        g.op(Op::Sub, &[s, s]);
+        let (g2, map) = crate::passes::dce::run(&g).expect("one dead input");
+        let place = Placement::build(&g2, 2, PlacementPolicy::RoundRobin, LocalOrder::ByNodeId, 0);
+        let t = RuntimeTables::build_remapped(&g2, &place, 2, 1, &map);
+        assert_eq!(t.len(), 4, "executable image is the compiled graph");
+        assert_eq!(t.values_len, 5, "external domain is the original graph");
+        // global_of names original ids (dead id 2 absent); dense_of is
+        // total over originals with MAX for the eliminated node
+        let mut named: Vec<u32> = t.global_of.clone();
+        named.sort_unstable();
+        assert_eq!(named, vec![0, 1, 3, 4]);
+        assert_eq!(t.dense_of[2], u32::MAX);
+        for orig in [0u32, 1, 3, 4] {
+            assert_eq!(t.global_of[t.dense_of[orig as usize] as usize], orig);
+        }
+        // seeds carry original ids and original values
+        let globals: Vec<u32> = t.seeds.iter().map(|s| s.global).collect();
+        assert_eq!(globals, vec![0, 1]);
     }
 }

@@ -52,6 +52,11 @@ pub enum SimError {
     /// a PE's local subgraph exceeds its BRAM budget
     /// (only when `enforce_capacity` is set).
     CapacityExceeded { pe: usize, words_needed: usize, words_available: usize },
+    /// the compile pass pipeline's verifier rejected the graph with
+    /// `errors` error-severity diagnostics (run `tdp check` for the
+    /// full report) — the simulator-error image of
+    /// [`crate::program::CompileError::InvalidGraph`].
+    InvalidProgram { errors: usize },
 }
 
 impl std::fmt::Display for SimError {
@@ -64,6 +69,11 @@ impl std::fmt::Display for SimError {
             SimError::CapacityExceeded { pe, words_needed, words_available } => write!(
                 f,
                 "PE {pe} needs {words_needed} BRAM words, has {words_available}"
+            ),
+            SimError::InvalidProgram { errors } => write!(
+                f,
+                "program failed verification with {errors} error diagnostic(s); \
+                 run `tdp check` for the report"
             ),
         }
     }
@@ -180,9 +190,20 @@ pub struct Simulator<'g> {
 }
 
 impl<'g> Simulator<'g> {
-    /// Build a simulator; places the graph according to `cfg`.
+    /// Build a simulator; places the graph according to `cfg` (on the
+    /// overlay's actual torus geometry, so geometry-aware policies like
+    /// [`crate::place::PlacementPolicy::TrafficAware`] see the real
+    /// shape).
     pub fn new(g: &'g DataflowGraph, cfg: OverlayConfig) -> Result<Self, SimError> {
-        let place = Placement::build(g, cfg.num_pes(), cfg.placement, cfg.local_order, cfg.seed);
+        let place = Placement::build_for_torus(
+            g,
+            cfg.cols,
+            cfg.rows,
+            cfg.placement,
+            cfg.local_order,
+            cfg.seed,
+            None,
+        );
         Self::with_placement(g, place, cfg)
     }
 
@@ -269,6 +290,7 @@ impl<'g> Simulator<'g> {
         assert_eq!(tables.len(), g.len(), "tables baked for another graph");
         tables.check_capacity(&cfg)?;
         let n = tables.len();
+        let tables_values_len = tables.values_len;
         let num_pes = cfg.num_pes();
         let pes = (0..num_pes)
             .map(|pe| PeUnit {
@@ -292,7 +314,9 @@ impl<'g> Simulator<'g> {
             operand: vec![[0f32; 2]; n],
             arrived: vec![0u8; n],
             computed: vec![false; n],
-            value_global: vec![0f32; n],
+            // sized by the *external* id domain: the original graph's
+            // node count when the tables were baked remapped
+            value_global: vec![0f32; tables_values_len],
             completed: 0,
             cycle: 0,
             inject_req: vec![None; num_pes],

@@ -165,6 +165,17 @@ pub fn parse_matrix_market(text: &str) -> Result<SparseMatrix, String> {
     if nr != nc {
         return Err(format!("matrix must be square, got {nr}x{nc}"));
     }
+    // Node ids are u32 throughout the stack (graph IR, NoC packets,
+    // route tables). The elimination DAG emits several nodes per stored
+    // entry plus one per row, so reject anything that could not derive
+    // an addressable graph instead of silently truncating ids later.
+    const MAX_ITEMS: usize = (u32::MAX / 4) as usize;
+    if nr > MAX_ITEMS || nnz > MAX_ITEMS {
+        return Err(format!(
+            "matrix too large for u32 node ids: {nr} rows / {nnz} nonzeros \
+             exceeds the {MAX_ITEMS}-item ceiling of the derived dataflow graph"
+        ));
+    }
     let mut m = SparseMatrix::empty(nr);
     let mut count = 0usize;
     let mut rng = Rng::seed_from_u64(0x4d4d);
@@ -301,6 +312,19 @@ mod tests {
         let m = parse_matrix_market(text).unwrap();
         assert_eq!(m.n, 2);
         assert!(m.get(1, 1).is_some());
+    }
+
+    #[test]
+    fn matrix_market_u32_range_guarded() {
+        // a size line promising more items than u32 node ids can address
+        // is rejected up front, before any entry parsing
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    4000000000 4000000000 1\n1 1 1.0\n";
+        let err = parse_matrix_market(text).unwrap_err();
+        assert!(err.contains("u32"), "error must name the id range: {err}");
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    3 3 4000000000\n1 1 1.0\n";
+        assert!(parse_matrix_market(text).unwrap_err().contains("u32"));
     }
 
     #[test]

@@ -471,6 +471,95 @@ fn perf_rejects_unknown_format() {
     assert!(!out.status.success());
 }
 
+/// `tdp check` on clean workloads: exit 0, diagnostic-free report in
+/// both formats (this is exactly what CI's check-smoke job gates on).
+#[test]
+fn check_clean_workload_exits_zero() {
+    let text = run_ok(&["check", "reduction:64"]);
+    assert!(text.contains("0 error(s)"), "{text}");
+    let text = run_ok(&["check", "lu_pl:60:3:seed=42", "--cols", "4", "--rows", "4", "--format", "json"]);
+    let j = tdp::util::json::parse(text.trim()).unwrap();
+    assert_eq!(j.get("errors").unwrap().as_f64(), Some(0.0));
+    assert!(j.get("nodes").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(j.get("workload").unwrap().as_str(), Some("lu_pl:60:3:seed=42"));
+}
+
+/// The checked-in known-bad fixture exits non-zero with the expected
+/// structured diagnostics on stdout.
+#[test]
+fn check_bad_fixture_exits_nonzero_with_cycle_code() {
+    let fixture =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data/bad_cycle.json");
+    let out = tdp()
+        .args(["check", "--graph", fixture.to_str().unwrap(), "--format", "json"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "error diagnostics must fail the check");
+    let j = tdp::util::json::parse(String::from_utf8_lossy(&out.stdout).trim()).unwrap();
+    assert!(j.get("errors").unwrap().as_f64().unwrap() >= 1.0);
+    let codes: Vec<&str> = j
+        .get("diagnostics")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|d| d.get("code").unwrap().as_str().unwrap())
+        .collect();
+    assert!(codes.contains(&"cycle"), "{codes:?}");
+    // text mode renders the same diagnostics human-readably
+    let out = tdp().args(["check", "--graph", fixture.to_str().unwrap()]).output().unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("error[cycle]"), "{text}");
+}
+
+/// `--dump-passes` prints the per-pass compile table on stderr without
+/// touching the stdout payload.
+#[test]
+fn run_dump_passes_prints_pipeline_table() {
+    let out = tdp()
+        .args([
+            "run",
+            "--workload",
+            "kind = \"reduction\"\\nwidth = 64",
+            "--cols",
+            "2",
+            "--rows",
+            "2",
+            "--scheduler",
+            "out_of_order",
+            "--format",
+            "json",
+            "--dump-passes",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    for pass in ["verify", "criticality", "place", "bram_images", "bake_tables"] {
+        assert!(err.contains(pass), "missing pass '{pass}' in: {err}");
+    }
+    let stats = tdp::SimStats::from_json(String::from_utf8_lossy(&out.stdout).trim())
+        .expect("stdout still carries the stats object");
+    assert!(stats.cycles > 0);
+}
+
+/// The perf JSON carries the placement-quality section (baseline vs
+/// traffic-aware), outside `cases` so the BENCH trajectory stays
+/// comparable.
+#[test]
+fn perf_quick_reports_placement_quality() {
+    let text = run_ok(&["perf", "--quick", "--reps", "1"]);
+    let j = tdp::util::json::parse(text.trim()).unwrap();
+    let pq = j.get("placement_quality").unwrap().as_arr().unwrap();
+    assert_eq!(pq.len(), 1, "quick set pins one placement case");
+    let row = &pq[0];
+    assert!(row.get("baseline_cycles").unwrap().as_f64().unwrap() > 0.0);
+    assert!(row.get("traffic_aware_cycles").unwrap().as_f64().unwrap() > 0.0);
+    assert!(row.get("traffic_aware_cost").unwrap().as_f64().unwrap() > 0.0);
+    assert!(row.get("cycle_ratio").unwrap().as_f64().unwrap() > 0.0);
+}
+
 #[test]
 fn unknown_command_fails() {
     let out = tdp().arg("frobnicate").output().unwrap();

@@ -30,6 +30,7 @@ fn every_field_nondefault() -> OverlayConfig {
         seed: 123_456_789,
         max_cycles: 77_000,
         enforce_capacity: true,
+        opt: true,
         backend: BackendKind::SkipAhead,
     };
     let d = OverlayConfig::default();
@@ -43,6 +44,7 @@ fn every_field_nondefault() -> OverlayConfig {
     assert_ne!(cfg.seed, d.seed);
     assert_ne!(cfg.max_cycles, d.max_cycles);
     assert_ne!(cfg.enforce_capacity, d.enforce_capacity);
+    assert_ne!(cfg.opt, d.opt);
     assert_ne!(cfg.backend, d.backend);
     cfg.validate().unwrap();
     cfg

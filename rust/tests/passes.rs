@@ -1,0 +1,215 @@
+//! The pass-pipeline contract (DESIGN.md §12), from the outside:
+//! golden diagnostics on hand-built bad graphs, bit-parity of the
+//! optimizing pipeline (DCE + constant replication) against the plain
+//! one across both engine backends and all four schedulers, and
+//! determinism / path-parity of traffic-aware placement.
+
+use tdp::config::{Overlay, OverlayConfig};
+use tdp::engine::BackendKind;
+use tdp::graph::{graph_from_json_raw, DataflowGraph, Op};
+use tdp::passes::verify::graph_diagnostics;
+use tdp::place::PlacementPolicy;
+use tdp::program::{CompileError, Program};
+use tdp::sched::{LifoSched, RandomSched, Scheduler, SchedulerKind};
+use tdp::sim::Simulator;
+use tdp::workload::layered_random;
+use tdp::Severity;
+
+fn fixture(name: &str) -> String {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data").join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+/// The checked-in known-bad fixture (also used by CI's check-smoke job):
+/// a forward operand reference is reported as a combinational cycle at
+/// the offending node, and the node downstream of it as unreachable —
+/// both at error severity, so compilation refuses the graph with the
+/// same structured report.
+#[test]
+fn golden_diagnostics_on_cycle_fixture() {
+    let g = graph_from_json_raw(&fixture("bad_cycle.json")).unwrap();
+    let diags = graph_diagnostics(&g);
+    let codes: Vec<&str> = diags.iter().map(|d| d.code).collect();
+    assert_eq!(codes, ["cycle", "unreachable"], "{diags:?}");
+    assert_eq!(diags[0].node, Some(1), "cycle pinned to the forward ref");
+    assert_eq!(diags[1].node, Some(2), "consumer of the broken node");
+    assert!(diags.iter().all(|d| d.severity == Severity::Error));
+    let overlay = Overlay::builder().dims(2, 2).build().unwrap();
+    match Program::compile(&g, &overlay) {
+        Err(CompileError::InvalidGraph { diagnostics }) => {
+            let compile_codes: Vec<&str> = diagnostics.iter().map(|d| d.code).collect();
+            assert_eq!(compile_codes, codes, "compile surfaces the verifier's report");
+        }
+        Err(other) => panic!("expected InvalidGraph, got {other}"),
+        Ok(_) => panic!("a cyclic graph must not compile"),
+    }
+}
+
+/// A dangling operand (source id past the end of the graph) is an
+/// error on the referencing node; the input left with no consumers is
+/// a warning, not an error.
+#[test]
+fn golden_diagnostics_on_dangling_operand() {
+    let g = graph_from_json_raw(r#"{"nodes":[{"in":1.0},{"op":"NEG","src":[9]}]}"#).unwrap();
+    let diags = graph_diagnostics(&g);
+    let dangling: Vec<_> = diags.iter().filter(|d| d.code == "dangling-operand").collect();
+    assert_eq!(dangling.len(), 1, "{diags:?}");
+    assert_eq!(dangling[0].node, Some(1));
+    assert_eq!(dangling[0].severity, Severity::Error);
+    assert!(
+        diags.iter().any(|d| d.code == "dead-input" && d.severity == Severity::Warning),
+        "unconsumed input is a warning: {diags:?}"
+    );
+}
+
+/// More nodes on one PE than the 13-bit packet local index can address
+/// is a hard compile error naming the PE — capacity enforcement (off by
+/// default) cannot wave it through.
+#[test]
+fn local_index_overflow_is_a_hard_compile_error() {
+    let mut g = DataflowGraph::new();
+    let mut prev = g.add_input(1.0);
+    for _ in 0..8200 {
+        prev = g.op(Op::Neg, &[prev]);
+    }
+    let overlay = Overlay::builder().dims(1, 1).build().unwrap();
+    match Program::compile(&g, &overlay) {
+        Err(CompileError::LocalIndexOverflow { pe, nodes, max }) => {
+            assert_eq!(pe, 0);
+            assert_eq!(nodes, 8201);
+            assert_eq!(max, 8192);
+        }
+        Err(other) => panic!("expected LocalIndexOverflow, got {other}"),
+        Ok(_) => panic!("8201 nodes on one PE must not compile"),
+    }
+}
+
+/// A graph that exercises both transform passes: two dead inputs (DCE)
+/// and one input with fanout far above the replication threshold.
+fn opt_exercising_graph() -> DataflowGraph {
+    let mut g = DataflowGraph::new();
+    let hot = g.add_input(1.5);
+    let _dead1 = g.add_input(9.0);
+    let x = g.add_input(-2.0);
+    let _dead2 = g.add_input(3.0);
+    let mut acc = g.op(Op::Add, &[hot, x]);
+    for _ in 0..100 {
+        acc = g.op(Op::Add, &[hot, acc]);
+    }
+    g
+}
+
+fn bits_eq(a: f32, b: f32) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+/// ISSUE acceptance (bit-parity): the optimized artifact (`opt = true`:
+/// DCE + constant replication, node ids remapped) reports values in
+/// original-graph order that are bit-identical to the unoptimized
+/// artifact and to the reference evaluation, on every live node, for
+/// the two paper schedulers on both engine backends.
+#[test]
+fn optimized_pipeline_is_bit_identical_on_live_nodes() {
+    let g = opt_exercising_graph();
+    let want = g.evaluate();
+    for backend in BackendKind::ALL {
+        for scheduler in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
+            let cfg = OverlayConfig::default()
+                .with_dims(2, 2)
+                .with_scheduler(scheduler)
+                .with_backend(backend);
+            let mut opt_cfg = cfg;
+            opt_cfg.opt = true;
+            let plain = Program::compile(&g, &Overlay::from_config(cfg).unwrap()).unwrap();
+            let opt = Program::compile(&g, &Overlay::from_config(opt_cfg).unwrap()).unwrap();
+            let tag = format!("{scheduler:?}/{backend:?}");
+            // the transforms actually fired: 2 dead inputs gone, the
+            // hot input split into ceil(101/64) = 2 replicas
+            let map = opt.node_map().expect("opt pipeline records a node map");
+            assert_eq!(opt.exec_graph().len(), g.len() - 2 + 1, "{tag}");
+            assert!(plain.node_map().is_none(), "{tag}: default pipeline is identity");
+            let run = |p: &Program| {
+                let mut be = p.session().backend().unwrap();
+                be.run().unwrap();
+                be.values().to_vec()
+            };
+            let (a, b) = (run(&plain), run(&opt));
+            assert_eq!(a.len(), g.len(), "{tag}: plain values in graph order");
+            assert_eq!(b.len(), g.len(), "{tag}: remapped values in graph order");
+            for i in 0..g.len() as u32 {
+                if !map.is_live(i) {
+                    continue;
+                }
+                let (i, x, y, r) = (i as usize, a[i as usize], b[i as usize], want[i as usize]);
+                assert!(bits_eq(x, y), "{tag}: node {i}: plain {x} vs opt {y}");
+                assert!(bits_eq(y, r), "{tag}: node {i}: opt {y} vs reference {r}");
+            }
+        }
+    }
+}
+
+/// Same parity through the ablation schedulers, driven over the
+/// optimized artifact's baked tables — `values()` still speaks
+/// original-graph ids even though the simulator executes the remapped
+/// graph.
+#[test]
+fn optimized_tables_serve_ablation_schedulers() {
+    let g = opt_exercising_graph();
+    let want = g.evaluate();
+    let mut cfg = OverlayConfig::default().with_dims(2, 2);
+    cfg.opt = true;
+    let program = Program::compile(&g, &Overlay::from_config(cfg).unwrap()).unwrap();
+    let map = program.node_map().unwrap();
+    for which in ["lifo", "random"] {
+        let factory = move |_: SchedulerKind, n: usize| match which {
+            "lifo" => Scheduler::Lifo(LifoSched::new(n)),
+            _ => Scheduler::Random(RandomSched::new(n, 42)),
+        };
+        let mut sim = Simulator::with_tables_and_factory(
+            program.exec_graph(),
+            program.runtime_tables(),
+            cfg,
+            factory,
+        )
+        .unwrap();
+        let stats = sim.run().unwrap();
+        assert_eq!(stats.completed, program.exec_graph().len(), "{which}");
+        let vals = sim.values();
+        assert_eq!(vals.len(), g.len(), "{which}: original-graph order");
+        for i in 0..g.len() as u32 {
+            if map.is_live(i) {
+                let (v, r) = (vals[i as usize], want[i as usize]);
+                assert!(bits_eq(v, r), "{which}: node {i}: sim {v} vs reference {r}");
+            }
+        }
+    }
+}
+
+/// Traffic-aware placement is deterministic under a fixed seed — the
+/// annealer's RNG is derived from the config seed, so two compiles of
+/// the same graph agree assignment-for-assignment — and the direct
+/// `Simulator::new` path (which computes its own criticality labels)
+/// lands on the identical placement and stats as the compile pipeline.
+#[test]
+fn traffic_aware_placement_is_deterministic() {
+    let g = layered_random(32, 8, 64, 2, 11);
+    let compile = || {
+        let overlay = Overlay::builder()
+            .dims(4, 4)
+            .placement(PlacementPolicy::TrafficAware)
+            .build()
+            .unwrap();
+        Program::compile(&g, &overlay).unwrap()
+    };
+    let (p1, p2) = (compile(), compile());
+    assert_eq!(p1.placement().pe_of, p2.placement().pe_of, "assignment reproduces");
+    assert_eq!(p1.placement().local_of, p2.placement().local_of, "layout reproduces");
+    let (s1, s2) = (p1.session().run().unwrap(), p2.session().run().unwrap());
+    assert_eq!(s1, s2, "runs reproduce");
+    let mut cfg = OverlayConfig::default().with_dims(4, 4);
+    cfg.placement = PlacementPolicy::TrafficAware;
+    let mut sim = Simulator::new(&g, cfg).unwrap();
+    assert_eq!(sim.run().unwrap(), s1, "direct path matches the compiled artifact");
+    let n_pes = p1.placement().num_pes as u32;
+    assert!(p1.placement().pe_of.iter().all(|&pe| pe < n_pes));
+}

@@ -145,8 +145,12 @@ fn capacity_error_shapes_agree_across_paths() {
     let mut cfg = OverlayConfig::default().with_dims(1, 1);
     cfg.enforce_capacity = true;
     let overlay = Overlay::from_config(cfg).unwrap();
-    let CompileError::CapacityExceeded { pe, words_needed, words_available } =
-        Program::compile(&g, &overlay).unwrap_err();
+    let (pe, words_needed, words_available) = match Program::compile(&g, &overlay).unwrap_err() {
+        CompileError::CapacityExceeded { pe, words_needed, words_available } => {
+            (pe, words_needed, words_available)
+        }
+        other => panic!("expected CapacityExceeded, got {other}"),
+    };
     #[allow(deprecated)]
     let shim_err = tdp::engine::run_with_backend(&g, cfg).unwrap_err();
     assert_eq!(

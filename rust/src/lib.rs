@@ -40,6 +40,12 @@
 //! assert!(warm.cache_hit && warm.stats == cold.stats);
 //! # Ok(()) }
 //! ```
+//!
+//! Daemon (DESIGN.md §13) — the same engine behind a socket: `tdp
+//! serve` runs a [`serve::Daemon`] (bounded fair admission queue,
+//! worker pool, graceful drain, `stats` endpoint) so the Program cache
+//! amortizes across many clients; `tdp batch --connect` and `tdp top`
+//! are its clients.
 
 pub mod config;
 pub mod coordinator;
@@ -56,6 +62,7 @@ pub mod program;
 pub mod resource;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod service;
 pub mod sim;
 pub mod telemetry;
@@ -71,6 +78,7 @@ pub use program::{
     run_batch, CompileError, Program, RunVariant, RuntimeTables, Session, SharedProgram,
 };
 pub use sched::SchedulerKind;
+pub use serve::{Daemon, DaemonHandle, ServeConfig};
 pub use service::{Engine, JobResult, JobSpec};
 pub use sim::{SimError, SimStats, Simulator};
 pub use telemetry::{Registry, Telemetry};

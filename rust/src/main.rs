@@ -19,6 +19,8 @@ use tdp::program::{self, Program};
 use tdp::resource;
 use tdp::runtime::XlaRuntime;
 use tdp::sched::SchedulerKind;
+use tdp::serve::client as serve_client;
+use tdp::serve::{Daemon, ServeConfig};
 use tdp::service::{Engine, JobSpec};
 use tdp::sim::SimStats;
 use tdp::telemetry::{self, Registry};
@@ -50,13 +52,34 @@ COMMANDS
               executing anything; --graph uses the *raw* JSON loader so
               broken graphs load far enough to be diagnosed; exit code 1
               iff any error-severity diagnostic fires
-  batch       serve a job stream             <jobs.jsonl> [--workers N (0 = all cores)
-              --cache 64 --metrics-out file]
+  batch       serve a job stream             <jobs.jsonl | -> [--workers N (0 = all cores)
+              --cache 64 --metrics-out file --connect host:port]
               one JSON job per line in ({\"workload\": \"chain:4096:seed=7\", ...}),
               one JSON result per line out, same order; repeated workloads
               compile once (content-addressed Program cache); non-zero exit
               if any job failed; --metrics-out dumps the engine metrics
-              snapshot (cache hits/misses, latency percentiles) as JSON
+              snapshot (cache hits/misses, latency percentiles) as JSON;
+              '-' reads the JSONL from stdin (shell pipelines); --connect
+              streams the same lines through a running 'tdp serve' daemon
+              instead of an in-process engine (--workers/--cache are
+              daemon-side knobs then and are rejected here)
+  serve       long-lived job daemon          [--listen 127.0.0.1:7411 --workers N (0 = all
+              cores) --queue 256 --cache 64 --metrics-out file]
+              speaks the batch JobSpec/JobResult JSON as JSONL over TCP
+              (seq-tagged responses, pipelining-safe) plus control lines
+              {\"control\": \"stats\" | \"ping\" | \"shutdown\"}; one shared
+              Engine so compiles amortize across every client; bounded
+              admission queue with round-robin per-client fairness
+              (queue-full is a structured error, never a disconnect);
+              graceful drain on SIGTERM/SIGINT/shutdown finishes all
+              admitted jobs before exit; --metrics-out writes the final
+              stats document after the drain
+  top         live daemon dashboard          <host:port> [--format text|json
+              --interval-ms 1000 --iters 0 (0 = forever)]
+              polls the stats endpoint into a refreshing terminal view:
+              queue depth, per-client in-flight, cache economics
+              (hit/miss/eviction), and latency percentiles; --format json
+              prints the raw stats documents for scripts/CI
   sweep       regenerate Figure 1            [--cols 16 --rows 16 --seed 42
               --backend lockstep|skip-ahead
               --jobs N (0 = all cores; --threads is a legacy alias)
@@ -365,12 +388,14 @@ fn cmd_check(mut argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
-/// `tdp batch <jobs.jsonl>` — the service entry point: one JSON job per
-/// input line, one JSON result per output line (same order), all jobs
-/// executed over one [`Engine`] so repeated workloads compile exactly
-/// once. A malformed line or failed job becomes a `{"line": N,
-/// "error": ...}` output line and a non-zero exit at the end; the other
-/// jobs still run. Cache counters go to stderr.
+/// `tdp batch <jobs.jsonl | ->` — the service entry point: one JSON job
+/// per input line (from a file, or stdin with `-`), one JSON result per
+/// output line (same order), all jobs executed over one [`Engine`] so
+/// repeated workloads compile exactly once. A malformed line or failed
+/// job becomes a `{"line": N, "error": ...}` output line and a non-zero
+/// exit at the end; the other jobs still run. Cache counters go to
+/// stderr. With `--connect` the same lines stream through a running
+/// `tdp serve` daemon instead of an in-process engine.
 fn cmd_batch(mut argv: Vec<String>) -> Result<()> {
     let positional = if argv.first().is_some_and(|s| !s.starts_with("--")) {
         Some(argv.remove(0))
@@ -382,15 +407,32 @@ fn cmd_batch(mut argv: Vec<String>) -> Result<()> {
         Some(p) => p,
         None => a.str_req("file")?,
     };
+    let connect = a.str_opt("connect")?;
+    let metrics_out = a.str_opt("metrics-out")?;
+    let text = if path == "-" {
+        use std::io::Read;
+        let mut buf = String::new();
+        std::io::stdin()
+            .read_to_string(&mut buf)
+            .map_err(|e| anyhow!("cannot read jobs from stdin: {e}"))?;
+        buf
+    } else {
+        std::fs::read_to_string(&path)
+            .map_err(|e| anyhow!("cannot read job file '{path}': {e}"))?
+    };
+    if let Some(addr) = connect {
+        // --workers/--cache size the daemon, not this client: finish()
+        // rejects them here so they fail loudly instead of silently
+        // doing nothing
+        a.finish()?;
+        return batch_over_socket(&addr, &text, metrics_out);
+    }
     let mut workers = a.usize_or("workers", 0)?;
     let cache = a.usize_or("cache", tdp::service::DEFAULT_CACHE_CAPACITY)?;
-    let metrics_out = a.str_opt("metrics-out")?;
     a.finish()?;
     if workers == 0 {
         workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     }
-    let text = std::fs::read_to_string(&path)
-        .map_err(|e| anyhow!("cannot read job file '{path}': {e}"))?;
     // parse every line up front: line numbers are part of the protocol
     let parsed: Vec<(usize, Result<JobSpec, String>)> = text
         .lines()
@@ -441,6 +483,167 @@ fn cmd_batch(mut argv: Vec<String>) -> Result<()> {
         bail!("{failed} of {} jobs failed", parsed.len());
     }
     Ok(())
+}
+
+/// `tdp batch --connect` — stream the same JSONL through a running
+/// `tdp serve` daemon. Output keeps the in-process contract: one line
+/// per input line, in input order (`result` objects verbatim, failures
+/// as `{"line": N, "code": ..., "error": ...}`), non-zero exit if any
+/// job failed. The parsing happens daemon-side; this end only tags
+/// lines and reassembles seq-ordered responses.
+fn batch_over_socket(addr: &str, text: &str, metrics_out: Option<String>) -> Result<()> {
+    let lines: Vec<(usize, String)> = text
+        .lines()
+        .enumerate()
+        .filter(|(_, line)| !line.trim().is_empty())
+        .map(|(i, line)| (i + 1, line.to_string()))
+        .collect();
+    let requests: Vec<String> = lines.iter().map(|(_, l)| l.clone()).collect();
+    let responses = serve_client::submit_raw_lines(addr, &requests)
+        .map_err(|e| anyhow!("daemon at {addr}: {e}"))?;
+    let mut failed = 0usize;
+    for ((line_no, _), response) in lines.iter().zip(&responses) {
+        match response.get("result") {
+            Some(result) => println!("{}", json::write(result)),
+            None => {
+                failed += 1;
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("line".to_string(), Json::Num(*line_no as f64));
+                if let Some(code) = response.get("code") {
+                    m.insert("code".to_string(), code.clone());
+                }
+                let err = response
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("daemon returned neither result nor error");
+                m.insert("error".to_string(), Json::Str(err.to_string()));
+                println!("{}", json::write(&Json::Obj(m)));
+            }
+        }
+    }
+    eprintln!(
+        "batch: jobs={} ok={} failed={failed} via {addr}",
+        lines.len(),
+        lines.len() - failed
+    );
+    // --metrics-out in connect mode captures the *daemon's* stats
+    // document — the engine counters live there, not in this process
+    if let Some(path) = &metrics_out {
+        let stats = serve_client::fetch_stats(addr).map_err(|e| anyhow!("stats from {addr}: {e}"))?;
+        std::fs::write(path, json::write(&stats))?;
+        eprintln!("wrote {path}");
+    }
+    if failed > 0 {
+        bail!("{failed} of {} jobs failed", lines.len());
+    }
+    Ok(())
+}
+
+/// `tdp serve` — the long-lived daemon over one shared [`Engine`]
+/// (DESIGN.md §13). Blocks until drained (SIGTERM/SIGINT or a
+/// `shutdown` control line), finishing every admitted job first.
+fn cmd_serve(mut a: Args) -> Result<()> {
+    use std::sync::atomic::Ordering;
+    let listen = a.str_or("listen", "127.0.0.1:7411")?;
+    let cfg = ServeConfig {
+        workers: a.usize_or("workers", 0)?,
+        queue_capacity: a.usize_or("queue", tdp::serve::DEFAULT_QUEUE_CAPACITY)?,
+        cache_capacity: a.usize_or("cache", tdp::service::DEFAULT_CACHE_CAPACITY)?,
+    };
+    let metrics_out = a.str_opt("metrics-out")?;
+    a.finish()?;
+    let registry = std::sync::Arc::new(Registry::new());
+    let daemon = Daemon::bind(listen.as_str(), cfg, std::sync::Arc::clone(&registry))
+        .map_err(|e| anyhow!("cannot listen on {listen}: {e}"))?;
+    let handle = daemon.handle();
+    let stats = handle.stats_json();
+    let d = |k: &str| {
+        stats.get("daemon").and_then(|d| d.get(k)).and_then(Json::as_u64).unwrap_or(0)
+    };
+    // the banner is the port-discovery contract for --listen :0 (tests,
+    // scripts): stderr, one line, "listening on <resolved addr>"
+    eprintln!(
+        "tdp serve: listening on {} (workers={}, queue={}, cache={})",
+        daemon.local_addr(),
+        d("workers"),
+        d("queue_capacity"),
+        cfg.cache_capacity,
+    );
+    // SIGTERM/SIGINT → the same drain path as a shutdown control line
+    let flag = tdp::serve::signal::install_shutdown_flag();
+    let sig_handle = handle.clone();
+    std::thread::spawn(move || loop {
+        if flag.load(Ordering::SeqCst) {
+            eprintln!("tdp serve: signal received, draining");
+            sig_handle.drain();
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    });
+    daemon.run()?;
+    let stats = handle.stats_json();
+    let d = |k: &str| {
+        stats.get("daemon").and_then(|d| d.get(k)).and_then(Json::as_u64).unwrap_or(0)
+    };
+    eprintln!(
+        "tdp serve: drained (completed={} failed={} rejected={})",
+        d("completed"),
+        d("failed"),
+        d("rejected"),
+    );
+    if let Some(path) = &metrics_out {
+        std::fs::write(path, json::write(&stats))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `tdp top <host:port>` — poll the daemon's stats endpoint into a
+/// refreshing terminal frame (or raw JSON documents for scripts).
+fn cmd_top(mut argv: Vec<String>) -> Result<()> {
+    let addr = if argv.first().is_some_and(|s| !s.starts_with("--")) {
+        argv.remove(0)
+    } else {
+        bail!("usage: tdp top <host:port> [--format text|json --interval-ms 1000 --iters 0]");
+    };
+    let mut a = Args::parse(argv).map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+    let format = a.str_or("format", "text")?;
+    let interval_ms = a.u64_or("interval-ms", 1000)?.max(1);
+    let iters = a.u64_or("iters", 0)?; // 0 = until the daemon goes away
+    a.finish()?;
+    if format != "text" && format != "json" {
+        bail!("unknown format '{format}' (text | json)");
+    }
+    let mut done = 0u64;
+    loop {
+        let stats = match serve_client::fetch_stats(&addr) {
+            Ok(s) => s,
+            // first poll failing is an error (wrong address); later ones
+            // mean the daemon drained away under us — exit clean
+            Err(e) if done == 0 => bail!("no daemon at {addr}: {e}"),
+            Err(_) => {
+                eprintln!("tdp top: daemon at {addr} is gone");
+                return Ok(());
+            }
+        };
+        if format == "json" {
+            println!("{}", json::write(&stats));
+        } else {
+            // clear + home between frames; single-shot output stays
+            // pipe-friendly
+            if iters != 1 {
+                print!("\x1b[2J\x1b[H");
+            }
+            print!("{}", serve_client::render_top(&addr, &stats));
+            use std::io::Write;
+            std::io::stdout().flush()?;
+        }
+        done += 1;
+        if iters > 0 && done >= iters {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval_ms));
+    }
 }
 
 fn cmd_sweep(mut a: Args) -> Result<()> {
@@ -1046,9 +1249,14 @@ fn main() -> Result<()> {
     if cmd == "check" {
         return cmd_check(rest);
     }
+    // top takes a positional daemon address
+    if cmd == "top" {
+        return cmd_top(rest);
+    }
     let args = Args::parse(rest).map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
     match cmd.as_str() {
         "run" => cmd_run(args),
+        "serve" => cmd_serve(args),
         "sweep" => cmd_sweep(args),
         "gen" => cmd_gen(args),
         "validate" => cmd_validate(args),

@@ -1,0 +1,238 @@
+//! Client helpers for the `tdp serve` protocol: submit a JSONL job
+//! stream over a socket (`tdp batch --connect`), fetch or request
+//! daemon state (`tdp top`, shutdown), and render the `tdp top` text
+//! frame.
+//!
+//! The submitter pipelines: a reader thread collects seq-tagged
+//! responses while the writer is still sending, so a large job file
+//! can never deadlock on full kernel socket buffers, and responses are
+//! reassembled into input order before they are returned.
+
+use crate::util::json::{self, Json};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn invalid<E: std::fmt::Display>(e: E) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+}
+
+/// Send `lines` (one request per element, verbatim — the daemon does
+/// all parsing and validation) and return one response per line, in
+/// input order regardless of the daemon's completion order.
+pub fn submit_raw_lines(addr: &str, lines: &[String]) -> std::io::Result<Vec<Json>> {
+    let stream = TcpStream::connect(addr)?;
+    let mut write_half = stream.try_clone()?;
+    let n = lines.len();
+    // reader first: responses stream back while we are still sending
+    let reader = std::thread::spawn(move || -> std::io::Result<Vec<Json>> {
+        let mut input = BufReader::new(stream);
+        let mut got: Vec<Option<Json>> = (0..n).map(|_| None).collect();
+        let mut remaining = n;
+        let mut line = String::new();
+        while remaining > 0 {
+            line.clear();
+            if input.read_line(&mut line)? == 0 {
+                return Err(invalid(format!(
+                    "daemon closed the connection with {remaining} responses outstanding"
+                )));
+            }
+            let text = line.trim();
+            if text.is_empty() {
+                continue;
+            }
+            let j = json::parse(text).map_err(invalid)?;
+            let seq = j
+                .get("seq")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| invalid(format!("response without seq: {text}")))?;
+            let idx = (seq as usize)
+                .checked_sub(1)
+                .filter(|i| *i < n)
+                .ok_or_else(|| invalid(format!("response seq {seq} out of range 1..={n}")))?;
+            if got[idx].is_none() {
+                got[idx] = Some(j);
+                remaining -= 1;
+            }
+        }
+        Ok(got.into_iter().map(|j| j.expect("all seqs answered")).collect())
+    });
+    for line in lines {
+        write_half.write_all(line.as_bytes())?;
+        write_half.write_all(b"\n")?;
+    }
+    write_half.flush()?;
+    reader.join().map_err(|_| invalid("response reader panicked"))?
+}
+
+/// One request/response exchange on a fresh connection.
+fn roundtrip(addr: &str, request: &str) -> std::io::Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(request.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line)?;
+    if line.trim().is_empty() {
+        return Err(invalid("daemon closed the connection without a response"));
+    }
+    json::parse(line.trim()).map_err(invalid)
+}
+
+/// Fetch the full stats document (`{version, state, engine, daemon}`
+/// plus the seq/control envelope).
+pub fn fetch_stats(addr: &str) -> std::io::Result<Json> {
+    roundtrip(addr, "{\"control\": \"stats\"}")
+}
+
+/// Request a graceful drain; returns the acknowledgement line.
+pub fn request_shutdown(addr: &str) -> std::io::Result<Json> {
+    roundtrip(addr, "{\"control\": \"shutdown\"}")
+}
+
+fn u(j: Option<&Json>) -> u64 {
+    j.and_then(Json::as_u64).unwrap_or(0)
+}
+
+fn pct(hits: u64, misses: u64) -> f64 {
+    if hits + misses == 0 {
+        0.0
+    } else {
+        100.0 * hits as f64 / (hits + misses) as f64
+    }
+}
+
+fn latency_line(h: Option<&Json>) -> String {
+    let g = |k: &str| u(h.and_then(|h| h.get(k)));
+    format!(
+        "p50 {:>7} µs  p90 {:>7} µs  p99 {:>7} µs  (n={})",
+        g("p50"),
+        g("p90"),
+        g("p99"),
+        g("count")
+    )
+}
+
+/// Render one `tdp top` text frame from a stats document.
+pub fn render_top(addr: &str, stats: &Json) -> String {
+    let state = stats.get("state").and_then(Json::as_str).unwrap_or("?");
+    let d = stats.get("daemon");
+    let e = stats.get("engine");
+    let dg = |k: &str| u(d.and_then(|d| d.get(k)));
+    let cache = e.and_then(|e| e.get("cache"));
+    let cg = |k: &str| u(cache.and_then(|c| c.get(k)));
+    let flight = e.and_then(|e| e.get("flight"));
+    let latency = e.and_then(|e| e.get("latency"));
+    let uptime = d
+        .and_then(|d| d.get("uptime_secs"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "tdp top — {addr}   state: {state}   uptime: {uptime:.1}s\n"
+    ));
+    out.push_str(&format!(
+        "queue    depth {}/{}   inflight {}   workers {}   clients {} ({} total conns)\n",
+        dg("queue_depth"),
+        dg("queue_capacity"),
+        dg("inflight"),
+        dg("workers"),
+        dg("clients_connected"),
+        dg("connections"),
+    ));
+    out.push_str(&format!(
+        "jobs     accepted {}  completed {}  failed {}  rejected {} (full {}, draining {})  drained {}\n",
+        dg("accepted"),
+        dg("completed"),
+        dg("failed"),
+        dg("rejected"),
+        dg("rejected_full"),
+        dg("rejected_draining"),
+        dg("drained"),
+    ));
+    out.push_str(&format!(
+        "cache    hits {}  misses {}  evictions {}  entries {}  hit-rate {:.1}%\n",
+        cg("hits"),
+        cg("misses"),
+        cg("evictions"),
+        cg("entries"),
+        pct(cg("hits"), cg("misses")),
+    ));
+    out.push_str(&format!(
+        "flight   program-waits {}  graph-waits {}\n",
+        u(flight.and_then(|f| f.get("program_waits"))),
+        u(flight.and_then(|f| f.get("graph_waits"))),
+    ));
+    out.push_str(&format!(
+        "compile  {}\n",
+        latency_line(latency.and_then(|l| l.get("compile_micros")))
+    ));
+    out.push_str(&format!(
+        "run      {}\n",
+        latency_line(latency.and_then(|l| l.get("run_micros")))
+    ));
+    // per-client outstanding work (the fairness picture)
+    if let Some(per) = d.and_then(|d| d.get("per_client")).and_then(Json::as_obj) {
+        if !per.is_empty() {
+            let cells: Vec<String> = per
+                .iter()
+                .map(|(id, v)| {
+                    format!("#{id} q={} f={}", u(v.get("queued")), u(v.get("inflight")))
+                })
+                .collect();
+            out.push_str(&format!("clients  {}\n", cells.join("  ")));
+        }
+    }
+    // busiest workloads by job count, run p50 alongside
+    if let Some(per) = e.and_then(|e| e.get("workloads")).and_then(Json::as_obj) {
+        let mut rows: Vec<(&String, u64, u64)> = per
+            .iter()
+            .map(|(k, v)| {
+                (
+                    k,
+                    u(v.get("jobs")),
+                    u(v.get("run_micros").and_then(|h| h.get("p50"))),
+                )
+            })
+            .collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(b.0)));
+        for (k, jobs, p50) in rows.into_iter().take(5) {
+            out.push_str(&format!("  {k:<40} jobs {jobs:>6}   run p50 {p50:>7} µs\n"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_frame_renders_the_load_bearing_fields() {
+        // a miniature stats doc shaped like the daemon's
+        let doc = json::parse(
+            "{\"state\": \"serving\", \
+              \"daemon\": {\"queue_depth\": 3, \"queue_capacity\": 256, \"inflight\": 2, \
+                           \"workers\": 8, \"clients_connected\": 2, \"connections\": 5, \
+                           \"accepted\": 10, \"completed\": 7, \"failed\": 1, \"rejected\": 2, \
+                           \"rejected_full\": 2, \"rejected_draining\": 0, \"drained\": 0, \
+                           \"uptime_secs\": 1.5, \
+                           \"per_client\": {\"1\": {\"queued\": 3, \"inflight\": 2}}}, \
+              \"engine\": {\"cache\": {\"hits\": 6, \"misses\": 2, \"evictions\": 0, \"entries\": 2}, \
+                           \"flight\": {\"program_waits\": 1, \"graph_waits\": 0}, \
+                           \"latency\": {\"compile_micros\": {\"count\": 2, \"p50\": 100, \"p90\": 100, \"p99\": 100}, \
+                                          \"run_micros\": {\"count\": 8, \"p50\": 40, \"p90\": 60, \"p99\": 60}}, \
+                           \"workloads\": {\"reduction:32\": {\"jobs\": 8, \
+                                            \"run_micros\": {\"p50\": 40}}}}}",
+        )
+        .unwrap();
+        let frame = render_top("127.0.0.1:7411", &doc);
+        assert!(frame.contains("state: serving"), "{frame}");
+        assert!(frame.contains("depth 3/256"), "{frame}");
+        assert!(frame.contains("hit-rate 75.0%"), "{frame}");
+        assert!(frame.contains("#1 q=3 f=2"), "{frame}");
+        assert!(frame.contains("reduction:32"), "{frame}");
+        // a degenerate doc still renders (every field defaults to 0)
+        let empty = render_top("x", &Json::Obj(Default::default()));
+        assert!(empty.contains("hit-rate 0.0%"), "{empty}");
+    }
+}

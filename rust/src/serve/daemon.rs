@@ -1,0 +1,550 @@
+//! The long-lived job daemon: a TCP accept loop, per-connection reader
+//! threads, a bounded fair admission queue, and a worker pool running
+//! jobs on one shared [`Engine`] — so the content-addressed Program
+//! cache and single-flight compilation amortize across every client of
+//! the process, not just one `tdp batch` invocation.
+//!
+//! Threading model (DESIGN.md §13): `run()` owns the accept loop; each
+//! connection gets a reader thread that parses request lines, answers
+//! control messages inline, and admits jobs into the [`FairQueue`];
+//! `workers` pool threads pop round-robin across clients, run
+//! [`Engine::submit`], and write the seq-tagged response to the
+//! submitting connection. Responses therefore complete out of order
+//! under concurrency — the `seq` tag is the client's reassembly key.
+//!
+//! Drain state machine: `serving → draining → stopped`. A `shutdown`
+//! control line or [`DaemonHandle::drain`] (the CLI's SIGTERM path)
+//! flips the atomic `draining` flag: new jobs are refused with a
+//! structured `draining` error, everything already admitted runs to
+//! completion and its response is flushed, workers exit once the queue
+//! is dry, and `run()` returns after the last in-flight job completes.
+//! No socket is ever closed with an answer still owed.
+
+use super::protocol::{self, Control, ErrorCode, Request, PROTOCOL_VERSION};
+use super::queue::{FairQueue, PushError};
+use crate::service::{Engine, JobSpec, DEFAULT_CACHE_CAPACITY};
+use crate::telemetry::Registry;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Default bound of the admission queue (jobs admitted but not yet
+/// picked up by a worker).
+pub const DEFAULT_QUEUE_CAPACITY: usize = 256;
+
+/// Daemon sizing knobs (`tdp serve --workers/--queue/--cache`).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// worker pool size; 0 = one per available core
+    pub workers: usize,
+    /// admission queue bound ([`FairQueue`] global capacity)
+    pub queue_capacity: usize,
+    /// [`Engine`] cache bound (programs and graphs resident at once)
+    pub cache_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: 0,
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            cache_capacity: DEFAULT_CACHE_CAPACITY,
+        }
+    }
+}
+
+/// The per-connection response writer: workers and the reader share it,
+/// one whole line written and flushed per lock hold.
+type Writer = Arc<Mutex<TcpStream>>;
+
+/// One admitted job waiting for (or holding) a worker.
+struct Work {
+    seq: u64,
+    job: Box<JobSpec>,
+    out: Writer,
+}
+
+/// Monotonic daemon counters (mirrored onto the telemetry registry as
+/// `serve.*` counters at event time).
+#[derive(Default)]
+struct Counters {
+    connections: AtomicU64,
+    accepted: AtomicU64,
+    rejected_full: AtomicU64,
+    rejected_draining: AtomicU64,
+    bad_lines: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    drained: AtomicU64,
+    stats_served: AtomicU64,
+}
+
+struct Shared {
+    engine: Engine,
+    registry: Arc<Registry>,
+    addr: SocketAddr,
+    workers: usize,
+    started: Instant,
+    queue: Mutex<FairQueue<Work>>,
+    /// workers wait here for admissions (and the drain wake-up)
+    work_cv: Condvar,
+    /// `run()` waits here for `outstanding() == 0` during drain
+    idle_cv: Condvar,
+    draining: AtomicBool,
+    next_client: AtomicU64,
+    clients_connected: AtomicU64,
+    counters: Counters,
+}
+
+impl Shared {
+    fn bump(&self, counter: &AtomicU64, key: &'static str) {
+        counter.fetch_add(1, Ordering::Relaxed);
+        self.registry.count(key, 1);
+    }
+
+    /// Publish the queue gauges; call with the queue lock held so the
+    /// gauge pair is a coherent snapshot (lock order: queue → registry).
+    fn publish_gauges(&self, q: &FairQueue<Work>) {
+        self.registry.gauge("serve.queue_depth", q.queued() as f64);
+        self.registry.gauge("serve.inflight", q.inflight() as f64);
+    }
+
+    fn state_name(&self) -> &'static str {
+        if self.draining.load(Ordering::SeqCst) {
+            "draining"
+        } else {
+            "serving"
+        }
+    }
+
+    /// Begin the graceful drain (idempotent): refuse new admissions,
+    /// wake idle workers so they can exit once the queue is dry, and
+    /// poke the accept loop awake with a loopback connection.
+    fn begin_drain(&self) {
+        if self.draining.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.registry.count("serve.drains", 1);
+        self.work_cv.notify_all();
+        self.idle_cv.notify_all();
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// The daemon half of the stats document: queue/fairness gauges,
+    /// admission counters, and the per-client outstanding-work map.
+    fn daemon_json(&self) -> Json {
+        let (queued, capacity, inflight, per_client) = {
+            let q = self.queue.lock().expect("serve queue lock");
+            (q.queued(), q.capacity(), q.inflight(), q.per_client())
+        };
+        let c = &self.counters;
+        let num = |v: u64| Json::Num(v as f64);
+        let rejected_full = c.rejected_full.load(Ordering::Relaxed);
+        let rejected_draining = c.rejected_draining.load(Ordering::Relaxed);
+        let mut clients = BTreeMap::new();
+        for (id, (queued, inflight)) in per_client {
+            let mut m = BTreeMap::new();
+            m.insert("queued".to_string(), num(queued as u64));
+            m.insert("inflight".to_string(), num(inflight as u64));
+            clients.insert(id.to_string(), Json::Obj(m));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("queue_depth".to_string(), num(queued as u64));
+        m.insert("queue_capacity".to_string(), num(capacity as u64));
+        m.insert("inflight".to_string(), num(inflight as u64));
+        m.insert("workers".to_string(), num(self.workers as u64));
+        m.insert(
+            "clients_connected".to_string(),
+            num(self.clients_connected.load(Ordering::Relaxed)),
+        );
+        m.insert("connections".to_string(), num(c.connections.load(Ordering::Relaxed)));
+        m.insert("accepted".to_string(), num(c.accepted.load(Ordering::Relaxed)));
+        m.insert("rejected_full".to_string(), num(rejected_full));
+        m.insert("rejected_draining".to_string(), num(rejected_draining));
+        m.insert("rejected".to_string(), num(rejected_full + rejected_draining));
+        m.insert("bad_lines".to_string(), num(c.bad_lines.load(Ordering::Relaxed)));
+        m.insert("completed".to_string(), num(c.completed.load(Ordering::Relaxed)));
+        m.insert("failed".to_string(), num(c.failed.load(Ordering::Relaxed)));
+        m.insert("drained".to_string(), num(c.drained.load(Ordering::Relaxed)));
+        m.insert("stats_served".to_string(), num(c.stats_served.load(Ordering::Relaxed)));
+        m.insert(
+            "uptime_secs".to_string(),
+            Json::Num(self.started.elapsed().as_secs_f64()),
+        );
+        m.insert("per_client".to_string(), Json::Obj(clients));
+        Json::Obj(m)
+    }
+
+    /// The full stats document (`{version, state, engine, daemon}`) —
+    /// what the `stats` control request returns and `tdp serve
+    /// --metrics-out` writes at exit.
+    fn stats_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("version".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+        m.insert("state".to_string(), Json::Str(self.state_name().to_string()));
+        m.insert("engine".to_string(), self.engine.metrics_snapshot());
+        m.insert("daemon".to_string(), self.daemon_json());
+        Json::Obj(m)
+    }
+}
+
+/// A handle for controlling a running daemon from outside its threads
+/// (the CLI's signal watcher, tests).
+#[derive(Clone)]
+pub struct DaemonHandle {
+    shared: Arc<Shared>,
+}
+
+impl DaemonHandle {
+    /// Trigger the graceful drain, exactly as a `shutdown` control line
+    /// would. Idempotent; returns immediately (drain completion is
+    /// observed by [`Daemon::run`] returning).
+    pub fn drain(&self) {
+        self.shared.begin_drain();
+    }
+
+    /// True once a drain has been requested.
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// The current full stats document (`{version, state, engine,
+    /// daemon}`).
+    pub fn stats_json(&self) -> Json {
+        self.shared.stats_json()
+    }
+}
+
+/// A bound-but-not-yet-running daemon. [`Daemon::bind`] reserves the
+/// socket (so the caller can learn the ephemeral port before serving);
+/// [`Daemon::run`] serves until drained.
+pub struct Daemon {
+    shared: Arc<Shared>,
+    listener: TcpListener,
+}
+
+impl Daemon {
+    /// Bind `addr` (e.g. `127.0.0.1:7411`, port 0 for ephemeral) and
+    /// build the engine, queue, and worker sizing. Daemon gauges and
+    /// counters register on `registry` under `serve.*`.
+    pub fn bind<A: ToSocketAddrs>(
+        addr: A,
+        cfg: ServeConfig,
+        registry: Arc<Registry>,
+    ) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let workers = if cfg.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            cfg.workers
+        };
+        let shared = Arc::new(Shared {
+            engine: Engine::with_capacity(cfg.cache_capacity),
+            registry,
+            addr,
+            workers,
+            started: Instant::now(),
+            queue: Mutex::new(FairQueue::new(cfg.queue_capacity)),
+            work_cv: Condvar::new(),
+            idle_cv: Condvar::new(),
+            draining: AtomicBool::new(false),
+            next_client: AtomicU64::new(0),
+            clients_connected: AtomicU64::new(0),
+            counters: Counters::default(),
+        });
+        shared.registry.gauge("serve.queue_depth", 0.0);
+        shared.registry.gauge("serve.inflight", 0.0);
+        shared.registry.gauge("serve.clients", 0.0);
+        Ok(Self { shared, listener })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// A control handle usable from other threads while `run()` blocks.
+    pub fn handle(&self) -> DaemonHandle {
+        DaemonHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Serve until drained: accept connections, run jobs, and return
+    /// once a drain (control line, [`DaemonHandle::drain`]) has been
+    /// requested *and* every admitted job's response has been written.
+    pub fn run(self) -> std::io::Result<()> {
+        let mut pool = Vec::with_capacity(self.shared.workers);
+        for _ in 0..self.shared.workers {
+            let shared = Arc::clone(&self.shared);
+            pool.push(std::thread::spawn(move || worker_loop(&shared)));
+        }
+        for stream in self.listener.incoming() {
+            if self.shared.draining.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let shared = Arc::clone(&self.shared);
+            std::thread::spawn(move || reader_loop(&shared, stream));
+        }
+        // drain barrier: every admitted job answered before we return
+        {
+            let mut q = self.shared.queue.lock().expect("serve queue lock");
+            while q.outstanding() > 0 {
+                q = self.shared.idle_cv.wait(q).expect("serve queue lock");
+            }
+        }
+        self.shared.work_cv.notify_all();
+        for h in pool {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Write one response line; errors are ignored (the client may already
+/// be gone, and its remaining jobs still run to completion).
+fn write_line(out: &Writer, line: &str) {
+    if let Ok(mut s) = out.lock() {
+        let _ = s.write_all(line.as_bytes());
+        let _ = s.write_all(b"\n");
+        let _ = s.flush();
+    }
+}
+
+/// One worker: pop round-robin, run on the shared engine, respond.
+fn worker_loop(shared: &Shared) {
+    loop {
+        let popped = {
+            let mut q = shared.queue.lock().expect("serve queue lock");
+            loop {
+                if let Some((client, work)) = q.pop() {
+                    shared.publish_gauges(&q);
+                    break Some((client, work));
+                }
+                if shared.draining.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.work_cv.wait(q).expect("serve queue lock");
+            }
+        };
+        let Some((client, work)) = popped else { return };
+        let line = match shared.engine.submit(&work.job) {
+            Ok(result) => {
+                shared.bump(&shared.counters.completed, "serve.completed");
+                protocol::result_response(work.seq, &result)
+            }
+            Err(e) => {
+                shared.bump(&shared.counters.failed, "serve.failed");
+                protocol::error_response(work.seq, ErrorCode::JobFailed, &e.to_string())
+            }
+        };
+        if shared.draining.load(Ordering::SeqCst) {
+            shared.bump(&shared.counters.drained, "serve.drained");
+        }
+        write_line(&work.out, &line);
+        let outstanding = {
+            let mut q = shared.queue.lock().expect("serve queue lock");
+            q.complete(client);
+            shared.publish_gauges(&q);
+            q.outstanding()
+        };
+        if outstanding == 0 {
+            shared.idle_cv.notify_all();
+        }
+    }
+}
+
+/// One connection: parse request lines, answer controls inline, admit
+/// jobs (or refuse them with structured errors — never a disconnect).
+fn reader_loop(shared: &Shared, stream: TcpStream) {
+    let Ok(write_half) = stream.try_clone() else { return };
+    let out: Writer = Arc::new(Mutex::new(write_half));
+    let client = shared.next_client.fetch_add(1, Ordering::Relaxed) + 1;
+    shared.bump(&shared.counters.connections, "serve.connections");
+    let connected = shared.clients_connected.fetch_add(1, Ordering::Relaxed) + 1;
+    shared.registry.gauge("serve.clients", connected as f64);
+    let mut seq = 0u64;
+    for line in BufReader::new(stream).lines() {
+        let Ok(line) = line else { break };
+        let text = line.trim();
+        if text.is_empty() {
+            continue;
+        }
+        seq += 1;
+        match protocol::parse_request(text) {
+            Err(msg) => {
+                shared.bump(&shared.counters.bad_lines, "serve.bad_lines");
+                write_line(&out, &protocol::error_response(seq, ErrorCode::BadRequest, &msg));
+            }
+            Ok(Request::Control(Control::Ping)) => {
+                write_line(&out, &protocol::ping_response(seq));
+            }
+            Ok(Request::Control(Control::Stats)) => {
+                shared.bump(&shared.counters.stats_served, "serve.stats_served");
+                let line = protocol::stats_response(
+                    seq,
+                    shared.engine.metrics_snapshot(),
+                    shared.daemon_json(),
+                    shared.state_name(),
+                );
+                write_line(&out, &line);
+            }
+            Ok(Request::Control(Control::Shutdown)) => {
+                // ack first, then flip the state: the requester always
+                // sees the acknowledgement even if drain finishes fast
+                write_line(&out, &protocol::shutdown_response(seq));
+                shared.begin_drain();
+            }
+            Ok(Request::Job(job)) => {
+                if shared.draining.load(Ordering::SeqCst) {
+                    shared.bump(&shared.counters.rejected_draining, "serve.rejected");
+                    let line = protocol::error_response(
+                        seq,
+                        ErrorCode::Draining,
+                        "daemon is draining and admits no new jobs",
+                    );
+                    write_line(&out, &line);
+                    continue;
+                }
+                let admitted = {
+                    let mut q = shared.queue.lock().expect("serve queue lock");
+                    let res = q.push(client, Work { seq, job, out: Arc::clone(&out) });
+                    if res.is_ok() {
+                        shared.publish_gauges(&q);
+                    }
+                    res.map_err(|PushError::Full| q.capacity())
+                };
+                match admitted {
+                    Ok(()) => {
+                        shared.bump(&shared.counters.accepted, "serve.accepted");
+                        shared.work_cv.notify_one();
+                    }
+                    Err(capacity) => {
+                        shared.bump(&shared.counters.rejected_full, "serve.rejected");
+                        let line = protocol::error_response(
+                            seq,
+                            ErrorCode::QueueFull,
+                            &format!("queue full (capacity {capacity})"),
+                        );
+                        write_line(&out, &line);
+                    }
+                }
+            }
+        }
+    }
+    let connected = shared.clients_connected.fetch_sub(1, Ordering::Relaxed) - 1;
+    shared.registry.gauge("serve.clients", connected as f64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{self, Json};
+    use std::io::{BufRead, BufReader, Write};
+
+    fn send_line(stream: &mut TcpStream, line: &str) {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        stream.flush().unwrap();
+    }
+
+    fn read_json(reader: &mut BufReader<TcpStream>) -> Json {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        json::parse(line.trim()).unwrap_or_else(|e| panic!("bad response '{line}': {e}"))
+    }
+
+    /// Idle daemon lifecycle: bind an ephemeral port, answer ping and
+    /// stats, drain via the control line, and join cleanly.
+    #[test]
+    fn ping_stats_and_drain_on_idle_daemon() {
+        let registry = Arc::new(Registry::new());
+        let daemon = Daemon::bind(
+            "127.0.0.1:0",
+            ServeConfig { workers: 2, ..Default::default() },
+            Arc::clone(&registry),
+        )
+        .unwrap();
+        let addr = daemon.local_addr();
+        let handle = daemon.handle();
+        let server = std::thread::spawn(move || daemon.run());
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        send_line(&mut stream, "{\"control\": \"ping\"}");
+        let pong = read_json(&mut reader);
+        assert_eq!(pong.get("seq").unwrap().as_u64(), Some(1));
+        assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+
+        send_line(&mut stream, "{\"control\": \"stats\"}");
+        let stats = read_json(&mut reader);
+        assert_eq!(stats.get("state").unwrap().as_str(), Some("serving"));
+        assert_eq!(stats.get("version").unwrap().as_u64(), Some(PROTOCOL_VERSION));
+        let daemon_doc = stats.get("daemon").unwrap();
+        assert_eq!(daemon_doc.get("queue_depth").unwrap().as_u64(), Some(0));
+        assert_eq!(daemon_doc.get("workers").unwrap().as_u64(), Some(2));
+        assert_eq!(daemon_doc.get("clients_connected").unwrap().as_u64(), Some(1));
+        assert_eq!(
+            stats.get("engine").unwrap().get("version").unwrap().as_u64(),
+            Some(1),
+            "engine snapshot nests intact"
+        );
+        // daemon gauges registered on the passed-in registry
+        assert_eq!(registry.gauge_value("serve.queue_depth"), Some(0.0));
+        assert_eq!(registry.gauge_value("serve.clients"), Some(1.0));
+
+        send_line(&mut stream, "{\"control\": \"shutdown\"}");
+        let ack = read_json(&mut reader);
+        assert_eq!(ack.get("state").unwrap().as_str(), Some("draining"));
+        assert!(handle.is_draining());
+        server.join().unwrap().unwrap();
+        assert_eq!(handle.stats_json().get("state").unwrap().as_str(), Some("draining"));
+    }
+
+    /// One job over the socket end-to-end, plus a structured error for
+    /// a misspelled field — same connection, no disconnect.
+    #[test]
+    fn job_roundtrip_and_bad_request_share_a_connection() {
+        let registry = Arc::new(Registry::new());
+        let daemon =
+            Daemon::bind("127.0.0.1:0", ServeConfig { workers: 1, ..Default::default() }, registry)
+                .unwrap();
+        let addr = daemon.local_addr();
+        let handle = daemon.handle();
+        let server = std::thread::spawn(move || daemon.run());
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        send_line(&mut stream, "{\"workload\": \"reduction:32\", \"cols\": 2, \"rows\": 2}");
+        let r1 = read_json(&mut reader);
+        assert_eq!(r1.get("seq").unwrap().as_u64(), Some(1));
+        let result = r1.get("result").expect("job succeeded");
+        assert_eq!(result.get("workload").unwrap().as_str(), Some("reduction:32"));
+        assert!(result.get("stats").unwrap().get("cycles").unwrap().as_u64().unwrap() > 0);
+
+        // protocol typo → structured bad_request on the same connection
+        send_line(&mut stream, "{\"workload\": \"reduction:32\", \"schedular\": \"ooo\"}");
+        let r2 = read_json(&mut reader);
+        assert_eq!(r2.get("seq").unwrap().as_u64(), Some(2));
+        assert_eq!(r2.get("code").unwrap().as_str(), Some("bad_request"));
+        assert!(r2.get("error").unwrap().as_str().unwrap().contains("schedular"));
+
+        // the connection survived: a third request still answers
+        send_line(&mut stream, "{\"workload\": \"reduction:32\", \"cols\": 2, \"rows\": 2}");
+        let r3 = read_json(&mut reader);
+        assert_eq!(r3.get("seq").unwrap().as_u64(), Some(3));
+        assert!(r3.get("result").unwrap().get("cache_hit").unwrap() == &Json::Bool(true));
+
+        handle.drain();
+        server.join().unwrap().unwrap();
+        let daemon_doc = handle.stats_json();
+        let d = daemon_doc.get("daemon").unwrap();
+        assert_eq!(d.get("accepted").unwrap().as_u64(), Some(2));
+        assert_eq!(d.get("completed").unwrap().as_u64(), Some(2));
+        assert_eq!(d.get("bad_lines").unwrap().as_u64(), Some(1));
+    }
+}

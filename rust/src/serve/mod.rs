@@ -1,0 +1,37 @@
+//! The network daemon (DESIGN.md §13): `tdp serve` keeps one
+//! [`crate::service::Engine`] — and therefore the content-addressed
+//! Program cache and single-flight compilation — alive across a stream
+//! of clients, turning the paper's compile-once economics into a
+//! request server instead of a one-shot CLI.
+//!
+//! * [`protocol`] — line-delimited JSON over TCP: job lines are the
+//!   exact strict [`crate::service::JobSpec`] documents `tdp batch`
+//!   reads; control lines (`stats` / `ping` / `shutdown`) drive
+//!   observability and the drain; every response is seq-tagged so
+//!   clients pipeline freely. Errors are structured (`queue_full`,
+//!   `draining`, `bad_request`, `job_failed`) and never cost a client
+//!   its connection.
+//! * [`queue`] — the bounded admission queue with round-robin
+//!   per-client fairness: one slot per client per turn, so a firehose
+//!   client cannot starve the rest; the global bound is the
+//!   backpressure signal.
+//! * [`daemon`] — [`Daemon`]: accept loop, per-connection readers, the
+//!   worker pool over the shared engine, the graceful drain state
+//!   machine, and the `stats` document
+//!   ([`crate::service::Engine::metrics_snapshot`] + daemon gauges,
+//!   the gauges also registered on the passed-in
+//!   [`crate::telemetry::Registry`] as `serve.*`).
+//! * [`client`] — the other end: `tdp batch --connect` job streaming
+//!   (pipelined, reassembled into input order) and the `tdp top`
+//!   stats poll/renderer.
+//! * [`signal`] — SIGTERM/SIGINT → the same drain path, dependency-free.
+
+pub mod client;
+pub mod protocol;
+pub mod queue;
+pub mod signal;
+
+mod daemon;
+
+pub use daemon::{Daemon, DaemonHandle, ServeConfig, DEFAULT_QUEUE_CAPACITY};
+pub use queue::{FairQueue, PushError};

@@ -1,0 +1,205 @@
+//! The `tdp serve` wire protocol (DESIGN.md §13): line-delimited JSON
+//! over TCP, one request object per line in, one response object per
+//! line out.
+//!
+//! A request line is either a job — the exact [`JobSpec`] JSON `tdp
+//! batch` already reads, parsed strictly so protocol typos fail loudly
+//! at the daemon boundary — or a control object `{"control": "stats" |
+//! "ping" | "shutdown"}`. Every response carries `"seq"`, the 1-based
+//! index of the request among the *non-empty* lines of that connection,
+//! so a client may pipeline requests and reassemble responses in any
+//! completion order. Errors are structured (`{"seq", "code", "error"}`)
+//! and never cost the client its connection.
+
+use crate::service::{JobResult, JobSpec};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// Protocol revision carried in every `stats` response. Bump only when
+/// an existing key changes meaning; new keys are added freely.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// One parsed request line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// a job submission (the `tdp batch` [`JobSpec`] document)
+    Job(Box<JobSpec>),
+    /// a daemon control message
+    Control(Control),
+}
+
+/// The control verbs of the protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Control {
+    /// engine metrics snapshot + daemon gauges
+    Stats,
+    /// liveness probe
+    Ping,
+    /// begin graceful drain: stop admitting, finish in-flight, exit
+    Shutdown,
+}
+
+impl Control {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Control::Stats => "stats",
+            Control::Ping => "ping",
+            Control::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// Machine-readable error codes of structured error responses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// the line did not parse as a job or control object
+    BadRequest,
+    /// the bounded admission queue is at capacity — retry later
+    QueueFull,
+    /// the daemon is draining and admits no new work
+    Draining,
+    /// the job was admitted and executed, but failed
+    JobFailed,
+}
+
+impl ErrorCode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::QueueFull => "queue_full",
+            ErrorCode::Draining => "draining",
+            ErrorCode::JobFailed => "job_failed",
+        }
+    }
+}
+
+/// Parse one request line. A JSON object containing the key `"control"`
+/// is a control message (that key must be its only key); anything else
+/// must be a strict [`JobSpec`] document.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let j = json::parse(line).map_err(|e| e.to_string())?;
+    let obj = j.as_obj().ok_or("request must be a JSON object")?;
+    if let Some(verb) = obj.get("control") {
+        if obj.len() != 1 {
+            return Err("control request takes no other keys".to_string());
+        }
+        let verb = verb.as_str().ok_or("control: expected string")?;
+        let control = match verb {
+            "stats" => Control::Stats,
+            "ping" => Control::Ping,
+            "shutdown" => Control::Shutdown,
+            other => {
+                return Err(format!("unknown control verb '{other}' (stats | ping | shutdown)"))
+            }
+        };
+        return Ok(Request::Control(control));
+    }
+    Ok(Request::Job(Box::new(JobSpec::from_json_value(&j)?)))
+}
+
+fn base(seq: u64) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("seq".to_string(), Json::Num(seq as f64));
+    m
+}
+
+/// A successful job response: `{"seq": N, "result": <JobResult>}`.
+pub fn result_response(seq: u64, result: &JobResult) -> String {
+    let mut m = base(seq);
+    m.insert("result".to_string(), result.to_json_value());
+    json::write(&Json::Obj(m))
+}
+
+/// A structured error response: `{"seq": N, "code": ..., "error": ...}`.
+pub fn error_response(seq: u64, code: ErrorCode, msg: &str) -> String {
+    let mut m = base(seq);
+    m.insert("code".to_string(), Json::Str(code.name().to_string()));
+    m.insert("error".to_string(), Json::Str(msg.to_string()));
+    json::write(&Json::Obj(m))
+}
+
+/// The `ping` response: `{"seq": N, "control": "ping", "ok": true}`.
+pub fn ping_response(seq: u64) -> String {
+    let mut m = base(seq);
+    m.insert("control".to_string(), Json::Str("ping".to_string()));
+    m.insert("ok".to_string(), Json::Bool(true));
+    json::write(&Json::Obj(m))
+}
+
+/// The `shutdown` acknowledgement, sent before the drain begins.
+pub fn shutdown_response(seq: u64) -> String {
+    let mut m = base(seq);
+    m.insert("control".to_string(), Json::Str("shutdown".to_string()));
+    m.insert("state".to_string(), Json::Str("draining".to_string()));
+    json::write(&Json::Obj(m))
+}
+
+/// The `stats` response: the versioned engine snapshot under `"engine"`
+/// plus the daemon-level document under `"daemon"`.
+pub fn stats_response(seq: u64, engine: Json, daemon: Json, state: &str) -> String {
+    let mut m = base(seq);
+    m.insert("control".to_string(), Json::Str("stats".to_string()));
+    m.insert("version".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+    m.insert("state".to_string(), Json::Str(state.to_string()));
+    m.insert("engine".to_string(), engine);
+    m.insert("daemon".to_string(), daemon);
+    json::write(&Json::Obj(m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_lines_parse_strictly() {
+        match parse_request("{\"workload\": \"chain:8\", \"cols\": 2, \"rows\": 2}").unwrap() {
+            Request::Job(job) => assert_eq!(job.workload, "chain:8"),
+            other => panic!("expected job, got {other:?}"),
+        }
+        // a misspelled field is a hard parse error at the boundary, not
+        // a silently-defaulted job
+        let err = parse_request("{\"workload\": \"chain:8\", \"schedular\": \"ooo\"}")
+            .unwrap_err();
+        assert!(err.contains("unknown job key 'schedular'"), "{err}");
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request("[1, 2]").is_err());
+    }
+
+    #[test]
+    fn control_lines_parse() {
+        for (text, want) in [
+            ("{\"control\": \"stats\"}", Control::Stats),
+            ("{\"control\": \"ping\"}", Control::Ping),
+            ("{\"control\": \"shutdown\"}", Control::Shutdown),
+        ] {
+            assert_eq!(parse_request(text).unwrap(), Request::Control(want));
+        }
+        assert!(parse_request("{\"control\": \"reboot\"}").is_err());
+        // control + extra keys is ambiguous — rejected, not guessed at
+        assert!(parse_request("{\"control\": \"stats\", \"workload\": \"x\"}").is_err());
+        // "control" is not a JobSpec key, so there is no grammar overlap
+    }
+
+    #[test]
+    fn responses_are_seq_tagged_json() {
+        let line = error_response(7, ErrorCode::QueueFull, "queue full (capacity 4)");
+        let j = json::parse(&line).unwrap();
+        assert_eq!(j.get("seq").unwrap().as_u64(), Some(7));
+        assert_eq!(j.get("code").unwrap().as_str(), Some("queue_full"));
+        let pong = json::parse(&ping_response(1)).unwrap();
+        assert_eq!(pong.get("control").unwrap().as_str(), Some("ping"));
+        assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+        let ack = json::parse(&shutdown_response(2)).unwrap();
+        assert_eq!(ack.get("state").unwrap().as_str(), Some("draining"));
+        let stats = json::parse(&stats_response(
+            3,
+            Json::Obj(Default::default()),
+            Json::Obj(Default::default()),
+            "serving",
+        ))
+        .unwrap();
+        assert_eq!(stats.get("version").unwrap().as_u64(), Some(PROTOCOL_VERSION));
+        assert_eq!(stats.get("state").unwrap().as_str(), Some("serving"));
+        assert!(stats.get("engine").is_some() && stats.get("daemon").is_some());
+    }
+}

@@ -1,0 +1,191 @@
+//! The bounded, per-client-fair admission queue of the daemon.
+//!
+//! [`FairQueue`] holds one FIFO per client plus a round-robin rotation
+//! of clients with pending work: each [`FairQueue::pop`] takes one item
+//! from the client at the front of the rotation and sends that client
+//! to the rear, so a firehose client gets exactly one slot per turn and
+//! can never starve the others. Admission is bounded by a *global*
+//! capacity — [`FairQueue::push`] returns [`PushError::Full`] instead
+//! of growing, which the daemon turns into a structured `queue_full`
+//! response (backpressure without disconnects).
+//!
+//! The queue is plain data: the daemon wraps it in a `Mutex` and pairs
+//! it with condvars. In-flight accounting lives here too so the stats
+//! endpoint reads one coherent picture under one lock.
+
+use std::collections::{BTreeMap, VecDeque};
+
+/// Why a push was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    /// the global bound is reached — retry after completions drain it
+    Full,
+}
+
+/// A bounded multi-client queue with round-robin pop fairness.
+#[derive(Debug)]
+pub struct FairQueue<T> {
+    capacity: usize,
+    queues: BTreeMap<u64, VecDeque<T>>,
+    rotation: VecDeque<u64>,
+    queued: usize,
+    inflight: BTreeMap<u64, usize>,
+    inflight_total: usize,
+}
+
+impl<T> FairQueue<T> {
+    /// An empty queue admitting at most `capacity` items at once.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            queues: BTreeMap::new(),
+            rotation: VecDeque::new(),
+            queued: 0,
+            inflight: BTreeMap::new(),
+            inflight_total: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Items admitted but not yet popped.
+    pub fn queued(&self) -> usize {
+        self.queued
+    }
+
+    /// Items popped but not yet marked complete.
+    pub fn inflight(&self) -> usize {
+        self.inflight_total
+    }
+
+    /// `queued() + inflight()` — the work the daemon still owes answers
+    /// for (the drain-completion predicate).
+    pub fn outstanding(&self) -> usize {
+        self.queued + self.inflight_total
+    }
+
+    /// Admit one item for `client`, or refuse at capacity.
+    pub fn push(&mut self, client: u64, item: T) -> Result<(), PushError> {
+        if self.queued >= self.capacity {
+            return Err(PushError::Full);
+        }
+        let q = self.queues.entry(client).or_default();
+        if q.is_empty() {
+            self.rotation.push_back(client);
+        }
+        q.push_back(item);
+        self.queued += 1;
+        Ok(())
+    }
+
+    /// Take the next item round-robin across clients; the item moves to
+    /// the in-flight set until [`FairQueue::complete`] is called for its
+    /// client. Returns `None` when nothing is queued.
+    pub fn pop(&mut self) -> Option<(u64, T)> {
+        let client = self.rotation.pop_front()?;
+        let q = self.queues.get_mut(&client).expect("rotation tracks queues");
+        let item = q.pop_front().expect("rotated clients are non-empty");
+        if q.is_empty() {
+            self.queues.remove(&client);
+        } else {
+            self.rotation.push_back(client);
+        }
+        self.queued -= 1;
+        *self.inflight.entry(client).or_insert(0) += 1;
+        self.inflight_total += 1;
+        Some((client, item))
+    }
+
+    /// Mark one popped item of `client` finished.
+    pub fn complete(&mut self, client: u64) {
+        let n = self.inflight.get_mut(&client).expect("complete matches a pop");
+        *n -= 1;
+        if *n == 0 {
+            self.inflight.remove(&client);
+        }
+        self.inflight_total -= 1;
+    }
+
+    /// Per-client `(queued, inflight)` of every client with outstanding
+    /// work, for the stats endpoint.
+    pub fn per_client(&self) -> BTreeMap<u64, (usize, usize)> {
+        let mut out: BTreeMap<u64, (usize, usize)> = BTreeMap::new();
+        for (&c, q) in &self.queues {
+            out.entry(c).or_insert((0, 0)).0 = q.len();
+        }
+        for (&c, &n) in &self.inflight {
+            out.entry(c).or_insert((0, 0)).1 = n;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_interleaves_clients() {
+        // client 1 floods 6 items before clients 2 and 3 enqueue 2 each;
+        // pops must still alternate across clients, one slot per turn
+        let mut q = FairQueue::new(64);
+        for i in 0..6 {
+            q.push(1, format!("a{i}")).unwrap();
+        }
+        for i in 0..2 {
+            q.push(2, format!("b{i}")).unwrap();
+            q.push(3, format!("c{i}")).unwrap();
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop().map(|(c, _)| c)).collect();
+        assert_eq!(order, vec![1, 2, 3, 1, 2, 3, 1, 1, 1, 1], "firehose waits its turn");
+        assert_eq!(q.queued(), 0);
+        assert_eq!(q.inflight(), 10);
+        for c in order {
+            q.complete(c);
+        }
+        assert_eq!(q.outstanding(), 0);
+    }
+
+    #[test]
+    fn fifo_within_one_client() {
+        let mut q = FairQueue::new(8);
+        for i in 0..3 {
+            q.push(9, i).unwrap();
+        }
+        let items: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, v)| v)).collect();
+        assert_eq!(items, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn capacity_bounds_admission_globally() {
+        let mut q = FairQueue::new(2);
+        q.push(1, "a").unwrap();
+        q.push(2, "b").unwrap();
+        assert_eq!(q.push(3, "c"), Err(PushError::Full), "bound is global");
+        // popping frees a slot (in-flight work does not count against
+        // the *admission* bound — it already holds a worker)
+        let (c, _) = q.pop().unwrap();
+        q.push(3, "c").unwrap();
+        q.complete(c);
+        assert_eq!(q.queued(), 2);
+        // a zero capacity still admits one job at a time
+        assert_eq!(FairQueue::<u8>::new(0).capacity(), 1);
+    }
+
+    #[test]
+    fn per_client_snapshot_tracks_both_phases() {
+        let mut q = FairQueue::new(8);
+        q.push(1, "a").unwrap();
+        q.push(1, "b").unwrap();
+        q.push(2, "c").unwrap();
+        let (c, _) = q.pop().unwrap();
+        assert_eq!(c, 1);
+        let snap = q.per_client();
+        assert_eq!(snap.get(&1), Some(&(1, 1)), "one queued, one in flight");
+        assert_eq!(snap.get(&2), Some(&(1, 0)));
+        q.complete(1);
+        assert_eq!(q.per_client().get(&1), Some(&(1, 0)));
+    }
+}

@@ -1,0 +1,52 @@
+//! Best-effort SIGTERM/SIGINT hookup for the graceful drain — the
+//! process-manager path to the same state machine the `shutdown`
+//! control line drives.
+//!
+//! Zero-dependency by design: the handler is registered through the C
+//! library's `signal()` (which `std` already links on unix) and does
+//! nothing but store into a static `AtomicBool` — the only
+//! async-signal-safe action we need. The CLI polls the flag from an
+//! ordinary thread and calls [`crate::serve::DaemonHandle::drain`].
+//! On non-unix targets installation is a no-op and the control-line
+//! path remains the only shutdown trigger.
+
+use std::sync::atomic::AtomicBool;
+
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod imp {
+    use std::sync::atomic::Ordering;
+
+    extern "C" fn on_signal(_signum: i32) {
+        super::SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        // from the C library std links anyway; usize holds the handler
+        // function pointer (sighandler_t)
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    pub fn install() {
+        unsafe {
+            signal(SIGTERM, on_signal as usize);
+            signal(SIGINT, on_signal as usize);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    pub fn install() {}
+}
+
+/// Install the SIGTERM/SIGINT handler (idempotent) and return the flag
+/// it sets. The caller polls the flag; nothing else ever clears it.
+pub fn install_shutdown_flag() -> &'static AtomicBool {
+    imp::install();
+    &SHUTDOWN
+}

@@ -280,6 +280,31 @@ mod tests {
         assert!(JobSpec::from_json("not json").is_err());
     }
 
+    /// Strict mode is the protocol's typo guard: a misspelled field
+    /// must be a parse error naming the offending key, not a silently
+    /// ignored knob that runs the job under different settings.
+    #[test]
+    fn misspelled_fields_are_named_in_the_error() {
+        for (doc, bad_key) in [
+            ("{\"workload\": \"chain:8\", \"schedular\": \"in_order\"}", "schedular"),
+            ("{\"workload\": \"chain:8\", \"max_cycle\": 100}", "max_cycle"),
+            ("{\"workloads\": \"chain:8\"}", "workloads"),
+            ("{\"workload\": \"chain:8\", \"overlays\": {}}", "overlays"),
+        ] {
+            let err = JobSpec::from_json(doc).unwrap_err();
+            assert!(
+                err.contains(bad_key),
+                "error for {doc} should name '{bad_key}', got: {err}"
+            );
+        }
+        // the same documents through the daemon's parser path
+        let err = JobSpec::from_json_value(
+            &json::parse("{\"workload\": \"chain:8\", \"colz\": 4}").unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.contains("colz"), "{err}");
+    }
+
     #[test]
     fn job_result_json_shape() {
         use crate::noc::NetworkStats;

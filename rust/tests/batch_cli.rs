@@ -189,3 +189,39 @@ fn batch_without_file_fails() {
     let out = tdp().arg("batch").output().unwrap();
     assert!(!out.status.success());
 }
+
+/// `tdp batch -` reads the JSONL from stdin — the shell-pipeline form —
+/// and behaves exactly like the file form: ordered output, duplicate
+/// jobs bit-identical, same summary counters.
+#[test]
+fn batch_dash_reads_jobs_from_stdin() {
+    use std::io::Write;
+    use std::process::Stdio;
+    let jobs = "\
+{\"workload\": \"reduction:32\", \"cols\": 2, \"rows\": 2}\n\
+{\"workload\": \"chain:16:seed=1\", \"cols\": 2, \"rows\": 2}\n\
+{\"workload\": \"reduction:32\", \"cols\": 2, \"rows\": 2}\n";
+    let mut child = tdp()
+        .arg("batch")
+        .arg("-")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    child.stdin.take().unwrap().write_all(jobs.as_bytes()).unwrap();
+    let out = child.wait_with_output().unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "{stdout}\n{stderr}");
+    let results: Vec<Json> = stdout.lines().map(|l| json::parse(l).unwrap()).collect();
+    assert_eq!(results.len(), 3, "one output line per stdin line");
+    assert_eq!(
+        results[0].get("workload").unwrap().as_str(),
+        Some("reduction:32"),
+        "output order follows input order"
+    );
+    assert_eq!(results[0].get("stats"), results[2].get("stats"), "duplicate is a hit");
+    assert_eq!(summary_field(&stderr, "jobs"), 3);
+    assert_eq!(summary_field(&stderr, "cache_misses"), 2);
+}

@@ -1,0 +1,120 @@
+//! `tdp serve` / `tdp batch --connect` / `tdp top` end-to-end as real
+//! processes: the daemon's stderr banner is the port-discovery contract
+//! for `--listen 127.0.0.1:0`, socket results must be bit-identical
+//! (stats-wise) to the in-process batch of the same file, `tdp top
+//! --format json` must return a well-formed stats document, and a
+//! `shutdown` control line must drain the daemon to a clean exit 0.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use tdp::util::json::{self, Json};
+
+fn tdp() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_tdp"))
+}
+
+/// Spawn `tdp serve --listen 127.0.0.1:0` and parse the bound address
+/// out of the one-line stderr banner.
+fn spawn_daemon() -> (Child, String) {
+    let mut child = tdp()
+        .args(["serve", "--listen", "127.0.0.1:0", "--workers", "2"])
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    let stderr = child.stderr.take().unwrap();
+    let mut banner = String::new();
+    BufReader::new(stderr).read_line(&mut banner).unwrap();
+    let addr = banner
+        .split("listening on ")
+        .nth(1)
+        .and_then(|rest| rest.split(' ').next())
+        .unwrap_or_else(|| panic!("no address in banner: {banner:?}"))
+        .to_string();
+    assert!(addr.starts_with("127.0.0.1:"), "banner address: {banner:?}");
+    (child, addr)
+}
+
+#[test]
+fn serve_batch_connect_and_top_roundtrip() {
+    let jobs_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("data")
+        .join("smoke_jobs.jsonl");
+    // ground truth: the same file through an in-process `tdp batch`
+    let baseline = tdp().arg("batch").arg(&jobs_path).output().unwrap();
+    assert!(baseline.status.success(), "{}", String::from_utf8_lossy(&baseline.stderr));
+    let baseline_stats: Vec<Json> = String::from_utf8_lossy(&baseline.stdout)
+        .lines()
+        .map(|l| json::parse(l).unwrap().get("stats").unwrap().clone())
+        .collect();
+
+    let (mut child, addr) = spawn_daemon();
+    // guard: kill the daemon if any assertion below panics, so the test
+    // process never leaks a listener
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        // the same jobs through the daemon
+        let out = tdp()
+            .arg("batch")
+            .arg(&jobs_path)
+            .args(["--connect", &addr])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let socket_stats: Vec<Json> = String::from_utf8_lossy(&out.stdout)
+            .lines()
+            .map(|l| json::parse(l).unwrap().get("stats").unwrap().clone())
+            .collect();
+        // timing fields differ run to run; the simulation counters are
+        // the determinism contract and must match bit for bit
+        assert_eq!(socket_stats, baseline_stats, "socket results == in-process results");
+
+        // --workers is a daemon-side knob: connect mode rejects it loudly
+        let out = tdp()
+            .arg("batch")
+            .arg(&jobs_path)
+            .args(["--connect", &addr, "--workers", "4"])
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "--workers must be rejected with --connect");
+
+        // one stats poll through the `tdp top` JSON mode
+        let out = tdp()
+            .args(["top", &addr, "--format", "json", "--iters", "1"])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let stats = json::parse(String::from_utf8_lossy(&out.stdout).trim()).unwrap();
+        assert_eq!(stats.get("state").and_then(Json::as_str), Some("serving"));
+        let d = stats.get("daemon").unwrap();
+        assert_eq!(d.get("completed").and_then(Json::as_u64), Some(4));
+        let cache = stats.get("engine").unwrap().get("cache").unwrap();
+        // smoke_jobs.jsonl: 4 jobs over 3 distinct program keys
+        assert_eq!(cache.get("misses").and_then(Json::as_u64), Some(3));
+        assert_eq!(cache.get("hits").and_then(Json::as_u64), Some(1));
+
+        // the text frame renders once without a daemon-side error
+        let out = tdp().args(["top", &addr, "--iters", "1"]).output().unwrap();
+        assert!(out.status.success());
+        assert!(String::from_utf8_lossy(&out.stdout).contains("state: serving"));
+
+        // drain via the control line; the daemon process exits 0
+        tdp::serve::client::request_shutdown(&addr).unwrap();
+    }));
+    if result.is_err() {
+        let _ = child.kill();
+        let _ = child.wait();
+        std::panic::resume_unwind(result.unwrap_err());
+    }
+    let status = child.wait().unwrap();
+    assert!(status.success(), "daemon must exit 0 after a graceful drain");
+}
+
+#[test]
+fn top_against_no_daemon_fails_fast() {
+    // a port nothing listens on: the first poll failing is a hard error
+    let out = tdp()
+        .args(["top", "127.0.0.1:1", "--format", "json", "--iters", "1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}

@@ -1,0 +1,197 @@
+//! Daemon-semantics integration tests (DESIGN.md §13): the `tdp serve`
+//! contract exercised over real loopback sockets — determinism across
+//! concurrent clients, queue-full backpressure as a structured error,
+//! and the graceful-drain state machine.
+
+use std::sync::Arc;
+use tdp::serve::{client, Daemon, DaemonHandle, ServeConfig};
+use tdp::service::{Engine, JobSpec};
+use tdp::sim::SimStats;
+use tdp::telemetry::Registry;
+use tdp::util::json::Json;
+
+type Server = std::thread::JoinHandle<std::io::Result<()>>;
+
+fn start(cfg: ServeConfig) -> (std::net::SocketAddr, DaemonHandle, Server) {
+    let daemon = Daemon::bind("127.0.0.1:0", cfg, Arc::new(Registry::new())).unwrap();
+    let addr = daemon.local_addr();
+    let handle = daemon.handle();
+    let server = std::thread::spawn(move || daemon.run());
+    (addr, handle, server)
+}
+
+fn u(j: Option<&Json>) -> u64 {
+    j.and_then(Json::as_u64).unwrap_or(u64::MAX)
+}
+
+/// Concurrent clients submit shuffled duplicates of the same job set;
+/// every response must be bit-identical (per job) to an in-process
+/// [`Engine`] run of the same spec, and the daemon's engine must have
+/// compiled exactly once per distinct key — the shared-cache +
+/// single-flight guarantee, observed through the socket.
+#[test]
+fn concurrent_clients_get_bit_identical_results_with_one_compile_per_key() {
+    // 3 distinct program keys (scheduler/backend are normalized out of
+    // the key, so distinctness must come from graph or overlay shape):
+    // same workload on two geometries + a second workload
+    let specs = [
+        "{\"workload\": \"reduction:32\", \"cols\": 2, \"rows\": 2}",
+        "{\"workload\": \"reduction:32\", \"cols\": 4, \"rows\": 4}",
+        "{\"workload\": \"chain:24:seed=1\", \"cols\": 2, \"rows\": 2}",
+    ];
+    // in-process ground truth (stats are deterministic; timing is not)
+    let oracle = Engine::new();
+    let baseline: Vec<SimStats> = specs
+        .iter()
+        .map(|s| oracle.submit(&JobSpec::from_json(s).unwrap()).unwrap().stats)
+        .collect();
+
+    let (addr, handle, server) = start(ServeConfig { workers: 4, ..Default::default() });
+    // each client pipelines its own shuffle of duplicated jobs
+    let orders: [[usize; 6]; 3] = [[0, 1, 2, 0, 1, 2], [2, 1, 0, 1, 0, 2], [1, 2, 2, 0, 0, 1]];
+    std::thread::scope(|scope| {
+        let baseline = &baseline;
+        for order in &orders {
+            scope.spawn(move || {
+                let lines: Vec<String> = order.iter().map(|&i| specs[i].to_string()).collect();
+                let responses = client::submit_raw_lines(&addr.to_string(), &lines).unwrap();
+                for (&i, response) in order.iter().zip(&responses) {
+                    let result = response
+                        .get("result")
+                        .unwrap_or_else(|| panic!("job failed: {response:?}"));
+                    let stats =
+                        SimStats::from_json_value(result.get("stats").unwrap()).unwrap();
+                    assert_eq!(
+                        stats, baseline[i],
+                        "socket result for {} must be bit-identical to in-process",
+                        specs[i]
+                    );
+                }
+            });
+        }
+    });
+
+    // distinct keys compiled exactly once each, duplicates were hits
+    let stats = client::fetch_stats(&addr.to_string()).unwrap();
+    let cache = stats.get("engine").unwrap().get("cache").unwrap();
+    assert_eq!(u(cache.get("misses")), 3, "one compile per distinct key");
+    assert_eq!(u(cache.get("hits")), 15, "every duplicate was a cache hit");
+    assert_eq!(u(cache.get("graphs")), 2, "both reduction geometries share one graph");
+    let daemon_doc = stats.get("daemon").unwrap();
+    assert_eq!(u(daemon_doc.get("accepted")), 18);
+    assert_eq!(u(daemon_doc.get("completed")), 18);
+    assert_eq!(u(daemon_doc.get("failed")), 0);
+
+    handle.drain();
+    server.join().unwrap().unwrap();
+}
+
+/// A tiny queue under a pipelined burst: overflow is a structured
+/// `queue_full` error on the client's own line — never a disconnect —
+/// and accepted + rejected accounts for every job sent.
+#[test]
+fn queue_full_is_a_structured_error_not_a_disconnect() {
+    use std::io::{BufRead, BufReader, Write};
+    let (addr, handle, server) =
+        start(ServeConfig { workers: 1, queue_capacity: 1, ..Default::default() });
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // burst: the single worker is busy compiling job 1 while the reader
+    // admits job 2 and must refuse some of the rest (capacity 1)
+    let n = 10usize;
+    for _ in 0..n {
+        stream
+            .write_all(b"{\"workload\": \"lu_banded:60:4:0.9:seed=1\", \"cols\": 2, \"rows\": 2}\n")
+            .unwrap();
+    }
+    stream.flush().unwrap();
+    let mut results = 0u64;
+    let mut queue_full = 0u64;
+    let mut seqs_seen = std::collections::BTreeSet::new();
+    for _ in 0..n {
+        let mut line = String::new();
+        assert!(
+            reader.read_line(&mut line).unwrap() > 0,
+            "daemon must answer every line, got EOF after {} responses",
+            seqs_seen.len()
+        );
+        let j = tdp::util::json::parse(line.trim()).unwrap();
+        seqs_seen.insert(u(j.get("seq")));
+        match j.get("result") {
+            Some(_) => results += 1,
+            None => {
+                assert_eq!(j.get("code").and_then(Json::as_str), Some("queue_full"), "{j:?}");
+                queue_full += 1;
+            }
+        }
+    }
+    assert_eq!(seqs_seen.len(), n, "one response per request line");
+    assert!(results >= 1, "the job the worker held must complete");
+    assert!(queue_full >= 1, "a 1-slot queue must overflow under a {n}-job burst");
+    // the connection survived: a ping still answers
+    stream.write_all(b"{\"control\": \"ping\"}\n").unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let pong = tdp::util::json::parse(line.trim()).unwrap();
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+
+    // daemon accounting matches what the wire saw
+    let stats = handle.stats_json();
+    let d = stats.get("daemon").unwrap();
+    assert_eq!(u(d.get("accepted")), results);
+    assert_eq!(u(d.get("rejected_full")), queue_full);
+    assert_eq!(u(d.get("accepted")) + u(d.get("rejected_full")), n as u64);
+
+    handle.drain();
+    server.join().unwrap().unwrap();
+}
+
+/// The drain state machine over one connection: jobs admitted before
+/// `shutdown` all complete and answer; a job line after the ack gets a
+/// structured `draining` refusal; `run()` returns only after the last
+/// in-flight response is flushed.
+#[test]
+fn graceful_drain_finishes_admitted_jobs_and_refuses_new_ones() {
+    use std::io::{BufRead, BufReader, Write};
+    let (addr, handle, server) = start(ServeConfig { workers: 1, ..Default::default() });
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // 3 jobs + shutdown + 1 more job, pipelined in one write: the reader
+    // admits seq 1-3, flips the drain at seq 4, so seq 5 is refused —
+    // deterministically, because one reader processes lines in order
+    let burst = "\
+{\"workload\": \"reduction:32\", \"cols\": 2, \"rows\": 2}\n\
+{\"workload\": \"chain:24:seed=1\", \"cols\": 2, \"rows\": 2}\n\
+{\"workload\": \"reduction:32\", \"cols\": 2, \"rows\": 2}\n\
+{\"control\": \"shutdown\"}\n\
+{\"workload\": \"reduction:32\", \"cols\": 2, \"rows\": 2}\n";
+    stream.write_all(burst.as_bytes()).unwrap();
+    stream.flush().unwrap();
+    // responses arrive out of order (worker vs reader); key by seq
+    let mut by_seq = std::collections::BTreeMap::new();
+    while by_seq.len() < 5 {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "EOF with responses owed: {by_seq:?}");
+        let j = tdp::util::json::parse(line.trim()).unwrap();
+        by_seq.insert(u(j.get("seq")), j);
+    }
+    for seq in [1, 2, 3] {
+        assert!(
+            by_seq[&seq].get("result").is_some(),
+            "job admitted before shutdown must complete: {:?}",
+            by_seq[&seq]
+        );
+    }
+    assert_eq!(by_seq[&4].get("state").and_then(Json::as_str), Some("draining"));
+    assert_eq!(by_seq[&5].get("code").and_then(Json::as_str), Some("draining"));
+
+    // run() returns only after every admitted job answered
+    server.join().unwrap().unwrap();
+    let stats = handle.stats_json();
+    assert_eq!(stats.get("state").and_then(Json::as_str), Some("draining"));
+    let d = stats.get("daemon").unwrap();
+    assert_eq!(u(d.get("accepted")), 3);
+    assert_eq!(u(d.get("completed")), 3);
+    assert_eq!(u(d.get("rejected_draining")), 1);
+}

@@ -148,6 +148,14 @@ impl OverlayBuilder {
         self
     }
 
+    /// Multi-fabric sharding ([`crate::shard`]): `0` = auto (single
+    /// fabric, sharded fallback when the graph does not fit), `N >= 1` =
+    /// force an N-way sharded compile.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.cfg.shards = n;
+        self
+    }
+
     /// Validate and produce the [`Overlay`].
     pub fn build(self) -> Result<Overlay, ConfigError> {
         Overlay::from_config(self.cfg)
@@ -270,6 +278,12 @@ pub struct OverlayConfig {
     /// simulation engine ([`crate::engine`]): the cycle-by-cycle
     /// reference or the bit-exact skip-ahead event backend
     pub backend: BackendKind,
+    /// multi-fabric sharding ([`crate::shard`]): `0` (default) compiles
+    /// for a single fabric, falling back to sharded execution when the
+    /// graph does not fit and `enforce_capacity` is off; `N >= 1` forces
+    /// an N-way sharded compile (1 exercises the sharded path over one
+    /// fabric, bit-identical to a single-fabric run)
+    pub shards: usize,
 }
 
 impl Default for OverlayConfig {
@@ -287,6 +301,7 @@ impl Default for OverlayConfig {
             enforce_capacity: false,
             opt: false,
             backend: BackendKind::Lockstep,
+            shards: 0,
         }
     }
 }
@@ -356,13 +371,16 @@ impl OverlayConfig {
         if self.bram.fifo_brams < 0.0 || self.bram.fifo_brams >= self.bram.brams_per_pe as f64 {
             return err("fifo_brams must be in [0, brams_per_pe)");
         }
+        if self.shards > 64 {
+            return err("shards must be <= 64 (0 = auto single-fabric)");
+        }
         Ok(())
     }
 
     /// Recognized keys of the root table and the `[bram]` section —
     /// anything else is rejected by the strict loaders, so a typo'd knob
     /// fails loudly instead of silently keeping its default.
-    const ROOT_KEYS: [&'static str; 11] = [
+    const ROOT_KEYS: [&'static str; 12] = [
         "cols",
         "rows",
         "scheduler",
@@ -374,6 +392,7 @@ impl OverlayConfig {
         "enforce_capacity",
         "opt",
         "backend",
+        "shards",
     ];
     const BRAM_KEYS: [&'static str; 6] = [
         "brams_per_pe",
@@ -431,6 +450,7 @@ impl OverlayConfig {
         };
         cfg.cols = get_usize(&doc, "", "cols", cfg.cols)?;
         cfg.rows = get_usize(&doc, "", "rows", cfg.rows)?;
+        cfg.shards = get_usize(&doc, "", "shards", cfg.shards)?;
         cfg.alu_latency = get_u64(&doc, "alu_latency", cfg.alu_latency)?;
         cfg.seed = get_u64(&doc, "seed", cfg.seed)?;
         cfg.max_cycles = get_u64(&doc, "max_cycles", cfg.max_cycles)?;
@@ -497,6 +517,7 @@ impl OverlayConfig {
         doc.set("", "enforce_capacity", Value::Bool(self.enforce_capacity));
         doc.set("", "opt", Value::Bool(self.opt));
         doc.set("", "backend", Value::Str(self.backend.toml_name().into()));
+        doc.set("", "shards", Value::Int(self.shards as i64));
         doc.set("bram", "brams_per_pe", Value::Int(self.bram.brams_per_pe as i64));
         doc.set("bram", "words_per_bram", Value::Int(self.bram.words_per_bram as i64));
         doc.set("bram", "word_bits", Value::Int(self.bram.word_bits as i64));
@@ -546,6 +567,7 @@ impl OverlayConfig {
         root.insert("enforce_capacity".to_string(), Json::Bool(self.enforce_capacity));
         root.insert("opt".to_string(), Json::Bool(self.opt));
         root.insert("backend".to_string(), Json::Str(self.backend.toml_name().into()));
+        root.insert("shards".to_string(), Json::Num(self.shards as f64));
         root.insert("bram".to_string(), Json::Obj(bram));
         Json::Obj(root)
     }
@@ -616,6 +638,7 @@ impl OverlayConfig {
                     }
                 }
                 "backend" => cfg.backend = strv(key, v)?.parse()?,
+                "shards" => cfg.shards = usz(key, v)?,
                 "bram" => {
                     let table = v.as_obj().ok_or("bram: expected object")?;
                     for (k, bv) in table {

@@ -48,6 +48,19 @@ impl<'g> LockstepBackend<'g> {
         })
     }
 
+    /// [`LockstepBackend::with_tables`] with some inputs left unseeded
+    /// (sharded execution's boundary proxies).
+    pub fn with_tables_deferred(
+        g: &'g DataflowGraph,
+        tables: Arc<RuntimeTables>,
+        cfg: OverlayConfig,
+        deferred: &[u32],
+    ) -> Result<Self, SimError> {
+        Ok(Self {
+            sim: Simulator::with_tables_deferred(g, tables, cfg, deferred)?,
+        })
+    }
+
     /// Wrap an already-constructed simulator — the composition hook for
     /// ablations that pair a custom scheduler factory with either
     /// engine (e.g. `tests/artifact_tables.rs`).
@@ -69,6 +82,18 @@ impl<'g> SimBackend for LockstepBackend<'g> {
 
     fn run(&mut self) -> Result<SimStats, SimError> {
         self.sim.run()
+    }
+
+    fn run_until(&mut self, bound: u64) -> Result<bool, SimError> {
+        self.sim.run_until(bound)
+    }
+
+    fn inject_value(&mut self, node: u32, value: f32) {
+        self.sim.inject_value(node, value);
+    }
+
+    fn node_computed(&self, node: u32) -> bool {
+        self.sim.node_computed(node)
     }
 
     fn stats(&self) -> SimStats {

@@ -61,11 +61,28 @@ impl BackendKind {
 
 /// Common interface of the simulation engines. One backend instance
 /// simulates one (graph, placement, config) run to completion.
-pub trait SimBackend {
+/// (`Send` so the sharded runtime ([`crate::shard`]) can move per-shard
+/// backends across its epoch worker threads.)
+pub trait SimBackend: Send {
     fn kind(&self) -> BackendKind;
 
     /// Run to completion (or until the cycle limit).
     fn run(&mut self) -> Result<SimStats, SimError>;
+
+    /// Run until the graph completes (`Ok(true)`) or the clock reaches
+    /// `bound` (`Ok(false)`) — the sharded runtime's epoch slice.
+    /// Bit-exact with [`SimBackend::run`]: a run chopped into epochs
+    /// reaches the same completion cycle, values and error.
+    fn run_until(&mut self, bound: u64) -> Result<bool, SimError>;
+
+    /// Deliver a token to a deferred-seed input (graph node id) — the
+    /// sharded runtime's boundary injection. No-op unless the node was
+    /// deferred at construction and not yet injected.
+    fn inject_value(&mut self, node: u32, value: f32);
+
+    /// Has graph node `node` produced its value yet? (The sharded
+    /// runtime's boundary-harvest predicate.)
+    fn node_computed(&self, node: u32) -> bool;
 
     /// Statistics of the current (usually final) state.
     fn stats(&self) -> SimStats;
@@ -134,6 +151,25 @@ pub fn backend_with_tables<'g>(
     Ok(match cfg.backend {
         BackendKind::Lockstep => Box::new(LockstepBackend::with_tables(g, tables, cfg)?),
         BackendKind::SkipAhead => Box::new(SkipAheadBackend::with_tables(g, tables, cfg)?),
+    })
+}
+
+/// [`backend_with_tables`] with some inputs left unseeded, awaiting
+/// [`SimBackend::inject_value`] — the sharded runtime's per-shard
+/// constructor (`deferred` lists the boundary-proxy node ids).
+pub fn backend_with_tables_deferred<'g>(
+    g: &'g DataflowGraph,
+    tables: Arc<RuntimeTables>,
+    cfg: OverlayConfig,
+    deferred: &[u32],
+) -> Result<Box<dyn SimBackend + 'g>, SimError> {
+    Ok(match cfg.backend {
+        BackendKind::Lockstep => {
+            Box::new(LockstepBackend::with_tables_deferred(g, tables, cfg, deferred)?)
+        }
+        BackendKind::SkipAhead => {
+            Box::new(SkipAheadBackend::with_tables_deferred(g, tables, cfg, deferred)?)
+        }
     })
 }
 

@@ -78,6 +78,21 @@ impl<'g> SkipAheadBackend<'g> {
         })
     }
 
+    /// [`SkipAheadBackend::with_tables`] with some inputs left unseeded
+    /// (sharded execution's boundary proxies).
+    pub fn with_tables_deferred(
+        g: &'g DataflowGraph,
+        tables: Arc<RuntimeTables>,
+        cfg: OverlayConfig,
+        deferred: &[u32],
+    ) -> Result<Self, SimError> {
+        Ok(Self {
+            sim: Simulator::with_tables_deferred(g, tables, cfg, deferred)?,
+            jumps: 0,
+            cycles_skipped: 0,
+        })
+    }
+
     /// Wrap an already-constructed simulator — the composition hook for
     /// ablations that pair a custom scheduler factory with either
     /// engine (e.g. `tests/artifact_tables.rs`).
@@ -143,6 +158,57 @@ impl<'g> SimBackend for SkipAheadBackend<'g> {
                 return Err(self.cycle_limit_error());
             }
         }
+    }
+
+    /// Epoch-sliced run: identical jump logic to [`SkipAheadBackend::run`]
+    /// with the horizon additionally clamped to `bound`. A quiescent
+    /// state with *no* scheduled event is not reported as a livelock
+    /// here — under sharded execution the shard may simply be waiting
+    /// for a boundary injection at the next barrier — so the clock parks
+    /// at `bound` and control returns to the epoch runner (the cycle
+    /// limit still bounds a genuinely livelocked system with the same
+    /// error as lockstep).
+    fn run_until(&mut self, bound: u64) -> Result<bool, SimError> {
+        let max_cycles = self.sim.max_cycles();
+        loop {
+            if self.sim.is_complete() {
+                return Ok(true);
+            }
+            if self.sim.cycle() >= bound {
+                return Ok(false);
+            }
+            if self.sim.quiescent() {
+                let target = self
+                    .sim
+                    .next_event_cycle()
+                    .map_or(max_cycles.min(bound), |t| t.min(max_cycles).min(bound));
+                if target > self.sim.cycle() {
+                    self.jumps += 1;
+                    self.cycles_skipped += target - self.sim.cycle();
+                    self.sim.jump_to(target);
+                    if target >= max_cycles {
+                        return Err(self.cycle_limit_error());
+                    }
+                    if target >= bound {
+                        return Ok(false);
+                    }
+                }
+            }
+            if self.sim.step() {
+                return Ok(true);
+            }
+            if self.sim.cycle() >= max_cycles {
+                return Err(self.cycle_limit_error());
+            }
+        }
+    }
+
+    fn inject_value(&mut self, node: u32, value: f32) {
+        self.sim.inject_value(node, value);
+    }
+
+    fn node_computed(&self, node: u32) -> bool {
+        self.sim.node_computed(node)
     }
 
     fn stats(&self) -> SimStats {

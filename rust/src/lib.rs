@@ -46,6 +46,21 @@
 //! worker pool, graceful drain, `stats` endpoint) so the Program cache
 //! amortizes across many clients; `tdp batch --connect` and `tdp top`
 //! are its clients.
+//!
+//! Sharding (DESIGN.md §14) — graphs too big for one fabric partition
+//! across N simulated overlays joined by boundary channels under
+//! epoch-barrier cycle sync; the [`Engine`](service::Engine)
+//! auto-shards when [`Program::fits`] fails and capacity is
+//! unenforced, or `shards = N` forces it:
+//! ```no_run
+//! use std::sync::Arc;
+//! use tdp::{Overlay, ShardedProgram};
+//! # fn demo(g: Arc<tdp::DataflowGraph>) -> Result<(), tdp::Error> {
+//! let overlay = Overlay::builder().dims(2, 2).build()?;
+//! let sharded = ShardedProgram::compile(g, &overlay, 2)?;  // forced 2-way cut
+//! let run = sharded.session().run()?;                      // deterministic for any
+//! # let _ = run; Ok(()) }                                  // host thread count
+//! ```
 
 pub mod config;
 pub mod coordinator;
@@ -64,6 +79,7 @@ pub mod runtime;
 pub mod sched;
 pub mod serve;
 pub mod service;
+pub mod shard;
 pub mod sim;
 pub mod telemetry;
 pub mod util;
@@ -80,5 +96,6 @@ pub use program::{
 pub use sched::SchedulerKind;
 pub use serve::{Daemon, DaemonHandle, ServeConfig};
 pub use service::{Engine, JobResult, JobSpec};
+pub use shard::{ShardSession, ShardedProgram, ShardedRun};
 pub use sim::{SimError, SimStats, Simulator};
 pub use telemetry::{Registry, Telemetry};

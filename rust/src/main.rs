@@ -52,6 +52,15 @@ COMMANDS
               executing anything; --graph uses the *raw* JSON loader so
               broken graphs load far enough to be diagnosed; exit code 1
               iff any error-severity diagnostic fires
+  shard       inspect a sharded compile      <spec> [--cols 16 --rows 16 --shards 0
+              --run --format text|json]
+              partitions the workload across N simulated fabrics
+              (--shards 0 sizes N automatically from the BRAM budget,
+              like the engine's auto-shard fallback) and reports the
+              partition: per-shard members/proxies/fit, boundary
+              channels with link counts, cut weight and the epoch
+              length; --run also executes the sharded program and
+              reports the merged stats plus epoch/stall counters
   batch       serve a job stream             <jobs.jsonl | -> [--workers N (0 = all cores)
               --cache 64 --metrics-out file --connect host:port]
               one JSON job per line in ({\"workload\": \"chain:4096:seed=7\", ...}),
@@ -105,7 +114,9 @@ COMMANDS
               (span-only: per-cycle sampling stays off so skip-ahead
               jumps — the thing being measured — are preserved); the
               output also carries a placement_quality section (baseline
-              vs traffic-aware placement: cycles + weighted-hop cost),
+              vs traffic-aware placement: cycles + weighted-hop cost)
+              and a sharded section (oversized workload partitioned
+              across fabrics: epochs, stalls, compile/run wall), both
               kept out of cases/total_wall_ms so trajectories compare
   analyze     trace a run (queue occupancy / busyness / completion,
               per-PE / per-router activity heatmaps)
@@ -384,6 +395,136 @@ fn cmd_check(mut argv: Vec<String>) -> Result<()> {
     if errors > 0 {
         // stdout is line-buffered; every line above ended in '\n'
         std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// `tdp shard` — inspect the partition a sharded compile produces
+/// without going through the engine: per-shard member/proxy counts and
+/// fit verdicts, the boundary-channel table, cut cost and epoch length.
+/// `--shards 0` (the default) sizes the shard count exactly like the
+/// engine's auto-shard fallback (`Program::min_shards` at the
+/// out-of-order budget); `--run` also executes the sharded program and
+/// reports the merged stats.
+fn cmd_shard(mut argv: Vec<String>) -> Result<()> {
+    use std::sync::Arc;
+    use tdp::program::SharedProgram;
+    use tdp::ShardedProgram;
+    let positional = if argv.first().is_some_and(|s| !s.starts_with("--")) {
+        Some(argv.remove(0))
+    } else {
+        None
+    };
+    let mut a = Args::parse(argv).map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+    let cols = a.usize_or("cols", 16)?;
+    let rows = a.usize_or("rows", 16)?;
+    let shards = a.usize_or("shards", 0)?;
+    let run = a.switch("run");
+    let format = a.str_or("format", "text")?;
+    let json_out = match format.as_str() {
+        "text" => false,
+        "json" => true,
+        other => bail!("unknown format '{other}' (text | json)"),
+    };
+    a.finish()?;
+    let spec: workload::Spec = positional
+        .ok_or_else(|| anyhow!("usage: tdp shard <spec> [flags]\n\n{USAGE}"))?
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let graph = Arc::new(spec.build().map_err(|e| anyhow!("workload build: {e}"))?);
+    let cfg = OverlayConfig::default().with_dims(cols, rows);
+    let overlay = Overlay::from_config(cfg)?;
+    let n = if shards >= 1 {
+        shards
+    } else {
+        let single = SharedProgram::compile(Arc::clone(&graph), &overlay)?;
+        single.program().min_shards(cfg.scheduler)
+    };
+    let sharded = ShardedProgram::compile(graph, &overlay, n)?;
+    let part = sharded.partition();
+    let outcome = if run { Some(sharded.session().run()?) } else { None };
+    if json_out {
+        let num = |v: usize| Json::Num(v as f64);
+        let units: Vec<Json> = sharded
+            .units()
+            .iter()
+            .map(|u| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("members".to_string(), num(u.members()));
+                m.insert("proxies".to_string(), num(u.proxies()));
+                m.insert(
+                    "fits".to_string(),
+                    Json::Bool(u.program.program().fits(cfg.scheduler)),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        let channels: Vec<Json> = sharded
+            .channels()
+            .iter()
+            .map(|c| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("src".to_string(), num(c.src_shard as usize));
+                m.insert("dst".to_string(), num(c.dst_shard as usize));
+                m.insert("links".to_string(), num(c.links.len()));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("workload".to_string(), Json::Str(spec.canonical()));
+        m.insert("nodes".to_string(), num(sharded.graph().len()));
+        m.insert("num_shards".to_string(), num(sharded.num_shards()));
+        m.insert("epoch".to_string(), Json::Num(sharded.epoch() as f64));
+        m.insert("cut_edges".to_string(), num(part.cut_edges.len()));
+        m.insert("cut_weight".to_string(), Json::Num(part.cut_weight as f64));
+        m.insert("boundary_values".to_string(), num(sharded.boundary_values()));
+        m.insert("shards".to_string(), Json::Arr(units));
+        m.insert("channels".to_string(), Json::Arr(channels));
+        if let Some(r) = &outcome {
+            let mut rm = std::collections::BTreeMap::new();
+            rm.insert("stats".to_string(), r.stats.to_json_value());
+            rm.insert("epochs".to_string(), Json::Num(r.epochs as f64));
+            rm.insert(
+                "boundary_stalls".to_string(),
+                Json::Num(r.boundary_stalls as f64),
+            );
+            m.insert("run".to_string(), Json::Obj(rm));
+        }
+        println!("{}", json::write(&Json::Obj(m)));
+    } else {
+        println!(
+            "shard: {}: {} nodes -> {} shard(s) of {cols}x{rows} (epoch {} cycles)",
+            spec.canonical(),
+            sharded.graph().len(),
+            sharded.num_shards(),
+            sharded.epoch()
+        );
+        for (i, u) in sharded.units().iter().enumerate() {
+            println!(
+                "  shard {i}: {} members + {} proxies, fits {}: {}",
+                u.members(),
+                u.proxies(),
+                cfg.scheduler.name(),
+                if u.program.program().fits(cfg.scheduler) { "yes" } else { "NO" }
+            );
+        }
+        println!(
+            "  cut: {} edges, weight {}, {} boundary values over {} channel(s)",
+            part.cut_edges.len(),
+            part.cut_weight,
+            sharded.boundary_values(),
+            sharded.channels().len()
+        );
+        for c in sharded.channels() {
+            println!("  channel {}->{}: {} links", c.src_shard, c.dst_shard, c.links.len());
+        }
+        if let Some(r) = &outcome {
+            println!(
+                "  run: {} cycles over {} epochs, {} boundary stalls",
+                r.stats.cycles, r.epochs, r.boundary_stalls
+            );
+            println!("  {}", r.stats.one_line());
+        }
     }
     Ok(())
 }
@@ -1126,6 +1267,61 @@ fn cmd_perf(mut a: Args) -> Result<()> {
         );
         pq_json.push(Json::Obj(m));
     }
+    // Sharded-execution section (DESIGN.md §14): an oversized workload
+    // partitioned across simulated fabrics, compile + one run timed.
+    // Like placement_quality this stays OUTSIDE `cases`/`total_wall_ms`
+    // — it tracks the epoch-barrier runtime's cost (stall counters,
+    // wall clock), not single-fabric host throughput.
+    let sh_set: &[(&str, &str, usize)] = if quick {
+        &[("reduction_scale48_2x2_auto", "reduction:64:scale=48", 0)]
+    } else {
+        &[
+            ("reduction_scale48_2x2_auto", "reduction:64:scale=48", 0),
+            ("layered_scale8_2x2_n4", "layered:8:4:16:2:scale=8:seed=3", 4),
+        ]
+    };
+    let mut sharded_json = Vec::new();
+    for &(name, spec_str, shards) in sh_set {
+        use std::sync::Arc;
+        use tdp::program::SharedProgram;
+        use tdp::ShardedProgram;
+        let spec: workload::Spec = spec_str.parse().map_err(|e: String| anyhow!(e))?;
+        let g = Arc::new(spec.build().map_err(|e| anyhow!("workload build: {e}"))?);
+        let cfg = OverlayConfig::default().with_dims(2, 2);
+        let overlay = Overlay::from_config(cfg)?;
+        let t0 = Instant::now();
+        let n = if shards >= 1 {
+            shards
+        } else {
+            SharedProgram::compile(Arc::clone(&g), &overlay)?
+                .program()
+                .min_shards(cfg.scheduler)
+        };
+        let sp = ShardedProgram::compile(g, &overlay, n)?;
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = Instant::now();
+        let r = sp.session().run()?;
+        let wall_ms = t1.elapsed().as_secs_f64() * 1e3;
+        if format == "text" {
+            println!(
+                "sharded {:<26} {} shards  {:>9} cyc over {} epochs ({} stalls)  \
+                 compile {:>8.3} ms  run {:>8.3} ms",
+                name, n, r.stats.cycles, r.epochs, r.boundary_stalls, compile_ms, wall_ms
+            );
+        }
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(name.to_string()));
+        m.insert("workload".to_string(), Json::Str(spec.canonical()));
+        m.insert("num_shards".to_string(), Json::Num(n as f64));
+        m.insert("epoch".to_string(), Json::Num(sp.epoch() as f64));
+        m.insert("epochs".to_string(), Json::Num(r.epochs as f64));
+        m.insert("boundary_values".to_string(), Json::Num(r.boundary_values as f64));
+        m.insert("boundary_stalls".to_string(), Json::Num(r.boundary_stalls as f64));
+        m.insert("sim_cycles".to_string(), Json::Num(r.stats.cycles as f64));
+        m.insert("compile_ms".to_string(), Json::Num(compile_ms));
+        m.insert("wall_ms".to_string(), Json::Num(wall_ms));
+        sharded_json.push(Json::Obj(m));
+    }
     let mut root = std::collections::BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("tdp perf".to_string()));
     root.insert("version".to_string(), Json::Num(1.0));
@@ -1133,6 +1329,7 @@ fn cmd_perf(mut a: Args) -> Result<()> {
     root.insert("reps".to_string(), Json::Num(reps as f64));
     root.insert("cases".to_string(), Json::Arr(cases_json));
     root.insert("placement_quality".to_string(), Json::Arr(pq_json));
+    root.insert("sharded".to_string(), Json::Arr(sharded_json));
     root.insert("total_wall_ms".to_string(), Json::Num(total_wall_ms));
     let text = json::write(&Json::Obj(root));
     if format == "json" {
@@ -1248,6 +1445,10 @@ fn main() -> Result<()> {
     // check takes a positional workload spec, like batch's file path
     if cmd == "check" {
         return cmd_check(rest);
+    }
+    // shard takes a positional workload spec, like check
+    if cmd == "shard" {
+        return cmd_shard(rest);
     }
     // top takes a positional daemon address
     if cmd == "top" {

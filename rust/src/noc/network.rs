@@ -70,6 +70,23 @@ impl NetworkStats {
         }
         Ok(s)
     }
+
+    /// Component-wise merge of per-fabric stats — how sharded execution
+    /// ([`crate::shard`]) folds N fabrics' NoC counters into one
+    /// [`crate::sim::SimStats`]: counters sum, `max_latency` takes the
+    /// max. Identity for a single input (the sharded N=1 bit-identity
+    /// guarantee leans on this).
+    pub fn merged<I: IntoIterator<Item = NetworkStats>>(stats: I) -> NetworkStats {
+        stats.into_iter().fold(NetworkStats::default(), |mut acc, s| {
+            acc.injected += s.injected;
+            acc.delivered += s.delivered;
+            acc.deflections += s.deflections;
+            acc.inject_stalls += s.inject_stalls;
+            acc.total_latency += s.total_latency;
+            acc.max_latency = acc.max_latency.max(s.max_latency);
+            acc
+        })
+    }
 }
 
 /// Result of one network cycle (buffers owned by [`Network`], reused).

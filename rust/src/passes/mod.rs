@@ -29,6 +29,7 @@
 //!   compiled ids while its external surface speaks original ids.
 
 pub mod dce;
+pub mod partition;
 pub mod replicate_consts;
 pub mod verify;
 
@@ -174,6 +175,9 @@ pub struct PassCtx<'g> {
     pub pe_images: Option<Vec<PeImage>>,
     /// the baked hot-path image (set by `bake_tables`)
     pub tables: Option<Arc<RuntimeTables>>,
+    /// multi-fabric shard assignment (set by `partition`; sharded
+    /// pipelines only — see [`crate::shard`])
+    pub partition: Option<partition::Partition>,
     /// warning-severity findings accumulated across passes
     pub diags: Vec<Diagnostic>,
     /// one entry per executed pass, in pipeline order
@@ -191,6 +195,7 @@ impl<'g> PassCtx<'g> {
             place: None,
             pe_images: None,
             tables: None,
+            partition: None,
             diags: Vec::new(),
             stats: Vec::new(),
         }
@@ -400,6 +405,42 @@ impl Pass for CriticalityPass {
         let max = crit.iter().copied().max().unwrap_or(0);
         cx.crit = Some(crit);
         Ok(format!("max height {max}"))
+    }
+}
+
+/// Multi-fabric graph partitioning (analysis over the current graph,
+/// using the `criticality` pass's labels — slots in right after
+/// [`CriticalityPass`]). Writes the node→shard assignment and the
+/// boundary-edge table into [`PassCtx::partition`]; the sharded compile
+/// driver ([`crate::shard::ShardedProgram::compile`]) extracts per-shard
+/// subgraphs from it and runs the standard per-fabric pipeline on each.
+pub struct PartitionPass {
+    pub num_shards: usize,
+}
+
+impl PartitionPass {
+    pub fn new(num_shards: usize) -> Self {
+        Self { num_shards }
+    }
+}
+
+impl Pass for PartitionPass {
+    fn name(&self) -> &'static str {
+        "partition"
+    }
+
+    fn run(&self, cx: &mut PassCtx<'_>, _tel: Telemetry<'_>) -> Result<String, CompileError> {
+        let crit = cx.crit.as_deref().expect("criticality pass must run before partition");
+        let part = partition::partition(cx.graph(), crit, self.num_shards, cx.cfg.seed);
+        let detail = format!(
+            "{} shards, cut {} edges ({} boundary values, weight {})",
+            part.num_shards,
+            part.cut_edges.len(),
+            part.boundary_values(),
+            part.cut_weight
+        );
+        cx.partition = Some(part);
+        Ok(detail)
     }
 }
 

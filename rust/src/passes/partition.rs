@@ -1,0 +1,363 @@
+//! Graph partitioning for sharded multi-fabric execution (DESIGN.md
+//! §14): cut the dataflow DAG into `num_shards` balanced subgraphs
+//! minimizing the criticality-weighted cut, so the values that must
+//! cross the (slow) inter-fabric boundary channels are the ones the
+//! critical path depends on least.
+//!
+//! Two phases, mirroring the traffic-aware placer
+//! ([`crate::place::traffic`]):
+//!
+//! 1. **greedy grow** — walk nodes in topological order (builder order)
+//!    and grow each shard BFS-style: a node joins the shard of one of
+//!    its operands when that shard is under the balance cap, else the
+//!    least-loaded shard, minimizing the weighted edges it would cut;
+//! 2. **bounded annealing** — `min(200_000, 16·n)` relocation/swap
+//!    moves under geometric cooling, seeded from the overlay seed, so
+//!    the refinement is deterministic and cost-bounded.
+//!
+//! Any assignment is *legal*: every cross-shard edge becomes a proxy
+//! input in the consumer shard (see [`crate::shard`]), and because
+//! builder order is topological, interleaving proxies at their
+//! producer's original id keeps every shard subgraph topological by
+//! construction.
+
+use crate::graph::{DataflowGraph, NodeId, NodeKind};
+use crate::util::rng::Rng;
+
+/// One dataflow edge that crosses shards: `src` (producer) and `dst`
+/// (consumer) are *original-graph* node ids; `slot` is the consumer's
+/// operand slot. Listed in (src id, fanout order) — deterministic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CutEdge {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub slot: u8,
+}
+
+/// The result of [`partition`]: a total node→shard assignment plus the
+/// boundary-edge table and its cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    pub num_shards: usize,
+    /// node id → shard index (total over the graph)
+    pub shard_of: Vec<u32>,
+    /// every edge crossing shards, in (src, fanout order)
+    pub cut_edges: Vec<CutEdge>,
+    /// criticality-weighted cost of the cut (`Σ 1 + crit[src]`)
+    pub cut_weight: u64,
+    /// total edge count of the graph (for cut-fraction reporting)
+    pub total_edges: usize,
+}
+
+impl Partition {
+    /// Nodes per shard.
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.num_shards];
+        for &s in &self.shard_of {
+            sizes[s as usize] += 1;
+        }
+        sizes
+    }
+
+    /// Distinct `(producer, consumer shard)` pairs — each is one value
+    /// that must physically cross a boundary channel (a producer fanning
+    /// out to many consumers in one shard crosses once).
+    pub fn boundary_values(&self) -> usize {
+        let mut pairs: Vec<(NodeId, u32)> = self
+            .cut_edges
+            .iter()
+            .map(|e| (e.src, self.shard_of[e.dst as usize]))
+            .collect();
+        pairs.sort_unstable();
+        pairs.dedup();
+        pairs.len()
+    }
+}
+
+/// Weight of a cut edge out of `src`: cutting a critical producer costs
+/// more (its consumers wait a full boundary round-trip on the critical
+/// path). Same shape as the traffic placer's edge weight.
+#[inline]
+fn weight(crit: &[u32], src: NodeId) -> u64 {
+    1 + crit[src as usize] as u64
+}
+
+/// Exact criticality-weighted cut cost of an assignment.
+pub fn partition_cost(g: &DataflowGraph, crit: &[u32], shard_of: &[u32]) -> u64 {
+    let mut cost = 0u64;
+    for (src, node) in g.nodes().iter().enumerate() {
+        for &(dst, _) in &node.fanout {
+            if shard_of[src] != shard_of[dst as usize] {
+                cost += weight(crit, src as NodeId);
+            }
+        }
+    }
+    cost
+}
+
+/// Cut `g` into `num_shards` balanced subgraphs minimizing the
+/// criticality-weighted cut. Deterministic for fixed inputs (the
+/// annealing RNG is seeded from `seed`); `num_shards` is clamped to the
+/// node count and every shard is guaranteed non-empty.
+pub fn partition(g: &DataflowGraph, crit: &[u32], num_shards: usize, seed: u64) -> Partition {
+    let n = g.len();
+    assert_eq!(crit.len(), n, "criticality labels cover the graph");
+    let k = num_shards.max(1).min(n.max(1));
+    let total_edges = g.num_edges();
+    if k <= 1 {
+        return Partition {
+            num_shards: 1,
+            shard_of: vec![0; n],
+            cut_edges: Vec::new(),
+            cut_weight: 0,
+            total_edges,
+        };
+    }
+
+    // node balance cap: no shard may exceed ceil(n / k) nodes, so every
+    // fabric sees a comparable per-PE load after its own placement
+    let cap = n.div_ceil(k);
+    let mut shard = vec![0u32; n];
+    let mut load = vec![0usize; k];
+
+    // ---- phase 1: greedy BFS-grow in topological (builder) order ----
+    // candidates: each operand's shard while under cap (joining it cuts
+    // nothing on that edge), plus the least-loaded shard as the spread
+    // fallback; choose min (added cut weight, load, index).
+    for v in 0..n {
+        let mut cands: Vec<u32> = Vec::with_capacity(3);
+        if let NodeKind::Operation { op, src } = g.node(v as NodeId).kind {
+            for &u in &src[..op.arity()] {
+                let s = shard[u as usize];
+                if load[s as usize] < cap && !cands.contains(&s) {
+                    cands.push(s);
+                }
+            }
+        }
+        let spread = (0..k as u32)
+            .min_by_key(|&s| (load[s as usize], s))
+            .unwrap();
+        if load[spread as usize] < cap && !cands.contains(&spread) {
+            cands.push(spread);
+        }
+        if cands.is_empty() {
+            // every candidate at cap (possible only transiently near the
+            // end): fall back to the least-loaded shard regardless
+            cands.push(spread);
+        }
+        let best = cands
+            .iter()
+            .copied()
+            .min_by_key(|&s| {
+                let mut cut = 0u64;
+                if let NodeKind::Operation { op, src } = g.node(v as NodeId).kind {
+                    for &u in &src[..op.arity()] {
+                        if shard[u as usize] != s {
+                            cut += weight(crit, u);
+                        }
+                    }
+                }
+                (cut, load[s as usize], s)
+            })
+            .unwrap();
+        shard[v] = best;
+        load[best as usize] += 1;
+    }
+
+    // ---- phase 2: bounded deterministic annealing ----
+    // undirected incident lists with weights (both directions of every
+    // edge), the same refinement structure as the traffic placer.
+    struct Inc {
+        other: u32,
+        w: u64,
+    }
+    let mut inc: Vec<Vec<Inc>> = (0..n).map(|_| Vec::new()).collect();
+    for (src, node) in g.nodes().iter().enumerate() {
+        let w = weight(crit, src as NodeId);
+        for &(dst, _) in &node.fanout {
+            inc[src].push(Inc { other: dst, w });
+            inc[dst as usize].push(Inc { other: src as u32, w });
+        }
+    }
+    // cut contribution of node v under shard s
+    let node_cost = |shard: &[u32], v: usize, s: u32| -> u64 {
+        inc[v]
+            .iter()
+            .filter(|e| shard[e.other as usize] != s)
+            .map(|e| e.w)
+            .sum()
+    };
+    // total weight of edges directly between a and b (swap correction)
+    let between = |a: usize, b: usize| -> u64 {
+        inc[a]
+            .iter()
+            .filter(|e| e.other as usize == b)
+            .map(|e| e.w)
+            .sum()
+    };
+
+    let mut cost = partition_cost(g, crit, &shard) as i64;
+    let moves = 200_000usize.min(16 * n.max(1));
+    let mut rng = Rng::seed_from_u64(seed ^ 0x5348_4152_4453); // "SHARDS"
+    let mut temp = (cost as f64 / total_edges.max(1) as f64).max(1.0);
+    let alpha = 0.01f64.powf(1.0 / moves.max(1) as f64);
+    for _ in 0..moves {
+        temp *= alpha;
+        if rng.gen_bool(0.5) {
+            // relocation: move v to shard t (capacity- and
+            // non-emptiness-preserving)
+            let v = rng.gen_range(n);
+            let s = shard[v];
+            let t = rng.gen_range(k) as u32;
+            if t == s || load[t as usize] >= cap || load[s as usize] <= 1 {
+                continue;
+            }
+            let delta = node_cost(&shard, v, t) as i64 - node_cost(&shard, v, s) as i64;
+            if delta <= 0 || rng.gen_f64() < (-(delta as f64) / temp).exp() {
+                shard[v] = t;
+                load[s as usize] -= 1;
+                load[t as usize] += 1;
+                cost += delta;
+            }
+        } else {
+            // swap: exchange the shards of a and b (balance-preserving)
+            let a = rng.gen_range(n);
+            let b = rng.gen_range(n);
+            let (s, t) = (shard[a], shard[b]);
+            if s == t {
+                continue;
+            }
+            let delta = node_cost(&shard, a, t) as i64 + node_cost(&shard, b, s) as i64
+                - node_cost(&shard, a, s) as i64
+                - node_cost(&shard, b, t) as i64
+                + 2 * between(a, b) as i64;
+            if delta <= 0 || rng.gen_f64() < (-(delta as f64) / temp).exp() {
+                shard[a] = t;
+                shard[b] = s;
+                cost += delta;
+            }
+        }
+    }
+    debug_assert_eq!(cost, partition_cost(g, crit, &shard) as i64);
+
+    // every shard non-empty: steal the highest-id node from the largest
+    // shard (deterministic; can only trigger for tiny graphs)
+    loop {
+        let mut sizes = vec![0usize; k];
+        for &s in &shard {
+            sizes[s as usize] += 1;
+        }
+        let Some(empty) = sizes.iter().position(|&c| c == 0) else {
+            break;
+        };
+        let donor = (0..k).max_by_key(|&s| (sizes[s], s)).unwrap() as u32;
+        let v = (0..n).rev().find(|&v| shard[v] == donor).unwrap();
+        shard[v] = empty as u32;
+    }
+
+    // exact boundary-edge table in (src, fanout order)
+    let mut cut_edges = Vec::new();
+    let mut cut_weight = 0u64;
+    for (src, node) in g.nodes().iter().enumerate() {
+        for &(dst, slot) in &node.fanout {
+            if shard[src] != shard[dst as usize] {
+                cut_edges.push(CutEdge { src: src as NodeId, dst, slot });
+                cut_weight += weight(crit, src as NodeId);
+            }
+        }
+    }
+    Partition {
+        num_shards: k,
+        shard_of: shard,
+        cut_edges,
+        cut_weight,
+        total_edges,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::criticality::criticality;
+    use crate::workload::{layered_random, lu_factorization_graph, SparseMatrix};
+
+    fn check_partition(g: &DataflowGraph, p: &Partition, k: usize) {
+        assert_eq!(p.shard_of.len(), g.len());
+        let sizes = p.shard_sizes();
+        assert_eq!(sizes.len(), k.min(g.len()));
+        assert!(sizes.iter().all(|&s| s > 0), "no empty shard: {sizes:?}");
+        assert!(
+            *sizes.iter().max().unwrap() <= g.len().div_ceil(k) + 1,
+            "balance cap (±1 for the non-empty fixup): {sizes:?}"
+        );
+        // the cut table is exactly the crossing edges
+        for e in &p.cut_edges {
+            assert_ne!(p.shard_of[e.src as usize], p.shard_of[e.dst as usize]);
+        }
+        let crossing = g
+            .nodes()
+            .iter()
+            .enumerate()
+            .flat_map(|(src, n)| n.fanout.iter().map(move |&(dst, _)| (src, dst)))
+            .filter(|&(s, d)| p.shard_of[s] != p.shard_of[d as usize])
+            .count();
+        assert_eq!(p.cut_edges.len(), crossing);
+    }
+
+    #[test]
+    fn single_shard_is_trivial() {
+        let g = layered_random(8, 4, 12, 2, 1);
+        let crit = criticality(&g);
+        let p = partition(&g, &crit, 1, 0);
+        assert_eq!(p.num_shards, 1);
+        assert!(p.cut_edges.is_empty());
+        assert_eq!(p.cut_weight, 0);
+        assert!(p.shard_of.iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn partitions_are_balanced_and_consistent() {
+        let g = layered_random(16, 8, 32, 2, 3);
+        let crit = criticality(&g);
+        for k in [2, 3, 4, 7] {
+            let p = partition(&g, &crit, k, 5);
+            check_partition(&g, &p, k);
+            assert_eq!(p.cut_weight, partition_cost(&g, &crit, &p.shard_of));
+            assert!(p.boundary_values() <= p.cut_edges.len());
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let m = SparseMatrix::banded(48, 3, 0.9, 7);
+        let (g, _) = lu_factorization_graph(&m);
+        let crit = criticality(&g);
+        let a = partition(&g, &crit, 4, 9);
+        let b = partition(&g, &crit, 4, 9);
+        assert_eq!(a, b, "same seed, same partition");
+    }
+
+    #[test]
+    fn annealing_beats_or_matches_round_robin() {
+        let g = layered_random(24, 10, 48, 3, 11);
+        let crit = criticality(&g);
+        let p = partition(&g, &crit, 4, 0);
+        let rr: Vec<u32> = (0..g.len() as u32).map(|v| v % 4).collect();
+        assert!(
+            p.cut_weight <= partition_cost(&g, &crit, &rr),
+            "grown+annealed cut must not lose to round-robin"
+        );
+    }
+
+    #[test]
+    fn more_shards_than_nodes_clamps() {
+        let mut g = DataflowGraph::new();
+        let a = g.add_input(1.0);
+        let b = g.add_input(2.0);
+        g.op(crate::graph::Op::Add, &[a, b]);
+        let crit = criticality(&g);
+        let p = partition(&g, &crit, 16, 0);
+        assert_eq!(p.num_shards, 3, "clamped to the node count");
+        assert!(p.shard_sizes().iter().all(|&s| s == 1));
+    }
+}

@@ -28,6 +28,7 @@
 //! | `capacity`         | error/warning | PE graph memory over budget (error iff `enforce_capacity`) |
 //! | `local-overflow`   | error    | PE holds more nodes than a 13-bit local index addresses |
 //! | `flag-overflow`    | warning  | OoO flag vectors cannot cover every local node |
+//! | `shard-hint`       | warning  | capacity overflow summary: estimated shard count that would fit ([`crate::program::Program::min_shards`]) |
 //!
 //! Reporting is capped per code (first [`MAX_PER_CODE`] findings, then
 //! one summary diagnostic with the suppressed count) so a pathological
@@ -256,6 +257,8 @@ pub fn capacity_diagnostics(
 ) -> Vec<Diagnostic> {
     let mut em = Emitter::new();
     let budget = cfg.bram.graph_words(cfg.scheduler);
+    let mut total_words = 0usize;
+    let mut overflowed = false;
     // OoO flag vectors: 2 per node (RDY + fanout-pending), so coverage
     // is half the flag bits
     let flag_nodes = (cfg.bram.flag_words() / 2) * cfg.bram.flag_bits_used;
@@ -263,7 +266,9 @@ pub fn capacity_diagnostics(
         let nodes = locals.len();
         let edges: usize = locals.iter().map(|&id| g.node(id).fanout.len()).sum();
         let words = BramConfig::words_used(nodes, edges);
+        total_words += words;
         if words > budget {
+            overflowed = true;
             let over = words - budget;
             let words_per_node = (words / nodes.max(1)).max(1);
             let severity =
@@ -300,6 +305,25 @@ pub fn capacity_diagnostics(
                 ),
             ));
         }
+    }
+    // The actionable summary behind any capacity overflow: how many
+    // fabrics of this geometry sharded execution would need (same
+    // estimate as `Program::min_shards` — boundary proxies can nudge the
+    // real partition slightly higher).
+    if overflowed {
+        let per_fabric = budget * place.nodes_of.len();
+        let shards =
+            if per_fabric == 0 { usize::MAX } else { total_words.div_ceil(per_fabric).max(2) };
+        em.emit(Diagnostic::warning(
+            "shard-hint",
+            None,
+            format!(
+                "graph needs {total_words} graph words but one {}x{} fabric holds {per_fabric}: \
+                 sharded execution needs an estimated {shards} fabrics \
+                 (set `shards = {shards}`, or leave capacity unenforced to auto-shard)",
+                cfg.cols, cfg.rows
+            ),
+        ));
     }
     em.finish()
 }
@@ -409,6 +433,10 @@ mod tests {
         assert_eq!(cap.severity, Severity::Error);
         assert!(cap.message.contains("PE 0"), "{}", cap.message);
         assert!(cap.message.contains("over by"), "{}", cap.message);
+        // any overflow also yields the actionable shard-count summary
+        let hint = diags.iter().find(|d| d.code == "shard-hint").expect("shard hint");
+        assert_eq!(hint.severity, Severity::Warning);
+        assert!(hint.message.contains("shards ="), "{}", hint.message);
         // without enforcement the same finding is advisory
         cfg.enforce_capacity = false;
         let diags = capacity_diagnostics(&g, &place, &cfg);
@@ -416,5 +444,18 @@ mod tests {
             diags.iter().find(|d| d.code == "capacity").unwrap().severity,
             Severity::Warning
         );
+        // a fitting graph emits no hint
+        let small = crate::workload::layered_random(4, 2, 8, 2, 0);
+        let cfg16 = OverlayConfig::default();
+        let place16 = Placement::build(
+            &small,
+            cfg16.num_pes(),
+            PlacementPolicy::RoundRobin,
+            LocalOrder::ByIndex,
+            0,
+        );
+        assert!(capacity_diagnostics(&small, &place16, &cfg16)
+            .iter()
+            .all(|d| d.code != "shard-hint"));
     }
 }

@@ -397,6 +397,27 @@ impl<'g> Program<'g> {
             .collect()
     }
 
+    /// Smallest shard count at which this graph's total graph-memory
+    /// footprint, split evenly across that many copies of this overlay,
+    /// fits `kind`'s per-PE budget — the actionable number a failed
+    /// [`Program::fits`] reports (`tdp check`, [`SimError::FitViolation`]
+    /// paths). `1` when the program already fits. An *estimate*: boundary
+    /// proxies add a little per-shard footprint and per-fabric placement
+    /// imbalance can push a marginal shard over, so `tdp shard` verifies
+    /// the actual partition.
+    pub fn min_shards(&self, kind: SchedulerKind) -> usize {
+        if self.fits(kind) {
+            return 1;
+        }
+        let budget = self.overlay.config().bram.graph_words(kind);
+        let per_fabric = budget * self.overlay.config().num_pes();
+        if per_fabric == 0 {
+            return usize::MAX;
+        }
+        let total: usize = self.art.pe_images.iter().map(|i| i.graph_words).sum();
+        total.div_ceil(per_fabric).max(2)
+    }
+
     /// Open a session at the overlay's default scheduler/backend.
     pub fn session(&self) -> Session<'_, 'g> {
         Session::new(self)

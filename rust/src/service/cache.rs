@@ -13,6 +13,7 @@ use crate::config::OverlayConfig;
 use crate::engine::BackendKind;
 use crate::program::SharedProgram;
 use crate::sched::SchedulerKind;
+use crate::shard::ShardedProgram;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -74,8 +75,19 @@ pub struct Lru<K: Ord, V> {
     evictions: u64,
 }
 
+/// A cached compile artifact: single-fabric or sharded. Which one a key
+/// resolves to is itself a pure function of the key (the `shards` knob
+/// rides in the normalized overlay JSON, and the auto-shard fallback
+/// decides on the normalized scheduler), so every job sharing a key
+/// gets the same artifact kind.
+#[derive(Clone)]
+pub enum Compiled {
+    Single(Arc<SharedProgram>),
+    Sharded(Arc<ShardedProgram>),
+}
+
 /// The engine's Program cache: compiled artifacts by content address.
-pub type ProgramCache = Lru<CacheKey, Arc<SharedProgram>>;
+pub type ProgramCache = Lru<CacheKey, Compiled>;
 
 impl<K: Ord + Clone, V: Clone> Lru<K, V> {
     /// A cache holding at most `capacity` values (min 1).

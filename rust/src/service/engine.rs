@@ -1,12 +1,14 @@
 //! The long-lived execution engine: jobs in, results out, compiles
 //! amortized through the content-addressed Program cache.
 
-use super::cache::{CacheKey, Lru, ProgramCache};
-use super::job::{JobResult, JobSpec};
+use super::cache::{CacheKey, Compiled, Lru, ProgramCache};
+use super::job::{JobResult, JobSpec, ShardInfo};
 use crate::config::Overlay;
 use crate::error::Error;
 use crate::graph::{DataflowGraph, GraphStats};
 use crate::program::SharedProgram;
+use crate::sched::SchedulerKind;
+use crate::shard::ShardedProgram;
 use crate::telemetry::Histogram;
 use crate::util::json::{self, Json};
 use crate::util::par::run_parallel;
@@ -130,6 +132,7 @@ struct LatencyPair {
 struct EngineMetrics {
     jobs: u64,
     failures: u64,
+    sharded: u64,
     compile: Histogram,
     run: Histogram,
     per_key: BTreeMap<String, LatencyPair>,
@@ -138,6 +141,9 @@ struct EngineMetrics {
 impl EngineMetrics {
     fn record(&mut self, result: &JobResult) {
         self.jobs += 1;
+        if result.shards.is_some() {
+            self.sharded += 1;
+        }
         if !result.cache_hit {
             self.compile.observe(result.compile_micros);
         }
@@ -233,21 +239,19 @@ impl Engine {
         let key = CacheKey::new(entry.fingerprint, &canon, &cfg);
 
         let lookup = || self.programs.lock().expect("program cache lock").get(&key);
-        let (program, cache_hit, compile_micros) =
+        let (compiled, cache_hit, compile_micros) =
             match self.program_flight.acquire(&key, lookup) {
-                Some(program) => (program, true, 0),
+                Some(compiled) => (compiled, true, 0),
                 None => {
                     // we own the build right: compile with no locks held
                     let t0 = Instant::now();
-                    let compiled = SharedProgram::compile(Arc::clone(&entry.graph), &overlay);
-                    let out = match compiled {
-                        Ok(program) => {
-                            let program = Arc::new(program);
+                    let out = match Self::build_compiled(&entry.graph, &overlay) {
+                        Ok(compiled) => {
                             self.programs
                                 .lock()
                                 .expect("program cache lock")
-                                .insert(key.clone(), Arc::clone(&program));
-                            Ok((program, false, t0.elapsed().as_micros() as u64))
+                                .insert(key.clone(), compiled.clone());
+                            Ok((compiled, false, t0.elapsed().as_micros() as u64))
                         }
                         Err(e) => Err(Error::Compile(e)),
                     };
@@ -261,15 +265,41 @@ impl Engine {
             self.misses.fetch_add(1, Ordering::Relaxed);
         }
 
-        let view = program.program();
         let t0 = Instant::now();
-        let stats = view
-            .session()
-            .with_scheduler(job.scheduler)
-            .with_backend(job.backend)
-            .with_max_cycles(cfg.max_cycles)
-            .run()
-            .map_err(Error::Sim)?;
+        let (stats, shards) = match &compiled {
+            Compiled::Single(program) => {
+                let view = program.program();
+                let stats = view
+                    .session()
+                    .with_scheduler(job.scheduler)
+                    .with_backend(job.backend)
+                    .with_max_cycles(cfg.max_cycles)
+                    .run()
+                    .map_err(Error::Sim)?;
+                (stats, None)
+            }
+            Compiled::Sharded(sharded) => {
+                let run = sharded
+                    .session()
+                    .with_scheduler(job.scheduler)
+                    .with_backend(job.backend)
+                    .with_max_cycles(cfg.max_cycles)
+                    .run()
+                    .map_err(Error::Sim)?;
+                let part = sharded.partition();
+                let info = ShardInfo {
+                    count: sharded.num_shards(),
+                    cut_edges: part.cut_edges.len(),
+                    cut_weight: part.cut_weight,
+                    epoch: sharded.epoch(),
+                    epochs: run.epochs,
+                    boundary_values: run.boundary_values,
+                    boundary_stalls: run.boundary_stalls,
+                    shard_cycles: run.shard_cycles,
+                };
+                (run.stats, Some(info))
+            }
+        };
         let run_micros = t0.elapsed().as_micros() as u64;
 
         Ok(JobResult {
@@ -284,7 +314,34 @@ impl Engine {
             edges: entry.stats.edges,
             depth: entry.stats.depth,
             stats,
+            shards,
         })
+    }
+
+    /// Compile `graph` for `overlay` into the artifact its cache key
+    /// resolves to: sharded when the `shards` knob forces it, single
+    /// fabric otherwise — falling back to an auto-sized sharded compile
+    /// when the program does not fit one fabric and capacity is not
+    /// enforced. The fallback verdict uses the *normalized* scheduler
+    /// (out-of-order — the one the cache key stores when capacity
+    /// enforcement is off), so the decision is a pure function of the
+    /// key and every job sharing the key gets the same artifact.
+    fn build_compiled(
+        graph: &Arc<DataflowGraph>,
+        overlay: &Overlay,
+    ) -> Result<Compiled, crate::program::CompileError> {
+        let cfg = overlay.config();
+        if cfg.shards >= 1 {
+            let sharded = ShardedProgram::compile(Arc::clone(graph), overlay, cfg.shards)?;
+            return Ok(Compiled::Sharded(Arc::new(sharded)));
+        }
+        let single = SharedProgram::compile(Arc::clone(graph), overlay)?;
+        if !cfg.enforce_capacity && !single.program().fits(SchedulerKind::OutOfOrder) {
+            let n = single.program().min_shards(SchedulerKind::OutOfOrder);
+            let sharded = ShardedProgram::compile(Arc::clone(graph), overlay, n)?;
+            return Ok(Compiled::Sharded(Arc::new(sharded)));
+        }
+        Ok(Compiled::Single(Arc::new(single)))
     }
 
     /// Fan `jobs` across `workers` OS threads ([`run_parallel`]).
@@ -338,6 +395,7 @@ impl Engine {
         let mut jobs = BTreeMap::new();
         jobs.insert("submitted".to_string(), num(metrics.jobs));
         jobs.insert("failed".to_string(), num(metrics.failures));
+        jobs.insert("sharded".to_string(), num(metrics.sharded));
 
         let mut latency = BTreeMap::new();
         latency.insert("compile_micros".to_string(), metrics.compile.to_json_value());
@@ -578,6 +636,56 @@ mod tests {
         // loser arriving after publication hits the cache directly
         assert!(waits <= 6, "at most 3 losers per flight, got {waits}");
         assert_eq!(engine.cache_stats().misses, 1, "still exactly one compile");
+    }
+
+    /// `shards = N` in the overlay forces a sharded compile; the result
+    /// carries partition provenance and replays bit-identically from
+    /// the cache, and a forced N=1 matches the single-fabric run.
+    #[test]
+    fn forced_shard_jobs_carry_provenance_and_replay_identically() {
+        let engine = Engine::new();
+        let mut j = job("reduction:64", 2, 2);
+        j.overlay.shards = 2;
+        let cold = engine.submit(&j).unwrap();
+        let info = cold.shards.as_ref().expect("forced-shard provenance");
+        assert_eq!(info.count, 2);
+        assert_eq!(info.shard_cycles.len(), 2);
+        assert!(info.epoch > 0);
+        let warm = engine.submit(&j).unwrap();
+        assert!(warm.cache_hit);
+        assert_eq!(warm.stats, cold.stats, "sharded hits replay bit-identical stats");
+        assert_eq!(warm.shards, cold.shards);
+
+        let base = engine.submit(&job("reduction:64", 2, 2)).unwrap();
+        assert!(base.shards.is_none(), "fitting jobs stay single-fabric");
+        let mut n1 = job("reduction:64", 2, 2);
+        n1.overlay.shards = 1;
+        let one = engine.submit(&n1).unwrap();
+        assert_eq!(one.stats, base.stats, "forced N=1 is bit-identical to single-fabric");
+        assert_eq!(one.shards.as_ref().unwrap().boundary_values, 0);
+    }
+
+    /// A graph that cannot fit one fabric (the capacity-enforced variant
+    /// above fails its compile) auto-falls back to a sharded compile and
+    /// runs to completion, with provenance and the `sharded` jobs
+    /// counter surfacing the fallback.
+    #[test]
+    fn oversized_graphs_auto_shard_to_completion() {
+        let engine = Engine::new();
+        let j = job("layered:64:32:128:2", 1, 1);
+        let r = engine.submit(&j).unwrap();
+        let info = r.shards.as_ref().expect("auto-shard provenance");
+        assert!(info.count >= 2, "needs more than one fabric, got {}", info.count);
+        assert_eq!(r.stats.completed, r.stats.total_nodes, "ran to completion");
+        let r2 = engine.submit(&j).unwrap();
+        assert!(r2.cache_hit);
+        assert_eq!(r2.stats, r.stats);
+        assert_eq!(r2.shards, r.shards);
+        let snap = engine.metrics_snapshot();
+        assert_eq!(
+            snap.get("jobs").unwrap().get("sharded").unwrap().as_u64(),
+            Some(2)
+        );
     }
 
     #[test]

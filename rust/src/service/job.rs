@@ -25,9 +25,9 @@ use std::collections::BTreeMap;
 /// ```
 ///
 /// `overlay` (when present) is a full [`OverlayConfig`] object; the
-/// flat `cols` / `rows` / `seed` keys are shorthand applied on top of
-/// it, and `scheduler` / `backend` / `max_cycles` always win over the
-/// values inside `overlay` — they are session-level knobs.
+/// flat `cols` / `rows` / `seed` / `shards` keys are shorthand applied
+/// on top of it, and `scheduler` / `backend` / `max_cycles` always win
+/// over the values inside `overlay` — they are session-level knobs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobSpec {
     /// workload spec string (`crate::workload::Spec` grammar)
@@ -120,6 +120,12 @@ impl JobSpec {
                 "seed" => {
                     overlay.seed = v.as_u64().ok_or("seed: expected non-negative integer")?
                 }
+                "shards" => {
+                    overlay.shards = v
+                        .as_u64()
+                        .ok_or("shards: expected non-negative integer")?
+                        as usize
+                }
                 "max_cycles" => {
                     max_cycles =
                         Some(v.as_u64().ok_or("max_cycles: expected non-negative integer")?)
@@ -163,6 +169,55 @@ impl JobSpec {
     }
 }
 
+/// Sharded-execution provenance of a [`JobResult`]: how the graph was
+/// partitioned and what the boundary channels carried
+/// ([`crate::shard`]). Present exactly when the job ran sharded —
+/// either forced (`shards >= 1`) or by the auto fallback for graphs
+/// that do not fit one fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardInfo {
+    /// number of fabric shards the graph ran across
+    pub count: usize,
+    /// graph edges crossing a shard boundary
+    pub cut_edges: usize,
+    /// criticality-weighted cut cost ([`crate::passes::partition`])
+    pub cut_weight: u64,
+    /// epoch length E == modeled boundary-link latency (cycles)
+    pub epoch: u64,
+    /// epoch barriers the run synchronized at
+    pub epochs: u64,
+    /// values carried across boundary channels
+    pub boundary_values: u64,
+    /// channel-capacity stall events at barriers
+    pub boundary_stalls: u64,
+    /// completion cycle of each shard
+    pub shard_cycles: Vec<u64>,
+}
+
+impl ShardInfo {
+    pub fn to_json_value(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(self.count as f64));
+        m.insert("cut_edges".to_string(), Json::Num(self.cut_edges as f64));
+        m.insert("cut_weight".to_string(), Json::Num(self.cut_weight as f64));
+        m.insert("epoch".to_string(), Json::Num(self.epoch as f64));
+        m.insert("epochs".to_string(), Json::Num(self.epochs as f64));
+        m.insert(
+            "boundary_values".to_string(),
+            Json::Num(self.boundary_values as f64),
+        );
+        m.insert(
+            "boundary_stalls".to_string(),
+            Json::Num(self.boundary_stalls as f64),
+        );
+        m.insert(
+            "shard_cycles".to_string(),
+            Json::Arr(self.shard_cycles.iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
 /// One execution response: the workload's canonical spec, the variant it
 /// ran under, graph shape, cache provenance, timing and the full
 /// simulation counters.
@@ -186,6 +241,8 @@ pub struct JobResult {
     pub depth: usize,
     /// the full counter set of the run
     pub stats: SimStats,
+    /// sharded-execution provenance; `None` for single-fabric runs
+    pub shards: Option<ShardInfo>,
 }
 
 impl JobResult {
@@ -214,6 +271,9 @@ impl JobResult {
         m.insert("edges".to_string(), Json::Num(self.edges as f64));
         m.insert("depth".to_string(), Json::Num(self.depth as f64));
         m.insert("stats".to_string(), self.stats.to_json_value());
+        if let Some(info) = &self.shards {
+            m.insert("shards".to_string(), info.to_json_value());
+        }
         Json::Obj(m)
     }
 
@@ -328,6 +388,7 @@ mod tests {
             edges: 2,
             depth: 2,
             stats: stats.clone(),
+            shards: None,
         };
         let j = json::parse(&r.to_json()).unwrap();
         assert_eq!(j.get("fingerprint").unwrap().as_str(), Some("da707bbbd2f6ebdc"));

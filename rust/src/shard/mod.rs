@@ -1,0 +1,698 @@
+//! Sharded multi-fabric execution (DESIGN.md §14): run one dataflow
+//! graph across N simulated overlays when it cannot fit — or should not
+//! monopolize — a single fabric.
+//!
+//! ## Compile side
+//!
+//! [`ShardedProgram::compile`] runs a short pass pipeline (verify →
+//! criticality → [`crate::passes::PartitionPass`]) over the original
+//! graph, then extracts one subgraph per shard. Every boundary in-edge
+//! (producer in another shard) becomes a **proxy input** in the consumer
+//! shard — a placeholder `Input` node carrying no token until the
+//! runtime injects the producer's value across a boundary channel. A
+//! producer fanning out to many consumers in one shard gets a single
+//! proxy there, so each `(producer, consumer shard)` pair crosses the
+//! boundary exactly once. Proxies are interleaved at their producer's
+//! original id, and members keep their relative order, so builder order
+//! stays topological and each shard then compiles through the standard
+//! per-fabric pipeline (place → bram_images → bake_tables) *unchanged*.
+//! With one shard the extraction reproduces the original graph
+//! node-for-node (same fingerprint), which is what makes the sharded
+//! N=1 path bit-identical to single-fabric execution.
+//!
+//! ## Run side
+//!
+//! [`ShardSession::run`] builds one [`SimBackend`] per shard (boundary
+//! proxies deferred, [`crate::engine::backend_with_tables_deferred`])
+//! and advances all of them in lockstep **epochs** of E cycles on a
+//! [`crate::util::par::run_parallel`] worker pool. At each epoch
+//! barrier, every [`BoundaryChannel`] — a bounded queue modeling the
+//! higher-latency inter-fabric link — harvests newly computed producer
+//! values, promotes up to `capacity` of them in flight, and delivers
+//! the previous barrier's in-flight values into the consumer shards'
+//! proxies. A value computed at cycle `c` of epoch `k` becomes visible
+//! at cycle `(k+2)·E`, i.e. after `E < latency ≤ 2E` cycles — never
+//! less than the modeled link latency E ([`boundary_latency`]).
+//!
+//! **Determinism invariant**: shards interact *only* at barriers, and
+//! every barrier walks channels, links and injections in one canonical
+//! order (channels sorted by `(src, dst)` shard pair, links by producer
+//! id) — worker threads never touch shared state mid-epoch. Results are
+//! therefore invariant under thread count and scheduling interleaving;
+//! `tests/sharding.rs` pins this.
+
+use crate::config::{Overlay, OverlayConfig};
+use crate::engine::{self, BackendKind, SimBackend};
+use crate::graph::{DataflowGraph, NodeKind};
+use crate::noc::NetworkStats;
+use crate::passes::partition::Partition;
+use crate::passes::{CriticalityPass, PartitionPass, PassCtx, PassManager, VerifyPass};
+use crate::program::{CompileError, Program, SharedProgram};
+use crate::sched::SchedulerKind;
+use crate::sim::{PeStats, SimError, SimStats};
+use crate::telemetry::{self, Registry, Telemetry};
+use crate::util::par::run_parallel;
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// In-flight capacity of one directed boundary channel per epoch:
+/// harvested values beyond this wait (counted as stalls) and drain on
+/// later barriers.
+pub const BOUNDARY_CHANNEL_CAPACITY: usize = 16;
+
+/// Modeled latency of an inter-fabric link, in fabric cycles — a
+/// serialized off-fabric hop is never cheaper than crossing the torus
+/// itself, so it scales with the fabric diameter plus a fixed
+/// serialization cost. Also the epoch length E: syncing every E cycles
+/// can only *add* latency (delivery lands at the next barrier), so the
+/// channel model is honored for every thread interleaving.
+pub fn boundary_latency(cfg: &OverlayConfig) -> u64 {
+    (cfg.cols + cfg.rows) as u64 + 4
+}
+
+/// One value that crosses a boundary channel: original-graph `producer`,
+/// its node id in the producing shard's subgraph (`src_local`) and the
+/// proxy input standing in for it in the consuming shard (`dst_local`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BoundaryLink {
+    pub producer: u32,
+    pub src_local: u32,
+    pub dst_local: u32,
+}
+
+/// A directed inter-fabric channel: every boundary value flowing from
+/// `src_shard` to `dst_shard`, links sorted by producer id (the
+/// canonical barrier-processing order).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChannelSpec {
+    pub src_shard: u32,
+    pub dst_shard: u32,
+    pub links: Vec<BoundaryLink>,
+}
+
+/// One shard of a [`ShardedProgram`]: a compiled per-fabric program over
+/// the extracted subgraph, plus the id maps tying it back to the
+/// original graph.
+pub struct ShardUnit {
+    /// the shard's subgraph compiled through the standard per-fabric
+    /// pipeline
+    pub program: SharedProgram,
+    /// subgraph node id → original graph node id (a proxy maps to the
+    /// boundary producer it stands in for)
+    pub orig_of_local: Vec<u32>,
+    /// subgraph node ids of the boundary proxies, ascending (the
+    /// deferred-seed list)
+    pub deferred: Vec<u32>,
+    /// executed-graph nodes standing in for proxies (equals
+    /// `deferred.len()` unless an `opt` pipeline replicated or dropped
+    /// some) — subtracted when merging per-shard completion counts
+    exec_proxies: usize,
+}
+
+impl ShardUnit {
+    /// Subgraph node count (members + proxies).
+    pub fn len(&self) -> usize {
+        self.orig_of_local.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.orig_of_local.is_empty()
+    }
+
+    /// Boundary-proxy inputs in this shard.
+    pub fn proxies(&self) -> usize {
+        self.deferred.len()
+    }
+
+    /// Original-graph nodes resident in this shard.
+    pub fn members(&self) -> usize {
+        self.len() - self.proxies()
+    }
+
+    fn is_proxy(&self, local: u32) -> bool {
+        self.deferred.binary_search(&local).is_ok()
+    }
+}
+
+/// A graph compiled for N overlay fabrics: the partition, one compiled
+/// [`ShardUnit`] per shard, and the boundary-channel table. Immutable
+/// and `Sync`, like [`SharedProgram`] — service caches hold it under the
+/// same content address scheme (the `shards` knob is part of the
+/// normalized overlay, so sharded and single-fabric artifacts never
+/// collide).
+pub struct ShardedProgram {
+    graph: Arc<DataflowGraph>,
+    overlay: Overlay,
+    partition: Partition,
+    units: Vec<ShardUnit>,
+    channels: Vec<ChannelSpec>,
+    /// epoch length E == modeled boundary-link latency
+    epoch: u64,
+}
+
+impl ShardedProgram {
+    /// Partition `graph` into `num_shards` subgraphs (clamped to the
+    /// node count; `0` and `1` both mean one shard) and compile each for
+    /// its own copy of `overlay`.
+    pub fn compile(
+        graph: Arc<DataflowGraph>,
+        overlay: &Overlay,
+        num_shards: usize,
+    ) -> Result<Self, CompileError> {
+        Self::compile_with(graph, overlay, num_shards, None)
+    }
+
+    /// [`ShardedProgram::compile`] with a telemetry registry attached:
+    /// the partition pipeline and each per-shard compile record their
+    /// pass spans on the `"compile"` track.
+    pub fn compile_with(
+        graph: Arc<DataflowGraph>,
+        overlay: &Overlay,
+        num_shards: usize,
+        tel: Telemetry<'_>,
+    ) -> Result<Self, CompileError> {
+        let cfg = *overlay.config();
+        // partition the *original* graph (per-shard `opt` transforms run
+        // later, inside each shard's own pipeline)
+        let mut cx = PassCtx::new(&graph, cfg);
+        PassManager::new()
+            .with(VerifyPass)
+            .with(CriticalityPass)
+            .with(PartitionPass::new(num_shards.max(1)))
+            .run(&mut cx, tel)?;
+        let partition = cx.partition.take().expect("partition pass ran");
+        telemetry::count(tel, "shard.compiles", 1);
+
+        let k = partition.num_shards;
+        let n = graph.len();
+        // subgraph extraction: members + proxies merged by original id
+        let mut local_of: Vec<Vec<u32>> = vec![vec![u32::MAX; n]; k];
+        let mut units = Vec::with_capacity(k);
+        for s in 0..k as u32 {
+            // boundary producers feeding this shard, deduped via the
+            // local_of scratch (filled in ascending id order below)
+            let mut sub = DataflowGraph::new();
+            let mut orig_of_local = Vec::new();
+            let mut deferred = Vec::new();
+            // pass 1: which foreign producers does shard s consume?
+            let mut wants_proxy = vec![false; n];
+            for v in 0..n {
+                if partition.shard_of[v] != s {
+                    continue;
+                }
+                if let NodeKind::Operation { op, src } = graph.node(v as u32).kind {
+                    for &u in &src[..op.arity()] {
+                        if partition.shard_of[u as usize] != s {
+                            wants_proxy[u as usize] = true;
+                        }
+                    }
+                }
+            }
+            // pass 2: build the subgraph in original-id order; a proxy
+            // sits at its producer's id slot, so it precedes every
+            // consumer (builder order is topological)
+            for v in 0..n {
+                if wants_proxy[v] {
+                    let local = sub.add_input(0.0);
+                    local_of[s as usize][v] = local;
+                    orig_of_local.push(v as u32);
+                    deferred.push(local);
+                } else if partition.shard_of[v] == s {
+                    let local = match graph.node(v as u32).kind {
+                        NodeKind::Input { value } => sub.add_input(value),
+                        NodeKind::Operation { op, src } => {
+                            let mut mapped = [0u32; 2];
+                            for (slot, &u) in src[..op.arity()].iter().enumerate() {
+                                mapped[slot] = local_of[s as usize][u as usize];
+                            }
+                            sub.add_op(op, &mapped[..op.arity()])
+                                .expect("extraction preserves topological order")
+                        }
+                    };
+                    local_of[s as usize][v] = local;
+                    orig_of_local.push(v as u32);
+                }
+            }
+            let program = SharedProgram::compile_with(Arc::new(sub), overlay, tel)?;
+            let exec_proxies = match program.program().node_map() {
+                None => deferred.len(),
+                Some(map) => {
+                    let proxy = |local: u32| deferred.binary_search(&local).is_ok();
+                    map.orig_of.iter().filter(|&&o| proxy(o)).count()
+                }
+            };
+            units.push(ShardUnit { program, orig_of_local, deferred, exec_proxies });
+        }
+
+        // boundary channels in canonical (src, dst) order, links in
+        // producer-id order (insertion order already ascending)
+        let mut channels: std::collections::BTreeMap<(u32, u32), Vec<BoundaryLink>> =
+            std::collections::BTreeMap::new();
+        for (t, unit) in units.iter().enumerate() {
+            for &dst_local in &unit.deferred {
+                let producer = unit.orig_of_local[dst_local as usize];
+                let src_shard = partition.shard_of[producer as usize];
+                let src_local = local_of[src_shard as usize][producer as usize];
+                debug_assert_ne!(src_local, u32::MAX, "producer resident in its shard");
+                channels.entry((src_shard, t as u32)).or_default().push(BoundaryLink {
+                    producer,
+                    src_local,
+                    dst_local,
+                });
+            }
+        }
+        let channels = channels
+            .into_iter()
+            .map(|((src_shard, dst_shard), links)| ChannelSpec { src_shard, dst_shard, links })
+            .collect();
+
+        let epoch = boundary_latency(&cfg);
+        Ok(Self { graph, overlay: *overlay, partition, units, channels, epoch })
+    }
+
+    /// The original (unpartitioned) graph.
+    pub fn graph(&self) -> &Arc<DataflowGraph> {
+        &self.graph
+    }
+
+    /// The per-fabric overlay every shard targets.
+    pub fn overlay(&self) -> &Overlay {
+        &self.overlay
+    }
+
+    /// The node→shard assignment and boundary-edge table.
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.units.len()
+    }
+
+    /// The compiled per-shard units, in shard order.
+    pub fn units(&self) -> &[ShardUnit] {
+        &self.units
+    }
+
+    /// The boundary channels, in canonical `(src, dst)` order.
+    pub fn channels(&self) -> &[ChannelSpec] {
+        &self.channels
+    }
+
+    /// Epoch length E (== modeled boundary-link latency, in cycles).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Total boundary values a full run carries across channels.
+    pub fn boundary_values(&self) -> usize {
+        self.channels.iter().map(|c| c.links.len()).sum()
+    }
+
+    /// Does every shard fit `kind`'s per-PE BRAM budget?
+    pub fn fits(&self, kind: SchedulerKind) -> bool {
+        self.units.iter().all(|u| u.program.program().fits(kind))
+    }
+
+    /// Open a run session at the overlay's default variant.
+    pub fn session(&self) -> ShardSession<'_> {
+        ShardSession {
+            program: self,
+            cfg: *self.overlay.config(),
+            threads: self.units.len(),
+            telemetry: None,
+        }
+    }
+}
+
+/// The merged outcome of one sharded run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardedRun {
+    /// fabric-cycle stats merged across shards: `cycles` is the max
+    /// (shards advance in lockstep epochs), NoC counters sum
+    /// ([`NetworkStats::merged`]), `pe` concatenates every fabric's PEs
+    /// in shard order. Bit-identical to the single-fabric `SimStats`
+    /// when there is one shard.
+    pub stats: SimStats,
+    /// final node values in original graph id order
+    pub values: Vec<f32>,
+    /// completion cycle of each shard
+    pub shard_cycles: Vec<u64>,
+    /// epoch barriers the run synchronized at
+    pub epochs: u64,
+    /// values carried across boundary channels
+    pub boundary_values: u64,
+    /// channel-capacity stall events (a harvested value waiting a full
+    /// barrier because its channel was at capacity)
+    pub boundary_stalls: u64,
+}
+
+/// A configured sharded run — the [`crate::program::Session`] analogue
+/// over a [`ShardedProgram`] (pick variant, run, repeat; each run builds
+/// fresh per-shard backends, so runs are independent).
+#[derive(Clone, Copy)]
+pub struct ShardSession<'p> {
+    program: &'p ShardedProgram,
+    cfg: OverlayConfig,
+    threads: usize,
+    telemetry: Telemetry<'p>,
+}
+
+impl<'p> ShardSession<'p> {
+    pub fn with_scheduler(mut self, kind: SchedulerKind) -> Self {
+        self.cfg.scheduler = kind;
+        self
+    }
+
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
+    pub fn with_max_cycles(mut self, max_cycles: u64) -> Self {
+        self.cfg.max_cycles = max_cycles;
+        self
+    }
+
+    /// Worker threads for the per-epoch shard fan-out (results are
+    /// thread-count invariant; this is purely a wall-clock knob).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Attach a telemetry registry: the run records one span per shard
+    /// on the `"shard"` track (aggregate simulate time across epochs)
+    /// plus boundary/epoch counters.
+    pub fn with_telemetry(mut self, reg: &'p Registry) -> Self {
+        self.telemetry = Some(reg);
+        self
+    }
+
+    /// Run all shards to completion through the epoch-barrier protocol.
+    pub fn run(&self) -> Result<ShardedRun, SimError> {
+        let prog = self.program;
+        let k = prog.units.len();
+        let t0 = Instant::now();
+
+        // per-shard backends over each unit's compiled artifact, with
+        // boundary proxies deferred (no token until injection)
+        let views: Vec<Program<'_>> = prog.units.iter().map(|u| u.program.program()).collect();
+        let mut backends: Vec<Option<Box<dyn SimBackend + '_>>> = Vec::with_capacity(k);
+        for (unit, view) in prog.units.iter().zip(&views) {
+            let mut cfg = *view.overlay().config();
+            cfg.scheduler = self.cfg.scheduler;
+            cfg.backend = self.cfg.backend;
+            cfg.max_cycles = self.cfg.max_cycles;
+            backends.push(Some(engine::backend_with_tables_deferred(
+                view.exec_graph(),
+                view.runtime_tables(),
+                cfg,
+                &unit.deferred,
+            )?));
+        }
+
+        let mut chans: Vec<BoundaryChannel> = prog
+            .channels
+            .iter()
+            .map(|spec| BoundaryChannel::new(spec.links.len()))
+            .collect();
+        let mut done = vec![false; k];
+        let mut sim_time = vec![Duration::ZERO; k];
+        let mut epochs = 0u64;
+        let mut boundary_values = 0u64;
+        let mut boundary_stalls = 0u64;
+        let mut bound = prog.epoch;
+
+        loop {
+            // advance every live shard to the epoch bound, in parallel;
+            // shards share nothing mid-epoch, so interleaving is free
+            let jobs: Vec<(usize, Box<dyn SimBackend + '_>)> = backends
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| !done[*i])
+                .map(|(i, slot)| (i, slot.take().expect("live shard has its backend")))
+                .collect();
+            let epoch_bound = bound;
+            let out = run_parallel(jobs, self.threads, move |(i, mut b): (usize, Box<dyn SimBackend + '_>)| {
+                let s0 = Instant::now();
+                let r = b.run_until(epoch_bound);
+                (i, b, r, s0.elapsed())
+            });
+            epochs += 1;
+            let mut first_err: Option<SimError> = None;
+            for (i, b, r, dt) in out {
+                backends[i] = Some(b);
+                sim_time[i] += dt;
+                match r {
+                    Ok(finished) => done[i] = finished,
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e); // lowest shard index wins — deterministic
+                        }
+                    }
+                }
+            }
+            if let Some(e) = first_err {
+                return Err(self.remap_error(e, &backends));
+            }
+            if done.iter().all(|&d| d) {
+                debug_assert!(
+                    chans.iter().all(|c| c.flying.is_empty() && c.pending.is_empty()),
+                    "all shards complete implies all boundary values delivered"
+                );
+                break;
+            }
+            // epoch barrier: deliver → harvest → promote, per channel, in
+            // canonical order (the determinism invariant)
+            for (spec, chan) in prog.channels.iter().zip(&mut chans) {
+                let dst = backends[spec.dst_shard as usize].as_mut().expect("backend parked");
+                for (li, v) in chan.flying.drain(..) {
+                    dst.inject_value(spec.links[li as usize].dst_local, v);
+                }
+                let src = backends[spec.src_shard as usize].as_ref().expect("backend parked");
+                for (li, link) in spec.links.iter().enumerate() {
+                    if !chan.sent[li] && src.node_computed(link.src_local) {
+                        chan.sent[li] = true;
+                        chan.pending.push_back((li as u32, src.values()[link.src_local as usize]));
+                    }
+                }
+                while chan.flying.len() < BOUNDARY_CHANNEL_CAPACITY {
+                    let Some(entry) = chan.pending.pop_front() else {
+                        break;
+                    };
+                    chan.flying.push(entry);
+                    boundary_values += 1;
+                }
+                boundary_stalls += chan.pending.len() as u64;
+            }
+            bound += prog.epoch;
+        }
+
+        // merge: values in original id order (a producer's own shard is
+        // canonical; proxies are skipped), stats across fabrics
+        let mut values = vec![0f32; prog.graph.len()];
+        let mut shard_cycles = Vec::with_capacity(k);
+        let mut completed = 0usize;
+        // executed-domain node count minus proxy stand-ins: equals the
+        // original graph length on non-`opt` overlays, and equals the
+        // single-fabric `total_nodes` when there is one shard
+        let mut total = 0usize;
+        let mut pe: Vec<PeStats> = Vec::new();
+        let mut nets: Vec<NetworkStats> = Vec::with_capacity(k);
+        for (unit, backend) in prog.units.iter().zip(&backends) {
+            let backend = backend.as_ref().expect("backend parked");
+            let vals = backend.values();
+            for (local, &orig) in unit.orig_of_local.iter().enumerate() {
+                if !unit.is_proxy(local as u32) {
+                    values[orig as usize] = vals[local];
+                }
+            }
+            let stats = backend.stats();
+            shard_cycles.push(stats.cycles);
+            completed += stats.completed - unit.exec_proxies;
+            total += stats.total_nodes - unit.exec_proxies;
+            nets.push(stats.net);
+            pe.extend(stats.pe);
+        }
+        let cycles = shard_cycles.iter().copied().max().unwrap_or(0);
+        let stats = SimStats::collect(
+            cycles,
+            total,
+            completed,
+            self.cfg.scheduler,
+            NetworkStats::merged(nets),
+            pe,
+        );
+
+        if let Some(reg) = self.telemetry {
+            for dt in &sim_time {
+                reg.record_span("shard", "simulate", t0, *dt);
+            }
+            reg.count("shard.runs", 1);
+            reg.count("shard.epochs", epochs);
+            reg.count("shard.boundary.values", boundary_values);
+            reg.count("shard.boundary.stalls", boundary_stalls);
+            reg.observe("shard.cycles", cycles);
+        }
+        Ok(ShardedRun {
+            stats,
+            values,
+            shard_cycles,
+            epochs,
+            boundary_values,
+            boundary_stalls,
+        })
+    }
+
+    /// A shard's error, re-homed to the merged domain. With one shard
+    /// the subgraph *is* the graph, so the error passes through verbatim
+    /// (the N=1 bit-identity guarantee covers error runs too); with
+    /// several, a cycle-limit error reports merged progress — original
+    /// nodes whose value was computed — over the original node count.
+    fn remap_error(&self, e: SimError, backends: &[Option<Box<dyn SimBackend + '_>>]) -> SimError {
+        if self.program.units.len() == 1 {
+            return e;
+        }
+        match e {
+            SimError::CycleLimitExceeded { cycle, .. } => {
+                let mut computed = 0usize;
+                for (unit, backend) in self.program.units.iter().zip(backends) {
+                    let Some(backend) = backend.as_ref() else { continue };
+                    computed += (0..unit.len() as u32)
+                        .filter(|&l| !unit.is_proxy(l) && backend.node_computed(l))
+                        .count();
+                }
+                SimError::CycleLimitExceeded {
+                    cycle,
+                    completed: computed,
+                    total: self.program.graph.len(),
+                }
+            }
+            other => other,
+        }
+    }
+}
+
+/// Runtime state of one directed inter-fabric link: `sent` marks
+/// harvested producers, `pending` holds values waiting for channel
+/// capacity, `flying` holds the values delivered at the next barrier.
+struct BoundaryChannel {
+    sent: Vec<bool>,
+    pending: VecDeque<(u32, f32)>,
+    flying: Vec<(u32, f32)>,
+}
+
+impl BoundaryChannel {
+    fn new(links: usize) -> Self {
+        Self {
+            sent: vec![false; links],
+            pending: VecDeque::new(),
+            flying: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{layered_random, lu_factorization_graph, SparseMatrix};
+
+    fn overlay(cols: usize, rows: usize) -> Overlay {
+        Overlay::builder().dims(cols, rows).build().unwrap()
+    }
+
+    #[test]
+    fn one_shard_extraction_is_the_original_graph() {
+        let g = Arc::new(layered_random(8, 4, 12, 2, 1));
+        let sp = ShardedProgram::compile(Arc::clone(&g), &overlay(2, 2), 1).unwrap();
+        assert_eq!(sp.num_shards(), 1);
+        assert!(sp.channels().is_empty());
+        let unit = &sp.units()[0];
+        assert_eq!(unit.proxies(), 0);
+        assert_eq!(unit.program.graph().fingerprint(), g.fingerprint());
+    }
+
+    #[test]
+    fn sharded_n1_matches_single_fabric_bit_for_bit() {
+        let g = Arc::new(layered_random(10, 5, 16, 2, 3));
+        let ov = overlay(2, 2);
+        let single = SharedProgram::compile(Arc::clone(&g), &ov).unwrap();
+        let want = single.program().session().run().unwrap();
+        let sp = ShardedProgram::compile(Arc::clone(&g), &ov, 1).unwrap();
+        let run = sp.session().run().unwrap();
+        assert_eq!(run.stats, want, "N=1 sharded stats == single-fabric stats");
+        assert_eq!(run.values, g.evaluate());
+        assert_eq!(run.boundary_values, 0);
+        assert_eq!(run.boundary_stalls, 0);
+    }
+
+    #[test]
+    fn multi_shard_run_computes_correct_values() {
+        let m = SparseMatrix::banded(48, 3, 0.9, 7);
+        let (g, _) = lu_factorization_graph(&m);
+        let g = Arc::new(g);
+        let want = g.evaluate();
+        for k in [2, 3, 4] {
+            let sp = ShardedProgram::compile(Arc::clone(&g), &overlay(2, 2), k).unwrap();
+            assert_eq!(sp.num_shards(), k);
+            assert!(sp.boundary_values() > 0, "a real cut crosses the boundary");
+            let run = sp.session().run().unwrap();
+            for (i, (a, b)) in run.values.iter().zip(&want).enumerate() {
+                assert!(
+                    (a == b) || (a.is_nan() && b.is_nan()),
+                    "k={k} node {i}: sharded={a}, ref={b}"
+                );
+            }
+            assert_eq!(run.stats.completed, g.len());
+            assert_eq!(run.boundary_values, sp.boundary_values() as u64);
+            assert_eq!(run.shard_cycles.len(), k);
+            assert_eq!(run.stats.cycles, run.shard_cycles.iter().copied().max().unwrap());
+        }
+    }
+
+    #[test]
+    fn results_invariant_under_thread_count_and_backend() {
+        let g = Arc::new(layered_random(16, 6, 24, 2, 9));
+        let sp = ShardedProgram::compile(Arc::clone(&g), &overlay(2, 2), 3).unwrap();
+        let base = sp.session().with_threads(1).run().unwrap();
+        for threads in [2, 3, 8] {
+            let run = sp.session().with_threads(threads).run().unwrap();
+            assert_eq!(run, base, "threads={threads}");
+        }
+        for backend in BackendKind::ALL {
+            let run = sp.session().with_backend(backend).run().unwrap();
+            assert_eq!(run.values, base.values, "{backend:?} values");
+            assert_eq!(run.stats.cycles, base.stats.cycles, "{backend:?} cycles");
+        }
+    }
+
+    #[test]
+    fn boundary_latency_is_at_least_the_epoch() {
+        // a value computed at cycle c is visible at the second barrier
+        // after it: latency in (E, 2E] — never below the link latency
+        let cfg = *overlay(2, 2).config();
+        let e = boundary_latency(&cfg);
+        assert_eq!(e, 8);
+        let g = Arc::new(layered_random(8, 4, 12, 2, 5));
+        let sp = ShardedProgram::compile(Arc::clone(&g), &overlay(2, 2), 2).unwrap();
+        assert_eq!(sp.epoch(), e);
+        let run = sp.session().run().unwrap();
+        assert!(run.epochs >= run.stats.cycles / e, "one barrier per epoch");
+    }
+
+    #[test]
+    fn cycle_limit_error_reports_merged_domain() {
+        let g = Arc::new(layered_random(16, 6, 24, 2, 9));
+        let sp = ShardedProgram::compile(Arc::clone(&g), &overlay(2, 2), 2).unwrap();
+        match sp.session().with_max_cycles(3).run() {
+            Err(SimError::CycleLimitExceeded { cycle, completed, total }) => {
+                assert_eq!(cycle, 3);
+                assert_eq!(total, g.len());
+                assert!(completed < total);
+            }
+            other => panic!("expected cycle limit, got {other:?}"),
+        }
+    }
+}

@@ -187,6 +187,11 @@ pub struct Simulator<'g> {
     /// cycle, so `draining_pes == 0` ⟺ no injection requests pending).
     draining_pes: usize,
     trace: Option<Trace>,
+    /// Deferred-seed inputs (sharded execution's boundary proxies):
+    /// graph node id → indices into `tables.seeds` left unseeded at
+    /// construction, waiting for [`Simulator::inject_value`]. Holds every
+    /// replica of a deferred input, so one injection seeds them all.
+    deferred: std::collections::BTreeMap<u32, Vec<usize>>,
 }
 
 impl<'g> Simulator<'g> {
@@ -285,6 +290,38 @@ impl<'g> Simulator<'g> {
     where
         F: Fn(SchedulerKind, usize) -> Scheduler,
     {
+        Self::with_tables_factory_deferred(g, tables, cfg, factory, &[])
+    }
+
+    /// [`Simulator::with_tables`] with some inputs left unseeded: the
+    /// graph node ids in `deferred` (sharded execution's boundary
+    /// proxies) hold no token until [`Simulator::inject_value`] delivers
+    /// one. Ids not present in the seed table are ignored.
+    pub fn with_tables_deferred(
+        g: &'g DataflowGraph,
+        tables: Arc<RuntimeTables>,
+        cfg: OverlayConfig,
+        deferred: &[u32],
+    ) -> Result<Self, SimError> {
+        Self::with_tables_factory_deferred(
+            g,
+            tables,
+            cfg,
+            |kind, num_local| Scheduler::new(kind, num_local, None),
+            deferred,
+        )
+    }
+
+    fn with_tables_factory_deferred<F>(
+        g: &'g DataflowGraph,
+        tables: Arc<RuntimeTables>,
+        cfg: OverlayConfig,
+        factory: F,
+        deferred: &[u32],
+    ) -> Result<Self, SimError>
+    where
+        F: Fn(SchedulerKind, usize) -> Scheduler,
+    {
         assert_eq!(tables.num_pes, cfg.num_pes());
         assert_eq!(tables.cols, cfg.cols, "tables baked for another torus shape");
         assert_eq!(tables.len(), g.len(), "tables baked for another graph");
@@ -327,7 +364,13 @@ impl<'g> Simulator<'g> {
             is_active: vec![false; num_pes],
             draining_pes: 0,
             trace: None,
+            deferred: std::collections::BTreeMap::new(),
         };
+        for (i, s) in sim.tables.seeds.iter().enumerate() {
+            if deferred.contains(&s.global) {
+                sim.deferred.entry(s.global).or_default().push(i);
+            }
+        }
         sim.seed_inputs();
         Ok(sim)
     }
@@ -339,6 +382,9 @@ impl<'g> Simulator<'g> {
     fn seed_inputs(&mut self) {
         let tables = Arc::clone(&self.tables);
         for s in &tables.seeds {
+            if self.deferred.contains_key(&s.global) {
+                continue; // awaits inject_value
+            }
             self.value[s.dense as usize] = s.value;
             self.value_global[s.global as usize] = s.value;
             self.computed[s.dense as usize] = true;
@@ -675,6 +721,63 @@ impl<'g> Simulator<'g> {
             }
         }
         Ok(self.stats())
+    }
+
+    /// Run until the graph completes (`Ok(true)`) or the clock reaches
+    /// `bound` (`Ok(false)`) — the sharded runtime's epoch slice. The
+    /// step/limit-check order matches [`Simulator::run`] exactly, so a
+    /// run chopped into epochs is cycle- and error-identical to an
+    /// unchopped one.
+    pub fn run_until(&mut self, bound: u64) -> Result<bool, SimError> {
+        if self.is_complete() {
+            return Ok(true);
+        }
+        while self.cycle < bound {
+            if self.step() {
+                return Ok(true);
+            }
+            if self.cycle >= self.cfg.max_cycles {
+                return Err(SimError::CycleLimitExceeded {
+                    cycle: self.cycle,
+                    completed: self.completed,
+                    total: self.g.len(),
+                });
+            }
+        }
+        Ok(false)
+    }
+
+    /// Deliver a token to a deferred-seed input (sharded execution's
+    /// boundary injection): seeds every replica of graph node `global` —
+    /// value written, flagged ready, PE activated — exactly as
+    /// `seed_inputs` would have at cycle 0, but at the current cycle.
+    /// No-op unless `global` was deferred at construction and not yet
+    /// injected.
+    pub fn inject_value(&mut self, global: u32, value: f32) {
+        let Some(idxs) = self.deferred.remove(&global) else {
+            return;
+        };
+        let tables = Arc::clone(&self.tables);
+        for i in idxs {
+            let s = &tables.seeds[i];
+            self.value[s.dense as usize] = value;
+            self.value_global[s.global as usize] = value;
+            self.computed[s.dense as usize] = true;
+            let pe = s.pe as usize;
+            self.pes[pe].sched.mark_ready(s.local);
+            if !self.is_active[pe] {
+                self.is_active[pe] = true;
+                self.active.push(pe as u32);
+            }
+        }
+    }
+
+    /// Has graph node `global` produced its value? (True from seed /
+    /// injection / ALU-retire time on; the boundary-harvest predicate of
+    /// the sharded runtime.)
+    pub fn node_computed(&self, global: u32) -> bool {
+        let dense = self.tables.dense_of[global as usize];
+        dense != u32::MAX && self.computed[dense as usize]
     }
 
     /// Final (or current) node values in graph node-id order — validated

@@ -9,8 +9,11 @@
 //!
 //! Grammar: `kind[:arg]*[:key=value]*` — positional args are
 //! kind-specific (see the table below), trailing `key=value` segments
-//! are options (`seed=N` is the only one). `mtx:` is special: everything
-//! after the first colon is the file path, verbatim.
+//! are options, in any order: `seed=N` (generation seed) and `scale=K`
+//! (tile K disjoint copies of the generated graph — the cheap way to
+//! grow any workload past one fabric's BRAM budget for sharded-execution
+//! testing). `mtx:` is special: everything after the first colon is the
+//! file path, verbatim.
 //!
 //! | kind        | args                          | generator |
 //! |-------------|-------------------------------|-----------|
@@ -26,7 +29,7 @@
 //! | `mtx`       | path (rest of string)         | Matrix Market file |
 
 use crate::config::WorkloadSpec;
-use crate::graph::DataflowGraph;
+use crate::graph::{DataflowGraph, NodeKind};
 use std::fmt;
 use std::str::FromStr;
 
@@ -40,12 +43,15 @@ pub struct Spec {
     pub workload: WorkloadSpec,
     /// generation seed (`seed=N` option; 0 when absent)
     pub seed: u64,
+    /// size multiplier (`scale=K` option; 1 when absent): the built
+    /// graph is K disjoint copies of the generated one
+    pub scale: usize,
 }
 
 impl Spec {
-    /// Wrap a parsed [`WorkloadSpec`] with a seed.
+    /// Wrap a parsed [`WorkloadSpec`] with a seed (and no scaling).
     pub fn new(workload: WorkloadSpec, seed: u64) -> Self {
-        Self { workload, seed }
+        Self { workload, seed, scale: 1 }
     }
 
     /// The normalized spec string (what `Display` prints) — equal specs
@@ -54,10 +60,40 @@ impl Spec {
         self.to_string()
     }
 
-    /// Materialize the dataflow graph.
+    /// Materialize the dataflow graph: generate once, then tile
+    /// `scale` disjoint copies.
     pub fn build(&self) -> Result<DataflowGraph, String> {
-        self.workload.build(self.seed)
+        let base = self.workload.build(self.seed)?;
+        if self.scale <= 1 {
+            return Ok(base);
+        }
+        Ok(tile(&base, self.scale))
     }
+}
+
+/// `copies` disjoint copies of `base` in one graph, copy-major: node
+/// `id` of copy `c` lands at `c * base.len() + id`, so each copy
+/// preserves the base's (topological) builder order and the result
+/// needs no remapping pass.
+fn tile(base: &DataflowGraph, copies: usize) -> DataflowGraph {
+    let n = base.len() as u32;
+    let mut out = DataflowGraph::new();
+    for c in 0..copies as u32 {
+        let off = c * n;
+        for id in 0..n {
+            match base.node(id).kind {
+                NodeKind::Input { value } => {
+                    out.add_input(value);
+                }
+                NodeKind::Operation { op, src } => {
+                    let mapped: Vec<u32> =
+                        src[..op.arity()].iter().map(|&s| s + off).collect();
+                    out.add_op(op, &mapped).expect("tiled copy of a valid graph");
+                }
+            }
+        }
+    }
+    out
 }
 
 impl fmt::Display for Spec {
@@ -78,8 +114,11 @@ impl fmt::Display for Spec {
             WorkloadSpec::Mix { chain_n, bulk_n, bulk_deg } => {
                 write!(f, "mix:{chain_n}:{bulk_n}:{bulk_deg}")?
             }
-            // mtx consumes the rest of the string: no seed suffix
+            // mtx consumes the rest of the string: no option suffix
             WorkloadSpec::MatrixMarket { path } => return write!(f, "mtx:{path}"),
+        }
+        if self.scale > 1 {
+            write!(f, ":scale={}", self.scale)?;
         }
         if self.seed != 0 {
             write!(f, ":seed={}", self.seed)?;
@@ -116,6 +155,7 @@ impl FromStr for Spec {
         // letting a duplicate win would run a different graph than the
         // one the user appended)
         let mut seed: Option<u64> = None;
+        let mut scale: Option<usize> = None;
         while let Some(last) = parts.last() {
             let Some((key, value)) = last.split_once('=') else { break };
             match key {
@@ -129,11 +169,24 @@ impl FromStr for Spec {
                             .map_err(|_| format!("seed: cannot parse '{value}'"))?,
                     );
                 }
+                "scale" => {
+                    if scale.is_some() {
+                        return Err("duplicate spec option 'scale='".to_string());
+                    }
+                    let k: usize = value
+                        .parse()
+                        .map_err(|_| format!("scale: cannot parse '{value}'"))?;
+                    if k == 0 {
+                        return Err("scale: must be >= 1".to_string());
+                    }
+                    scale = Some(k);
+                }
                 other => return Err(format!("unknown spec option '{other}='")),
             }
             parts.pop();
         }
         let seed = seed.unwrap_or(0);
+        let scale = scale.unwrap_or(1);
         let arity = |want: usize| -> Result<(), String> {
             if parts.len() == want {
                 Ok(())
@@ -203,7 +256,7 @@ impl FromStr for Spec {
                 ))
             }
         };
-        Ok(Spec::new(workload, seed))
+        Ok(Spec { workload, seed, scale })
     }
 }
 
@@ -215,6 +268,8 @@ mod tests {
     fn parse_and_display_roundtrip() {
         for s in [
             "chain:4096:seed=7",
+            "reduction:64:scale=4",
+            "layered:8:4:16:2:scale=3:seed=5",
             "lu_banded:100:4:0.8",
             "lu_random:64:0.1:seed=3",
             "lu_pl:330:3:seed=42",
@@ -240,6 +295,31 @@ mod tests {
         let b: Spec = "reduction:64:seed=0".parse().unwrap();
         assert_eq!(b.canonical(), "reduction:64");
         assert_eq!(b.seed, 0);
+        // scale=1 is the default and normalizes away; options in either
+        // order canonicalize to scale-then-seed
+        let c: Spec = "reduction:64:scale=1".parse().unwrap();
+        assert_eq!(c.canonical(), "reduction:64");
+        let d: Spec = "reduction:64:seed=2:scale=3".parse().unwrap();
+        assert_eq!(d.canonical(), "reduction:64:scale=3:seed=2");
+    }
+
+    #[test]
+    fn scale_tiles_disjoint_copies() {
+        let base: Spec = "reduction:32:seed=4".parse().unwrap();
+        let scaled: Spec = "reduction:32:scale=3:seed=4".parse().unwrap();
+        let g1 = base.build().unwrap();
+        let g3 = scaled.build().unwrap();
+        assert_eq!(g3.len(), 3 * g1.len());
+        g3.validate().unwrap();
+        assert_ne!(g1.fingerprint(), g3.fingerprint());
+        // each copy computes the same values as the base graph
+        let v1 = g1.evaluate();
+        let v3 = g3.evaluate();
+        for c in 0..3 {
+            assert_eq!(&v3[c * g1.len()..(c + 1) * g1.len()], &v1[..], "copy {c}");
+        }
+        // depth is unchanged: copies are parallel, not stacked
+        assert_eq!(g1.stats().depth, g3.stats().depth);
     }
 
     #[test]
@@ -275,6 +355,9 @@ mod tests {
             "chain:4:5",        // too many args
             "chain:4:speed=7",  // unknown option
             "chain:4:seed=1:seed=2", // duplicate option
+            "chain:4:scale=2:scale=3", // duplicate option
+            "chain:4:scale=0",  // zero copies is meaningless
+            "chain:4:scale=x",
             "mtx:",             // missing path
             "reduction:64:seed=abc",
         ] {

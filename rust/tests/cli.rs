@@ -580,3 +580,41 @@ fn bad_workload_spec_fails() {
         .unwrap();
     assert!(!out.status.success());
 }
+
+/// `tdp shard` reports a partition: forced N=2 on a small workload, and
+/// auto-sizing (`--shards 0`) on a graph that overflows one 2x2 fabric.
+#[test]
+fn shard_reports_partition_and_runs() {
+    let text = run_ok(&[
+        "shard", "reduction:64", "--cols", "2", "--rows", "2", "--shards", "2", "--run",
+    ]);
+    assert!(text.contains("2 shard(s)"), "{text}");
+    assert!(text.contains("shard 0:"), "{text}");
+    assert!(text.contains("cut:"), "{text}");
+    assert!(text.contains("run:"), "{text}");
+
+    let json = run_ok(&[
+        "shard",
+        "reduction:64:scale=48",
+        "--cols",
+        "2",
+        "--rows",
+        "2",
+        "--format",
+        "json",
+        "--run",
+    ]);
+    let j = tdp::util::json::parse(json.trim()).unwrap();
+    assert_eq!(j.get("workload").unwrap().as_str(), Some("reduction:64:scale=48"));
+    let n = j.get("num_shards").unwrap().as_usize().unwrap();
+    assert!(n >= 2, "oversized workload auto-shards, got {n}");
+    assert_eq!(j.get("shards").unwrap().as_arr().unwrap().len(), n);
+    assert!(j.get("epoch").unwrap().as_u64().unwrap() > 0);
+    let run = j.get("run").unwrap();
+    let stats = run.get("stats").unwrap();
+    assert_eq!(
+        stats.get("completed").unwrap().as_u64(),
+        stats.get("total_nodes").unwrap().as_u64(),
+        "sharded run completes every node"
+    );
+}

@@ -32,6 +32,7 @@ fn every_field_nondefault() -> OverlayConfig {
         enforce_capacity: true,
         opt: true,
         backend: BackendKind::SkipAhead,
+        shards: 3,
     };
     let d = OverlayConfig::default();
     assert_ne!(cfg.cols, d.cols);
@@ -46,6 +47,7 @@ fn every_field_nondefault() -> OverlayConfig {
     assert_ne!(cfg.enforce_capacity, d.enforce_capacity);
     assert_ne!(cfg.opt, d.opt);
     assert_ne!(cfg.backend, d.backend);
+    assert_ne!(cfg.shards, d.shards);
     cfg.validate().unwrap();
     cfg
 }

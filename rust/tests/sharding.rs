@@ -1,0 +1,132 @@
+//! Sharded multi-fabric execution end-to-end (DESIGN.md §14): the
+//! acceptance invariants of the shard subsystem through public API
+//! surfaces only — N=1 is bit-identical to the single-fabric path,
+//! N>1 results are deterministic regardless of host thread count and
+//! backend, computed values match the reference evaluation, and the
+//! engine auto-shards a graph that fails `Program::fits`.
+
+use std::sync::Arc;
+use tdp::config::{Overlay, OverlayConfig};
+use tdp::engine::BackendKind;
+use tdp::graph::DataflowGraph;
+use tdp::program::SharedProgram;
+use tdp::sched::SchedulerKind;
+use tdp::service::{Engine, JobSpec};
+use tdp::workload;
+use tdp::ShardedProgram;
+
+fn build(spec: &str) -> Arc<DataflowGraph> {
+    let s: workload::Spec = spec.parse().unwrap();
+    Arc::new(s.build().unwrap())
+}
+
+fn overlay(cols: usize, rows: usize) -> Overlay {
+    Overlay::from_config(OverlayConfig::default().with_dims(cols, rows)).unwrap()
+}
+
+/// f32 equality that treats NaN as equal to NaN — the sim executes the
+/// same operation graph as `evaluate`, so results are bit-reproducible
+/// even through division blowups.
+fn same(a: f32, b: f32) -> bool {
+    (a.is_nan() && b.is_nan()) || a == b
+}
+
+#[test]
+fn n1_matches_single_fabric_for_every_scheduler_and_backend() {
+    let g = build("lu_banded:48:4:0.9:seed=2");
+    let overlay = overlay(2, 2);
+    let single = SharedProgram::compile(Arc::clone(&g), &overlay).unwrap();
+    let sharded = ShardedProgram::compile(Arc::clone(&g), &overlay, 1).unwrap();
+    for backend in BackendKind::ALL {
+        for kind in [SchedulerKind::InOrder, SchedulerKind::OutOfOrder] {
+            let reference = single
+                .program()
+                .session()
+                .with_scheduler(kind)
+                .with_backend(backend)
+                .run()
+                .unwrap();
+            let run = sharded
+                .session()
+                .with_scheduler(kind)
+                .with_backend(backend)
+                .run()
+                .unwrap();
+            assert_eq!(
+                run.stats, reference,
+                "N=1 sharded must be bit-identical ({kind:?}/{backend:?})"
+            );
+            assert_eq!(run.boundary_values, 0, "one shard has no boundary");
+        }
+    }
+}
+
+#[test]
+fn multi_shard_values_match_reference_evaluation() {
+    let g = build("layered:16:6:24:3:seed=2");
+    let overlay = overlay(2, 2);
+    let reference = g.evaluate();
+    for k in [2, 3, 4] {
+        let sharded = ShardedProgram::compile(Arc::clone(&g), &overlay, k).unwrap();
+        let run = sharded.session().run().unwrap();
+        assert_eq!(run.stats.completed, g.len(), "N={k} completes every node");
+        assert_eq!(run.values.len(), reference.len());
+        for (i, (&got, &want)) in run.values.iter().zip(&reference).enumerate() {
+            assert!(same(got, want), "N={k} node {i}: {got} != {want}");
+        }
+    }
+}
+
+#[test]
+fn runs_are_invariant_under_thread_count_and_backend() {
+    let g = build("lu_banded:48:4:0.9:seed=7");
+    let overlay = overlay(2, 2);
+    let sharded = ShardedProgram::compile(Arc::clone(&g), &overlay, 3).unwrap();
+    let baseline = sharded.session().with_threads(1).run().unwrap();
+    for threads in [2, 3, 8] {
+        let run = sharded.session().with_threads(threads).run().unwrap();
+        assert_eq!(
+            run, baseline,
+            "full ShardedRun must not depend on host threads ({threads})"
+        );
+    }
+    // both backends agree on values and merged cycle count
+    let skip = sharded
+        .session()
+        .with_backend(BackendKind::SkipAhead)
+        .run()
+        .unwrap();
+    assert_eq!(skip.stats.cycles, baseline.stats.cycles);
+    for (i, (&a, &b)) in skip.values.iter().zip(&baseline.values).enumerate() {
+        assert!(same(a, b), "node {i}: backends disagree");
+    }
+}
+
+/// The acceptance path: a spec that overflows one 2x2 fabric submits
+/// through the engine with no shard knob at all, auto-shards, runs to
+/// completion, and carries partition provenance in the result.
+#[test]
+fn engine_auto_shards_an_oversized_spec() {
+    let g = build("reduction:64:scale=48");
+    let overlay = overlay(2, 2);
+    let single = SharedProgram::compile(Arc::clone(&g), &overlay).unwrap();
+    assert!(
+        !single.program().fits(SchedulerKind::OutOfOrder),
+        "fixture must overflow one fabric or this test is vacuous"
+    );
+    let want = single.program().min_shards(SchedulerKind::OutOfOrder);
+
+    let engine = Engine::new();
+    let mut job = JobSpec::new("reduction:64:scale=48");
+    job.overlay = job.overlay.with_dims(2, 2);
+    let r = engine.submit(&job).unwrap();
+    let info = r.shards.as_ref().expect("auto-shard provenance");
+    assert_eq!(info.count, want);
+    assert_eq!(info.shard_cycles.len(), want);
+    assert_eq!(r.stats.completed, r.stats.total_nodes);
+    // bit-identical on the cached replay
+    let again = engine.submit(&job).unwrap();
+    assert!(again.cache_hit);
+    assert_eq!(again.stats, r.stats);
+    assert_eq!(again.shards, r.shards);
+}

@@ -110,6 +110,7 @@ pub fn fig1_sweep_on(
                 backend: cfg.backend,
                 overlay: cfg,
                 max_cycles: None,
+                timeout_ms: None,
             })
         })
         .collect();

@@ -6,7 +6,7 @@ use crate::config::OverlayConfig;
 use crate::graph::DataflowGraph;
 use crate::place::Placement;
 use crate::program::RuntimeTables;
-use crate::sim::{ActivityReport, SimError, SimStats, Simulator, Trace};
+use crate::sim::{ActivityReport, CancelToken, SimError, SimStats, Simulator, Trace};
 use std::sync::Arc;
 
 /// Cycle-by-cycle reference engine. This is the seed simulator moved
@@ -88,12 +88,20 @@ impl<'g> SimBackend for LockstepBackend<'g> {
         self.sim.run_until(bound)
     }
 
+    fn set_cancel(&mut self, token: CancelToken) {
+        self.sim.set_cancel(token);
+    }
+
     fn inject_value(&mut self, node: u32, value: f32) {
         self.sim.inject_value(node, value);
     }
 
     fn node_computed(&self, node: u32) -> bool {
         self.sim.node_computed(node)
+    }
+
+    fn completed_nodes(&self) -> usize {
+        self.sim.completed_nodes()
     }
 
     fn stats(&self) -> SimStats {

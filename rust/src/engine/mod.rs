@@ -35,7 +35,7 @@ use crate::config::OverlayConfig;
 use crate::graph::DataflowGraph;
 use crate::place::Placement;
 use crate::program::RuntimeTables;
-use crate::sim::{ActivityReport, SimError, SimStats, Trace};
+use crate::sim::{ActivityReport, CancelToken, SimError, SimStats, Trace};
 use std::sync::Arc;
 
 /// Which stepping engine a run uses.
@@ -75,6 +75,13 @@ pub trait SimBackend: Send {
     /// reaches the same completion cycle, values and error.
     fn run_until(&mut self, bound: u64) -> Result<bool, SimError>;
 
+    /// Attach a cooperative cancellation / deadline token
+    /// (DESIGN.md §15). The run loops poll it at least once every
+    /// [`crate::sim::CANCEL_CHECK_INTERVAL`] fabric cycles and stop
+    /// with a typed [`SimError::Cancelled`] / [`SimError::DeadlineExceeded`]
+    /// carrying the partial progress.
+    fn set_cancel(&mut self, token: CancelToken);
+
     /// Deliver a token to a deferred-seed input (graph node id) — the
     /// sharded runtime's boundary injection. No-op unless the node was
     /// deferred at construction and not yet injected.
@@ -83,6 +90,11 @@ pub trait SimBackend: Send {
     /// Has graph node `node` produced its value yet? (The sharded
     /// runtime's boundary-harvest predicate.)
     fn node_computed(&self, node: u32) -> bool;
+
+    /// Count of graph nodes whose fanout processing has completed — an
+    /// O(1) read-out the sharded runtime's zero-progress watchdog polls
+    /// at every epoch barrier (DESIGN.md §15).
+    fn completed_nodes(&self) -> usize;
 
     /// Statistics of the current (usually final) state.
     fn stats(&self) -> SimStats;

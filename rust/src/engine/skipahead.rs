@@ -30,7 +30,9 @@ use crate::config::OverlayConfig;
 use crate::graph::DataflowGraph;
 use crate::place::Placement;
 use crate::program::RuntimeTables;
-use crate::sim::{ActivityReport, SimError, SimStats, Simulator, Trace};
+use crate::sim::{
+    ActivityReport, CancelToken, SimError, SimStats, Simulator, Trace, CANCEL_CHECK_INTERVAL,
+};
 use std::sync::Arc;
 
 /// Event-horizon engine over the reference simulator.
@@ -121,6 +123,17 @@ impl<'g> SkipAheadBackend<'g> {
             total: self.sim.total_nodes(),
         }
     }
+
+    /// Poll the attached cancel token — the skip-ahead analog of the
+    /// lockstep cycle-mask check. The run loops call this every
+    /// [`CANCEL_CHECK_INTERVAL`] iterations (each iteration advances at
+    /// least one cycle) and immediately after every jump (one jump can
+    /// cross many intervals), so detection lag stays within one
+    /// interval of the budget here too.
+    fn check_cancel(&self) -> Option<SimError> {
+        let cause = self.sim.cancel_token()?.fired()?;
+        Some(self.sim.cancel_error(cause))
+    }
 }
 
 impl<'g> SimBackend for SkipAheadBackend<'g> {
@@ -130,7 +143,14 @@ impl<'g> SimBackend for SkipAheadBackend<'g> {
 
     fn run(&mut self) -> Result<SimStats, SimError> {
         let max_cycles = self.sim.max_cycles();
+        let mut ticks: u64 = 0;
+        // entry poll, mirroring the lockstep engine: a pre-fired token
+        // stops even a run short enough to never reach a check interval
+        if let Some(e) = self.check_cancel() {
+            return Err(e);
+        }
         loop {
+            let mut jumped = false;
             // Jump only through quiescent, incomplete states. The horizon
             // is clamped to the cycle limit so a livelocked or overlong
             // run reports the same `CycleLimitExceeded { cycle }` the
@@ -149,6 +169,7 @@ impl<'g> SimBackend for SkipAheadBackend<'g> {
                     if target >= max_cycles {
                         return Err(self.cycle_limit_error());
                     }
+                    jumped = true;
                 }
             }
             if self.sim.step() {
@@ -156,6 +177,12 @@ impl<'g> SimBackend for SkipAheadBackend<'g> {
             }
             if self.sim.cycle() >= max_cycles {
                 return Err(self.cycle_limit_error());
+            }
+            ticks += 1;
+            if jumped || ticks & (CANCEL_CHECK_INTERVAL - 1) == 0 {
+                if let Some(e) = self.check_cancel() {
+                    return Err(e);
+                }
             }
         }
     }
@@ -170,6 +197,15 @@ impl<'g> SimBackend for SkipAheadBackend<'g> {
     /// error as lockstep).
     fn run_until(&mut self, bound: u64) -> Result<bool, SimError> {
         let max_cycles = self.sim.max_cycles();
+        let mut ticks: u64 = 0;
+        // same entry order as the lockstep `run_until`: completion wins
+        // over a fired token, then each epoch slice re-polls on entry
+        if self.sim.is_complete() {
+            return Ok(true);
+        }
+        if let Some(e) = self.check_cancel() {
+            return Err(e);
+        }
         loop {
             if self.sim.is_complete() {
                 return Ok(true);
@@ -177,6 +213,7 @@ impl<'g> SimBackend for SkipAheadBackend<'g> {
             if self.sim.cycle() >= bound {
                 return Ok(false);
             }
+            let mut jumped = false;
             if self.sim.quiescent() {
                 let target = self
                     .sim
@@ -192,6 +229,7 @@ impl<'g> SimBackend for SkipAheadBackend<'g> {
                     if target >= bound {
                         return Ok(false);
                     }
+                    jumped = true;
                 }
             }
             if self.sim.step() {
@@ -200,7 +238,17 @@ impl<'g> SimBackend for SkipAheadBackend<'g> {
             if self.sim.cycle() >= max_cycles {
                 return Err(self.cycle_limit_error());
             }
+            ticks += 1;
+            if jumped || ticks & (CANCEL_CHECK_INTERVAL - 1) == 0 {
+                if let Some(e) = self.check_cancel() {
+                    return Err(e);
+                }
+            }
         }
+    }
+
+    fn set_cancel(&mut self, token: CancelToken) {
+        self.sim.set_cancel(token);
     }
 
     fn inject_value(&mut self, node: u32, value: f32) {
@@ -209,6 +257,10 @@ impl<'g> SimBackend for SkipAheadBackend<'g> {
 
     fn node_computed(&self, node: u32) -> bool {
         self.sim.node_computed(node)
+    }
+
+    fn completed_nodes(&self) -> usize {
+        self.sim.completed_nodes()
     }
 
     fn stats(&self) -> SimStats {

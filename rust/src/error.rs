@@ -10,6 +10,37 @@ use crate::config::ConfigError;
 use crate::program::CompileError;
 use crate::sim::SimError;
 
+/// Partial-progress snapshot carried by every mid-run failure
+/// ([`Error::Deadline`] / [`Error::Cancelled`] /
+/// [`Error::CyclesExhausted`]): how far the simulation got before it
+/// was stopped, so a timed-out or cancelled job still reports useful
+/// work instead of silence (DESIGN.md §15).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Partial {
+    /// fabric cycles retired before the stop
+    pub cycles: u64,
+    /// graph nodes whose fanout processing completed
+    pub completed: usize,
+    /// total graph nodes
+    pub total: usize,
+}
+
+impl Partial {
+    /// Completion fraction in `[0, 1]` (1.0 for an empty graph).
+    pub fn fraction(&self) -> f64 {
+        if self.total == 0 {
+            1.0
+        } else {
+            self.completed as f64 / self.total as f64
+        }
+    }
+
+    /// Nodes still outstanding at the stop.
+    pub fn incomplete_nodes(&self) -> usize {
+        self.total.saturating_sub(self.completed)
+    }
+}
+
 /// A failure anywhere in the spec → validate → compile → run pipeline.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Error {
@@ -21,8 +52,67 @@ pub enum Error {
     Config(ConfigError),
     /// the one-time compile phase failed (placement/capacity)
     Compile(CompileError),
-    /// the simulation itself failed (cycle limit, runtime capacity)
+    /// the simulation itself failed (runtime capacity, verifier,
+    /// boundary livelock) — everything without a dedicated arm below
     Sim(SimError),
+    /// the job's wall-clock deadline (`JobSpec.timeout_ms`) expired
+    /// mid-run; detection lags the budget by at most one
+    /// [`crate::sim::CANCEL_CHECK_INTERVAL`]
+    Deadline(Partial),
+    /// the job was cooperatively cancelled mid-run (client gone, queue
+    /// shed, daemon shutdown)
+    Cancelled(Partial),
+    /// `max_cycles` elapsed before the graph completed — the structured
+    /// image of [`SimError::CycleLimitExceeded`] at the job layer, so
+    /// exhaustion is distinguishable from success and carries its
+    /// partial progress
+    CyclesExhausted(Partial),
+    /// the single-flight compile this job was waiting on panicked in
+    /// its leader; the flight latch was cleared, so resubmitting
+    /// retries the compile from scratch
+    CompilePoisoned { what: String },
+    /// the job panicked inside the engine (compile or run); `message`
+    /// is the panic payload. The worker that caught it stays healthy.
+    Panicked { stage: &'static str, message: String },
+}
+
+impl Error {
+    /// The partial-progress snapshot, for mid-run failures.
+    pub fn partial(&self) -> Option<Partial> {
+        match self {
+            Error::Deadline(p) | Error::Cancelled(p) | Error::CyclesExhausted(p) => Some(*p),
+            _ => None,
+        }
+    }
+
+    /// A stable machine-readable failure class, used as the `code`
+    /// field of batch/serve error payloads.
+    pub fn code(&self) -> &'static str {
+        match self {
+            Error::Spec(_) => "invalid_spec",
+            Error::Config(_) => "invalid_config",
+            Error::Compile(_) => "compile_failed",
+            Error::Sim(_) => "sim_failed",
+            Error::Deadline(_) => "deadline_exceeded",
+            Error::Cancelled(_) => "cancelled",
+            Error::CyclesExhausted(_) => "cycles_exhausted",
+            Error::CompilePoisoned { .. } => "compile_poisoned",
+            Error::Panicked { .. } => "panicked",
+        }
+    }
+}
+
+/// Best-effort text of a `catch_unwind` payload (the `&str` / `String`
+/// forms `panic!` produces; anything else gets a fixed placeholder) —
+/// what [`Error::Panicked`] carries as its `message`.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
 }
 
 impl std::fmt::Display for Error {
@@ -32,6 +122,31 @@ impl std::fmt::Display for Error {
             Error::Config(e) => write!(f, "{e}"),
             Error::Compile(e) => write!(f, "compile failed: {e}"),
             Error::Sim(e) => write!(f, "simulation failed: {e}"),
+            Error::Deadline(p) => write!(
+                f,
+                "deadline exceeded at cycle {}: {}/{} nodes complete",
+                p.cycles, p.completed, p.total
+            ),
+            Error::Cancelled(p) => write!(
+                f,
+                "job cancelled at cycle {}: {}/{} nodes complete",
+                p.cycles, p.completed, p.total
+            ),
+            Error::CyclesExhausted(p) => write!(
+                f,
+                "cycle limit hit at {}: {}/{} nodes complete, {} incomplete",
+                p.cycles,
+                p.completed,
+                p.total,
+                p.incomplete_nodes()
+            ),
+            Error::CompilePoisoned { what } => write!(
+                f,
+                "compile poisoned: the in-flight compile of {what} panicked; resubmit to retry"
+            ),
+            Error::Panicked { stage, message } => {
+                write!(f, "job panicked during {stage}: {message}")
+            }
         }
     }
 }
@@ -39,10 +154,10 @@ impl std::fmt::Display for Error {
 impl std::error::Error for Error {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
-            Error::Spec(_) => None,
             Error::Config(e) => Some(e),
             Error::Compile(e) => Some(e),
             Error::Sim(e) => Some(e),
+            _ => None,
         }
     }
 }
@@ -61,7 +176,21 @@ impl From<CompileError> for Error {
 
 impl From<SimError> for Error {
     fn from(e: SimError) -> Self {
-        Error::Sim(e)
+        // The three early-stop shapes become first-class job-layer
+        // outcomes with their partial progress; everything else stays a
+        // wrapped simulator error.
+        match e {
+            SimError::CycleLimitExceeded { cycle, completed, total } => {
+                Error::CyclesExhausted(Partial { cycles: cycle, completed, total })
+            }
+            SimError::DeadlineExceeded { cycle, completed, total } => {
+                Error::Deadline(Partial { cycles: cycle, completed, total })
+            }
+            SimError::Cancelled { cycle, completed, total } => {
+                Error::Cancelled(Partial { cycles: cycle, completed, total })
+            }
+            other => Error::Sim(other),
+        }
     }
 }
 
@@ -80,8 +209,9 @@ mod tests {
         }
         .into();
         assert!(k.to_string().contains("PE 3"), "{k}");
-        let s: Error = SimError::CycleLimitExceeded { cycle: 9, completed: 1, total: 2 }.into();
-        assert!(s.to_string().contains("cycle limit"), "{s}");
+        let s: Error = SimError::CapacityExceeded { pe: 1, words_needed: 9, words_available: 4 }
+            .into();
+        assert!(matches!(s, Error::Sim(_)), "{s:?}");
         assert_ne!(c, k);
         for e in [c, k, s] {
             assert!(std::error::Error::source(&e).is_some());
@@ -89,5 +219,49 @@ mod tests {
         let j = Error::Spec("unknown workload kind 'bogus'".into());
         assert!(j.to_string().contains("invalid job spec"), "{j}");
         assert!(std::error::Error::source(&j).is_none());
+    }
+
+    /// The three early-stop SimError shapes surface as structured
+    /// job-layer outcomes with their partial progress attached.
+    #[test]
+    fn early_stops_become_structured_arms() {
+        let exhausted: Error =
+            SimError::CycleLimitExceeded { cycle: 9, completed: 1, total: 4 }.into();
+        let Error::CyclesExhausted(p) = exhausted else {
+            panic!("want CyclesExhausted, got {exhausted:?}");
+        };
+        assert_eq!((p.cycles, p.completed, p.total), (9, 1, 4));
+        assert_eq!(p.incomplete_nodes(), 3);
+        assert!((p.fraction() - 0.25).abs() < 1e-12);
+        let shown = Error::CyclesExhausted(p).to_string();
+        assert!(shown.contains("cycle limit"), "{shown}");
+        assert!(shown.contains("3 incomplete"), "{shown}");
+
+        let dl: Error = SimError::DeadlineExceeded { cycle: 2048, completed: 5, total: 10 }.into();
+        assert!(matches!(dl, Error::Deadline(_)), "{dl:?}");
+        assert_eq!(dl.code(), "deadline_exceeded");
+        assert_eq!(dl.partial().unwrap().completed, 5);
+        assert!(dl.to_string().contains("deadline exceeded"), "{dl}");
+
+        let cn: Error = SimError::Cancelled { cycle: 7, completed: 0, total: 3 }.into();
+        assert!(matches!(cn, Error::Cancelled(_)), "{cn:?}");
+        assert_eq!(cn.code(), "cancelled");
+
+        let po = Error::CompilePoisoned { what: "chain:64".into() };
+        assert_eq!(po.code(), "compile_poisoned");
+        assert!(po.partial().is_none());
+        let pa = Error::Panicked { stage: "compile", message: "boom".into() };
+        assert_eq!(pa.code(), "panicked");
+        assert!(pa.to_string().contains("boom"), "{pa}");
+    }
+
+    #[test]
+    fn panic_payloads_downcast_to_text() {
+        let p = std::panic::catch_unwind(|| panic!("boom {}", 1)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "boom 1");
+        let p = std::panic::catch_unwind(|| panic!("plain")).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "plain");
+        let p = std::panic::catch_unwind(|| std::panic::panic_any(7u32)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "opaque panic payload");
     }
 }

@@ -1,0 +1,308 @@
+//! Deterministic fault injection (DESIGN.md §15): a serializable
+//! [`FaultPlan`] that arms failures at named sites inside the engine
+//! and the sharded runtime, so chaos runs are *bit-reproducible* —
+//! the plan is data (pure function of a seed via
+//! [`FaultPlan::from_seed`], or hand-written JSON), and every decision
+//! is keyed by job content, never by wall clock or scheduling order.
+//!
+//! Sites:
+//! * `compile_panic` — the first compile of a listed workload panics
+//!   inside the engine's unwind boundary (exercises panic isolation
+//!   and single-flight poison recovery; the retry compiles clean).
+//! * `job_delay` — every submit of a listed workload sleeps first
+//!   (stragglers for queue/deadline interplay).
+//! * `deadline_overrun` — a listed workload runs with an
+//!   already-expired [`crate::sim::CancelToken`], so it stops at its
+//!   first cancellation check with a typed deadline error.
+//! * `barrier_drop` — a sharded run's boundary channel delivers
+//!   nothing from a given epoch on (exercises the epoch watchdog).
+//!
+//! Wire the plan in with `Engine::with_capacity_and_faults`, `tdp
+//! serve --fault-plan <file>` or `tdp batch --fault-plan <file>`.
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// A boundary channel silenced from `from_epoch` on: everything it
+/// would deliver at the barrier is discarded instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BarrierDrop {
+    /// index into the sharded program's canonical channel order
+    pub channel: usize,
+    /// first epoch (0-based) at which deliveries are dropped
+    pub from_epoch: u64,
+}
+
+/// A deterministic, serializable chaos schedule. Workload matching is
+/// by exact string against the job's `workload` field or its canonical
+/// spec form, so decisions are independent of worker count and
+/// submission interleaving.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    /// provenance: the seed this plan was derived from (0 for
+    /// hand-written plans)
+    pub seed: u64,
+    /// workloads whose *first* compile panics (once per engine)
+    pub compile_panics: Vec<String>,
+    /// (workload, milliseconds) submits that sleep before executing
+    pub job_delays: Vec<(String, u64)>,
+    /// workloads forced to run with an already-expired deadline
+    pub deadline_overruns: Vec<String>,
+    /// sharded boundary channels silenced from an epoch on
+    pub barrier_drops: Vec<BarrierDrop>,
+}
+
+/// splitmix64 — the derivation PRNG of [`FaultPlan::from_seed`]: tiny,
+/// stable across platforms, and good enough to spread picks.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// Derive a plan as a pure function of `seed` over a candidate
+    /// workload list: roughly one third of the candidates get a compile
+    /// panic, one third a forced deadline overrun, and one quarter a
+    /// small delay (buckets may overlap). Same seed + same candidates →
+    /// identical plan, always.
+    pub fn from_seed(seed: u64, workloads: &[&str]) -> Self {
+        let mut state = seed ^ 0x7464_705f_6661_756c; // "tdp_faul"
+        let mut plan = FaultPlan { seed, ..FaultPlan::default() };
+        for w in workloads {
+            let roll = splitmix64(&mut state);
+            if roll % 3 == 0 {
+                plan.compile_panics.push((*w).to_string());
+            }
+            if (roll >> 8) % 3 == 0 {
+                plan.deadline_overruns.push((*w).to_string());
+            }
+            if (roll >> 16) % 4 == 0 {
+                plan.job_delays.push(((*w).to_string(), 1 + (roll >> 24) % 20));
+            }
+        }
+        plan
+    }
+
+    fn matches(list: &[String], workload: &str, canon: &str) -> bool {
+        list.iter().any(|w| w == workload || w == canon)
+    }
+
+    /// Is a `compile_panic` armed for this job? (The caller tracks
+    /// fire-once state — see `Engine`.)
+    pub fn compile_panic_armed(&self, workload: &str, canon: &str) -> bool {
+        Self::matches(&self.compile_panics, workload, canon)
+    }
+
+    /// The `job_delay` for this job, if armed.
+    pub fn delay_ms(&self, workload: &str, canon: &str) -> Option<u64> {
+        self.job_delays
+            .iter()
+            .find(|(w, _)| w == workload || w == canon)
+            .map(|&(_, ms)| ms)
+    }
+
+    /// Is a `deadline_overrun` armed for this job?
+    pub fn deadline_overrun(&self, workload: &str, canon: &str) -> bool {
+        Self::matches(&self.deadline_overruns, workload, canon)
+    }
+
+    /// Is boundary channel `channel` silenced at `epoch`?
+    pub fn barrier_dropped(&self, channel: usize, epoch: u64) -> bool {
+        self.barrier_drops
+            .iter()
+            .any(|d| d.channel == channel && epoch >= d.from_epoch)
+    }
+
+    /// Anything armed at all? (`tdp serve` logs a warning banner when
+    /// a plan is live.)
+    pub fn is_armed(&self) -> bool {
+        !(self.compile_panics.is_empty()
+            && self.job_delays.is_empty()
+            && self.deadline_overruns.is_empty()
+            && self.barrier_drops.is_empty())
+    }
+
+    /// The versioned JSON image (`version: 1`; keys only ever added).
+    pub fn to_json_value(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("version".to_string(), Json::Num(1.0));
+        root.insert("seed".to_string(), Json::Num(self.seed as f64));
+        root.insert(
+            "compile_panics".to_string(),
+            Json::Arr(self.compile_panics.iter().map(|w| Json::Str(w.clone())).collect()),
+        );
+        root.insert(
+            "job_delays".to_string(),
+            Json::Arr(
+                self.job_delays
+                    .iter()
+                    .map(|(w, ms)| {
+                        let mut m = BTreeMap::new();
+                        m.insert("workload".to_string(), Json::Str(w.clone()));
+                        m.insert("delay_ms".to_string(), Json::Num(*ms as f64));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        root.insert(
+            "deadline_overruns".to_string(),
+            Json::Arr(self.deadline_overruns.iter().map(|w| Json::Str(w.clone())).collect()),
+        );
+        root.insert(
+            "barrier_drops".to_string(),
+            Json::Arr(
+                self.barrier_drops
+                    .iter()
+                    .map(|d| {
+                        let mut m = BTreeMap::new();
+                        m.insert("channel".to_string(), Json::Num(d.channel as f64));
+                        m.insert("from_epoch".to_string(), Json::Num(d.from_epoch as f64));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(root)
+    }
+
+    /// Compact JSON text of [`FaultPlan::to_json_value`].
+    pub fn to_json_string(&self) -> String {
+        json::write(&self.to_json_value())
+    }
+
+    /// Parse the JSON image back — strict: unknown keys and malformed
+    /// entries are errors, so a typo'd chaos plan fails loudly instead
+    /// of silently injecting nothing.
+    pub fn from_json_value(v: &Json) -> Result<Self, String> {
+        let obj = v.as_obj().ok_or("fault plan must be a JSON object")?;
+        let mut plan = FaultPlan::default();
+        for (k, val) in obj {
+            match k.as_str() {
+                "version" => {
+                    let ver = val.as_u64().ok_or("'version' must be a number")?;
+                    if ver != 1 {
+                        return Err(format!("unsupported fault-plan version {ver}"));
+                    }
+                }
+                "seed" => plan.seed = val.as_u64().ok_or("'seed' must be a number")?,
+                "compile_panics" => plan.compile_panics = str_list(val, k)?,
+                "deadline_overruns" => plan.deadline_overruns = str_list(val, k)?,
+                "job_delays" => {
+                    for entry in val.as_arr().ok_or("'job_delays' must be an array")? {
+                        let w = entry
+                            .get("workload")
+                            .and_then(Json::as_str)
+                            .ok_or("job_delays entry needs a 'workload' string")?;
+                        let ms = entry
+                            .get("delay_ms")
+                            .and_then(Json::as_u64)
+                            .ok_or("job_delays entry needs a 'delay_ms' number")?;
+                        plan.job_delays.push((w.to_string(), ms));
+                    }
+                }
+                "barrier_drops" => {
+                    for entry in val.as_arr().ok_or("'barrier_drops' must be an array")? {
+                        let channel = entry
+                            .get("channel")
+                            .and_then(Json::as_usize)
+                            .ok_or("barrier_drops entry needs a 'channel' number")?;
+                        let from_epoch = entry
+                            .get("from_epoch")
+                            .and_then(Json::as_u64)
+                            .ok_or("barrier_drops entry needs a 'from_epoch' number")?;
+                        plan.barrier_drops.push(BarrierDrop { channel, from_epoch });
+                    }
+                }
+                other => return Err(format!("unknown fault-plan key '{other}'")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Parse from JSON text (`--fault-plan <file>` contents).
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let v = json::parse(text).map_err(|e| format!("fault plan: {e}"))?;
+        Self::from_json_value(&v)
+    }
+}
+
+fn str_list(v: &Json, key: &str) -> Result<Vec<String>, String> {
+    v.as_arr()
+        .ok_or_else(|| format!("'{key}' must be an array of strings"))?
+        .iter()
+        .map(|s| {
+            s.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| format!("'{key}' entries must be strings"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_seed_is_pure() {
+        let workloads = ["chain:64", "reduction:32", "butterfly:16", "lu_banded:48:4:0.9"];
+        let a = FaultPlan::from_seed(42, &workloads);
+        let b = FaultPlan::from_seed(42, &workloads);
+        assert_eq!(a, b, "same seed, same plan — always");
+        let c = FaultPlan::from_seed(43, &workloads);
+        assert_ne!(a, c, "different seed should perturb the plan");
+        assert_eq!(a.seed, 42);
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let plan = FaultPlan {
+            seed: 7,
+            compile_panics: vec!["chain:64".into(), "reduction:32".into()],
+            job_delays: vec![("butterfly:16".into(), 12)],
+            deadline_overruns: vec!["chain:64".into()],
+            barrier_drops: vec![BarrierDrop { channel: 3, from_epoch: 2 }],
+        };
+        let text = plan.to_json_string();
+        let back = FaultPlan::parse(&text).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(back.to_json_string(), text, "serialization is canonical");
+    }
+
+    #[test]
+    fn strict_parse_rejects_unknowns_and_bad_shapes() {
+        assert!(FaultPlan::parse("[1,2]").is_err());
+        assert!(FaultPlan::parse(r#"{"bogus": 1}"#).unwrap_err().contains("bogus"));
+        assert!(FaultPlan::parse(r#"{"version": 9}"#).unwrap_err().contains("version"));
+        assert!(FaultPlan::parse(r#"{"compile_panics": [1]}"#).is_err());
+        assert!(FaultPlan::parse(r#"{"job_delays": [{"workload": "x"}]}"#).is_err());
+        assert!(FaultPlan::parse(r#"{"barrier_drops": [{"channel": 0}]}"#).is_err());
+        let ok = FaultPlan::parse(r#"{"version": 1, "seed": 5}"#).unwrap();
+        assert_eq!(ok.seed, 5);
+        assert!(!ok.is_armed());
+    }
+
+    #[test]
+    fn queries_match_raw_or_canonical_form() {
+        let plan = FaultPlan {
+            compile_panics: vec!["chain:64".into()],
+            job_delays: vec![("chain:64".into(), 9)],
+            deadline_overruns: vec!["reduction:32".into()],
+            barrier_drops: vec![BarrierDrop { channel: 1, from_epoch: 4 }],
+            ..FaultPlan::default()
+        };
+        assert!(plan.is_armed());
+        assert!(plan.compile_panic_armed("chain:64:seed=0", "chain:64"));
+        assert!(!plan.compile_panic_armed("chain:65", "chain:65"));
+        assert_eq!(plan.delay_ms("chain:64", "chain:64"), Some(9));
+        assert_eq!(plan.delay_ms("other", "other"), None);
+        assert!(plan.deadline_overrun("reduction:32", "reduction:32"));
+        assert!(!plan.barrier_dropped(1, 3), "before from_epoch");
+        assert!(plan.barrier_dropped(1, 4));
+        assert!(plan.barrier_dropped(1, 9), "dropped channels stay dropped");
+        assert!(!plan.barrier_dropped(0, 9), "other channels unaffected");
+    }
+}

@@ -67,6 +67,7 @@ pub mod coordinator;
 pub mod criticality;
 pub mod engine;
 pub mod error;
+pub mod faultinject;
 pub mod graph;
 pub mod lod;
 pub mod noc;
@@ -87,7 +88,8 @@ pub mod workload;
 
 pub use config::{ConfigError, Overlay, OverlayBuilder, OverlayConfig};
 pub use engine::{BackendKind, SimBackend};
-pub use error::Error;
+pub use error::{panic_message, Error, Partial};
+pub use faultinject::{BarrierDrop, FaultPlan};
 pub use graph::{DataflowGraph, NodeId, Op};
 pub use passes::{Diagnostic, PassManager, Severity};
 pub use program::{
@@ -97,5 +99,5 @@ pub use sched::SchedulerKind;
 pub use serve::{Daemon, DaemonHandle, ServeConfig};
 pub use service::{Engine, JobResult, JobSpec};
 pub use shard::{ShardSession, ShardedProgram, ShardedRun};
-pub use sim::{SimError, SimStats, Simulator};
+pub use sim::{CancelCause, CancelToken, SimError, SimStats, Simulator};
 pub use telemetry::{Registry, Telemetry};

@@ -62,18 +62,26 @@ COMMANDS
               length; --run also executes the sharded program and
               reports the merged stats plus epoch/stall counters
   batch       serve a job stream             <jobs.jsonl | -> [--workers N (0 = all cores)
-              --cache 64 --metrics-out file --connect host:port]
+              --cache 64 --metrics-out file --connect host:port
+              --retries 3 --fault-plan plan.json]
               one JSON job per line in ({\"workload\": \"chain:4096:seed=7\", ...}),
-              one JSON result per line out, same order; repeated workloads
-              compile once (content-addressed Program cache); non-zero exit
-              if any job failed; --metrics-out dumps the engine metrics
-              snapshot (cache hits/misses, latency percentiles) as JSON;
-              '-' reads the JSONL from stdin (shell pipelines); --connect
-              streams the same lines through a running 'tdp serve' daemon
-              instead of an in-process engine (--workers/--cache are
-              daemon-side knobs then and are rejected here)
+              one JSON result per line out, same order; a job may carry
+              \"timeout_ms\": N — past the budget it fails with code
+              deadline_exceeded and its partial progress; repeated
+              workloads compile once (content-addressed Program cache);
+              non-zero exit if any job failed; --metrics-out dumps the
+              engine metrics snapshot (cache hits/misses, latency
+              percentiles) as JSON; '-' reads the JSONL from stdin
+              (shell pipelines); --connect streams the same lines
+              through a running 'tdp serve' daemon instead of an
+              in-process engine (--workers/--cache/--fault-plan are
+              daemon-side knobs then and are rejected here), redialing
+              up to --retries times on a lost connection and resubmitting
+              only the unanswered lines; --fault-plan arms the in-process
+              engine with a deterministic chaos plan (DESIGN.md §15)
   serve       long-lived job daemon          [--listen 127.0.0.1:7411 --workers N (0 = all
-              cores) --queue 256 --cache 64 --metrics-out file]
+              cores) --queue 256 --cache 64 --metrics-out file
+              --fault-plan plan.json]
               speaks the batch JobSpec/JobResult JSON as JSONL over TCP
               (seq-tagged responses, pipelining-safe) plus control lines
               {\"control\": \"stats\" | \"ping\" | \"shutdown\"}; one shared
@@ -81,8 +89,13 @@ COMMANDS
               admission queue with round-robin per-client fairness
               (queue-full is a structured error, never a disconnect);
               graceful drain on SIGTERM/SIGINT/shutdown finishes all
-              admitted jobs before exit; --metrics-out writes the final
-              stats document after the drain
+              admitted jobs before exit; a job that panics is answered
+              with code=panicked and the worker survives; queued jobs
+              past their timeout_ms are shed with deadline_exceeded
+              without occupying a worker; --fault-plan arms the shared
+              engine with a deterministic chaos plan (DESIGN.md §15);
+              --metrics-out writes the final stats document after the
+              drain
   top         live daemon dashboard          <host:port> [--format text|json
               --interval-ms 1000 --iters 0 (0 = forever)]
               polls the stats endpoint into a refreshing terminal view:
@@ -562,14 +575,16 @@ fn cmd_batch(mut argv: Vec<String>) -> Result<()> {
             .map_err(|e| anyhow!("cannot read job file '{path}': {e}"))?
     };
     if let Some(addr) = connect {
-        // --workers/--cache size the daemon, not this client: finish()
-        // rejects them here so they fail loudly instead of silently
-        // doing nothing
+        // --workers/--cache/--fault-plan size and arm the daemon, not
+        // this client: finish() rejects them here so they fail loudly
+        // instead of silently doing nothing
+        let retries = a.usize_or("retries", 3)?;
         a.finish()?;
-        return batch_over_socket(&addr, &text, metrics_out);
+        return batch_over_socket(&addr, &text, metrics_out, retries);
     }
     let mut workers = a.usize_or("workers", 0)?;
     let cache = a.usize_or("cache", tdp::service::DEFAULT_CACHE_CAPACITY)?;
+    let fault_plan = load_fault_plan(&mut a)?;
     a.finish()?;
     if workers == 0 {
         workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
@@ -581,7 +596,7 @@ fn cmd_batch(mut argv: Vec<String>) -> Result<()> {
         .filter(|(_, line)| !line.trim().is_empty())
         .map(|(i, line)| (i + 1, JobSpec::from_json(line)))
         .collect();
-    let engine = Engine::with_capacity(cache);
+    let engine = Engine::with_capacity_and_faults(cache, fault_plan);
     let jobs: Vec<JobSpec> = parsed
         .iter()
         .filter_map(|(_, j)| j.as_ref().ok())
@@ -626,13 +641,34 @@ fn cmd_batch(mut argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+/// Parse the shared `--fault-plan <file>` flag into the deterministic
+/// chaos plan (DESIGN.md §15) the engine is armed with.
+fn load_fault_plan(a: &mut Args) -> Result<Option<std::sync::Arc<tdp::FaultPlan>>> {
+    match a.str_opt("fault-plan")? {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow!("cannot read fault plan '{path}': {e}"))?;
+            let plan = tdp::FaultPlan::parse(&text).map_err(|e| anyhow!("'{path}': {e}"))?;
+            Ok(Some(std::sync::Arc::new(plan)))
+        }
+        None => Ok(None),
+    }
+}
+
 /// `tdp batch --connect` — stream the same JSONL through a running
 /// `tdp serve` daemon. Output keeps the in-process contract: one line
 /// per input line, in input order (`result` objects verbatim, failures
 /// as `{"line": N, "code": ..., "error": ...}`), non-zero exit if any
 /// job failed. The parsing happens daemon-side; this end only tags
-/// lines and reassembles seq-ordered responses.
-fn batch_over_socket(addr: &str, text: &str, metrics_out: Option<String>) -> Result<()> {
+/// lines and reassembles seq-ordered responses, redialing up to
+/// `--retries` times on a lost connection (answered jobs are never
+/// re-run; resubmits are idempotent via the daemon's Program cache).
+fn batch_over_socket(
+    addr: &str,
+    text: &str,
+    metrics_out: Option<String>,
+    retries: usize,
+) -> Result<()> {
     let lines: Vec<(usize, String)> = text
         .lines()
         .enumerate()
@@ -640,7 +676,7 @@ fn batch_over_socket(addr: &str, text: &str, metrics_out: Option<String>) -> Res
         .map(|(i, line)| (i + 1, line.to_string()))
         .collect();
     let requests: Vec<String> = lines.iter().map(|(_, l)| l.clone()).collect();
-    let responses = serve_client::submit_raw_lines(addr, &requests)
+    let responses = serve_client::submit_raw_lines_with_retry(addr, &requests, retries)
         .map_err(|e| anyhow!("daemon at {addr}: {e}"))?;
     let mut failed = 0usize;
     for ((line_no, _), response) in lines.iter().zip(&responses) {
@@ -686,11 +722,15 @@ fn batch_over_socket(addr: &str, text: &str, metrics_out: Option<String>) -> Res
 fn cmd_serve(mut a: Args) -> Result<()> {
     use std::sync::atomic::Ordering;
     let listen = a.str_or("listen", "127.0.0.1:7411")?;
+    let fault_plan = load_fault_plan(&mut a)?;
     let cfg = ServeConfig {
         workers: a.usize_or("workers", 0)?,
         queue_capacity: a.usize_or("queue", tdp::serve::DEFAULT_QUEUE_CAPACITY)?,
         cache_capacity: a.usize_or("cache", tdp::service::DEFAULT_CACHE_CAPACITY)?,
+        fault_plan,
     };
+    let cache_capacity = cfg.cache_capacity;
+    let faults_armed = cfg.fault_plan.is_some();
     let metrics_out = a.str_opt("metrics-out")?;
     a.finish()?;
     let registry = std::sync::Arc::new(Registry::new());
@@ -704,11 +744,12 @@ fn cmd_serve(mut a: Args) -> Result<()> {
     // the banner is the port-discovery contract for --listen :0 (tests,
     // scripts): stderr, one line, "listening on <resolved addr>"
     eprintln!(
-        "tdp serve: listening on {} (workers={}, queue={}, cache={})",
+        "tdp serve: listening on {} (workers={}, queue={}, cache={}{})",
         daemon.local_addr(),
         d("workers"),
         d("queue_capacity"),
-        cfg.cache_capacity,
+        cache_capacity,
+        if faults_armed { ", fault plan ARMED" } else { "" },
     );
     // SIGTERM/SIGINT → the same drain path as a shutdown control line
     let flag = tdp::serve::signal::install_shutdown_flag();

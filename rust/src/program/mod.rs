@@ -488,6 +488,7 @@ pub struct Session<'p, 'g> {
     program: &'p Program<'g>,
     cfg: OverlayConfig,
     telemetry: Telemetry<'p>,
+    cancel: Option<&'p crate::sim::CancelToken>,
 }
 
 impl<'p, 'g> Session<'p, 'g> {
@@ -497,7 +498,18 @@ impl<'p, 'g> Session<'p, 'g> {
             program,
             cfg: *program.overlay().config(),
             telemetry: None,
+            cancel: None,
         }
+    }
+
+    /// Attach a cooperative cancellation / deadline token (DESIGN.md
+    /// §15): the run polls it every
+    /// [`crate::sim::CANCEL_CHECK_INTERVAL`] cycles and stops with a
+    /// typed [`SimError::Cancelled`] / [`SimError::DeadlineExceeded`]
+    /// carrying partial progress. Without this, nothing is polled.
+    pub fn with_cancel(mut self, token: &'p crate::sim::CancelToken) -> Self {
+        self.cancel = Some(token);
+        self
     }
 
     /// Attach a telemetry registry: [`Session::run`] wraps backend
@@ -545,11 +557,15 @@ impl<'p, 'g> Session<'p, 'g> {
     /// *original* graph order regardless of transforms — the tables
     /// carry the remap.
     pub fn backend(&self) -> Result<Box<dyn SimBackend + 'p>, SimError> {
-        engine::backend_with_tables(
+        let mut backend = engine::backend_with_tables(
             self.program.exec_graph(),
             self.program.runtime_tables(),
             self.cfg,
-        )
+        )?;
+        if let Some(token) = self.cancel {
+            backend.set_cancel(token.clone());
+        }
+        Ok(backend)
     }
 
     /// Run the compiled program to completion on this session's variant.

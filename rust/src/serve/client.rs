@@ -10,58 +10,159 @@
 
 use crate::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
+use std::net::{Shutdown, TcpStream};
+use std::time::Duration;
 
 fn invalid<E: std::fmt::Display>(e: E) -> std::io::Error {
     std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
 }
 
-/// Send `lines` (one request per element, verbatim — the daemon does
-/// all parsing and validation) and return one response per line, in
-/// input order regardless of the daemon's completion order.
-pub fn submit_raw_lines(addr: &str, lines: &[String]) -> std::io::Result<Vec<Json>> {
+/// One submission attempt over one fresh connection. The outer `Err` is
+/// a connect failure (nothing was sent — safe to back off and redial);
+/// `Ok((responses, stream_err))` carries whatever answers arrived
+/// before the stream died, slot `i` holding the response to `lines[i]`,
+/// plus the stream error if the connection was lost mid-exchange. A
+/// dead daemon therefore yields a typed error naming the outstanding
+/// count — never a hung reader thread.
+fn submit_once(
+    addr: &str,
+    lines: &[String],
+) -> std::io::Result<(Vec<Option<Json>>, Option<std::io::Error>)> {
     let stream = TcpStream::connect(addr)?;
     let mut write_half = stream.try_clone()?;
     let n = lines.len();
-    // reader first: responses stream back while we are still sending
-    let reader = std::thread::spawn(move || -> std::io::Result<Vec<Json>> {
+    // reader first: responses stream back while we are still sending,
+    // so a large job file cannot deadlock on full kernel buffers
+    let reader = std::thread::spawn(move || {
         let mut input = BufReader::new(stream);
         let mut got: Vec<Option<Json>> = (0..n).map(|_| None).collect();
         let mut remaining = n;
         let mut line = String::new();
+        let mut failure: Option<std::io::Error> = None;
         while remaining > 0 {
             line.clear();
-            if input.read_line(&mut line)? == 0 {
-                return Err(invalid(format!(
-                    "daemon closed the connection with {remaining} responses outstanding"
-                )));
+            match input.read_line(&mut line) {
+                Ok(0) => {
+                    failure = Some(invalid(format!(
+                        "daemon closed the connection with {remaining} responses outstanding"
+                    )));
+                    break;
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
             }
             let text = line.trim();
             if text.is_empty() {
                 continue;
             }
-            let j = json::parse(text).map_err(invalid)?;
-            let seq = j
-                .get("seq")
-                .and_then(Json::as_u64)
-                .ok_or_else(|| invalid(format!("response without seq: {text}")))?;
-            let idx = (seq as usize)
-                .checked_sub(1)
-                .filter(|i| *i < n)
-                .ok_or_else(|| invalid(format!("response seq {seq} out of range 1..={n}")))?;
-            if got[idx].is_none() {
-                got[idx] = Some(j);
-                remaining -= 1;
+            let parsed = json::parse(text).map_err(invalid).and_then(|j| {
+                let seq = j
+                    .get("seq")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| invalid(format!("response without seq: {text}")))?;
+                let idx = (seq as usize)
+                    .checked_sub(1)
+                    .filter(|i| *i < n)
+                    .ok_or_else(|| invalid(format!("response seq {seq} out of range 1..={n}")))?;
+                Ok((idx, j))
+            });
+            match parsed {
+                Ok((idx, j)) => {
+                    if got[idx].is_none() {
+                        got[idx] = Some(j);
+                        remaining -= 1;
+                    }
+                }
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
             }
         }
-        Ok(got.into_iter().map(|j| j.expect("all seqs answered")).collect())
+        (got, failure)
     });
+    let mut write_err: Option<std::io::Error> = None;
     for line in lines {
-        write_half.write_all(line.as_bytes())?;
-        write_half.write_all(b"\n")?;
+        let sent = write_half
+            .write_all(line.as_bytes())
+            .and_then(|()| write_half.write_all(b"\n"));
+        if let Err(e) = sent {
+            // unsendable lines will never be answered: force the reader
+            // awake (EOF) instead of letting it wait forever
+            let _ = write_half.shutdown(Shutdown::Both);
+            write_err = Some(e);
+            break;
+        }
     }
-    write_half.flush()?;
-    reader.join().map_err(|_| invalid("response reader panicked"))?
+    let _ = write_half.flush();
+    let (got, read_err) = reader.join().map_err(|_| invalid("response reader panicked"))?;
+    Ok((got, read_err.or(write_err)))
+}
+
+/// Send `lines` (one request per element, verbatim — the daemon does
+/// all parsing and validation) and return one response per line, in
+/// input order regardless of the daemon's completion order, redialing
+/// up to `retries` times on connect failure or a connection lost
+/// mid-exchange. Each redial resubmits only the still-unanswered lines
+/// — answered seqs are never re-run, and resubmission of unanswered
+/// jobs is idempotent against the daemon's content-addressed Program
+/// cache — and every returned response has its `seq` re-homed to the
+/// line's 1-based position in the *original* input, whatever position
+/// it held in the retry subset.
+pub fn submit_raw_lines_with_retry(
+    addr: &str,
+    lines: &[String],
+    retries: usize,
+) -> std::io::Result<Vec<Json>> {
+    let n = lines.len();
+    let mut answers: Vec<Option<Json>> = (0..n).map(|_| None).collect();
+    let mut failures = 0usize;
+    loop {
+        let unanswered: Vec<usize> = (0..n).filter(|&i| answers[i].is_none()).collect();
+        if unanswered.is_empty() {
+            return Ok(answers.into_iter().map(|j| j.expect("all seqs answered")).collect());
+        }
+        let subset: Vec<String> = unanswered.iter().map(|&i| lines[i].clone()).collect();
+        let err = match submit_once(addr, &subset) {
+            Ok((got, stream_err)) => {
+                for (&slot, j) in unanswered.iter().zip(got) {
+                    if let Some(mut j) = j {
+                        if let Json::Obj(m) = &mut j {
+                            m.insert("seq".to_string(), Json::Num((slot + 1) as f64));
+                        }
+                        answers[slot] = Some(j);
+                    }
+                }
+                match stream_err {
+                    None => continue, // fully answered; the next pass returns
+                    Some(e) => e,
+                }
+            }
+            Err(e) => e,
+        };
+        if failures >= retries {
+            let left = answers.iter().filter(|a| a.is_none()).count();
+            return Err(std::io::Error::new(
+                err.kind(),
+                format!(
+                    "giving up after {} attempt(s) with {left} response(s) outstanding: {err}",
+                    failures + 1
+                ),
+            ));
+        }
+        // exponential backoff: 50ms, 100ms, ... capped at 3.2s
+        std::thread::sleep(Duration::from_millis(50u64 << failures.min(6)));
+        failures += 1;
+    }
+}
+
+/// [`submit_raw_lines_with_retry`] without the redials: one connection,
+/// one shot, a typed error if the daemon disappears mid-exchange.
+pub fn submit_raw_lines(addr: &str, lines: &[String]) -> std::io::Result<Vec<Json>> {
+    submit_raw_lines_with_retry(addr, lines, 0)
 }
 
 /// One request/response exchange on a fresh connection.
@@ -205,6 +306,68 @@ pub fn render_top(addr: &str, stats: &Json) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::net::TcpListener;
+
+    /// A server that answers one of two pipelined jobs and hangs up; the
+    /// retry layer must redial, resubmit only the unanswered line, and
+    /// re-home the retry connection's `seq 1` back to input position 2.
+    #[test]
+    fn retry_resubmits_only_unanswered_lines_and_rehomes_seq() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || -> String {
+            // conn 1: read both lines (so the close is a clean FIN, not
+            // an RST racing the response), answer only seq 1, hang up
+            let (mut s, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            s.write_all(b"{\"seq\": 1, \"result\": {\"tag\": \"first\"}}\n").unwrap();
+            drop((s, r));
+            // conn 2: the redial carries exactly the unanswered line
+            let (mut s, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            s.write_all(b"{\"seq\": 1, \"result\": {\"tag\": \"second\"}}\n").unwrap();
+            line.trim().to_string()
+        });
+        let lines = vec!["{\"a\": 1}".to_string(), "{\"b\": 2}".to_string()];
+        let out = submit_raw_lines_with_retry(&addr, &lines, 3).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].get("seq").unwrap().as_u64(), Some(1));
+        assert_eq!(out[0].get("result").unwrap().get("tag").unwrap().as_str(), Some("first"));
+        assert_eq!(out[1].get("seq").unwrap().as_u64(), Some(2), "seq re-homed to input order");
+        assert_eq!(out[1].get("result").unwrap().get("tag").unwrap().as_str(), Some("second"));
+        assert_eq!(server.join().unwrap(), "{\"b\": 2}", "only the unanswered line was resent");
+    }
+
+    /// Without retries, a daemon that dies mid-exchange yields a typed
+    /// error naming the outstanding count — never a hung reader.
+    #[test]
+    fn early_close_is_a_typed_error_not_a_hang() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(s);
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap(); // consume, answer nothing
+        });
+        let err = submit_raw_lines(&addr, &["{\"a\": 1}".to_string()]).unwrap_err();
+        assert!(err.to_string().contains("outstanding"), "{err}");
+        server.join().unwrap();
+
+        // a dead address exhausts its retries with a connect error
+        let gone = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let err = submit_raw_lines_with_retry(&gone, &["{}".to_string()], 1).unwrap_err();
+        assert!(err.to_string().contains("giving up after 2 attempt(s)"), "{err}");
+    }
 
     #[test]
     fn top_frame_renders_the_load_bearing_fields() {

@@ -22,39 +22,38 @@
 
 use super::protocol::{self, Control, ErrorCode, Request, PROTOCOL_VERSION};
 use super::queue::{FairQueue, PushError};
+use crate::error::{panic_message, Error};
+use crate::faultinject::FaultPlan;
 use crate::service::{Engine, JobSpec, DEFAULT_CACHE_CAPACITY};
 use crate::telemetry::Registry;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Default bound of the admission queue (jobs admitted but not yet
 /// picked up by a worker).
 pub const DEFAULT_QUEUE_CAPACITY: usize = 256;
 
-/// Daemon sizing knobs (`tdp serve --workers/--queue/--cache`).
-#[derive(Debug, Clone, Copy)]
+/// Daemon sizing knobs (`tdp serve --workers/--queue/--cache`) plus the
+/// optional chaos plan (`tdp serve --fault-plan`).
+#[derive(Debug, Clone, Default)]
 pub struct ServeConfig {
     /// worker pool size; 0 = one per available core
     pub workers: usize,
-    /// admission queue bound ([`FairQueue`] global capacity)
+    /// admission queue bound ([`FairQueue`] global capacity); 0 = the
+    /// default bound
     pub queue_capacity: usize,
-    /// [`Engine`] cache bound (programs and graphs resident at once)
+    /// [`Engine`] cache bound (programs and graphs resident at once);
+    /// 0 = the default bound
     pub cache_capacity: usize,
-}
-
-impl Default for ServeConfig {
-    fn default() -> Self {
-        Self {
-            workers: 0,
-            queue_capacity: DEFAULT_QUEUE_CAPACITY,
-            cache_capacity: DEFAULT_CACHE_CAPACITY,
-        }
-    }
+    /// deterministic fault-injection plan handed to the shared
+    /// [`Engine`] (DESIGN.md §15); `None` in production daemons
+    pub fault_plan: Option<Arc<FaultPlan>>,
 }
 
 /// The per-connection response writer: workers and the reader share it,
@@ -66,6 +65,10 @@ struct Work {
     seq: u64,
     job: Box<JobSpec>,
     out: Writer,
+    /// admission time: a job whose `timeout_ms` has already expired by
+    /// the time a worker pops it is shed with `deadline_exceeded`
+    /// instead of occupying the worker (DESIGN.md §15)
+    admitted: Instant,
 }
 
 /// Monotonic daemon counters (mirrored onto the telemetry registry as
@@ -81,6 +84,10 @@ struct Counters {
     failed: AtomicU64,
     drained: AtomicU64,
     stats_served: AtomicU64,
+    /// jobs that panicked inside a worker (caught; the worker survived)
+    panics: AtomicU64,
+    /// jobs answered `deadline_exceeded` straight from the queue
+    shed_deadline: AtomicU64,
 }
 
 struct Shared {
@@ -171,6 +178,8 @@ impl Shared {
         m.insert("failed".to_string(), num(c.failed.load(Ordering::Relaxed)));
         m.insert("drained".to_string(), num(c.drained.load(Ordering::Relaxed)));
         m.insert("stats_served".to_string(), num(c.stats_served.load(Ordering::Relaxed)));
+        m.insert("panics".to_string(), num(c.panics.load(Ordering::Relaxed)));
+        m.insert("shed_deadline".to_string(), num(c.shed_deadline.load(Ordering::Relaxed)));
         m.insert(
             "uptime_secs".to_string(),
             Json::Num(self.started.elapsed().as_secs_f64()),
@@ -243,13 +252,23 @@ impl Daemon {
         } else {
             cfg.workers
         };
+        let queue_capacity = if cfg.queue_capacity == 0 {
+            DEFAULT_QUEUE_CAPACITY
+        } else {
+            cfg.queue_capacity
+        };
+        let cache_capacity = if cfg.cache_capacity == 0 {
+            DEFAULT_CACHE_CAPACITY
+        } else {
+            cfg.cache_capacity
+        };
         let shared = Arc::new(Shared {
-            engine: Engine::with_capacity(cfg.cache_capacity),
+            engine: Engine::with_capacity_and_faults(cache_capacity, cfg.fault_plan.clone()),
             registry,
             addr,
             workers,
             started: Instant::now(),
-            queue: Mutex::new(FairQueue::new(cfg.queue_capacity)),
+            queue: Mutex::new(FairQueue::new(queue_capacity)),
             work_cv: Condvar::new(),
             idle_cv: Condvar::new(),
             draining: AtomicBool::new(false),
@@ -332,14 +351,39 @@ fn worker_loop(shared: &Shared) {
             }
         };
         let Some((client, work)) = popped else { return };
-        let line = match shared.engine.submit(&work.job) {
-            Ok(result) => {
-                shared.bump(&shared.counters.completed, "serve.completed");
-                protocol::result_response(work.seq, &result)
-            }
-            Err(e) => {
-                shared.bump(&shared.counters.failed, "serve.failed");
-                protocol::error_response(work.seq, ErrorCode::JobFailed, &e.to_string())
+        // deadline-aware shedding: a job already past its budget while
+        // queued is answered without ever starting
+        let shed = work
+            .job
+            .timeout_ms
+            .is_some_and(|ms| work.admitted.elapsed() >= Duration::from_millis(ms));
+        let line = if shed {
+            shared.bump(&shared.counters.shed_deadline, "serve.shed_deadline");
+            shared.bump(&shared.counters.failed, "serve.failed");
+            protocol::shed_response(work.seq)
+        } else {
+            // unwind belt: a panic anywhere in submit fails this one
+            // job with a structured response; the worker (and the
+            // daemon) keep serving, and `complete` below still runs so
+            // the drain predicate cannot wedge
+            match catch_unwind(AssertUnwindSafe(|| shared.engine.submit(&work.job))) {
+                Ok(Ok(result)) => {
+                    shared.bump(&shared.counters.completed, "serve.completed");
+                    protocol::result_response(work.seq, &result)
+                }
+                Ok(Err(e)) => {
+                    shared.bump(&shared.counters.failed, "serve.failed");
+                    protocol::job_error_response(work.seq, &e)
+                }
+                Err(payload) => {
+                    shared.bump(&shared.counters.panics, "serve.panics");
+                    shared.bump(&shared.counters.failed, "serve.failed");
+                    let e = Error::Panicked {
+                        stage: "worker",
+                        message: panic_message(payload.as_ref()),
+                    };
+                    protocol::job_error_response(work.seq, &e)
+                }
             }
         };
         if shared.draining.load(Ordering::SeqCst) {
@@ -412,7 +456,10 @@ fn reader_loop(shared: &Shared, stream: TcpStream) {
                 }
                 let admitted = {
                     let mut q = shared.queue.lock().expect("serve queue lock");
-                    let res = q.push(client, Work { seq, job, out: Arc::clone(&out) });
+                    let res = q.push(
+                        client,
+                        Work { seq, job, out: Arc::clone(&out), admitted: Instant::now() },
+                    );
                     if res.is_ok() {
                         shared.publish_gauges(&q);
                     }
@@ -546,5 +593,124 @@ mod tests {
         assert_eq!(d.get("accepted").unwrap().as_u64(), Some(2));
         assert_eq!(d.get("completed").unwrap().as_u64(), Some(2));
         assert_eq!(d.get("bad_lines").unwrap().as_u64(), Some(1));
+    }
+
+    /// Panic isolation (DESIGN.md §15): an injected compile panic is
+    /// answered as a structured `panicked` response, the worker and
+    /// connection survive, and — because the poisoned flight latch is
+    /// cleared and injected panics fire once — resubmitting the same
+    /// job succeeds.
+    #[test]
+    fn worker_survives_injected_compile_panic_and_recovers() {
+        let plan = FaultPlan {
+            compile_panics: vec!["reduction:24".to_string()],
+            ..Default::default()
+        };
+        let registry = Arc::new(Registry::new());
+        let daemon = Daemon::bind(
+            "127.0.0.1:0",
+            ServeConfig { workers: 1, fault_plan: Some(Arc::new(plan)), ..Default::default() },
+            registry,
+        )
+        .unwrap();
+        let addr = daemon.local_addr();
+        let handle = daemon.handle();
+        let server = std::thread::spawn(move || daemon.run());
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let job = "{\"workload\": \"reduction:24\", \"cols\": 2, \"rows\": 2}";
+        send_line(&mut stream, job);
+        let r1 = read_json(&mut reader);
+        assert_eq!(r1.get("code").unwrap().as_str(), Some("panicked"));
+        assert!(r1.get("error").unwrap().as_str().unwrap().contains("fault injection"), "{r1:?}");
+
+        // same connection, same job: the retry compiles for real
+        send_line(&mut stream, job);
+        let r2 = read_json(&mut reader);
+        assert_eq!(r2.get("seq").unwrap().as_u64(), Some(2));
+        assert!(r2.get("result").is_some(), "retry after poison recovers: {r2:?}");
+
+        handle.drain();
+        server.join().unwrap().unwrap();
+        let stats = handle.stats_json();
+        let d = stats.get("daemon").unwrap();
+        assert_eq!(d.get("failed").unwrap().as_u64(), Some(1));
+        assert_eq!(d.get("completed").unwrap().as_u64(), Some(1));
+        let faults = stats.get("engine").unwrap().get("faults").unwrap();
+        assert_eq!(faults.get("injected_compile_panics").unwrap().as_u64(), Some(1));
+    }
+
+    /// Deadline-aware shedding: a job whose budget expired while it sat
+    /// in the queue is answered `deadline_exceeded` without ever
+    /// occupying a worker; the daemon stays healthy for the next job.
+    #[test]
+    fn expired_queued_jobs_are_shed_without_running() {
+        let registry = Arc::new(Registry::new());
+        let daemon =
+            Daemon::bind("127.0.0.1:0", ServeConfig { workers: 1, ..Default::default() }, registry)
+                .unwrap();
+        let addr = daemon.local_addr();
+        let handle = daemon.handle();
+        let server = std::thread::spawn(move || daemon.run());
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        // timeout_ms 0: already expired by the time any worker pops it
+        send_line(
+            &mut stream,
+            "{\"workload\": \"chain:32\", \"cols\": 2, \"rows\": 2, \"timeout_ms\": 0}",
+        );
+        let shed = read_json(&mut reader);
+        assert_eq!(shed.get("code").unwrap().as_str(), Some("deadline_exceeded"));
+        assert!(shed.get("error").unwrap().as_str().unwrap().contains("queued"), "{shed:?}");
+
+        // the undeadlined duplicate runs normally afterwards
+        send_line(&mut stream, "{\"workload\": \"chain:32\", \"cols\": 2, \"rows\": 2}");
+        let ok = read_json(&mut reader);
+        assert!(ok.get("result").is_some(), "{ok:?}");
+
+        handle.drain();
+        server.join().unwrap().unwrap();
+        let d = handle.stats_json();
+        let d = d.get("daemon").unwrap();
+        assert_eq!(d.get("shed_deadline").unwrap().as_u64(), Some(1));
+        assert_eq!(d.get("completed").unwrap().as_u64(), Some(1));
+    }
+
+    /// A client that vanishes with jobs queued and in flight must not
+    /// wedge the drain: its jobs still run (responses are dropped on the
+    /// floor), `outstanding()` reaches zero, and `run()` returns.
+    #[test]
+    fn abrupt_client_disconnect_does_not_wedge_the_drain() {
+        let registry = Arc::new(Registry::new());
+        let daemon =
+            Daemon::bind("127.0.0.1:0", ServeConfig { workers: 1, ..Default::default() }, registry)
+                .unwrap();
+        let addr = daemon.local_addr();
+        let handle = daemon.handle();
+        let server = std::thread::spawn(move || daemon.run());
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        for _ in 0..3 {
+            send_line(&mut stream, "{\"workload\": \"chain:24:seed=1\", \"cols\": 2, \"rows\": 2}");
+        }
+        // wait until all three are admitted, then hang up without
+        // reading a single response
+        loop {
+            let d = handle.stats_json();
+            if d.get("daemon").unwrap().get("accepted").unwrap().as_u64() == Some(3) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        drop(stream);
+
+        handle.drain();
+        server.join().unwrap().unwrap();
+        let d = handle.stats_json();
+        let d = d.get("daemon").unwrap();
+        assert_eq!(d.get("completed").unwrap().as_u64(), Some(3), "orphaned jobs still ran");
+        assert_eq!(d.get("clients_connected").unwrap().as_u64(), Some(0));
     }
 }

@@ -118,6 +118,38 @@ pub fn error_response(seq: u64, code: ErrorCode, msg: &str) -> String {
     json::write(&Json::Obj(m))
 }
 
+/// A failed-job response carrying the engine's typed failure class
+/// ([`crate::error::Error::code`]: `deadline_exceeded`, `cancelled`,
+/// `cycles_exhausted`, `compile_poisoned`, `panicked`, ...) as its
+/// `code`, plus — for mid-run stops — the partial progress under
+/// `"partial"`, so a timed-out job still reports how far it got.
+pub fn job_error_response(seq: u64, err: &crate::error::Error) -> String {
+    let mut m = base(seq);
+    m.insert("code".to_string(), Json::Str(err.code().to_string()));
+    m.insert("error".to_string(), Json::Str(err.to_string()));
+    if let Some(p) = err.partial() {
+        let mut partial = BTreeMap::new();
+        partial.insert("cycles".to_string(), Json::Num(p.cycles as f64));
+        partial.insert("completed".to_string(), Json::Num(p.completed as f64));
+        partial.insert("total".to_string(), Json::Num(p.total as f64));
+        m.insert("partial".to_string(), Json::Obj(partial));
+    }
+    json::write(&Json::Obj(m))
+}
+
+/// The queue-shed response (DESIGN.md §15): the job's `timeout_ms`
+/// expired while it was still queued, so the daemon answers
+/// `deadline_exceeded` without ever occupying a worker on it.
+pub fn shed_response(seq: u64) -> String {
+    let mut m = base(seq);
+    m.insert("code".to_string(), Json::Str("deadline_exceeded".to_string()));
+    m.insert(
+        "error".to_string(),
+        Json::Str("deadline expired while queued; job was never started".to_string()),
+    );
+    json::write(&Json::Obj(m))
+}
+
 /// The `ping` response: `{"seq": N, "control": "ping", "ok": true}`.
 pub fn ping_response(seq: u64) -> String {
     let mut m = base(seq);
@@ -178,6 +210,26 @@ mod tests {
         // control + extra keys is ambiguous — rejected, not guessed at
         assert!(parse_request("{\"control\": \"stats\", \"workload\": \"x\"}").is_err());
         // "control" is not a JobSpec key, so there is no grammar overlap
+    }
+
+    #[test]
+    fn job_errors_carry_typed_codes_and_partial_progress() {
+        use crate::error::{Error, Partial};
+        let e = Error::Deadline(Partial { cycles: 2048, completed: 5, total: 10 });
+        let j = json::parse(&job_error_response(4, &e)).unwrap();
+        assert_eq!(j.get("seq").unwrap().as_u64(), Some(4));
+        assert_eq!(j.get("code").unwrap().as_str(), Some("deadline_exceeded"));
+        let p = j.get("partial").expect("mid-run stops carry partial progress");
+        assert_eq!(p.get("cycles").unwrap().as_u64(), Some(2048));
+        assert_eq!(p.get("completed").unwrap().as_u64(), Some(5));
+        assert_eq!(p.get("total").unwrap().as_u64(), Some(10));
+        let e = Error::Panicked { stage: "compile", message: "boom".into() };
+        let j = json::parse(&job_error_response(5, &e)).unwrap();
+        assert_eq!(j.get("code").unwrap().as_str(), Some("panicked"));
+        assert!(j.get("partial").is_none());
+        let shed = json::parse(&shed_response(6)).unwrap();
+        assert_eq!(shed.get("code").unwrap().as_str(), Some("deadline_exceeded"));
+        assert!(shed.get("error").unwrap().as_str().unwrap().contains("queued"));
     }
 
     #[test]

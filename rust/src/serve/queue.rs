@@ -174,6 +174,34 @@ mod tests {
         assert_eq!(FairQueue::<u8>::new(0).capacity(), 1);
     }
 
+    /// The disconnect scenario (DESIGN.md §15): a client vanishes with
+    /// work both queued and in flight. The queue has no "disconnect"
+    /// verb by design — its items still run and complete — so the only
+    /// requirement is that the normal pop/complete protocol drives
+    /// `outstanding()` to zero and the drain predicate terminates.
+    #[test]
+    fn orphaned_client_work_still_drains_to_zero() {
+        let mut q = FairQueue::new(8);
+        q.push(1, "a").unwrap();
+        q.push(1, "b").unwrap();
+        q.push(1, "c").unwrap();
+        q.push(2, "d").unwrap();
+        let (c, _) = q.pop().unwrap();
+        assert_eq!(c, 1, "client 1 has one job in flight");
+        // client 1's socket dies here: nothing is removed, the daemon
+        // keeps owing the pops and completes
+        assert_eq!(q.outstanding(), 4);
+        q.complete(1);
+        let mut popped = 0;
+        while let Some((client, _)) = q.pop() {
+            q.complete(client);
+            popped += 1;
+        }
+        assert_eq!(popped, 3);
+        assert_eq!(q.outstanding(), 0, "drain predicate terminates");
+        assert!(q.per_client().is_empty());
+    }
+
     #[test]
     fn per_client_snapshot_tracks_both_phases() {
         let mut q = FairQueue::new(8);

@@ -4,19 +4,22 @@
 use super::cache::{CacheKey, Compiled, Lru, ProgramCache};
 use super::job::{JobResult, JobSpec, ShardInfo};
 use crate::config::Overlay;
-use crate::error::Error;
+use crate::error::{panic_message, Error};
+use crate::faultinject::FaultPlan;
 use crate::graph::{DataflowGraph, GraphStats};
 use crate::program::SharedProgram;
 use crate::sched::SchedulerKind;
 use crate::shard::ShardedProgram;
+use crate::sim::CancelToken;
 use crate::telemetry::Histogram;
 use crate::util::json::{self, Json};
 use crate::util::par::run_parallel;
 use crate::workload::Spec;
 use std::collections::{BTreeMap, BTreeSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Default bound of both engine caches (compiled programs / built
 /// workload graphs resident at once).
@@ -40,6 +43,24 @@ pub struct CacheStats {
     pub graph_evictions: u64,
 }
 
+/// Sentinel of [`Flight::acquire`]: the in-flight build this waiter was
+/// blocked on panicked. The flight latch was already cleared (a fresh
+/// submitter becomes the next leader and retries from scratch), so the
+/// waiter surfaces a typed [`Error::CompilePoisoned`] instead of
+/// hanging forever or silently re-racing a build that just blew up.
+struct FlightPoisoned;
+
+/// The latch state proper: `pending` holds keys whose build is owned by
+/// some thread; `poison_epoch` counts, per key, how many of its builds
+/// have ever panicked. A waiter snapshots the key's epoch before
+/// blocking and fails poisoned if it moved while it slept — fresh
+/// acquirers (arriving after the poison cleared `pending`) see an
+/// unchanged current epoch and simply become the new leader.
+struct FlightState<K: Ord> {
+    pending: BTreeSet<K>,
+    poison_epoch: BTreeMap<K, u64>,
+}
+
 /// Per-key single-flight latch: at most one thread builds a given key
 /// at a time — a racing duplicate waits for the winner instead of
 /// paying the build again — while *distinct* keys build fully in
@@ -49,11 +70,13 @@ pub struct CacheStats {
 /// grants the exclusive build right for `key`; the winner builds with
 /// no locks held, publishes into the cache, then [`Flight::release`]s
 /// (success *and* failure — a failed build wakes the waiters, who
-/// re-race and surface their own error). Lock order is always
-/// `pending` → cache; the build path takes them one at a time, so the
-/// two mutexes can never deadlock.
+/// re-race and surface their own error). A build that *panics* instead
+/// calls [`Flight::poison`], which clears the flight and fails the
+/// current waiters poisoned (DESIGN.md §15). Lock order is always
+/// flight state → cache; the build path takes them one at a time, so
+/// the two mutexes can never deadlock.
 struct Flight<K: Ord + Clone> {
-    pending: Mutex<BTreeSet<K>>,
+    state: Mutex<FlightState<K>>,
     cv: Condvar,
     /// acquires that had to block on another thread's in-flight build
     /// (counted once per acquire, not per spurious wakeup) — the
@@ -64,33 +87,47 @@ struct Flight<K: Ord + Clone> {
 impl<K: Ord + Clone> Flight<K> {
     fn new() -> Self {
         Self {
-            pending: Mutex::new(BTreeSet::new()),
+            state: Mutex::new(FlightState {
+                pending: BTreeSet::new(),
+                poison_epoch: BTreeMap::new(),
+            }),
             cv: Condvar::new(),
             waits: AtomicU64::new(0),
         }
     }
 
-    /// `Some(value)` on a cache hit (possibly after waiting for an
-    /// in-flight build of `key`), `None` when the caller now owns the
-    /// build right and must call [`Flight::release`] when done.
-    /// `lookup` takes the cache's own lock internally and is re-run
-    /// after every wakeup.
-    fn acquire<V>(&self, key: &K, mut lookup: impl FnMut() -> Option<V>) -> Option<V> {
-        let mut pending = self.pending.lock().expect("flight lock");
-        let mut waited = false;
+    /// `Ok(Some(value))` on a cache hit (possibly after waiting for an
+    /// in-flight build of `key`), `Ok(None)` when the caller now owns
+    /// the build right and must call [`Flight::release`] (or, on a
+    /// panic, [`Flight::poison`]) when done, `Err(FlightPoisoned)` when
+    /// the build this caller was waiting on panicked. `lookup` takes
+    /// the cache's own lock internally and is re-run after every
+    /// wakeup.
+    fn acquire<V>(
+        &self,
+        key: &K,
+        mut lookup: impl FnMut() -> Option<V>,
+    ) -> Result<Option<V>, FlightPoisoned> {
+        let mut state = self.state.lock().expect("flight lock");
+        let mut waited: Option<u64> = None;
         loop {
             if let Some(v) = lookup() {
-                return Some(v);
+                return Ok(Some(v));
             }
-            if !pending.contains(key) {
-                pending.insert(key.clone());
-                return None;
+            if let Some(snapshot) = waited {
+                if state.poison_epoch.get(key).copied().unwrap_or(0) > snapshot {
+                    return Err(FlightPoisoned);
+                }
             }
-            if !waited {
-                waited = true;
+            if !state.pending.contains(key) {
+                state.pending.insert(key.clone());
+                return Ok(None);
+            }
+            if waited.is_none() {
+                waited = Some(state.poison_epoch.get(key).copied().unwrap_or(0));
                 self.waits.fetch_add(1, Ordering::Relaxed);
             }
-            pending = self.cv.wait(pending).expect("flight lock");
+            state = self.cv.wait(state).expect("flight lock");
         }
     }
 
@@ -100,7 +137,18 @@ impl<K: Ord + Clone> Flight<K> {
 
     /// Give up the build right for `key` and wake every waiter.
     fn release(&self, key: &K) {
-        self.pending.lock().expect("flight lock").remove(key);
+        self.state.lock().expect("flight lock").pending.remove(key);
+        self.cv.notify_all();
+    }
+
+    /// The build of `key` panicked: clear the flight (the next fresh
+    /// submitter retries as the new leader) and bump the key's poison
+    /// epoch so every thread currently waiting on it fails poisoned.
+    fn poison(&self, key: &K) {
+        let mut state = self.state.lock().expect("flight lock");
+        state.pending.remove(key);
+        *state.poison_epoch.entry(key.clone()).or_insert(0) += 1;
+        drop(state);
         self.cv.notify_all();
     }
 }
@@ -133,6 +181,11 @@ struct EngineMetrics {
     jobs: u64,
     failures: u64,
     sharded: u64,
+    /// failures bucketed by [`Error::code`] ("deadline_exceeded",
+    /// "panicked", "compile_poisoned", ...) — the fault-tolerance
+    /// observability of DESIGN.md §15. Bounded: codes are a small
+    /// closed set.
+    failure_codes: BTreeMap<&'static str, u64>,
     compile: Histogram,
     run: Histogram,
     per_key: BTreeMap<String, LatencyPair>,
@@ -183,6 +236,16 @@ pub struct Engine {
     hits: AtomicU64,
     misses: AtomicU64,
     metrics: Mutex<EngineMetrics>,
+    /// deterministic fault-injection plan (chaos testing, DESIGN.md
+    /// §15); `None` in production engines
+    faults: Option<Arc<FaultPlan>>,
+    /// canonical specs whose injected compile panic already fired —
+    /// each `compile_panic` site fires once per engine, so the retry
+    /// after poison recovery succeeds and proves the latch healed
+    fired_panics: Mutex<BTreeSet<String>>,
+    injected_panics: AtomicU64,
+    injected_delays: AtomicU64,
+    injected_overruns: AtomicU64,
 }
 
 impl Default for Engine {
@@ -200,6 +263,17 @@ impl Engine {
     /// An engine whose caches hold at most `capacity` programs and
     /// `capacity` graphs.
     pub fn with_capacity(capacity: usize) -> Self {
+        Self::with_capacity_and_faults(capacity, None)
+    }
+
+    /// An engine with a deterministic fault-injection plan attached
+    /// (`tdp serve --fault-plan` / `tdp batch --fault-plan`): the
+    /// plan's content-keyed sites fire on matching jobs — compile
+    /// panics (once per spec, exercising poison recovery), submit
+    /// delays, forced deadline overruns — and its `barrier_drop` sites
+    /// apply to sharded runs. Same plan + same job stream ⇒ same
+    /// outcome codes, independent of worker count.
+    pub fn with_capacity_and_faults(capacity: usize, faults: Option<Arc<FaultPlan>>) -> Self {
         Self {
             graphs: Mutex::new(Lru::new(capacity)),
             graph_flight: Flight::new(),
@@ -208,6 +282,11 @@ impl Engine {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             metrics: Mutex::new(EngineMetrics::default()),
+            faults,
+            fired_panics: Mutex::new(BTreeSet::new()),
+            injected_panics: AtomicU64::new(0),
+            injected_delays: AtomicU64::new(0),
+            injected_overruns: AtomicU64::new(0),
         }
     }
 
@@ -221,9 +300,10 @@ impl Engine {
         let mut metrics = self.metrics.lock().expect("metrics lock");
         match &result {
             Ok(r) => metrics.record(r),
-            Err(_) => {
+            Err(e) => {
                 metrics.jobs += 1;
                 metrics.failures += 1;
+                *metrics.failure_codes.entry(e.code()).or_insert(0) += 1;
             }
         }
         drop(metrics);
@@ -235,28 +315,66 @@ impl Engine {
         let canon = spec.canonical();
         let cfg = job.effective_config();
         let overlay = Overlay::from_config(cfg)?;
+        // fault injection: per-job submit delay (latency chaos)
+        if let Some(ms) =
+            self.faults.as_ref().and_then(|p| p.delay_ms(&job.workload, &canon))
+        {
+            self.injected_delays.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(ms));
+        }
         let entry = self.graph_entry(&spec, &canon)?;
         let key = CacheKey::new(entry.fingerprint, &canon, &cfg);
 
         let lookup = || self.programs.lock().expect("program cache lock").get(&key);
         let (compiled, cache_hit, compile_micros) =
             match self.program_flight.acquire(&key, lookup) {
-                Some(compiled) => (compiled, true, 0),
-                None => {
-                    // we own the build right: compile with no locks held
+                Err(FlightPoisoned) => {
+                    return Err(Error::CompilePoisoned { what: canon });
+                }
+                Ok(Some(compiled)) => (compiled, true, 0),
+                Ok(None) => {
+                    // we own the build right: compile with no locks
+                    // held, inside an unwind boundary so a panicking
+                    // compile (injected or real) poisons the flight
+                    // instead of wedging every waiter
                     let t0 = Instant::now();
-                    let out = match Self::build_compiled(&entry.graph, &overlay) {
-                        Ok(compiled) => {
+                    let fire = self
+                        .faults
+                        .as_ref()
+                        .is_some_and(|p| p.compile_panic_armed(&job.workload, &canon))
+                        && self
+                            .fired_panics
+                            .lock()
+                            .expect("fired panics lock")
+                            .insert(canon.clone());
+                    let built = catch_unwind(AssertUnwindSafe(|| {
+                        if fire {
+                            self.injected_panics.fetch_add(1, Ordering::Relaxed);
+                            panic!("fault injection: compile_panic for {canon}");
+                        }
+                        Self::build_compiled(&entry.graph, &overlay)
+                    }));
+                    match built {
+                        Ok(Ok(compiled)) => {
                             self.programs
                                 .lock()
                                 .expect("program cache lock")
                                 .insert(key.clone(), compiled.clone());
-                            Ok((compiled, false, t0.elapsed().as_micros() as u64))
+                            self.program_flight.release(&key);
+                            (compiled, false, t0.elapsed().as_micros() as u64)
                         }
-                        Err(e) => Err(Error::Compile(e)),
-                    };
-                    self.program_flight.release(&key);
-                    out?
+                        Ok(Err(e)) => {
+                            self.program_flight.release(&key);
+                            return Err(Error::Compile(e));
+                        }
+                        Err(payload) => {
+                            self.program_flight.poison(&key);
+                            return Err(Error::Panicked {
+                                stage: "compile",
+                                message: panic_message(payload.as_ref()),
+                            });
+                        }
+                    }
                 }
             };
         if cache_hit {
@@ -265,39 +383,76 @@ impl Engine {
             self.misses.fetch_add(1, Ordering::Relaxed);
         }
 
+        // deadline / cancellation token: an injected overrun runs with
+        // an already-expired token (forcing the deadline path without
+        // waiting out a real budget); otherwise the job's own
+        // `timeout_ms` arms it, and no token means no polling cost
+        let token = if self
+            .faults
+            .as_ref()
+            .is_some_and(|p| p.deadline_overrun(&job.workload, &canon))
+        {
+            self.injected_overruns.fetch_add(1, Ordering::Relaxed);
+            Some(CancelToken::already_expired())
+        } else {
+            job.timeout_ms.map(CancelToken::with_deadline_ms)
+        };
+
         let t0 = Instant::now();
-        let (stats, shards) = match &compiled {
-            Compiled::Single(program) => {
-                let view = program.program();
-                let stats = view
-                    .session()
-                    .with_scheduler(job.scheduler)
-                    .with_backend(job.backend)
-                    .with_max_cycles(cfg.max_cycles)
-                    .run()
-                    .map_err(Error::Sim)?;
-                (stats, None)
-            }
-            Compiled::Sharded(sharded) => {
-                let run = sharded
-                    .session()
-                    .with_scheduler(job.scheduler)
-                    .with_backend(job.backend)
-                    .with_max_cycles(cfg.max_cycles)
-                    .run()
-                    .map_err(Error::Sim)?;
-                let part = sharded.partition();
-                let info = ShardInfo {
-                    count: sharded.num_shards(),
-                    cut_edges: part.cut_edges.len(),
-                    cut_weight: part.cut_weight,
-                    epoch: sharded.epoch(),
-                    epochs: run.epochs,
-                    boundary_values: run.boundary_values,
-                    boundary_stalls: run.boundary_stalls,
-                    shard_cycles: run.shard_cycles,
-                };
-                (run.stats, Some(info))
+        // the run is a second unwind boundary: a panicking simulation
+        // fails this one job, not the worker thread it ran on
+        let ran = catch_unwind(AssertUnwindSafe(
+            || -> Result<(crate::sim::SimStats, Option<ShardInfo>), Error> {
+                match &compiled {
+                    Compiled::Single(program) => {
+                        let view = program.program();
+                        let mut session = view
+                            .session()
+                            .with_scheduler(job.scheduler)
+                            .with_backend(job.backend)
+                            .with_max_cycles(cfg.max_cycles);
+                        if let Some(t) = &token {
+                            session = session.with_cancel(t);
+                        }
+                        let stats = session.run().map_err(Error::from)?;
+                        Ok((stats, None))
+                    }
+                    Compiled::Sharded(sharded) => {
+                        let mut session = sharded
+                            .session()
+                            .with_scheduler(job.scheduler)
+                            .with_backend(job.backend)
+                            .with_max_cycles(cfg.max_cycles);
+                        if let Some(t) = &token {
+                            session = session.with_cancel(t);
+                        }
+                        if let Some(plan) = self.faults.as_deref() {
+                            session = session.with_fault_plan(plan);
+                        }
+                        let run = session.run().map_err(Error::from)?;
+                        let part = sharded.partition();
+                        let info = ShardInfo {
+                            count: sharded.num_shards(),
+                            cut_edges: part.cut_edges.len(),
+                            cut_weight: part.cut_weight,
+                            epoch: sharded.epoch(),
+                            epochs: run.epochs,
+                            boundary_values: run.boundary_values,
+                            boundary_stalls: run.boundary_stalls,
+                            shard_cycles: run.shard_cycles,
+                        };
+                        Ok((run.stats, Some(info)))
+                    }
+                }
+            },
+        ));
+        let (stats, shards) = match ran {
+            Ok(out) => out?,
+            Err(payload) => {
+                return Err(Error::Panicked {
+                    stage: "run",
+                    message: panic_message(payload.as_ref()),
+                })
             }
         };
         let run_micros = t0.elapsed().as_micros() as u64;
@@ -396,6 +551,27 @@ impl Engine {
         jobs.insert("submitted".to_string(), num(metrics.jobs));
         jobs.insert("failed".to_string(), num(metrics.failures));
         jobs.insert("sharded".to_string(), num(metrics.sharded));
+        let codes: BTreeMap<String, Json> = metrics
+            .failure_codes
+            .iter()
+            .map(|(code, n)| ((*code).to_string(), num(*n)))
+            .collect();
+        jobs.insert("failure_codes".to_string(), Json::Obj(codes));
+
+        let mut faults = BTreeMap::new();
+        faults.insert("armed".to_string(), Json::Bool(self.faults.is_some()));
+        faults.insert(
+            "injected_compile_panics".to_string(),
+            num(self.injected_panics.load(Ordering::Relaxed)),
+        );
+        faults.insert(
+            "injected_delays".to_string(),
+            num(self.injected_delays.load(Ordering::Relaxed)),
+        );
+        faults.insert(
+            "injected_overruns".to_string(),
+            num(self.injected_overruns.load(Ordering::Relaxed)),
+        );
 
         let mut latency = BTreeMap::new();
         latency.insert("compile_micros".to_string(), metrics.compile.to_json_value());
@@ -416,6 +592,7 @@ impl Engine {
         let mut root = BTreeMap::new();
         root.insert("version".to_string(), Json::Num(1.0));
         root.insert("cache".to_string(), Json::Obj(cache_obj));
+        root.insert("faults".to_string(), Json::Obj(faults));
         root.insert("flight".to_string(), Json::Obj(flight));
         root.insert("jobs".to_string(), Json::Obj(jobs));
         root.insert("latency".to_string(), Json::Obj(latency));
@@ -434,11 +611,14 @@ impl Engine {
     fn graph_entry(&self, spec: &Spec, canon: &str) -> Result<Arc<GraphEntry>, Error> {
         let canon = canon.to_string();
         let lookup = || self.graphs.lock().expect("graph cache lock").get(&canon);
-        if let Some(entry) = self.graph_flight.acquire(&canon, lookup) {
-            return Ok(entry);
+        match self.graph_flight.acquire(&canon, lookup) {
+            Err(FlightPoisoned) => return Err(Error::CompilePoisoned { what: canon }),
+            Ok(Some(entry)) => return Ok(entry),
+            Ok(None) => {}
         }
-        let result = match spec.build() {
-            Ok(graph) => {
+        let built = catch_unwind(AssertUnwindSafe(|| spec.build()));
+        let result = match built {
+            Ok(Ok(graph)) => {
                 let graph = Arc::new(graph);
                 let entry = Arc::new(GraphEntry {
                     fingerprint: graph.fingerprint(),
@@ -451,7 +631,14 @@ impl Engine {
                     .insert(canon.clone(), Arc::clone(&entry));
                 Ok(entry)
             }
-            Err(msg) => Err(Error::Spec(msg)),
+            Ok(Err(msg)) => Err(Error::Spec(msg)),
+            Err(payload) => {
+                self.graph_flight.poison(&canon);
+                return Err(Error::Panicked {
+                    stage: "generate",
+                    message: panic_message(payload.as_ref()),
+                });
+            }
         };
         self.graph_flight.release(&canon);
         result
@@ -463,7 +650,6 @@ mod tests {
     use super::*;
     use crate::engine::BackendKind;
     use crate::sched::SchedulerKind;
-    use crate::sim::SimError;
 
     fn job(workload: &str, cols: usize, rows: usize) -> JobSpec {
         let mut j = JobSpec::new(workload);
@@ -542,12 +728,16 @@ mod tests {
         // invalid overlay
         let bad = job("reduction:16", 0, 4);
         assert!(matches!(engine.submit(&bad), Err(Error::Config(_))));
-        // cycle-limited run
+        // cycle-limited run: typed exhaustion with partial progress
         let mut limited = job("reduction:64", 2, 2);
         limited.max_cycles = Some(3);
         match engine.submit(&limited) {
-            Err(Error::Sim(SimError::CycleLimitExceeded { cycle, .. })) => assert_eq!(cycle, 3),
-            other => panic!("expected cycle limit, got {other:?}"),
+            Err(Error::CyclesExhausted(p)) => {
+                assert_eq!(p.cycles, 3);
+                assert!(p.total > 0);
+                assert!(p.incomplete_nodes() > 0, "3 cycles cannot finish reduction:64");
+            }
+            other => panic!("expected cycles_exhausted, got {other:?}"),
         }
         // failed jobs poison nothing: the same engine keeps serving, and
         // a compile failure releases the flight latch for retries
@@ -686,6 +876,136 @@ mod tests {
             snap.get("jobs").unwrap().get("sharded").unwrap().as_u64(),
             Some(2)
         );
+    }
+
+    /// A `timeout_ms: 0` job fails typed `deadline_exceeded` on both
+    /// backends, carrying partial progress — detection lags the budget
+    /// by at most one `CANCEL_CHECK_INTERVAL`, and the chain workload
+    /// is deep enough that neither backend can finish inside the lag.
+    #[test]
+    fn deadline_jobs_fail_typed_with_partial_stats() {
+        let engine = Engine::new();
+        for backend in [BackendKind::Lockstep, BackendKind::SkipAhead] {
+            let mut j = job("chain:4096", 2, 2);
+            j.backend = backend;
+            j.timeout_ms = Some(0);
+            match engine.submit(&j) {
+                Err(Error::Deadline(p)) => {
+                    assert!(p.total > 0, "{backend:?}");
+                    assert!(p.completed < p.total, "{backend:?}: expired at submit");
+                }
+                other => panic!("{backend:?}: expected deadline, got {other:?}"),
+            }
+        }
+        // a generous deadline does not perturb the run
+        let mut ok = job("chain:4096", 2, 2);
+        ok.timeout_ms = Some(600_000);
+        let timed = engine.submit(&ok).unwrap();
+        let bare = engine.submit(&job("chain:4096", 2, 2)).unwrap();
+        assert_eq!(timed.stats, bare.stats, "deadline arm is observational");
+        // failures were bucketed by code in the snapshot
+        let snap = engine.metrics_snapshot();
+        let codes = snap.get("jobs").unwrap().get("failure_codes").unwrap();
+        assert_eq!(codes.get("deadline_exceeded").unwrap().as_u64(), Some(2));
+    }
+
+    /// An injected compile panic fires once: the panicking job reports
+    /// `panicked`, the flight latch is poisoned-then-cleared (never
+    /// wedged), the cache stays unpoisoned, and the next identical job
+    /// compiles successfully — the poison-recovery protocol end to end.
+    #[test]
+    fn compile_panic_poisons_once_then_recovers() {
+        let j = job("reduction:64", 2, 2);
+        let plan = FaultPlan {
+            compile_panics: vec![j.workload.clone()],
+            ..FaultPlan::default()
+        };
+        let engine =
+            Engine::with_capacity_and_faults(DEFAULT_CACHE_CAPACITY, Some(Arc::new(plan)));
+        match engine.submit(&j) {
+            Err(Error::Panicked { stage, message }) => {
+                assert_eq!(stage, "compile");
+                assert!(message.contains("fault injection"), "{message}");
+            }
+            other => panic!("expected panicked, got {other:?}"),
+        }
+        // retry: the injected panic is spent, the compile succeeds and
+        // a third submit is a clean cache hit
+        let retry = engine.submit(&j).unwrap();
+        assert!(!retry.cache_hit, "poison evicted nothing — this is a fresh compile");
+        assert!(engine.submit(&j).unwrap().cache_hit);
+        let snap = engine.metrics_snapshot();
+        let faults = snap.get("faults").unwrap();
+        assert_eq!(faults.get("armed"), Some(&Json::Bool(true)));
+        assert_eq!(faults.get("injected_compile_panics").unwrap().as_u64(), Some(1));
+        let codes = snap.get("jobs").unwrap().get("failure_codes").unwrap();
+        assert_eq!(codes.get("panicked").unwrap().as_u64(), Some(1));
+    }
+
+    /// Concurrent duplicates of a panicking compile: the leader reports
+    /// `panicked`; every other thread gets `compile_poisoned` (it was
+    /// waiting on the doomed flight) or a clean result (it arrived
+    /// after the latch cleared and became the retry leader, or hit the
+    /// retry's cache). Nothing hangs, and the engine keeps serving.
+    #[test]
+    fn waiters_on_a_panicked_compile_fail_poisoned_not_hung() {
+        let j = job("lu_banded:48:4:0.9", 2, 2);
+        let plan = FaultPlan {
+            compile_panics: vec![j.workload.clone()],
+            ..FaultPlan::default()
+        };
+        let engine =
+            Engine::with_capacity_and_faults(DEFAULT_CACHE_CAPACITY, Some(Arc::new(plan)));
+        let results: Vec<Result<JobResult, Error>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let engine = &engine;
+                    let j = &j;
+                    s.spawn(move || engine.submit(j))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("submit thread")).collect()
+        });
+        let panicked = results
+            .iter()
+            .filter(|r| matches!(r, Err(Error::Panicked { .. })))
+            .count();
+        assert_eq!(panicked, 1, "the injected panic fires exactly once");
+        for r in &results {
+            match r {
+                Ok(_) | Err(Error::Panicked { .. }) | Err(Error::CompilePoisoned { .. }) => {}
+                other => panic!("unexpected outcome {other:?}"),
+            }
+        }
+        // the engine is healthy: the same job now compiles clean
+        assert!(engine.submit(&j).is_ok());
+    }
+
+    /// Injected overruns and delays are deterministic per plan: the
+    /// matching job always fails `deadline_exceeded`, non-matching jobs
+    /// are untouched, and the injection counters surface it.
+    #[test]
+    fn injected_overruns_and_delays_are_content_keyed() {
+        let victim = job("reduction:64", 2, 2);
+        let bystander = job("chain:16", 2, 2);
+        let plan = FaultPlan {
+            deadline_overruns: vec![victim.workload.clone()],
+            job_delays: vec![(bystander.workload.clone(), 1)],
+            ..FaultPlan::default()
+        };
+        let engine =
+            Engine::with_capacity_and_faults(DEFAULT_CACHE_CAPACITY, Some(Arc::new(plan)));
+        for _ in 0..2 {
+            assert!(
+                matches!(engine.submit(&victim), Err(Error::Deadline(_))),
+                "overrun fires on every matching submit"
+            );
+        }
+        assert!(engine.submit(&bystander).is_ok(), "delayed jobs still succeed");
+        let snap = engine.metrics_snapshot();
+        let faults = snap.get("faults").unwrap();
+        assert_eq!(faults.get("injected_overruns").unwrap().as_u64(), Some(2));
+        assert_eq!(faults.get("injected_delays").unwrap().as_u64(), Some(1));
     }
 
     #[test]

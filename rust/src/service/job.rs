@@ -39,6 +39,12 @@ pub struct JobSpec {
     pub overlay: OverlayConfig,
     /// cycle-budget override; `None` keeps the overlay's limit
     pub max_cycles: Option<u64>,
+    /// wall-clock deadline in milliseconds, measured from the moment
+    /// the engine starts the job; `None` runs unbounded. Expiry stops
+    /// the run within [`crate::sim::CANCEL_CHECK_INTERVAL`] cycles and
+    /// the job fails with `deadline_exceeded` carrying partial progress
+    /// (DESIGN.md §15).
+    pub timeout_ms: Option<u64>,
 }
 
 impl JobSpec {
@@ -51,6 +57,7 @@ impl JobSpec {
             backend: overlay.backend,
             overlay,
             max_cycles: None,
+            timeout_ms: None,
         }
     }
 
@@ -84,6 +91,7 @@ impl JobSpec {
         let mut scheduler = None;
         let mut backend = None;
         let mut max_cycles = None;
+        let mut timeout_ms = None;
         for (key, v) in obj {
             match key.as_str() {
                 "overlay" => {} // consumed above
@@ -130,6 +138,10 @@ impl JobSpec {
                     max_cycles =
                         Some(v.as_u64().ok_or("max_cycles: expected non-negative integer")?)
                 }
+                "timeout_ms" => {
+                    timeout_ms =
+                        Some(v.as_u64().ok_or("timeout_ms: expected non-negative integer")?)
+                }
                 other => return Err(format!("unknown job key '{other}'")),
             }
         }
@@ -140,6 +152,7 @@ impl JobSpec {
             backend: backend.unwrap_or(overlay.backend),
             overlay,
             max_cycles,
+            timeout_ms,
         })
     }
 
@@ -158,6 +171,9 @@ impl JobSpec {
         );
         if let Some(mc) = self.max_cycles {
             m.insert("max_cycles".to_string(), Json::Num(mc as f64));
+        }
+        if let Some(tm) = self.timeout_ms {
+            m.insert("timeout_ms".to_string(), Json::Num(tm as f64));
         }
         m.insert("overlay".to_string(), self.overlay.to_json_value());
         Json::Obj(m)
@@ -294,8 +310,10 @@ mod tests {
         job.backend = BackendKind::SkipAhead;
         job.overlay = job.overlay.with_dims(4, 4);
         job.max_cycles = Some(9000);
+        job.timeout_ms = Some(2500);
         let back = JobSpec::from_json(&job.to_json()).unwrap();
         assert_eq!(back, job);
+        assert_eq!(back.timeout_ms, Some(2500));
         assert_eq!(back.effective_config().cols, 4);
         assert_eq!(back.effective_config().max_cycles, 9000);
         assert_eq!(back.effective_config().backend, BackendKind::SkipAhead);
@@ -337,6 +355,7 @@ mod tests {
         assert!(JobSpec::from_json("{\"workload\": \"x\", \"bogus\": 1}").is_err());
         assert!(JobSpec::from_json("{\"workload\": \"x\", \"scheduler\": \"nope\"}").is_err());
         assert!(JobSpec::from_json("{\"workload\": \"x\", \"max_cycles\": -1}").is_err());
+        assert!(JobSpec::from_json("{\"workload\": \"x\", \"timeout_ms\": -5}").is_err());
         assert!(JobSpec::from_json("not json").is_err());
     }
 

@@ -47,9 +47,10 @@ use crate::graph::{DataflowGraph, NodeKind};
 use crate::noc::NetworkStats;
 use crate::passes::partition::Partition;
 use crate::passes::{CriticalityPass, PartitionPass, PassCtx, PassManager, VerifyPass};
+use crate::faultinject::FaultPlan;
 use crate::program::{CompileError, Program, SharedProgram};
 use crate::sched::SchedulerKind;
-use crate::sim::{PeStats, SimError, SimStats};
+use crate::sim::{CancelToken, PeStats, SimError, SimStats};
 use crate::telemetry::{self, Registry, Telemetry};
 use crate::util::par::run_parallel;
 use std::collections::VecDeque;
@@ -60,6 +61,15 @@ use std::time::{Duration, Instant};
 /// harvested values beyond this wait (counted as stalls) and drain on
 /// later barriers.
 pub const BOUNDARY_CHANNEL_CAPACITY: usize = 16;
+
+/// The epoch watchdog's zero-progress window, in fabric cycles: when no
+/// shard completes a node, no boundary value is harvested, promoted or
+/// delivered, and no shard finishes for this many consecutive cycles
+/// (rounded up to whole epochs), the run is declared stalled
+/// ([`SimError::ShardStalled`]) instead of spinning to `max_cycles`.
+/// Sized far above any legitimate quiet period (ALU latency, a
+/// boundary round-trip of 2E) yet tiny next to a real cycle budget.
+pub const WATCHDOG_STALL_CYCLES: u64 = 1024;
 
 /// Modeled latency of an inter-fabric link, in fabric cycles — a
 /// serialized off-fabric hop is never cheaper than crossing the torus
@@ -322,6 +332,8 @@ impl ShardedProgram {
             cfg: *self.overlay.config(),
             threads: self.units.len(),
             telemetry: None,
+            cancel: None,
+            faults: None,
         }
     }
 }
@@ -357,6 +369,8 @@ pub struct ShardSession<'p> {
     cfg: OverlayConfig,
     threads: usize,
     telemetry: Telemetry<'p>,
+    cancel: Option<&'p CancelToken>,
+    faults: Option<&'p FaultPlan>,
 }
 
 impl<'p> ShardSession<'p> {
@@ -390,6 +404,24 @@ impl<'p> ShardSession<'p> {
         self
     }
 
+    /// Attach a cooperative cancellation / deadline token (DESIGN.md
+    /// §15): every per-shard backend polls it mid-epoch, and the epoch
+    /// runner re-checks at each barrier, so a sharded run stops within
+    /// one check interval like a single-fabric one. The error reports
+    /// merged (original-graph) progress.
+    pub fn with_cancel(mut self, token: &'p CancelToken) -> Self {
+        self.cancel = Some(token);
+        self
+    }
+
+    /// Attach a fault-injection plan: its `barrier_drop` sites silence
+    /// the named boundary channels (canonical channel order, 0-based
+    /// barrier index), which the epoch watchdog then detects.
+    pub fn with_fault_plan(mut self, plan: &'p FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
     /// Run all shards to completion through the epoch-barrier protocol.
     pub fn run(&self) -> Result<ShardedRun, SimError> {
         let prog = self.program;
@@ -405,12 +437,16 @@ impl<'p> ShardSession<'p> {
             cfg.scheduler = self.cfg.scheduler;
             cfg.backend = self.cfg.backend;
             cfg.max_cycles = self.cfg.max_cycles;
-            backends.push(Some(engine::backend_with_tables_deferred(
+            let mut backend = engine::backend_with_tables_deferred(
                 view.exec_graph(),
                 view.runtime_tables(),
                 cfg,
                 &unit.deferred,
-            )?));
+            )?;
+            if let Some(token) = self.cancel {
+                backend.set_cancel(token.clone());
+            }
+            backends.push(Some(backend));
         }
 
         let mut chans: Vec<BoundaryChannel> = prog
@@ -424,6 +460,11 @@ impl<'p> ShardSession<'p> {
         let mut boundary_values = 0u64;
         let mut boundary_stalls = 0u64;
         let mut bound = prog.epoch;
+        // watchdog: consecutive epochs with zero progress anywhere —
+        // trips once the quiet span covers WATCHDOG_STALL_CYCLES
+        let watchdog_epochs = WATCHDOG_STALL_CYCLES.div_ceil(prog.epoch).max(2);
+        let mut zero_epochs = 0u64;
+        let mut last_completed: usize = 0;
 
         loop {
             // advance every live shard to the epoch bound, in parallel;
@@ -442,11 +483,15 @@ impl<'p> ShardSession<'p> {
             });
             epochs += 1;
             let mut first_err: Option<SimError> = None;
+            let mut finished_this_epoch = false;
             for (i, b, r, dt) in out {
                 backends[i] = Some(b);
                 sim_time[i] += dt;
                 match r {
-                    Ok(finished) => done[i] = finished,
+                    Ok(finished) => {
+                        finished_this_epoch |= finished && !done[i];
+                        done[i] = finished;
+                    }
                     Err(e) => {
                         if first_err.is_none() {
                             first_err = Some(e); // lowest shard index wins — deterministic
@@ -459,24 +504,55 @@ impl<'p> ShardSession<'p> {
             }
             if done.iter().all(|&d| d) {
                 debug_assert!(
-                    chans.iter().all(|c| c.flying.is_empty() && c.pending.is_empty()),
+                    self.faults.is_some()
+                        || chans.iter().all(|c| c.flying.is_empty() && c.pending.is_empty()),
                     "all shards complete implies all boundary values delivered"
                 );
                 break;
             }
+            // cooperative cancellation re-check at the barrier (the
+            // per-shard backends also poll mid-epoch; this covers
+            // tokens fired between a shard's last check and the sync)
+            if let Some(cause) = self.cancel.and_then(CancelToken::fired) {
+                let (completed, total) = self.merged_progress(&backends);
+                let cycle = bound;
+                return Err(match cause {
+                    crate::sim::CancelCause::Deadline => {
+                        SimError::DeadlineExceeded { cycle, completed, total }
+                    }
+                    crate::sim::CancelCause::Cancelled => {
+                        SimError::Cancelled { cycle, completed, total }
+                    }
+                });
+            }
             // epoch barrier: deliver → harvest → promote, per channel, in
             // canonical order (the determinism invariant)
-            for (spec, chan) in prog.channels.iter().zip(&mut chans) {
+            let mut moved = 0u64;
+            for (ci, (spec, chan)) in prog.channels.iter().zip(&mut chans).enumerate() {
+                // fault injection: a dropped channel delivers nothing
+                // from its arming epoch on — in-flight and queued values
+                // are discarded, producers still count as harvested
+                let dropped = self
+                    .faults
+                    .is_some_and(|plan| plan.barrier_dropped(ci, epochs - 1));
                 let dst = backends[spec.dst_shard as usize].as_mut().expect("backend parked");
                 for (li, v) in chan.flying.drain(..) {
-                    dst.inject_value(spec.links[li as usize].dst_local, v);
+                    if !dropped {
+                        dst.inject_value(spec.links[li as usize].dst_local, v);
+                        chan.delivered[li as usize] = true;
+                        moved += 1;
+                    }
                 }
                 let src = backends[spec.src_shard as usize].as_ref().expect("backend parked");
                 for (li, link) in spec.links.iter().enumerate() {
                     if !chan.sent[li] && src.node_computed(link.src_local) {
                         chan.sent[li] = true;
                         chan.pending.push_back((li as u32, src.values()[link.src_local as usize]));
+                        moved += 1;
                     }
+                }
+                if dropped {
+                    chan.pending.clear();
                 }
                 while chan.flying.len() < BOUNDARY_CHANNEL_CAPACITY {
                     let Some(entry) = chan.pending.pop_front() else {
@@ -487,6 +563,24 @@ impl<'p> ShardSession<'p> {
                 }
                 boundary_stalls += chan.pending.len() as u64;
             }
+            // zero-progress watchdog: nothing finished, nothing moved on
+            // any boundary, and no shard completed a single node — for a
+            // window of epochs covering WATCHDOG_STALL_CYCLES that is a
+            // boundary livelock (e.g. a dropped channel), so fail fast
+            // with a diagnostic instead of spinning to max_cycles.
+            let completed_now: usize = backends
+                .iter()
+                .map(|b| b.as_ref().expect("backend parked").completed_nodes())
+                .sum();
+            if finished_this_epoch || moved > 0 || completed_now != last_completed {
+                zero_epochs = 0;
+            } else {
+                zero_epochs += 1;
+                if zero_epochs >= watchdog_epochs {
+                    return Err(self.stall_error(epochs, bound, &done, &chans, &backends));
+                }
+            }
+            last_completed = completed_now;
             bound += prog.epoch;
         }
 
@@ -546,40 +640,80 @@ impl<'p> ShardSession<'p> {
         })
     }
 
+    /// Merged (original-graph) progress across every shard: original
+    /// nodes whose value was computed, over the original node count.
+    fn merged_progress(&self, backends: &[Option<Box<dyn SimBackend + '_>>]) -> (usize, usize) {
+        let mut computed = 0usize;
+        for (unit, backend) in self.program.units.iter().zip(backends) {
+            let Some(backend) = backend.as_ref() else { continue };
+            computed += (0..unit.len() as u32)
+                .filter(|&l| !unit.is_proxy(l) && backend.node_computed(l))
+                .count();
+        }
+        (computed, self.program.graph.len())
+    }
+
     /// A shard's error, re-homed to the merged domain. With one shard
     /// the subgraph *is* the graph, so the error passes through verbatim
     /// (the N=1 bit-identity guarantee covers error runs too); with
-    /// several, a cycle-limit error reports merged progress — original
-    /// nodes whose value was computed — over the original node count.
+    /// several, the early-stop shapes (cycle limit, deadline, cancel)
+    /// report merged progress over the original node count.
     fn remap_error(&self, e: SimError, backends: &[Option<Box<dyn SimBackend + '_>>]) -> SimError {
         if self.program.units.len() == 1 {
             return e;
         }
         match e {
             SimError::CycleLimitExceeded { cycle, .. } => {
-                let mut computed = 0usize;
-                for (unit, backend) in self.program.units.iter().zip(backends) {
-                    let Some(backend) = backend.as_ref() else { continue };
-                    computed += (0..unit.len() as u32)
-                        .filter(|&l| !unit.is_proxy(l) && backend.node_computed(l))
-                        .count();
-                }
-                SimError::CycleLimitExceeded {
-                    cycle,
-                    completed: computed,
-                    total: self.program.graph.len(),
-                }
+                let (completed, total) = self.merged_progress(backends);
+                SimError::CycleLimitExceeded { cycle, completed, total }
+            }
+            SimError::DeadlineExceeded { cycle, .. } => {
+                let (completed, total) = self.merged_progress(backends);
+                SimError::DeadlineExceeded { cycle, completed, total }
+            }
+            SimError::Cancelled { cycle, .. } => {
+                let (completed, total) = self.merged_progress(backends);
+                SimError::Cancelled { cycle, completed, total }
             }
             other => other,
         }
     }
+
+    /// The watchdog's diagnostic: name the lowest-indexed stuck shard
+    /// and the boundary channels it is still waiting on (channels
+    /// feeding it that have undelivered links).
+    fn stall_error(
+        &self,
+        epoch: u64,
+        cycle: u64,
+        done: &[bool],
+        chans: &[BoundaryChannel],
+        backends: &[Option<Box<dyn SimBackend + '_>>],
+    ) -> SimError {
+        let (completed, total) = self.merged_progress(backends);
+        let stuck_shard = done.iter().position(|&d| !d).unwrap_or(0);
+        let waiting: Vec<(usize, usize)> = self
+            .program
+            .channels
+            .iter()
+            .zip(chans)
+            .filter(|(spec, chan)| {
+                spec.dst_shard as usize == stuck_shard && chan.delivered.iter().any(|&d| !d)
+            })
+            .map(|(spec, _)| (spec.src_shard as usize, spec.dst_shard as usize))
+            .collect();
+        SimError::ShardStalled { epoch, cycle, completed, total, stuck_shard, waiting }
+    }
 }
 
 /// Runtime state of one directed inter-fabric link: `sent` marks
-/// harvested producers, `pending` holds values waiting for channel
-/// capacity, `flying` holds the values delivered at the next barrier.
+/// harvested producers, `delivered` marks values injected at the
+/// destination (so the watchdog can name links lost to a dropped
+/// channel), `pending` holds values waiting for channel capacity,
+/// `flying` holds the values delivered at the next barrier.
 struct BoundaryChannel {
     sent: Vec<bool>,
+    delivered: Vec<bool>,
     pending: VecDeque<(u32, f32)>,
     flying: Vec<(u32, f32)>,
 }
@@ -588,6 +722,7 @@ impl BoundaryChannel {
     fn new(links: usize) -> Self {
         Self {
             sent: vec![false; links],
+            delivered: vec![false; links],
             pending: VecDeque::new(),
             flying: Vec::new(),
         }
@@ -693,6 +828,61 @@ mod tests {
                 assert!(completed < total);
             }
             other => panic!("expected cycle limit, got {other:?}"),
+        }
+    }
+
+    /// A dropped boundary channel starves its destination shard; the
+    /// epoch watchdog fails fast (long before `max_cycles`) naming the
+    /// stuck shard and the channels it is waiting on.
+    #[test]
+    fn watchdog_names_stuck_shard_on_dropped_channel() {
+        use crate::faultinject::BarrierDrop;
+        let g = Arc::new(layered_random(16, 6, 24, 2, 9));
+        let sp = ShardedProgram::compile(Arc::clone(&g), &overlay(2, 2), 2).unwrap();
+        assert!(!sp.channels().is_empty(), "a real cut has boundary channels");
+        let plan = FaultPlan {
+            barrier_drops: (0..sp.channels().len())
+                .map(|channel| BarrierDrop { channel, from_epoch: 0 })
+                .collect(),
+            ..FaultPlan::default()
+        };
+        match sp.session().with_fault_plan(&plan).run() {
+            Err(SimError::ShardStalled { epoch, completed, total, stuck_shard, waiting, .. }) => {
+                assert!(epoch > 0);
+                assert_eq!(total, g.len());
+                assert!(completed < total, "starved run cannot complete");
+                assert!(stuck_shard < sp.num_shards());
+                assert!(!waiting.is_empty(), "diagnostic must name waiting channels");
+                for (src, dst) in &waiting {
+                    assert_eq!(*dst, stuck_shard);
+                    assert!(*src < sp.num_shards());
+                }
+            }
+            other => panic!("expected shard stall, got {other:?}"),
+        }
+    }
+
+    /// Cancellation and deadlines stop a sharded run with the merged
+    /// (original-graph) progress in the error, on any backend.
+    #[test]
+    fn cancel_and_deadline_stop_sharded_runs() {
+        let g = Arc::new(layered_random(16, 6, 24, 2, 9));
+        let sp = ShardedProgram::compile(Arc::clone(&g), &overlay(2, 2), 2).unwrap();
+        let token = CancelToken::new();
+        token.cancel();
+        match sp.session().with_cancel(&token).run() {
+            Err(SimError::Cancelled { completed, total, .. }) => {
+                assert_eq!(total, g.len());
+                assert!(completed < total);
+            }
+            other => panic!("expected cancelled, got {other:?}"),
+        }
+        for backend in BackendKind::ALL {
+            let expired = CancelToken::already_expired();
+            match sp.session().with_backend(backend).with_cancel(&expired).run() {
+                Err(SimError::DeadlineExceeded { total, .. }) => assert_eq!(total, g.len()),
+                other => panic!("{backend:?}: expected deadline, got {other:?}"),
+            }
         }
     }
 }

@@ -1,0 +1,172 @@
+//! Cooperative cancellation and per-job wall-clock deadlines
+//! (DESIGN.md §15).
+//!
+//! A [`CancelToken`] is a shared flag + optional deadline that the hot
+//! loops poll every [`CANCEL_CHECK_INTERVAL`] fabric cycles (the
+//! lockstep stepper masks on the cycle counter; the skip-ahead engine
+//! counts loop iterations, each of which advances at least one cycle,
+//! and re-checks after every jump) and the sharded runtime polls at
+//! every epoch barrier. Polling this sparsely keeps the check free in
+//! practice — one relaxed atomic load, and an `Instant::now()` syscall
+//! only once per interval — while bounding detection lag to one
+//! interval (≤ 1024 cycles) past the budget.
+//!
+//! Cancellation is *cooperative*: firing the token never interrupts a
+//! step mid-cycle; the run returns a typed
+//! [`SimError::Cancelled`](crate::sim::SimError::Cancelled) /
+//! [`SimError::DeadlineExceeded`](crate::sim::SimError::DeadlineExceeded)
+//! carrying the partial progress (cycles retired, nodes completed) at
+//! the check point.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How often (in fabric cycles / hot-loop iterations) the simulation
+/// loops poll their [`CancelToken`]. A power of two so the lockstep
+/// check is a single mask of the cycle counter.
+pub const CANCEL_CHECK_INTERVAL: u64 = 1024;
+
+/// Why a run was stopped early.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelCause {
+    /// [`CancelToken::cancel`] was called (client gone, shed, shutdown).
+    Cancelled,
+    /// the token's wall-clock deadline expired.
+    Deadline,
+}
+
+#[derive(Debug)]
+struct Inner {
+    cancelled: AtomicBool,
+    /// `None` = no deadline, cancellation-only token.
+    deadline: Option<Instant>,
+}
+
+/// A shared, cheaply clonable cancellation handle: an `AtomicBool`
+/// (explicit cancellation) plus an optional wall-clock deadline.
+///
+/// Clones share state — cancelling any clone fires every holder. Attach
+/// to a run with [`crate::engine::SimBackend::set_cancel`] /
+/// [`crate::program::Session::with_cancel`] /
+/// [`crate::shard::ShardSession::with_cancel`].
+#[derive(Debug, Clone)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+impl CancelToken {
+    /// A token with no deadline; fires only via [`CancelToken::cancel`].
+    pub fn new() -> Self {
+        Self::build(None)
+    }
+
+    /// A token that fires [`CancelCause::Deadline`] once `budget` has
+    /// elapsed from now.
+    pub fn with_deadline(budget: Duration) -> Self {
+        Self::build(Instant::now().checked_add(budget))
+    }
+
+    /// [`CancelToken::with_deadline`] in milliseconds — the
+    /// `JobSpec.timeout_ms` unit.
+    pub fn with_deadline_ms(budget_ms: u64) -> Self {
+        Self::with_deadline(Duration::from_millis(budget_ms))
+    }
+
+    /// A token whose deadline is already in the past — the
+    /// fault-injection "forced deadline overrun": the run stops at its
+    /// first check with [`CancelCause::Deadline`].
+    pub fn already_expired() -> Self {
+        Self::build(Some(Instant::now()))
+    }
+
+    fn build(deadline: Option<Instant>) -> Self {
+        Self {
+            inner: Arc::new(Inner {
+                cancelled: AtomicBool::new(false),
+                deadline,
+            }),
+        }
+    }
+
+    /// Fire the token: every run polling it stops at its next check
+    /// with [`CancelCause::Cancelled`]. Idempotent.
+    pub fn cancel(&self) {
+        self.inner.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// Has [`CancelToken::cancel`] been called? (Does not consult the
+    /// deadline; use [`CancelToken::fired`] for the full check.)
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// The poll: explicit cancellation first (one relaxed load), then
+    /// the deadline (one `Instant::now()` — only reached when armed).
+    pub fn fired(&self) -> Option<CancelCause> {
+        if self.inner.cancelled.load(Ordering::Relaxed) {
+            return Some(CancelCause::Cancelled);
+        }
+        match self.inner.deadline {
+            Some(d) if Instant::now() >= d => Some(CancelCause::Deadline),
+            _ => None,
+        }
+    }
+
+    /// Time left until the deadline (`None` if no deadline is set;
+    /// `Some(0)` once expired) — the queue's shed-before-dispatch test.
+    pub fn remaining(&self) -> Option<Duration> {
+        self.inner
+            .deadline
+            .map(|d| d.saturating_duration_since(Instant::now()))
+    }
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_token_fires_only_on_cancel() {
+        let t = CancelToken::new();
+        assert_eq!(t.fired(), None);
+        assert!(!t.is_cancelled());
+        assert_eq!(t.remaining(), None);
+        let clone = t.clone();
+        clone.cancel();
+        assert_eq!(t.fired(), Some(CancelCause::Cancelled), "clones share state");
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn expired_deadline_fires_immediately() {
+        let t = CancelToken::already_expired();
+        assert_eq!(t.fired(), Some(CancelCause::Deadline));
+        assert_eq!(t.remaining(), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn generous_deadline_does_not_fire() {
+        let t = CancelToken::with_deadline_ms(60_000);
+        assert_eq!(t.fired(), None);
+        assert!(t.remaining().unwrap() > Duration::from_secs(1));
+    }
+
+    #[test]
+    fn cancel_wins_over_live_deadline() {
+        let t = CancelToken::with_deadline_ms(60_000);
+        t.cancel();
+        assert_eq!(t.fired(), Some(CancelCause::Cancelled));
+    }
+
+    #[test]
+    fn interval_is_a_power_of_two() {
+        assert!(CANCEL_CHECK_INTERVAL.is_power_of_two());
+    }
+}

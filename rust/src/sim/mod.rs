@@ -28,10 +28,12 @@
 //! compile-time input only.
 
 mod activity;
+mod cancel;
 mod stats;
 mod trace;
 
 pub use activity::ActivityReport;
+pub use cancel::{CancelCause, CancelToken, CANCEL_CHECK_INTERVAL};
 pub use stats::{PeStats, SimStats};
 pub use trace::{Sample, Trace};
 
@@ -57,6 +59,28 @@ pub enum SimError {
     /// full report) — the simulator-error image of
     /// [`crate::program::CompileError::InvalidGraph`].
     InvalidProgram { errors: usize },
+    /// the run's [`CancelToken`] wall-clock deadline expired; carries
+    /// the partial progress at the check point (polled every
+    /// [`CANCEL_CHECK_INTERVAL`] cycles, so at most one interval late).
+    DeadlineExceeded { cycle: u64, completed: usize, total: usize },
+    /// the run's [`CancelToken`] was explicitly cancelled (client gone,
+    /// queue shed, shutdown); carries the partial progress at the check
+    /// point.
+    Cancelled { cycle: u64, completed: usize, total: usize },
+    /// a sharded run made zero progress for a full watchdog window —
+    /// no node completed anywhere and no boundary value moved — with
+    /// work still outstanding: a boundary livelock (e.g. a dropped
+    /// channel). Fails fast instead of spinning to `max_cycles`;
+    /// `stuck_shard` is the lowest incomplete shard and `waiting` its
+    /// feeding channels' `src→dst` shard pairs.
+    ShardStalled {
+        epoch: u64,
+        cycle: u64,
+        completed: usize,
+        total: usize,
+        stuck_shard: usize,
+        waiting: Vec<(usize, usize)>,
+    },
 }
 
 impl std::fmt::Display for SimError {
@@ -75,6 +99,22 @@ impl std::fmt::Display for SimError {
                 "program failed verification with {errors} error diagnostic(s); \
                  run `tdp check` for the report"
             ),
+            SimError::DeadlineExceeded { cycle, completed, total } => write!(
+                f,
+                "deadline exceeded at cycle {cycle}: {completed}/{total} nodes complete"
+            ),
+            SimError::Cancelled { cycle, completed, total } => write!(
+                f,
+                "cancelled at cycle {cycle}: {completed}/{total} nodes complete"
+            ),
+            SimError::ShardStalled { epoch, cycle, completed, total, stuck_shard, waiting } => {
+                write!(
+                    f,
+                    "sharded run stalled: zero progress through epoch {epoch} (cycle {cycle}, \
+                     {completed}/{total} nodes complete); shard {stuck_shard} is stuck waiting \
+                     on boundary channel(s) {waiting:?}"
+                )
+            }
         }
     }
 }
@@ -187,6 +227,10 @@ pub struct Simulator<'g> {
     /// cycle, so `draining_pes == 0` ⟺ no injection requests pending).
     draining_pes: usize,
     trace: Option<Trace>,
+    /// Cooperative cancellation / deadline handle, polled every
+    /// [`CANCEL_CHECK_INTERVAL`] cycles by the run loops (`None` = the
+    /// checks compile down to a skipped branch).
+    cancel: Option<CancelToken>,
     /// Deferred-seed inputs (sharded execution's boundary proxies):
     /// graph node id → indices into `tables.seeds` left unseeded at
     /// construction, waiting for [`Simulator::inject_value`]. Holds every
@@ -364,6 +408,7 @@ impl<'g> Simulator<'g> {
             is_active: vec![false; num_pes],
             draining_pes: 0,
             trace: None,
+            cancel: None,
             deferred: std::collections::BTreeMap::new(),
         };
         for (i, s) in sim.tables.seeds.iter().enumerate() {
@@ -709,8 +754,57 @@ impl<'g> Simulator<'g> {
         self.cfg.max_cycles
     }
 
+    /// Attach a cooperative cancellation / deadline token, polled every
+    /// [`CANCEL_CHECK_INTERVAL`] cycles by [`Simulator::run`] /
+    /// [`Simulator::run_until`] (and, through the shared token, by the
+    /// skip-ahead engine's own loops).
+    pub fn set_cancel(&mut self, token: CancelToken) {
+        self.cancel = Some(token);
+    }
+
+    /// The attached cancellation token, if any.
+    pub fn cancel_token(&self) -> Option<&CancelToken> {
+        self.cancel.as_ref()
+    }
+
+    /// The typed early-stop error for `cause` at the current progress —
+    /// one construction site shared by both engines so the partial
+    /// stats they report can never diverge.
+    pub(crate) fn cancel_error(&self, cause: CancelCause) -> SimError {
+        match cause {
+            CancelCause::Deadline => SimError::DeadlineExceeded {
+                cycle: self.cycle,
+                completed: self.completed,
+                total: self.g.len(),
+            },
+            CancelCause::Cancelled => SimError::Cancelled {
+                cycle: self.cycle,
+                completed: self.completed,
+                total: self.g.len(),
+            },
+        }
+    }
+
+    /// Poll the cancel token if the cycle counter is on a check
+    /// boundary. One mask + branch per cycle when no token is attached.
+    #[inline]
+    fn check_cancel(&self) -> Option<SimError> {
+        if self.cycle & (CANCEL_CHECK_INTERVAL - 1) != 0 {
+            return None;
+        }
+        let cause = self.cancel.as_ref()?.fired()?;
+        Some(self.cancel_error(cause))
+    }
+
     /// Run to completion.
     pub fn run(&mut self) -> Result<SimStats, SimError> {
+        // entry poll: a token that fired before the run started (an
+        // already-expired deadline, an injected overrun) must stop the
+        // run deterministically even when the whole graph would finish
+        // inside one check interval
+        if let Some(cause) = self.cancel.as_ref().and_then(CancelToken::fired) {
+            return Err(self.cancel_error(cause));
+        }
         while !self.step() {
             if self.cycle >= self.cfg.max_cycles {
                 return Err(SimError::CycleLimitExceeded {
@@ -718,6 +812,9 @@ impl<'g> Simulator<'g> {
                     completed: self.completed,
                     total: self.g.len(),
                 });
+            }
+            if let Some(e) = self.check_cancel() {
+                return Err(e);
             }
         }
         Ok(self.stats())
@@ -732,6 +829,11 @@ impl<'g> Simulator<'g> {
         if self.is_complete() {
             return Ok(true);
         }
+        // same entry poll as `run` (the epoch runner also re-checks at
+        // every barrier, so the two paths agree on pre-fired tokens)
+        if let Some(cause) = self.cancel.as_ref().and_then(CancelToken::fired) {
+            return Err(self.cancel_error(cause));
+        }
         while self.cycle < bound {
             if self.step() {
                 return Ok(true);
@@ -742,6 +844,9 @@ impl<'g> Simulator<'g> {
                     completed: self.completed,
                     total: self.g.len(),
                 });
+            }
+            if let Some(e) = self.check_cancel() {
+                return Err(e);
             }
         }
         Ok(false)
